@@ -1,0 +1,89 @@
+//! Distribution telemetry driver (Figures 2, 3, 6 data): trains the MF
+//! CNN while probing W/A/G of the canonical layer, prints log2|x|
+//! histograms with their ALS-PoTQ fits, and contrasts the weight-mean
+//! drift with and without Weight Bias Correction.
+//!
+//! Run: `cargo run --release --example distribution_report [steps]`
+
+use anyhow::{Context, Result};
+use mftrain::config::TrainConfig;
+use mftrain::coordinator::Trainer;
+use mftrain::runtime::Runtime;
+use mftrain::util::table::{fnum, Table};
+
+fn probe_run(rt: &Runtime, variant: &str, steps: u64, every: u64)
+    -> Result<mftrain::coordinator::RunRecord>
+{
+    let mut cfg = TrainConfig {
+        variant: variant.to_string(),
+        steps,
+        probe_every: every,
+        eval_every: 0,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    cfg.lr.base = 0.08;
+    cfg.lr.decay_at = vec![steps * 6 / 10];
+    Trainer::new(rt, cfg)?.quiet().run()
+}
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse())
+        .transpose()
+        .context("steps must be an integer")?
+        .unwrap_or(150);
+    let every = (steps / 5).max(1);
+    let rt = Runtime::cpu()?;
+
+    // Figure 2/6: W/A/G distributions + quantization fits
+    let rec = probe_run(&rt, "cnn_mf", steps, every)?;
+    let mut t = Table::new(
+        "Figure 2/6 — W/A/G distributions (cnn_mf canonical layer)",
+        &["step", "tensor", "mean", "std", "beta", "quant MSE",
+          "log2 sigma", "log2|x| density (-40..10)"],
+    );
+    for p in &rec.probes {
+        for (name, s) in [("W", &p.w), ("A", &p.a), ("G", &p.g)] {
+            t.row(&[
+                p.step.to_string(),
+                name.to_string(),
+                fnum(s.mean),
+                fnum(s.std),
+                s.beta.to_string(),
+                fnum(s.quant_mse),
+                s.log2_sigma.map(fnum).unwrap_or_else(|| "-".into()),
+                s.log2_hist.sparkline(),
+            ]);
+        }
+    }
+    t.note("spiky single-mode log2|x| densities = the paper's 'near-lognormal' observation; \
+            beta separates W/A (small negative) from G (strongly negative)");
+    t.print();
+
+    // Figure 3: weight-mean drift with vs without WBC
+    let rec_nowbc = probe_run(&rt, "cnn_mf_nowbc", steps, every)?;
+    let mut t3 = Table::new(
+        "Figure 3 — weight-mean drift over training",
+        &["step", "mean(W) with WBC", "mean(W) without WBC"],
+    );
+    for (a, b) in rec.probes.iter().zip(&rec_nowbc.probes) {
+        t3.row(&[a.step.to_string(), format!("{:.3e}", a.w.mean), format!("{:.3e}", b.w.mean)]);
+    }
+    t3.note("WBC keeps the quantizer input centered; the paper's Figure 3 shows the \
+             uncorrected mean deviating over steps");
+    t3.print();
+
+    let mut csv = String::from("step,tensor,mean,std,beta,quant_mse\n");
+    for p in &rec.probes {
+        for (n, s) in [("W", &p.w), ("A", &p.a), ("G", &p.g)] {
+            csv.push_str(&format!("{},{},{},{},{},{}\n", p.step, n, s.mean, s.std, s.beta,
+                                  s.quant_mse));
+        }
+    }
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/fig2_distributions.csv", csv)?;
+    println!("CSV -> reports/fig2_distributions.csv");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. loads the AOT-compiled ALS-PoTQ quantizer + MF-MAC kernels (lowered
+//!    from JAX/Pallas by `make artifacts`) and runs them via PJRT;
+//! 2. cross-checks them bit-exactly against the rust-native mirror;
+//! 3. prints the energy story of the paper for this one matmul block.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+use mftrain::energy;
+use mftrain::potq;
+use mftrain::runtime::{Index, Runtime};
+use mftrain::util::prng::Pcg32;
+use mftrain::util::table::{fnum, Table};
+
+fn main() -> Result<()> {
+    let root = Path::new("artifacts");
+    let idx = Index::load(root).context("run `make artifacts` first")?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // ---- 1. the AOT quantizer kernel vs the rust mirror -----------------
+    let potq5 = idx
+        .kernels
+        .iter()
+        .find(|k| k.name == "potq_b5")
+        .context("potq_b5 kernel artifact missing")?;
+    let exe = rt.compile_file(&root.join(&potq5.file))?;
+
+    let mut rng = Pcg32::new(42);
+    let n = potq5.n;
+    let mut x = vec![0f32; n];
+    rng.fill_normal(&mut x, 0.0, 3.2e-4); // gradient-scale data
+
+    // artifact output layout: [deq | e | s | beta]
+    let out = rt.run_f32(&exe, &[(&x, &[n])])?;
+    ensure!(out.len() == 3 * n + 1, "unexpected potq output length");
+    let (deq_x, rest) = out.split_at(n);
+    let (e_x, rest) = rest.split_at(n);
+    let (s_x, beta_x) = rest.split_at(n);
+
+    let blk = potq::pot_quantize(&x, 5, None);
+    ensure!(blk.beta == beta_x[0] as i32, "beta mismatch");
+    let mut exact = 0usize;
+    for i in 0..n {
+        ensure!(e_x[i] as i32 == blk.e[i], "exponent mismatch at {i}");
+        ensure!(s_x[i] as u8 == blk.s[i], "sign mismatch at {i}");
+        if deq_x[i].to_bits() == potq::pot_dequantize(blk.e[i], blk.s[i], blk.beta).to_bits() {
+            exact += 1;
+        }
+    }
+    ensure!(exact == n, "dequantized values not bit-exact: {exact}/{n}");
+    println!(
+        "[1] ALS-PoTQ: JAX-lowered kernel == rust mirror, bit-exact on {n} values \
+         (beta = {}, zero fraction {:.1}%)",
+        blk.beta,
+        blk.e.iter().filter(|&&e| e == potq::ZERO_CODE).count() as f64 / n as f64 * 100.0
+    );
+
+    // ---- 2. MF-MAC matmul: Pallas kernel vs rust mirror ------------------
+    let d = 64usize;
+    let mut a = vec![0f32; d * d];
+    let mut w = vec![0f32; d * d];
+    rng.fill_normal(&mut a, 0.0, 0.5);
+    rng.fill_normal(&mut w, 0.0, 0.02);
+
+    for kernel in ["mfmac_ref", "mfmac_pallas", "mfmac_mxu_pallas"] {
+        let k = idx
+            .kernels
+            .iter()
+            .find(|k| k.name == kernel)
+            .with_context(|| format!("{kernel} artifact missing"))?;
+        let exe = rt.compile_file(&root.join(&k.file))?;
+        let y = rt.run_f32(&exe, &[(&a, &[d, d]), (&w, &[d, d])])?;
+        let y_native = potq::mfmac_matmul(&a, &w, d, d, d, 5);
+        let denom = y_native.iter().fold(1e-30f32, |m, &v| m.max(v.abs()));
+        let max_rel = y
+            .iter()
+            .zip(&y_native)
+            .map(|(p, q)| (p - q).abs() / denom)
+            .fold(0f32, f32::max);
+        ensure!(max_rel < 1e-5, "{kernel}: max rel err {max_rel}");
+        println!("[2] MF-MAC ({kernel}): PJRT result matches rust mirror (rel err {max_rel:.1e})");
+    }
+
+    // ---- 3. the energy story for this block ------------------------------
+    let macs = (d * d * d) as f64;
+    let mut t = Table::new(
+        &format!("energy of one {d}x{d}x{d} matmul block (pJ)"),
+        &["MAC realization", "per MAC (pJ)", "block (nJ)", "vs FP32"],
+    );
+    let fp32 = energy::fp32_mac().energy_pj();
+    for (name, pj) in [
+        ("FP32 Mul + FP32 Add", fp32),
+        ("MF-MAC (INT4 Add + XOR + INT32 Acc)", energy::mf_mac().energy_pj()),
+        (
+            "MF-MAC + ALS-PoTQ overhead",
+            energy::mf_mac().energy_pj() + energy::ALS_POTQ_OVERHEAD_PJ,
+        ),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fnum(pj),
+            fnum(pj * macs * 1e-3),
+            format!("{:.1}%", pj / fp32 * 100.0),
+        ]);
+    }
+    t.print();
+    println!(
+        "headline (§6): {:.1}% of linear-layer training energy removed",
+        energy::report::headline_reduction() * 100.0
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

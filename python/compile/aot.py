@@ -1,0 +1,188 @@
+"""AOT compiler: lower every (model x scheme) variant to HLO text.
+
+Run once at build time (``make artifacts``); the rust coordinator is fully
+self-contained afterwards. HLO *text* is the interchange format — jax >= 0.5
+serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train
+from .kernels import mfmac as mfmac_kernel
+from .kernels import ref as kernels_ref
+from .models import cnn, mlp, transformer
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Variant matrix (DESIGN.md §Artifact variant matrix)
+# ---------------------------------------------------------------------------
+
+MLP = mlp.Cfg()
+CNN = cnn.Cfg(size=16, width=8, blocks=2)
+CNN_DEEP = cnn.Cfg(size=16, width=8, blocks=3)
+TRF = transformer.Cfg(vocab=64, seq=32, d=96, heads=4, ffn=192, depth=2)
+
+#              name                model          cfg       scheme      batch pallas
+VARIANTS = [
+    ("mlp_fp32", "mlp", MLP, "fp32", 128, False),
+    ("mlp_mf", "mlp", MLP, "mf", 128, False),
+    ("mlp_mf_pallas", "mlp", MLP, "mf", 128, True),
+    ("cnn_fp32", "cnn", CNN, "fp32", 64, False),
+    ("cnn_mf", "cnn", CNN, "mf", 64, False),
+    ("cnn_mf_nowbc", "cnn", CNN, "mf_nowbc", 64, False),
+    ("cnn_mf_noprc", "cnn", CNN, "mf_noprc", 64, False),
+    ("cnn_mf_noals", "cnn", CNN, "mf_noals", 64, False),
+    ("cnn_wpot5", "cnn", CNN, "wpot5", 64, False),
+    ("cnn_wapot4", "cnn", CNN, "wapot4", 64, False),
+    ("cnn_luq4", "cnn", CNN, "luq4", 64, False),
+    ("cnn_fp8", "cnn", CNN, "fp8", 64, False),
+    ("cnn_int8", "cnn", CNN, "int8", 64, False),
+    ("cnn_mf4", "cnn", CNN, "mf4", 64, False),
+    ("cnn_mf6", "cnn", CNN, "mf6", 64, False),
+    ("cnn_mf_sr", "cnn", CNN, "mf_sr", 64, False),
+    ("cnn_mf_pc", "cnn", CNN, "mf_pc", 64, False),
+    ("cnn_deep_fp32", "cnn_deep", CNN_DEEP, "fp32", 64, False),
+    ("cnn_deep_mf", "cnn_deep", CNN_DEEP, "mf", 64, False),
+    ("transformer_fp32", "transformer", TRF, "fp32", 32, False),
+    ("transformer_mf", "transformer", TRF, "mf", 32, False),
+    ("transformer_luq4", "transformer", TRF, "luq4", 32, False),
+    ("transformer_fp8", "transformer", TRF, "fp8", 32, False),
+]
+
+
+def lower_variant(built: train.Built, outdir: str) -> dict:
+    vdir = os.path.join(outdir, built.name)
+    os.makedirs(vdir, exist_ok=True)
+    files = {}
+    for key, fn in built.fns.items():
+        t0 = time.time()
+        # donate the state buffer on the train step: PJRT then aliases the
+        # output state onto the input allocation (perf pass, L2; the rust
+        # session never reuses the input buffer after execute_b)
+        donate = (0,) if key == "train" else ()
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*built.example_args[key])
+        text = to_hlo_text(lowered)
+        fname = f"{key}.hlo.txt"
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        files[key] = fname
+        print(f"  {built.name}/{fname}: {len(text)//1024} KiB "
+              f"({time.time()-t0:.1f}s)")
+    man = dict(built.manifest)
+    man["artifacts"] = files
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+    return man
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel artifacts: the rust potq/mfmac mirror cross-validates against
+# these (bit-exactness contract, DESIGN.md §Numeric contract).
+# ---------------------------------------------------------------------------
+
+POTQ_N = 4096
+MFMAC_DIM = 64
+
+
+def kernel_artifacts(outdir: str) -> list:
+    kdir = os.path.join(outdir, "kernels")
+    os.makedirs(kdir, exist_ok=True)
+    sds = jax.ShapeDtypeStruct
+    entries = []
+
+    for b in (3, 4, 5, 6):
+        def potq_fn(x, b=b):
+            e, s, beta, deq = kernels_ref.ref_potq(x, b)
+            return jnp.concatenate([
+                deq,
+                e.astype(jnp.float32),
+                s.astype(jnp.float32),
+                beta.astype(jnp.float32).reshape(1),
+            ])
+
+        name = f"potq_b{b}"
+        lowered = jax.jit(potq_fn).lower(sds((POTQ_N,), jnp.float32))
+        with open(os.path.join(kdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append({
+            "name": name, "file": f"kernels/{name}.hlo.txt", "bits": b,
+            "n": POTQ_N, "outputs": ["deq", "e", "s", "beta"],
+        })
+        print(f"  kernels/{name}")
+
+    d = MFMAC_DIM
+    for name, fn in [
+        ("mfmac_ref", lambda x, w: kernels_ref.ref_mfmac(x, w, 5)),
+        ("mfmac_pallas", lambda x, w: mfmac_kernel.mfmac_pallas(x, w, 5)),
+        ("mfmac_mxu_pallas", lambda x, w: mfmac_kernel.mfmac_mxu_pallas(x, w, 5)),
+    ]:
+        lowered = jax.jit(fn).lower(
+            sds((d, d), jnp.float32), sds((d, d), jnp.float32))
+        with open(os.path.join(kdir, f"{name}.hlo.txt"), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append({
+            "name": name, "file": f"kernels/{name}.hlo.txt", "bits": 5,
+            "m": d, "k": d, "n": d,
+        })
+        print(f"  kernels/{name}")
+    return entries
+
+
+def build_variant(name: str) -> train.Built:
+    for (n, model, cfg, scheme, batch, pallas) in VARIANTS:
+        if n == name:
+            return train.build(n, model, cfg, scheme, batch, use_pallas=pallas)
+    raise KeyError(name)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant names (default: all)")
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    index = {"variants": [], "kernels": []}
+    t0 = time.time()
+    if not args.skip_kernels:
+        index["kernels"] = kernel_artifacts(args.out)
+    for (name, model, cfg, scheme, batch, pallas) in VARIANTS:
+        if only and name not in only:
+            continue
+        built = train.build(name, model, cfg, scheme, batch, use_pallas=pallas)
+        man = lower_variant(built, args.out)
+        index["variants"].append({
+            "name": name, "model": model, "scheme": scheme,
+            "state_len": man["state_len"], "n_params": man["n_params"],
+        })
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"AOT done in {time.time()-t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

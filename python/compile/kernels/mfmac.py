@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: MF-MAC matmul in the log domain.
+
+The paper's MF-MAC (Figure 5) replaces each FP32 multiply with
+  * an INT4 add of the two PoT exponents       -> ``ex + ew`` below,
+  * a 1-bit XOR of the two sign bits           -> ``sx ^ sw``,
+  * an INT32 accumulation of the signed 2^e    -> the K-loop accumulator,
+  * one scalar shift by beta_x + beta_w        -> final ``* 2^(bx+bw)``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): exponent/sign tiles are VMEM
+residents (int8/int1-packed on real hardware); the exponent add + XOR is
+VPU work; the accumulator is a VMEM scratch tile carried across the K grid
+dimension — the Pallas analogue of the paper's per-MAC INT32 register. The
+dequantize-then-MXU schedule (what today's TPUs would actually run) is
+``mfmac_mxu_pallas`` below.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .. import quant
+from . import potq as potq_kernel
+
+# M/N/K tile sizes for the grid (VMEM-sized on real hardware).
+_TM, _TN, _TK = 64, 64, 64
+
+
+def _pow2f(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^e from bits for integer e (vector, in-kernel)."""
+    return lax.bitcast_convert_type(
+        jnp.left_shift(e.astype(jnp.int32) + 127, 23), jnp.float32
+    )
+
+
+def _mfmac_kernel(ex_ref, sx_ref, ew_ref, sw_ref, o_ref, *, nk: int):
+    """One (M,N) tile; K is the innermost grid dim, accumulated in o_ref."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ex, sx = ex_ref[...], sx_ref[...]
+    ew, sw = ew_ref[...], sw_ref[...]
+    zx = (ex == quant.ZERO_CODE)[:, :, None]
+    zw = (ew == quant.ZERO_CODE)[None, :, :]
+    # INT4 exponent add (masked where either operand is the zero code)
+    esum = jnp.where(zx | zw, 0, ex[:, :, None] + ew[None, :, :])
+    # 1-bit sign XOR
+    ssum = sx[:, :, None] ^ sw[None, :, :]
+    mag = _pow2f(esum)
+    term = jnp.where(zx | zw, 0.0, jnp.where(ssum == 1, -mag, mag))
+    # INT32-accumulator analogue: accumulate signed powers of two
+    o_ref[...] += jnp.sum(term, axis=1)
+    del nk
+
+
+def mfmac_pallas(x: jnp.ndarray, w: jnp.ndarray, b: int = 5) -> jnp.ndarray:
+    """Full MF-MAC matmul: ALS-PoTQ both operands, log-domain accumulate.
+
+    x: (M, K) f32, w: (K, N) f32 -> (M, N) f32.
+    """
+    (m, kdim), (_, n) = x.shape, w.shape
+    ex, sx, bx, _ = potq_kernel.potq_pallas(x, b)
+    ew, sw, bw, _ = potq_kernel.potq_pallas(w, b)
+
+    tm = _TM if m % _TM == 0 else m
+    tn = _TN if n % _TN == 0 else n
+    tk = _TK if kdim % _TK == 0 else kdim
+    grid = (m // tm, n // tn, kdim // tk)
+    acc = pl.pallas_call(
+        functools.partial(_mfmac_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(ex, sx, ew, sw)
+    # the single scalar "shift by beta + beta'" (dequantization)
+    return acc * quant.pow2i(bx + bw)
+
+
+def _mxu_kernel(xq_ref, wq_ref, o_ref):
+    """Dequantized-operand schedule: PoT matmul straight onto the MXU."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(xq_ref[...], wq_ref[...])
+
+
+def mfmac_mxu_pallas(x: jnp.ndarray, w: jnp.ndarray, b: int = 5) -> jnp.ndarray:
+    """MF-MAC semantics on the MXU schedule (dequantize, then systolic dot).
+
+    Numerically identical to mfmac_pallas up to f32 accumulation order;
+    this is the schedule a current-generation TPU runs to *emulate* the
+    proposed MAC, and the one the default training artifacts lower to.
+    """
+    (m, kdim), (_, n) = x.shape, w.shape
+    _, _, bx, xq = potq_kernel.potq_pallas(x, b)
+    _, _, bw, wq = potq_kernel.potq_pallas(w, b)
+    del bx, bw  # deq values already include 2^beta
+    tm = _TM if m % _TM == 0 else m
+    tn = _TN if n % _TN == 0 else n
+    tk = _TK if kdim % _TK == 0 else kdim
+    grid = (m // tm, n // tn, kdim // tk)
+    return pl.pallas_call(
+        _mxu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xq, wq)
+
+
+def vmem_footprint_bytes(tm: int = _TM, tn: int = _TN, tk: int = _TK) -> Tuple[int, int]:
+    """(log-domain, mxu) VMEM bytes per grid step (perf estimates).
+
+    log-domain: 2 exponent tiles + 2 sign tiles (int8-packed on TPU) +
+    f32 accumulator; mxu: 2 f32 operand tiles + f32 accumulator.
+    """
+    logd = (tm * tk + tk * tn) * 2 + tm * tn * 4
+    mxu = (tm * tk + tk * tn) * 4 + tm * tn * 4
+    return logd, mxu

@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: ALS-PoTQ block quantization.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the block lives in VMEM; the
+sign/exponent extraction is pure VPU bit work (bitcast + shifts + compares,
+8/32-bit lanes); beta is a scalar (SMEM) computed by a max-reduction pass.
+``interpret=True`` everywhere — real Mosaic lowering cannot execute on the
+CPU PJRT plugin (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .. import quant
+
+# Rows per grid step when tiling large blocks.
+_TILE = 256
+
+
+def _quantize_kernel(beta_ref, x_ref, e_ref, s_ref, deq_ref, *, b: int):
+    """Quantize one VMEM tile given the (precomputed) scalar beta."""
+    x = x_ref[...]
+    beta = beta_ref[0]
+    emaxv = quant.pot_emax(b)
+
+    bits = lax.bitcast_convert_type(x, jnp.int32)
+    sign = jnp.right_shift(bits, 31) & 1
+    biased = jnp.right_shift(bits, 23) & 0xFF
+    m23 = bits & 0x7FFFFF
+    m = 1.0 + m23.astype(jnp.float32) * jnp.float32(2.0**-23)
+    is_zero = biased == 0
+    e_real = biased - 127 + (m > quant.SQRT2_F32).astype(jnp.int32)
+    e = e_real - beta
+    zero = is_zero | (e < -emaxv)
+    e = jnp.minimum(e, emaxv)
+    e = jnp.where(zero, quant.ZERO_CODE, e)
+    s = jnp.where(zero, 0, sign)
+
+    mag_bits = jnp.left_shift(jnp.where(zero, 0, e + beta) + 127, 23)
+    mag = lax.bitcast_convert_type(mag_bits, jnp.float32)
+    deq = jnp.where(zero, 0.0, jnp.where(s == 1, -mag, mag))
+
+    e_ref[...] = e
+    s_ref[...] = s
+    deq_ref[...] = deq
+
+
+def potq_pallas(x: jnp.ndarray, b: int = 5) -> Tuple[jnp.ndarray, ...]:
+    """ALS-PoTQ of a 2-D block via Pallas: (e, s, beta, deq).
+
+    beta is computed with a jnp max first (a layer-wise scalar — one per
+    tens of thousands of elements, exactly the cost the paper argues is
+    negligible); the per-element quantization runs as a tiled Pallas kernel.
+    """
+    assert x.ndim == 2, "potq_pallas operates on 2-D blocks"
+    beta = quant.compute_beta(x, b)
+    m, n = x.shape
+    tile = _TILE if m % _TILE == 0 else m
+    grid = (m // tile,)
+    e, s, deq = pl.pallas_call(
+        functools.partial(_quantize_kernel, b=b),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # beta scalar (SMEM on TPU)
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        interpret=True,
+    )(beta.reshape(1), x)
+    return e, s, beta, deq
+
+
+def vmem_footprint_bytes(m: int, n: int, tile: int = _TILE) -> int:
+    """VMEM bytes per grid step for the quantize kernel (perf estimate).
+
+    x tile f32 + e tile i32 + s tile i32 + deq tile f32 = 16 bytes/elem.
+    On real TPU e/s would be packed int8/int1 (5.125 B/elem); we report the
+    interpret-mode layout here and the packed layout in EXPERIMENTS §Perf.
+    """
+    t = min(tile, m)
+    return 16 * t * n

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: pytest asserts the Pallas
+kernels (interpret=True) match these functions, and the rust-native mirror
+(rust/src/potq) is cross-checked against the AOT-lowered versions of these
+via the ``potq_quantize`` / ``mfmac`` micro-artifacts.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from .. import quant
+
+
+def ref_potq(x: jnp.ndarray, b: int = 5) -> Tuple[jnp.ndarray, ...]:
+    """ALS-PoTQ of a block: (e int32, s int32, beta int32, deq f32)."""
+    e, s, beta = quant.pot_quantize(x, b)
+    deq = quant.pot_dequantize(e, s, beta)
+    return e, s, beta, deq
+
+
+def ref_mfmac(x: jnp.ndarray, w: jnp.ndarray, b: int = 5) -> jnp.ndarray:
+    """MF-MAC matmul semantics: exact dot of the PoT-quantized operands.
+
+    Each product (1-2s)2^(ex+ew) is a signed power of two — exactly what the
+    hardware's INT4 exponent add + sign XOR produces; the accumulation here
+    is f32 (the INT32 fixed-point accumulator study lives in rust).
+    """
+    ex, sx, bx = quant.pot_quantize(x, b)
+    ew, sw, bw = quant.pot_quantize(w, b)
+    xq = quant.pot_dequantize(ex, sx, bx)
+    wq = quant.pot_dequantize(ew, sw, bw)
+    return jnp.matmul(xq, wq)
+
+
+def ref_mfmac_logdomain(x: jnp.ndarray, w: jnp.ndarray, b: int = 5) -> jnp.ndarray:
+    """Log-domain formulation (what the Pallas kernel implements):
+
+    acc[m,n] = sum_k (1 - 2*(sx^sw)) * 2^(ex[m,k] + ew[k,n]),
+    output    = acc * 2^(beta_x + beta_w).
+
+    Mathematically identical to ref_mfmac up to f32 accumulation order.
+    """
+    ex, sx, bx = quant.pot_quantize(x, b)
+    ew, sw, bw = quant.pot_quantize(w, b)
+    zx = (ex == quant.ZERO_CODE)[:, :, None]
+    zw = (ew == quant.ZERO_CODE)[None, :, :]
+    esum = jnp.where(zx | zw, 0, ex[:, :, None] + ew[None, :, :])
+    ssum = sx[:, :, None] ^ sw[None, :, :]
+    mag = quant.pow2i(esum)
+    term = jnp.where(zx | zw, 0.0, jnp.where(ssum == 1, -mag, mag))
+    acc = jnp.sum(term, axis=1)
+    return acc * quant.pow2i(bx + bw)

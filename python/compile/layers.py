@@ -1,0 +1,218 @@
+"""Layer-2 building blocks: quantized linear/conv layers per Algorithm 1.
+
+Every quantized layer performs, for scheme S:
+  forward   Wq = ALS-PoTQ(WBC(W)),  Aq = ALS-PoTQ(PRC(A, gamma))
+            y  = Aq @ Wq                          (the MF-MAC matmul)
+  backward  Gq = ALS-PoTQ(G)  via ``grad_quant`` (identity forward, the
+            cotangent is quantized before it reaches the matmul's VJP), so
+            dA = Gq @ Wqᵀ and dW = Aqᵀ @ Gq — exactly Algorithm 1 lines
+            13-15, since JAX's matmul VJP closes over the *quantized*
+            operands saved by the forward pass.
+Master weights stay FP32 (straight-through estimator), as in the paper's
+training scheme (the FP32 update path is the standard QAT formulation).
+
+When ``use_pallas`` is set on the scheme config the forward matmul lowers
+through the L1 Pallas MF-MAC kernel instead of the (bit-equivalent) jnp
+path — used by the ``*_pallas`` artifact variants.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import quant
+from .quant import Scheme
+
+
+def quantize_weight(w: jnp.ndarray, scheme: Scheme) -> jnp.ndarray:
+    """WBC + format STE for a weight tensor."""
+    if scheme.w is None:
+        return w
+    if scheme.wbc:
+        w = quant.weight_bias_correction(w)
+    return quant.ste(w, scheme.w, als=scheme.als)
+
+
+def quantize_act(
+    a: jnp.ndarray, gamma: Optional[jnp.ndarray], scheme: Scheme
+) -> jnp.ndarray:
+    """PRC + format STE for an activation tensor."""
+    if scheme.a is None:
+        return a
+    if scheme.prc and gamma is not None:
+        a = quant.ratio_clip(a, gamma)
+    return quant.ste(a, scheme.a, als=scheme.als)
+
+
+def _g_fmt(scheme: Scheme, last: bool):
+    if last and scheme.g_last is not None:
+        return scheme.g_last
+    return scheme.g
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _pallas_matmul(aq, wq, b):
+    """MF-MAC matmul through the L1 Pallas kernel, with the Algorithm-1
+    backward rules attached explicitly (interpret-mode pallas_call has no
+    reverse-mode rule of its own). Operands are already PoT values, so the
+    kernel's internal re-quantization is the identity."""
+    from .kernels import mfmac as mfmac_kernel
+
+    return mfmac_kernel.mfmac_mxu_pallas(aq, wq, b=b)
+
+
+def _pallas_matmul_fwd(aq, wq, b):
+    return _pallas_matmul(aq, wq, b), (aq, wq)
+
+
+def _pallas_matmul_bwd(b, res, g):
+    # g is the (already grad_quant-quantized) G_q: both backward matmuls
+    # are themselves MF-MAC computations (Algorithm 1 lines 14-15).
+    from .kernels import mfmac as mfmac_kernel
+
+    aq, wq = res
+    da = mfmac_kernel.mfmac_mxu_pallas(g, wq.T, b=b)
+    dw = mfmac_kernel.mfmac_mxu_pallas(aq.T, g, b=b)
+    return da, dw
+
+
+_pallas_matmul.defvjp(_pallas_matmul_fwd, _pallas_matmul_bwd)
+
+
+def _maybe_pallas_matmul(aq, wq, scheme: Scheme, use_pallas: bool):
+    if use_pallas and scheme.w is not None and scheme.w[0] == "pot":
+        return _pallas_matmul(aq, wq, scheme.w[1])
+    return jnp.matmul(aq, wq)
+
+
+def qdense(
+    params: Dict[str, jnp.ndarray],
+    a: jnp.ndarray,
+    scheme: Scheme,
+    last: bool = False,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Quantized fully-connected layer. params: w (in,out), b (out), gamma."""
+    wq = quantize_weight(params["w"], scheme)
+    aq = quantize_act(a, params.get("gamma"), scheme)
+    shape = a.shape
+    a2 = aq.reshape(-1, shape[-1])
+    y = _maybe_pallas_matmul(a2, wq, scheme, use_pallas)
+    y = y.reshape(*shape[:-1], wq.shape[-1])
+    if scheme.g is not None:
+        y = quant.grad_quant(y, _g_fmt(scheme, last), scheme.als)
+    return y + params["b"]
+
+
+def qconv(
+    params: Dict[str, jnp.ndarray],
+    a: jnp.ndarray,
+    scheme: Scheme,
+    stride: int = 1,
+    padding: str = "SAME",
+) -> jnp.ndarray:
+    """Quantized conv2d (NHWC x HWIO). Same Algorithm-1 structure as qdense;
+    the conv VJP likewise closes over the quantized operands, and the
+    cotangent passes through grad_quant, so dA/dW are MF-MAC computations.
+    """
+    wq = quantize_weight(params["w"], scheme)
+    aq = quantize_act(a, params.get("gamma"), scheme)
+    y = lax.conv_general_dilated(
+        aq,
+        wq,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if scheme.g is not None:
+        y = quant.grad_quant(y, _g_fmt(scheme, False), scheme.als)
+    return y + params["b"]
+
+
+# ---------------------------------------------------------------------------
+# FP32 helpers (the paper quantizes linear layers only; norms/softmax stay
+# full precision, consistent with Table 2 counting MAC energy of linears).
+# ---------------------------------------------------------------------------
+
+
+def batchnorm(
+    params: Dict[str, jnp.ndarray],
+    stats: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,
+    train: bool,
+    momentum: float = 0.9,
+    eps: float = 1e-5,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """BatchNorm over NHWC (axes 0,1,2). Returns (y, new_stats)."""
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_stats = {
+            "mean": momentum * stats["mean"] + (1 - momentum) * mean,
+            "var": momentum * stats["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = stats["mean"], stats["var"]
+        new_stats = stats
+    y = (x - mean) * lax.rsqrt(var + eps)
+    return y * params["scale"] + params["shift"], new_stats
+
+
+def layernorm(params: Dict[str, jnp.ndarray], x: jnp.ndarray, eps: float = 1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * lax.rsqrt(var + eps) * params["scale"] + params["shift"]
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example cross-entropy; labels int32, logits (..., C)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return logz - gold
+
+
+# ---------------------------------------------------------------------------
+# Initializers — untruncated normal, as the paper stresses (Section 7.1.1:
+# "the initializer of weight should be untruncated normal distribution").
+# ---------------------------------------------------------------------------
+
+
+def he_normal(key, shape, fan_in: int) -> jnp.ndarray:
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def dense_init(key, n_in: int, n_out: int, scheme: Scheme) -> Dict[str, jnp.ndarray]:
+    p = {
+        "w": he_normal(key, (n_in, n_out), n_in),
+        "b": jnp.zeros((n_out,), jnp.float32),
+    }
+    if scheme.prc and scheme.a is not None:
+        p["gamma"] = jnp.float32(scheme.gamma_init)
+    return p
+
+
+def conv_init(key, kh, kw, cin, cout, scheme: Scheme) -> Dict[str, jnp.ndarray]:
+    p = {
+        "w": he_normal(key, (kh, kw, cin, cout), kh * kw * cin),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+    if scheme.prc and scheme.a is not None:
+        p["gamma"] = jnp.float32(scheme.gamma_init)
+    return p
+
+
+def bn_init(c: int):
+    params = {"scale": jnp.ones((c,), jnp.float32), "shift": jnp.zeros((c,), jnp.float32)}
+    stats = {"mean": jnp.zeros((c,), jnp.float32), "var": jnp.ones((c,), jnp.float32)}
+    return params, stats
+
+
+def ln_init(c: int):
+    return {"scale": jnp.ones((c,), jnp.float32), "shift": jnp.zeros((c,), jnp.float32)}

@@ -1,0 +1,21 @@
+"""Model zoo (Layer-2). Each model module exposes:
+
+  Cfg                      dataclass of hyperparameters
+  init(key, cfg, scheme)   -> (params, stats) pytrees
+  apply(params, stats, x, scheme, train, tap_z=None, use_pallas=False)
+                           -> (logits, new_stats, aux) where aux['tap_a'] is
+                              the canonical probe activation (input of the
+                              designated quantized layer)
+  tap_shape(cfg, batch)    static shape of that activation
+  tap_weight_path(cfg)     params path (tuple of keys) of the probed weight
+  input_spec(cfg, batch)   ((x_shape, x_dtype), (y_shape, y_dtype))
+  loss_and_correct(logits, y) -> (per-batch summed CE, # correct)
+"""
+
+from . import cnn, mlp, transformer  # noqa: F401
+
+MODELS = {"mlp": mlp, "cnn": cnn, "cnn_deep": cnn, "transformer": transformer}
+
+
+def get(name: str):
+    return MODELS[name]

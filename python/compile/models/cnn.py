@@ -1,0 +1,110 @@
+"""Mini-ResNet (He et al. CIFAR-style) — the ResNet18/50/101 stand-in.
+
+depth = 6n+2-style: ``blocks`` residual blocks per stage, 3 stages,
+widths (w, 2w, 4w), strides (1, 2, 2). ``blocks=2`` ~ ResNet-14 (the
+ResNet18/50 stand-in), ``blocks=3`` ~ ResNet-20 (the ResNet101 stand-in,
+Table 6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from ..quant import Scheme
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    size: int = 16      # input is size x size x 3
+    width: int = 8      # stem width w; stages are (w, 2w, 4w)
+    blocks: int = 2     # residual blocks per stage
+    classes: int = 10
+
+
+def _widths(cfg: Cfg):
+    return (cfg.width, cfg.width * 2, cfg.width * 4)
+
+
+def init(key, cfg: Cfg, scheme: Scheme):
+    params, stats = {}, {}
+    key, sub = jax.random.split(key)
+    params["stem"] = layers.conv_init(sub, 3, 3, 3, cfg.width, scheme)
+    params["stem_bn"], stats["stem_bn"] = layers.bn_init(cfg.width)
+    cin = cfg.width
+    for s, w in enumerate(_widths(cfg)):
+        for j in range(cfg.blocks):
+            name = f"s{s}b{j}"
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            params[f"{name}_c1"] = layers.conv_init(k1, 3, 3, cin, w, scheme)
+            params[f"{name}_bn1"], stats[f"{name}_bn1"] = layers.bn_init(w)
+            params[f"{name}_c2"] = layers.conv_init(k2, 3, 3, w, w, scheme)
+            params[f"{name}_bn2"], stats[f"{name}_bn2"] = layers.bn_init(w)
+            if cin != w:
+                params[f"{name}_proj"] = layers.conv_init(k3, 1, 1, cin, w, scheme)
+            cin = w
+    key, sub = jax.random.split(key)
+    params["head"] = layers.dense_init(sub, cin, cfg.classes, scheme)
+    return params, stats
+
+
+def apply(params, stats, x, scheme: Scheme, train: bool,
+          tap_z: Optional[jnp.ndarray] = None, use_pallas: bool = False):
+    del use_pallas  # conv path has no pallas variant (see DESIGN.md)
+    new_stats = {}
+    h = layers.qconv(params["stem"], x, scheme)
+    h, new_stats["stem_bn"] = layers.batchnorm(
+        params["stem_bn"], stats["stem_bn"], h, train)
+    h = jax.nn.relu(h)
+    aux = {}
+    for s in range(3):
+        stride = 1 if s == 0 else 2
+        for j in range(_n_blocks(params, s)):
+            name = f"s{s}b{j}"
+            st = stride if j == 0 else 1
+            if s == 1 and j == 0:  # canonical probe layer: stage-1 entry
+                if tap_z is not None:
+                    h = h + tap_z
+                aux["tap_a"] = h
+            skip = h
+            o = layers.qconv(params[f"{name}_c1"], h, scheme, stride=st)
+            o, new_stats[f"{name}_bn1"] = layers.batchnorm(
+                params[f"{name}_bn1"], stats[f"{name}_bn1"], o, train)
+            o = jax.nn.relu(o)
+            o = layers.qconv(params[f"{name}_c2"], o, scheme)
+            o, new_stats[f"{name}_bn2"] = layers.batchnorm(
+                params[f"{name}_bn2"], stats[f"{name}_bn2"], o, train)
+            if f"{name}_proj" in params:
+                skip = layers.qconv(params[f"{name}_proj"], skip, scheme, stride=st)
+            elif st != 1:
+                skip = skip[:, ::st, ::st, :]
+            h = jax.nn.relu(o + skip)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = layers.qdense(params["head"], h, scheme, last=True)
+    return logits, new_stats, aux
+
+
+def _n_blocks(params, stage: int) -> int:
+    return len([k for k in params if k.startswith(f"s{stage}b") and k.endswith("_c1")])
+
+
+def tap_shape(cfg: Cfg, batch: int):
+    return (batch, cfg.size, cfg.size, cfg.width)
+
+
+def tap_weight_path(cfg: Cfg):
+    return ("s1b0_c1", "w")
+
+
+def input_spec(cfg: Cfg, batch: int):
+    return ((batch, cfg.size, cfg.size, 3), jnp.float32), ((batch,), jnp.int32)
+
+
+def loss_and_correct(logits, y):
+    ce = layers.softmax_xent(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return jnp.sum(ce), correct, ce.shape[0]

@@ -1,0 +1,64 @@
+"""MLP classifier (AlexNet stand-in at toy scale; also the quickstart model)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from ..quant import Scheme
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    in_dim: int = 768  # 16x16x3 flattened
+    hidden: Tuple[int, ...] = (256, 128)
+    classes: int = 10
+
+
+def init(key, cfg: Cfg, scheme: Scheme):
+    dims = (cfg.in_dim, *cfg.hidden, cfg.classes)
+    params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        params[f"fc{i}"] = layers.dense_init(sub, a, b, scheme)
+    return params, {}
+
+
+def apply(params, stats, x, scheme: Scheme, train: bool,
+          tap_z: Optional[jnp.ndarray] = None, use_pallas: bool = False):
+    del train
+    h = x.reshape(x.shape[0], -1)
+    n = len(params)
+    aux = {}
+    for i in range(n):
+        if i == 1:  # canonical probe layer: input of fc1
+            if tap_z is not None:
+                h = h + tap_z
+            aux["tap_a"] = h
+        h = layers.qdense(params[f"fc{i}"], h, scheme,
+                          last=(i == n - 1), use_pallas=use_pallas)
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h, stats, aux
+
+
+def tap_shape(cfg: Cfg, batch: int):
+    return (batch, cfg.hidden[0])
+
+
+def tap_weight_path(cfg: Cfg):
+    return ("fc1", "w")
+
+
+def input_spec(cfg: Cfg, batch: int):
+    return ((batch, cfg.in_dim), jnp.float32), ((batch,), jnp.int32)
+
+
+def loss_and_correct(logits, y):
+    ce = layers.softmax_xent(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return jnp.sum(ce), correct, ce.shape[0]

@@ -1,0 +1,118 @@
+"""Small Transformer for sequence transduction (the WMT En-De stand-in).
+
+Full-attention encoder with a per-position classification head; the task
+(rust/src/data/seq.rs) is deterministic transduction: y[t] = (x[S-1-t] +
+shift) mod vocab — reversal plus shift, which requires genuine long-range
+attention. All projection / FFN / head layers are quantized linears
+(Algorithm 1); attention scores, softmax and norms stay FP32, matching the
+paper's scope (linear layers only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers
+from ..quant import Scheme
+
+
+@dataclasses.dataclass(frozen=True)
+class Cfg:
+    vocab: int = 64
+    seq: int = 32
+    d: int = 96
+    heads: int = 4
+    ffn: int = 192
+    depth: int = 2
+
+
+def init(key, cfg: Cfg, scheme: Scheme):
+    params = {}
+    key, k1, k2 = jax.random.split(key, 3)
+    params["tok_emb"] = {"w": jax.random.normal(k1, (cfg.vocab, cfg.d)) * 0.02}
+    params["pos_emb"] = {"w": jax.random.normal(k2, (cfg.seq, cfg.d)) * 0.02}
+    for i in range(cfg.depth):
+        key, kq, kk, kv, ko, k5, k6 = jax.random.split(key, 7)
+        params[f"l{i}_q"] = layers.dense_init(kq, cfg.d, cfg.d, scheme)
+        params[f"l{i}_k"] = layers.dense_init(kk, cfg.d, cfg.d, scheme)
+        params[f"l{i}_v"] = layers.dense_init(kv, cfg.d, cfg.d, scheme)
+        params[f"l{i}_o"] = layers.dense_init(ko, cfg.d, cfg.d, scheme)
+        params[f"l{i}_f1"] = layers.dense_init(k5, cfg.d, cfg.ffn, scheme)
+        params[f"l{i}_f2"] = layers.dense_init(k6, cfg.ffn, cfg.d, scheme)
+        params[f"l{i}_ln1"] = layers.ln_init(cfg.d)
+        params[f"l{i}_ln2"] = layers.ln_init(cfg.d)
+    key, kh = jax.random.split(key)
+    params["ln_f"] = layers.ln_init(cfg.d)
+    params["head"] = layers.dense_init(kh, cfg.d, cfg.vocab, scheme)
+    return params, {}
+
+
+def _attention(params, h, cfg: Cfg, scheme: Scheme, i: int, use_pallas: bool):
+    b, s, d = h.shape
+    hd = d // cfg.heads
+    q = layers.qdense(params[f"l{i}_q"], h, scheme, use_pallas=use_pallas)
+    k = layers.qdense(params[f"l{i}_k"], h, scheme, use_pallas=use_pallas)
+    v = layers.qdense(params[f"l{i}_v"], h, scheme, use_pallas=use_pallas)
+    q = q.reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.heads, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return layers.qdense(params[f"l{i}_o"], o, scheme, use_pallas=use_pallas)
+
+
+def apply(params, stats, x, scheme: Scheme, train: bool,
+          tap_z: Optional[jnp.ndarray] = None, use_pallas: bool = False):
+    del train
+    cfg = _cfg_from(params)
+    h = params["tok_emb"]["w"][x] + params["pos_emb"]["w"][None, :, :]
+    aux = {}
+    for i in range(cfg.depth):
+        if i == 1 or (cfg.depth == 1 and i == 0):  # canonical probe layer
+            if tap_z is not None:
+                h = h + tap_z
+            aux["tap_a"] = h
+        hn = layers.layernorm(params[f"l{i}_ln1"], h)
+        h = h + _attention(params, hn, cfg, scheme, i, use_pallas)
+        hn = layers.layernorm(params[f"l{i}_ln2"], h)
+        f = layers.qdense(params[f"l{i}_f1"], hn, scheme, use_pallas=use_pallas)
+        f = jax.nn.relu(f)
+        f = layers.qdense(params[f"l{i}_f2"], f, scheme, use_pallas=use_pallas)
+        h = h + f
+    h = layers.layernorm(params["ln_f"], h)
+    logits = layers.qdense(params["head"], h, scheme, last=True,
+                           use_pallas=use_pallas)
+    return logits, stats, aux
+
+
+def _cfg_from(params) -> Cfg:
+    vocab, d = params["tok_emb"]["w"].shape
+    seq = params["pos_emb"]["w"].shape[0]
+    ffn = params["l0_f1"]["w"].shape[1]
+    depth = len([k for k in params if k.endswith("_f1")])
+    return Cfg(vocab=vocab, seq=seq, d=d, heads=4, ffn=ffn, depth=depth)
+
+
+def tap_shape(cfg: Cfg, batch: int):
+    return (batch, cfg.seq, cfg.d)
+
+
+def tap_weight_path(cfg: Cfg):
+    i = 1 if cfg.depth > 1 else 0
+    return (f"l{i}_q", "w")
+
+
+def input_spec(cfg: Cfg, batch: int):
+    return ((batch, cfg.seq), jnp.int32), ((batch, cfg.seq), jnp.int32)
+
+
+def loss_and_correct(logits, y):
+    ce = layers.softmax_xent(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return jnp.sum(ce), correct, ce.shape[0] * ce.shape[1]

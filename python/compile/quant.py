@@ -1,0 +1,380 @@
+"""Quantization core: ALS-PoTQ (the paper's format) plus baseline formats.
+
+This module is the *numeric contract* shared with the rust mirror
+(rust/src/potq). Everything in the PoT path is computed with exact f32 bit
+manipulation (no libm log/exp), so the rust implementation can be bit-exact:
+
+  * exponent / mantissa are extracted from the f32 bit pattern;
+  * ``round(log2 |x|)`` (paper eq. 2) is ``E + (m > SQRT2_F32)`` where
+    ``m in [1, 2)`` is the exact mantissa and ``SQRT2_F32`` is the f32
+    nearest sqrt(2) (0x3FB504F3). This matches round-to-nearest in the log
+    domain up to <=1 ulp at the rounding boundary (documented deviation);
+  * powers of two are constructed from bits, never via ``exp2``.
+
+Terminology follows the paper (Section 4.1):
+  b        total PoT bit-width (1 sign + b-1 exponent bits), default 5
+  emax     2^(b-2) - 1, the largest exponent magnitude
+  alpha    layer-wise scale max|F| / 2^emax          (eq. 7)
+  beta     round(log2 alpha), an integer            (eq. 10)
+  e        PoT exponent of each element, in [-emax, emax] or ZERO
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# f32 closest to sqrt(2); the log-domain rounding boundary.
+SQRT2_F32 = np.uint32(0x3FB504F3).view(np.float32).item()
+# Exponent code meaning "value is zero" in the (e, s) representation.
+ZERO_CODE = np.int32(-128)
+
+
+def pot_emax(b: int) -> int:
+    """Largest exponent magnitude representable by a b-bit PoT number."""
+    return 2 ** (b - 2) - 1
+
+
+def _f32_parts(x: jnp.ndarray):
+    """Exact sign / biased-exponent / mantissa-value decomposition of f32."""
+    bits = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    sign = jnp.right_shift(bits, 31) & 1
+    biased = jnp.right_shift(bits, 23) & 0xFF
+    m23 = bits & 0x7FFFFF
+    # m in [1, 2), exactly representable in f32 (24 significant bits).
+    m = 1.0 + m23.astype(jnp.float32) * jnp.float32(2.0**-23)
+    return sign, biased, m
+
+
+def round_log2_abs(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(round(log2|x|), is_zero) with the exact-bit contract above.
+
+    Subnormals and zeros report is_zero=True (flushed). The returned
+    exponent for zero entries is ZERO_CODE.
+    """
+    _, biased, m = _f32_parts(x)
+    is_zero = biased == 0
+    e = biased - 127 + (m > SQRT2_F32).astype(jnp.int32)
+    return jnp.where(is_zero, ZERO_CODE, e), is_zero
+
+
+def pow2i(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^e for integer e in [-126, 127], built from bits."""
+    bits = jnp.left_shift((e.astype(jnp.int32) + 127), 23)
+    return lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def compute_beta(f: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Layer-wise PoT scale exponent beta = round(log2(max|F| / 2^emax)).
+
+    Returns an int32 scalar; 0 when the block is all-zero.
+    """
+    amax = jnp.max(jnp.abs(f))
+    e, is_zero = round_log2_abs(amax)
+    return jnp.where(is_zero, 0, e - pot_emax(b)).astype(jnp.int32)
+
+
+def pot_quantize(
+    f: jnp.ndarray, b: int, beta: Optional[jnp.ndarray] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """ALS-PoTQ: f32 -> (e int32, s int32 in {0,1}, beta int32 scalar).
+
+    e is the *local* exponent in [-emax, emax] (value = (1-2s)*2^(e+beta)),
+    or ZERO_CODE for zero. When ``beta`` is None it is computed from the
+    block (adaptive layer-wise scaling); passing beta=0 disables ALS.
+    """
+    emax = pot_emax(b)
+    if beta is None:
+        beta = compute_beta(f, b)
+    sign, biased, m = _f32_parts(f)
+    is_zero = biased == 0
+    e_real = biased - 127 + (m > SQRT2_F32).astype(jnp.int32)
+    e = e_real - beta
+    underflow = e < -emax
+    e = jnp.minimum(e, emax)
+    zero = is_zero | underflow
+    e = jnp.where(zero, ZERO_CODE, e)
+    s = jnp.where(zero, 0, sign)
+    return e.astype(jnp.int32), s.astype(jnp.int32), beta
+
+
+def pot_dequantize(e: jnp.ndarray, s: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """(e, s, beta) -> f32 value (1-2s) * 2^(e+beta); ZERO_CODE -> 0."""
+    zero = e == ZERO_CODE
+    mag = pow2i(jnp.where(zero, 0, e + beta))
+    val = jnp.where(s == 1, -mag, mag)
+    return jnp.where(zero, jnp.float32(0), val)
+
+
+def pot_value(f: jnp.ndarray, b: int, als: bool = True) -> jnp.ndarray:
+    """Round-trip ALS-PoTQ: the dequantized value of f (no gradient logic)."""
+    beta = None if als else jnp.int32(0)
+    e, s, beta = pot_quantize(f, b, beta)
+    return pot_dequantize(e, s, beta)
+
+
+# ---------------------------------------------------------------------------
+# Extensions beyond the paper (ablated in bench ext_ablation):
+#  * unbiased stochastic PoT rounding (LUQ-style unbiasedness, PoT grid)
+#  * per-channel ALS (beta per output channel instead of per layer)
+# ---------------------------------------------------------------------------
+
+
+def pot_value_unbiased(f: jnp.ndarray, b: int, key) -> jnp.ndarray:
+    """Stochastic PoT rounding, unbiased in value: x in [2^k, 2^(k+1))
+    rounds up with probability (x - 2^k) / 2^k so E[q(x)] = x inside the
+    representable range. Used for gradient quantization ('potu' formats) —
+    the bias-free property LUQ argues matters for G.
+    """
+    emax = pot_emax(b)
+    beta = compute_beta(f, b)
+    sign, biased, m = _f32_parts(f)
+    is_zero = biased == 0
+    e_floor = biased - 127  # floor(log2 |f|)
+    # round-up probability from the exact mantissa: p = m - 1 in [0, 1)
+    p_up = m - 1.0
+    u = jax.random.uniform(key, f.shape, jnp.float32)
+    e_real = e_floor + (u < p_up).astype(jnp.int32)
+    e = e_real - beta
+    underflow = e < -emax
+    e = jnp.minimum(e, emax)
+    zero = is_zero | underflow
+    e = jnp.where(zero, ZERO_CODE, e)
+    s = jnp.where(zero, 0, sign)
+    return pot_dequantize(e.astype(jnp.int32), s.astype(jnp.int32), beta)
+
+
+def pot_value_per_channel(f: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Per-output-channel ALS-PoTQ: one beta per last-axis slice. The
+    hardware cost is one extra shift per output channel (still no
+    multiplies); ablation of the paper's layer-wise choice."""
+    emax = pot_emax(b)
+    amax = jnp.max(jnp.abs(f), axis=tuple(range(f.ndim - 1)), keepdims=True)
+    e_a, zero_a = round_log2_abs(amax)
+    beta = jnp.where(zero_a, 0, e_a - emax)  # (1, ..., C)
+    sign, biased, m = _f32_parts(f)
+    is_zero = biased == 0
+    e_real = biased - 127 + (m > SQRT2_F32).astype(jnp.int32)
+    e = e_real - beta
+    underflow = e < -emax
+    e = jnp.minimum(e, emax)
+    zero = is_zero | underflow
+    mag = pow2i(jnp.where(zero, 0, e + beta))
+    val = jnp.where(sign == 1, -mag, mag)
+    return jnp.where(zero, jnp.float32(0), val)
+
+
+def _value_derived_key(g: jnp.ndarray):
+    """Deterministic pseudo-randomness for in-graph stochastic rounding:
+    fold the cotangent's bit-content into a PRNG key (the train step has
+    no key input; determinism given (state, batch) is a feature)."""
+    bits = lax.bitcast_convert_type(g.astype(jnp.float32), jnp.int32)
+    seed = jnp.sum(bits.astype(jnp.uint32), dtype=jnp.uint32)
+    return jax.random.PRNGKey(seed.astype(jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Baseline formats (used by the comparison schemes only; these are allowed
+# to use FP multiplies in quantization — the paper makes the same point
+# about S2FP8/LUQ introducing extra multiplications).
+# ---------------------------------------------------------------------------
+
+
+def int_value(f: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Symmetric per-tensor INT-b quantization with an FP scale."""
+    qmax = 2.0 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(f))
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(f / scale), -qmax, qmax)
+    return q * scale
+
+
+def fp8_value(f: jnp.ndarray, e_bits: int = 4, m_bits: int = 3) -> jnp.ndarray:
+    """S2FP8-style FP8: per-tensor *shifted* e4m3 simulation.
+
+    S2FP8's point is exactly that plain FP8 clips/flushes W/A/G whose
+    ranges drift (gradients sit far below 2^-6); the 'shift' moves the
+    tensor into FP8's window with a PoT scale, then rounds to e4m3.
+    """
+    amax = jnp.max(jnp.abs(f))
+    # PoT shift placing max|f| near the top of the e4m3 window (448)
+    e_shift, shift_zero = round_log2_abs(amax)
+    mu = jnp.where(shift_zero, 0, e_shift - 8)  # 2^8 < 448 < 2^9
+    scale = pow2i(mu)
+    f = f * pow2i(-mu)
+    bits = lax.bitcast_convert_type(f.astype(jnp.float32), jnp.int32)
+    drop = 23 - m_bits
+    # round-to-nearest-even on the dropped mantissa bits
+    round_bit = jnp.right_shift(bits, drop) & 1
+    bits = bits + ((1 << (drop - 1)) - 1) + round_bit
+    bits = jnp.left_shift(jnp.right_shift(bits, drop), drop)
+    y = lax.bitcast_convert_type(bits, jnp.float32)
+    # clamp exponent range (e4m3: max 448, min normal 2^-6)
+    emax_v = jnp.float32(448.0) if e_bits == 4 else jnp.float32(57344.0)
+    emin_v = jnp.float32(2.0**-6) if e_bits == 4 else jnp.float32(2.0**-14)
+    y = jnp.clip(y, -emax_v, emax_v)
+    y = jnp.where(jnp.abs(y) < emin_v, 0.0, y)
+    return y * scale
+
+
+# ---------------------------------------------------------------------------
+# Format dispatch + straight-through estimators
+# ---------------------------------------------------------------------------
+
+Fmt = Optional[Tuple]  # None | ('pot', b) | ('int', b) | ('fp8',)
+
+
+def apply_fmt(f: jnp.ndarray, fmt: Fmt, als: bool = True) -> jnp.ndarray:
+    """Quantize-dequantize ``f`` according to a format spec (no STE)."""
+    if fmt is None:
+        return f
+    kind = fmt[0]
+    if kind == "pot":
+        return pot_value(f, fmt[1], als=als)
+    if kind == "potu":  # unbiased stochastic PoT (extension)
+        return pot_value_unbiased(f, fmt[1], _value_derived_key(f))
+    if kind == "potc":  # per-channel ALS (extension)
+        return pot_value_per_channel(f, fmt[1])
+    if kind == "int":
+        return int_value(f, fmt[1])
+    if kind == "fp8":
+        return fp8_value(f)
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+def ste(f: jnp.ndarray, fmt: Fmt, als: bool = True) -> jnp.ndarray:
+    """Straight-through estimator: quantized forward, identity backward."""
+    if fmt is None:
+        return f
+    return f + lax.stop_gradient(apply_fmt(f, fmt, als=als) - f)
+
+
+# ---------------------------------------------------------------------------
+# WBC / PRC (paper sections 4.2, 4.3)
+# ---------------------------------------------------------------------------
+
+
+def weight_bias_correction(w: jnp.ndarray) -> jnp.ndarray:
+    """WBC (eq. 11): remove the mean so W matches PoT symmetry."""
+    return w - jnp.mean(w)
+
+
+def ratio_clip(a: jnp.ndarray, gamma: jnp.ndarray) -> jnp.ndarray:
+    """PRC (eq. 12): clip at gamma * max|A|.
+
+    The threshold's max|A| factor is treated as a constant (stop_gradient)
+    so the gradient w.r.t. gamma is the PACT-style boundary gradient, and
+    elements inside the range get a pass-through gradient.
+    """
+    t = lax.stop_gradient(jnp.max(jnp.abs(a))) * gamma
+    return jnp.clip(a, -t, t)
+
+
+# ---------------------------------------------------------------------------
+# Gradient quantization (Algorithm 1, lines 13-15): an identity-forward op
+# whose backward pass runs the cotangent through ALS-PoTQ, so the two
+# backward matmuls consume quantized G.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def grad_quant(y: jnp.ndarray, fmt: Fmt, als: bool = True) -> jnp.ndarray:
+    return y
+
+
+def _gq_fwd(y, fmt, als):
+    return y, None
+
+
+def _gq_bwd(fmt, als, _res, g):
+    return (apply_fmt(g, fmt, als=als),)
+
+
+grad_quant.defvjp(_gq_fwd, _gq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Scheme registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """A full training quantization scheme (what Table 2's rows are)."""
+
+    name: str
+    w: Fmt = None
+    a: Fmt = None
+    g: Fmt = None
+    g_last: Fmt = None  # format for the last layer's gradient (Appendix D)
+    wbc: bool = False
+    prc: bool = False
+    als: bool = True
+    gamma_init: float = 0.9
+    gamma_decay: float = 1e-3  # L2 pull on gamma (PACT-style regularizer)
+
+    @property
+    def quantized(self) -> bool:
+        return self.w is not None or self.a is not None or self.g is not None
+
+
+SCHEMES = {
+    # full-precision baseline
+    "fp32": Scheme("fp32"),
+    # ours: the paper's complete multiplication-free scheme
+    "mf": Scheme(
+        "mf", w=("pot", 5), a=("pot", 5), g=("pot", 5), g_last=("pot", 6),
+        wbc=True, prc=True, als=True,
+    ),
+    # ablations (Table 5)
+    "mf_nowbc": Scheme(
+        "mf_nowbc", w=("pot", 5), a=("pot", 5), g=("pot", 5), g_last=("pot", 6),
+        wbc=False, prc=True, als=True,
+    ),
+    "mf_noprc": Scheme(
+        "mf_noprc", w=("pot", 5), a=("pot", 5), g=("pot", 5), g_last=("pot", 6),
+        wbc=True, prc=False, als=True,
+    ),
+    "mf_noals": Scheme(
+        "mf_noals", w=("pot", 5), a=("pot", 5), g=("pot", 5), g_last=("pot", 6),
+        wbc=True, prc=True, als=False,
+    ),
+    # baselines (Tables 2-4): closest from-scratch analogues
+    "wpot5": Scheme("wpot5", w=("pot", 5)),  # DeepShift-like (W-only PoT5)
+    "wapot4": Scheme("wapot4", w=("pot", 4), a=("pot", 4)),  # LogNN-like
+    "luq4": Scheme("luq4", w=("int", 4), a=("int", 4), g=("pot", 5)),  # LUQ-like
+    "fp8": Scheme("fp8", w=("fp8",), a=("fp8",), g=("fp8",)),  # S2FP8-like
+    "int8": Scheme("int8", w=("int", 8), a=("int", 8), g=("int", 8)),
+    # bit-width sweep (the b=5 design-choice ablation; 4-bit keeps an
+    # emax of 3, 6-bit widens to 15)
+    "mf4": Scheme(
+        "mf4", w=("pot", 4), a=("pot", 4), g=("pot", 4), g_last=("pot", 5),
+        wbc=True, prc=True, als=True,
+    ),
+    "mf6": Scheme(
+        "mf6", w=("pot", 6), a=("pot", 6), g=("pot", 6), g_last=("pot", 6),
+        wbc=True, prc=True, als=True,
+    ),
+    # extensions beyond the paper (bench ext_ablation)
+    "mf_sr": Scheme(  # unbiased stochastic PoT rounding for G
+        "mf_sr", w=("pot", 5), a=("pot", 5), g=("potu", 5), g_last=("potu", 6),
+        wbc=True, prc=True, als=True,
+    ),
+    "mf_pc": Scheme(  # per-channel ALS for W
+        "mf_pc", w=("potc", 5), a=("pot", 5), g=("pot", 5), g_last=("pot", 6),
+        wbc=True, prc=True, als=True,
+    ),
+}
+
+
+def get_scheme(name: str) -> Scheme:
+    try:
+        return SCHEMES[name]
+    except KeyError:
+        raise KeyError(f"unknown scheme {name!r}; have {sorted(SCHEMES)}")

@@ -1,0 +1,260 @@
+"""Training-step construction and state-vector packing (Layer-2 glue).
+
+The entire mutable training state — parameters, SGD momentum, BN running
+stats, and a couple of scalar extras (last loss, step counter) — is packed
+into ONE flat f32 vector. The rust coordinator holds that vector as a
+device-resident PJRT buffer and feeds it back into ``train_step`` every
+iteration with zero host copies; scalar metrics are read back through the
+tiny ``slice_metrics`` executable (see DESIGN.md, runtime decisions).
+
+Exported step functions (all pure, all lowered AOT by aot.py):
+  init(seed)                  -> state                      f32[S]
+  train_step(state, x, y, lr) -> state'                     f32[S]
+  eval_step(state, x, y)      -> [sum_loss, n_correct]      f32[2]
+  probe(state, x, y)          -> [W_l | A_l | G_l] raveled  f32[K]
+  slice_metrics(state)        -> [loss, step]               f32[2]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from . import models as model_zoo
+from .quant import Scheme, get_scheme
+
+MOMENTUM = 0.9  # SGD momentum, Appendix D
+
+
+@dataclasses.dataclass
+class Built:
+    """Everything aot.py needs for one (model, scheme, batch) variant."""
+
+    name: str
+    model: Any
+    cfg: Any
+    scheme: Scheme
+    batch: int
+    use_pallas: bool
+    weight_decay: float
+    fns: Dict[str, Callable]
+    example_args: Dict[str, Tuple]
+    manifest: Dict[str, Any]
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _layout(tree) -> Tuple[list, int]:
+    """(entries, total): offsets of every leaf in ravel_pytree order."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    entries, off = [], 0
+    for path, leaf in leaves:
+        n = int(leaf.size)
+        entries.append(
+            {
+                "path": _path_str(path),
+                "offset": off,
+                "size": n,
+                "shape": list(leaf.shape),
+            }
+        )
+        off += n
+    return entries, off
+
+
+def _decay_for(path_str: str, weight_decay: float, scheme: Scheme) -> float:
+    leaf = path_str.rsplit("/", 1)[-1]
+    if leaf == "w" and "emb" not in path_str:
+        return weight_decay
+    if leaf == "gamma":
+        return scheme.gamma_decay
+    return 0.0
+
+
+def build(
+    name: str,
+    model_name: str,
+    cfg: Any,
+    scheme_name: str,
+    batch: int,
+    use_pallas: bool = False,
+    weight_decay: float = 5e-4,
+    seed: int = 0,
+) -> Built:
+    model = model_zoo.get(model_name)
+    scheme = get_scheme(scheme_name)
+
+    # Template state (shapes only — aot lowers functions, never runs them;
+    # the template is also what defines the layout manifest).
+    params0, stats0 = model.init(jax.random.PRNGKey(seed), cfg, scheme)
+    template = {
+        "p": params0,
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params0),
+        "s": stats0,
+        "x": {"loss": jnp.float32(0), "step": jnp.float32(0)},
+    }
+    flat0, unravel = ravel_pytree(template)
+    state_len = int(flat0.size)
+    entries, total = _layout(template)
+    assert total == state_len, "layout does not match ravel order"
+
+    (x_shape, x_dtype), (y_shape, y_dtype) = model.input_spec(cfg, batch)
+
+    # ---- step functions -------------------------------------------------
+    def init(seed_arr):
+        key = jax.random.PRNGKey(seed_arr)
+        p, s = model.init(key, cfg, scheme)
+        tree = {
+            "p": p,
+            "m": jax.tree_util.tree_map(jnp.zeros_like, p),
+            "s": s,
+            "x": {"loss": jnp.float32(0), "step": jnp.float32(0)},
+        }
+        return ravel_pytree(tree)[0]
+
+    def train_step(state, x, y, lr):
+        st = unravel(state)
+
+        def loss_fn(p):
+            logits, new_stats, _ = model.apply(p, st["s"], x, scheme, True,
+                                               use_pallas=use_pallas)
+            sum_ce, _, n = model.loss_and_correct(logits, y)
+            return sum_ce / n, new_stats
+
+        (loss, new_stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            st["p"]
+        )
+
+        def upd(path, m, g, p):
+            wd = _decay_for(_path_str(path), weight_decay, scheme)
+            return MOMENTUM * m + g + wd * p
+
+        m = jax.tree_util.tree_map_with_path(upd, st["m"], grads, st["p"])
+        p = jax.tree_util.tree_map(lambda p_, m_: p_ - lr * m_, st["p"], m)
+        out = {
+            "p": p,
+            "m": m,
+            "s": new_stats,
+            "x": {"loss": loss, "step": st["x"]["step"] + 1},
+        }
+        return ravel_pytree(out)[0]
+
+    def eval_step(state, x, y):
+        st = unravel(state)
+        logits, _, _ = model.apply(st["p"], st["s"], x, scheme, False,
+                                   use_pallas=use_pallas)
+        sum_ce, correct, _ = model.loss_and_correct(logits, y)
+        return jnp.stack([sum_ce, correct])
+
+    tap_shape = model.tap_shape(cfg, batch)
+    wpath = model.tap_weight_path(cfg)
+
+    def probe(state, x, y):
+        st = unravel(state)
+
+        def f(z):
+            logits, _, aux = model.apply(st["p"], st["s"], x, scheme, True,
+                                         tap_z=z, use_pallas=use_pallas)
+            sum_ce, _, n = model.loss_and_correct(logits, y)
+            return sum_ce / n, aux["tap_a"]
+
+        g, a = jax.grad(f, has_aux=True)(jnp.zeros(tap_shape, jnp.float32))
+        w = st["p"]
+        for k in wpath:
+            w = w[k]
+        return jnp.concatenate([w.ravel(), a.ravel(), g.ravel()])
+
+    def slice_metrics(state):
+        st = unravel(state)
+        return jnp.stack([st["x"]["loss"], st["x"]["step"]])
+
+    # ---- example args for lowering --------------------------------------
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    ex = {
+        "init": (sds((), i32),),
+        "train": (sds((state_len,), f32), sds(x_shape, x_dtype),
+                  sds(y_shape, y_dtype), sds((), f32)),
+        "eval": (sds((state_len,), f32), sds(x_shape, x_dtype),
+                 sds(y_shape, y_dtype)),
+        "probe": (sds((state_len,), f32), sds(x_shape, x_dtype),
+                  sds(y_shape, y_dtype)),
+        "slice": (sds((state_len,), f32),),
+    }
+
+    # ---- manifest --------------------------------------------------------
+    n_w = int(w_size(params0, wpath))
+    n_a = 1
+    for d in tap_shape:
+        n_a *= d
+    n_params = sum(
+        int(l.size) for l in jax.tree_util.tree_leaves(params0)
+    )
+    manifest = {
+        "name": name,
+        "model": model_name,
+        "scheme": scheme_name,
+        "batch": batch,
+        "use_pallas": use_pallas,
+        "state_len": state_len,
+        "n_params": n_params,
+        "weight_decay": weight_decay,
+        "momentum": MOMENTUM,
+        "inputs": {
+            "x": {"shape": list(x_shape), "dtype": str(jnp.dtype(x_dtype).name)},
+            "y": {"shape": list(y_shape), "dtype": str(jnp.dtype(y_dtype).name)},
+        },
+        "layout": entries,
+        "loss_offset": _find(entries, "x/loss"),
+        "step_offset": _find(entries, "x/step"),
+        "eval_outputs": ["sum_loss", "n_correct"],
+        "eval_denom": _eval_denom(model_name, cfg, batch),
+        "probe": {
+            "weight_path": "/".join(wpath),
+            "sections": [
+                {"name": "w", "offset": 0, "size": n_w},
+                {"name": "a", "offset": n_w, "size": n_a},
+                {"name": "g", "offset": n_w + n_a, "size": n_a},
+            ],
+        },
+        "model_cfg": dataclasses.asdict(cfg),
+    }
+
+    fns = {"init": init, "train": train_step, "eval": eval_step,
+           "probe": probe, "slice": slice_metrics}
+    return Built(name, model, cfg, scheme, batch, use_pallas, weight_decay,
+                 fns, ex, manifest)
+
+
+def w_size(params, wpath) -> int:
+    w = params
+    for k in wpath:
+        w = w[k]
+    return int(w.size)
+
+
+def _find(entries, path: str) -> int:
+    for e in entries:
+        if e["path"] == path:
+            return e["offset"]
+    raise KeyError(path)
+
+
+def _eval_denom(model_name: str, cfg, batch: int) -> int:
+    if model_name == "transformer":
+        return batch * cfg.seq
+    return batch

@@ -1,0 +1,74 @@
+"""AOT lowering: HLO text well-formedness and manifest consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, train
+from compile.models import mlp
+
+
+@pytest.fixture(scope="module")
+def built():
+    return train.build("t_aot_mlp", "mlp", mlp.Cfg(), "mf", 8)
+
+
+def test_hlo_text_lowering(built):
+    lowered = jax.jit(built.fns["slice"]).lower(*built.example_args["slice"])
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert f"f32[{built.manifest['state_len']}]" in text
+    assert "f32[2]" in text  # output
+
+
+def test_train_step_signature(built):
+    lowered = jax.jit(built.fns["train"]).lower(*built.example_args["train"])
+    text = aot.to_hlo_text(lowered)
+    s = built.manifest["state_len"]
+    # state in, state out, x, y, lr all present in the entry layout
+    assert text.count(f"f32[{s}]") >= 2
+    assert "s32[8]" in text  # labels
+    head = text.split("\n", 1)[0]
+    assert "entry_computation_layout" in head
+
+
+def test_variant_matrix_names_unique():
+    names = [v[0] for v in aot.VARIANTS]
+    assert len(names) == len(set(names))
+    # every scheme referenced exists
+    from compile.quant import SCHEMES
+    for (_, _, _, scheme, _, _) in aot.VARIANTS:
+        assert scheme in SCHEMES
+
+
+def test_lower_variant_writes_files(tmp_path, built):
+    man = aot.lower_variant(built, str(tmp_path))
+    vdir = tmp_path / built.name
+    for key, fname in man["artifacts"].items():
+        p = vdir / fname
+        assert p.exists() and p.stat().st_size > 100, key
+    with open(vdir / "manifest.json") as f:
+        j = json.load(f)
+    assert j["state_len"] == built.manifest["state_len"]
+    assert j["artifacts"]["train"] == "train.hlo.txt"
+
+
+def test_kernel_artifact_potq_packing(tmp_path):
+    """The potq micro-artifact packs [deq | e | s | beta] as documented."""
+    entries = aot.kernel_artifacts(str(tmp_path))
+    potq5 = next(e for e in entries if e["name"] == "potq_b5")
+    assert potq5["n"] == aot.POTQ_N
+    text = open(tmp_path / "kernels" / "potq_b5.hlo.txt").read()
+    assert f"f32[{3 * aot.POTQ_N + 1}]" in text
+
+
+def test_build_variant_lookup():
+    b = aot.build_variant("mlp_mf")
+    assert b.scheme.name == "mf" and b.batch == 128
+    with pytest.raises(KeyError):
+        aot.build_variant("nope")

@@ -1,0 +1,109 @@
+"""Pallas kernels vs the pure-jnp oracle (the CORE L1 correctness signal)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.kernels import mfmac, potq, ref
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("b", [3, 4, 5, 6])
+@pytest.mark.parametrize("shape", [(8, 8), (256, 16), (512, 32), (100, 7)])
+def test_potq_pallas_matches_ref_exactly(b, shape):
+    x = _rand(shape, scale=0.03, seed=b)
+    e0, s0, b0, d0 = ref.ref_potq(jnp.asarray(x), b)
+    e1, s1, b1, d1 = potq.potq_pallas(jnp.asarray(x), b)
+    assert int(b0) == int(b1)
+    assert np.array_equal(np.asarray(e0), np.asarray(e1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@pytest.mark.parametrize("dims", [(8, 8, 8), (64, 64, 64), (128, 64, 32), (65, 33, 17)])
+def test_mfmac_pallas_matches_ref(dims):
+    m, k, n = dims
+    x = _rand((m, k), scale=0.4, seed=m)
+    w = _rand((k, n), scale=0.04, seed=n)
+    y_ref = np.asarray(ref.ref_mfmac(jnp.asarray(x), jnp.asarray(w)))
+    for fn in (mfmac.mfmac_pallas, mfmac.mfmac_mxu_pallas):
+        y = np.asarray(fn(jnp.asarray(x), jnp.asarray(w)))
+        denom = np.abs(y_ref).max() + 1e-30
+        assert np.abs(y - y_ref).max() / denom < 1e-6, fn.__name__
+
+
+def test_mfmac_logdomain_equals_matmul_form():
+    x = _rand((32, 48), scale=2.0, seed=1)
+    w = _rand((48, 24), scale=1e-3, seed=2)
+    a = np.asarray(ref.ref_mfmac(jnp.asarray(x), jnp.asarray(w)))
+    b = np.asarray(ref.ref_mfmac_logdomain(jnp.asarray(x), jnp.asarray(w)))
+    assert np.allclose(a, b, rtol=1e-6, atol=1e-30)
+
+
+def test_mfmac_zero_operand():
+    x = jnp.zeros((16, 16), jnp.float32)
+    w = jnp.asarray(_rand((16, 16), seed=3))
+    assert np.all(np.asarray(mfmac.mfmac_pallas(x, w)) == 0)
+
+
+def test_mfmac_identityish():
+    # w = exact powers of two survive quantization; x PoT too -> exact dot
+    x = jnp.asarray(np.diag([2.0, 0.5, 1.0, 4.0]).astype(np.float32))
+    w = jnp.asarray((np.ones((4, 4)) * 0.25).astype(np.float32))
+    y = np.asarray(mfmac.mfmac_pallas(x, w))
+    expect = np.asarray(x) @ np.asarray(w)
+    assert np.array_equal(y, expect)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 16, 64]),
+    k=st.sampled_from([8, 64, 128]),
+    n=st.sampled_from([1, 8, 64]),
+    sx=st.integers(-12, 6),
+    sw=st.integers(-12, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_mfmac_pallas_vs_ref(m, k, n, sx, sw, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, k)) * 2.0**sx).astype(np.float32)
+    w = (rng.standard_normal((k, n)) * 2.0**sw).astype(np.float32)
+    y_ref = np.asarray(ref.ref_mfmac(jnp.asarray(x), jnp.asarray(w)))
+    y = np.asarray(mfmac.mfmac_pallas(jnp.asarray(x), jnp.asarray(w)))
+    denom = np.abs(y_ref).max() + 1e-30
+    assert np.abs(y - y_ref).max() / denom < 1e-5
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 520),
+    cols=st.integers(1, 9),
+    scale_log=st.integers(-20, 10),
+    b=st.sampled_from([4, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_potq_pallas_vs_ref(rows, cols, scale_log, b, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((rows, cols)) * 2.0**scale_log).astype(np.float32)
+    e0, s0, b0, d0 = ref.ref_potq(jnp.asarray(x), b)
+    e1, s1, b1, d1 = potq.potq_pallas(jnp.asarray(x), b)
+    assert int(b0) == int(b1)
+    assert np.array_equal(np.asarray(e0), np.asarray(e1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_quantization_error_vs_bits_monotone():
+    # Figure 4's point: more exponent bits only helps near zero; overall
+    # MSE after adaptive scaling should be non-increasing in b.
+    x = _rand((8192,), seed=9)
+    errs = []
+    for b in (3, 4, 5, 6):
+        d = np.asarray(quant.pot_value(jnp.asarray(x), b))
+        errs.append(float(np.mean((d - x) ** 2)))
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]

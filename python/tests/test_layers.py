@@ -1,0 +1,128 @@
+"""Quantized layer tests, incl. the Algorithm-1 backward equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import layers, quant
+from compile.quant import Scheme
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+PURE = Scheme("pure", w=("pot", 5), a=("pot", 5), g=("pot", 5),
+              wbc=False, prc=False, als=True)
+
+
+def test_qdense_fp32_is_plain_matmul():
+    p = {"w": jnp.asarray(_rand((8, 4), seed=0)), "b": jnp.zeros(4)}
+    a = jnp.asarray(_rand((3, 8), seed=1))
+    y = layers.qdense(p, a, quant.get_scheme("fp32"))
+    assert np.allclose(np.asarray(y), np.asarray(a) @ np.asarray(p["w"]))
+
+
+def test_qdense_forward_uses_quantized_operands():
+    p = {"w": jnp.asarray(_rand((16, 8), seed=2)), "b": jnp.zeros(8)}
+    a = jnp.asarray(_rand((4, 16), seed=3))
+    y = np.asarray(layers.qdense(p, a, PURE))
+    wq = quant.pot_value(p["w"], 5)
+    aq = quant.pot_value(a, 5)
+    assert np.allclose(y, np.asarray(aq @ wq), rtol=1e-6)
+
+
+def test_algorithm1_backward_dW_and_dA():
+    """dW == Aqᵀ @ Gq and dA == Gq @ Wqᵀ (Algorithm 1 lines 13-15)."""
+    w = jnp.asarray(_rand((16, 8), seed=4))
+    a = jnp.asarray(_rand((4, 16), seed=5))
+    cot = jnp.asarray(_rand((4, 8), scale=1e-3, seed=6))
+    p = {"w": w, "b": jnp.zeros(8)}
+
+    def f(w_, a_):
+        return jnp.vdot(layers.qdense({"w": w_, "b": p["b"]}, a_, PURE), cot)
+
+    dw, da = jax.grad(f, argnums=(0, 1))(w, a)
+    gq = np.asarray(quant.pot_value(cot, 5))
+    aq = np.asarray(quant.pot_value(a, 5))
+    wq = np.asarray(quant.pot_value(w, 5))
+    assert np.allclose(np.asarray(dw), aq.T @ gq, rtol=1e-5, atol=1e-12)
+    assert np.allclose(np.asarray(da), gq @ wq.T, rtol=1e-5, atol=1e-12)
+
+
+def test_wbc_jacobian_centers_weight_gradient():
+    """With WBC on, dW picks up the centering jacobian (mean removed)."""
+    sch = Scheme("wbc", w=("pot", 5), a=None, g=None, wbc=True, als=True)
+    w = jnp.asarray(_rand((8, 4), seed=7) + 0.5)
+    a = jnp.asarray(_rand((2, 8), seed=8))
+    cot = jnp.asarray(_rand((2, 4), seed=9))
+
+    def f(w_):
+        return jnp.vdot(layers.qdense({"w": w_, "b": jnp.zeros(4)}, a, sch), cot)
+
+    dw = np.asarray(jax.grad(f)(w))
+    raw = np.asarray(a).T @ np.asarray(cot)
+    assert np.allclose(dw, raw - raw.mean(), rtol=1e-5)
+
+
+def test_qconv_shapes_and_fp32_exactness():
+    p = {"w": jnp.asarray(_rand((3, 3, 4, 8), seed=10)), "b": jnp.zeros(8)}
+    x = jnp.asarray(_rand((2, 9, 9, 4), seed=11))
+    y = layers.qconv(p, x, quant.get_scheme("fp32"), stride=2)
+    assert y.shape == (2, 5, 5, 8)
+    y1 = layers.qconv(p, x, quant.get_scheme("fp32"), stride=1)
+    assert y1.shape == (2, 9, 9, 8)
+
+
+def test_qconv_quantized_matches_manual():
+    p = {"w": jnp.asarray(_rand((3, 3, 2, 4), seed=12)), "b": jnp.zeros(4)}
+    x = jnp.asarray(_rand((1, 6, 6, 2), seed=13))
+    y = np.asarray(layers.qconv(p, x, PURE))
+    wq = quant.pot_value(p["w"], 5)
+    xq = quant.pot_value(x, 5)
+    ref = jax.lax.conv_general_dilated(
+        xq, wq, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert np.allclose(y, np.asarray(ref), rtol=1e-6)
+
+
+def test_batchnorm_train_and_eval():
+    p, s = layers.bn_init(4)
+    x = jnp.asarray(_rand((8, 3, 3, 4), seed=14) * 2 + 1)
+    y, ns = layers.batchnorm(p, s, x, train=True)
+    assert abs(float(jnp.mean(y))) < 1e-5
+    assert float(jnp.std(y)) == pytest.approx(1.0, abs=1e-2)
+    # running stats moved toward batch stats
+    assert np.all(np.asarray(ns["mean"]) != np.asarray(s["mean"]))
+    y2, ns2 = layers.batchnorm(p, ns, x, train=False)
+    assert ns2 is ns  # eval does not update
+
+
+def test_layernorm():
+    p = layers.ln_init(16)
+    x = jnp.asarray(_rand((4, 16), seed=15) * 3 + 2)
+    y = np.asarray(layers.layernorm(p, x))
+    assert np.allclose(y.mean(-1), 0, atol=1e-5)
+    assert np.allclose(y.std(-1), 1, atol=1e-2)
+
+
+def test_softmax_xent_matches_manual():
+    logits = jnp.asarray(_rand((5, 7), seed=16))
+    y = jnp.asarray(np.arange(5, dtype=np.int32) % 7)
+    ce = np.asarray(layers.softmax_xent(logits, y))
+    l = np.asarray(logits)
+    manual = np.log(np.exp(l).sum(-1)) - l[np.arange(5), np.asarray(y)]
+    assert np.allclose(ce, manual, rtol=1e-5)
+
+
+def test_dense_init_untruncated_normal_and_gamma():
+    sch = quant.get_scheme("mf")
+    p = layers.dense_init(jax.random.PRNGKey(0), 256, 128, sch)
+    assert p["w"].shape == (256, 128)
+    assert float(p["gamma"]) == pytest.approx(sch.gamma_init)
+    # untruncated: expect a few |z| > 3 sigma draws in 32k samples
+    z = np.asarray(p["w"]) / np.sqrt(2.0 / 256)
+    assert (np.abs(z) > 3).sum() > 5
+    p32 = layers.dense_init(jax.random.PRNGKey(0), 8, 4, quant.get_scheme("fp32"))
+    assert "gamma" not in p32

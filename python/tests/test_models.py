@@ -1,0 +1,89 @@
+"""Model zoo shape/init/tap tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quant
+from compile.models import cnn, mlp, transformer
+
+MF = quant.get_scheme("mf")
+FP = quant.get_scheme("fp32")
+
+
+def _leaves_count(tree):
+    return sum(int(l.size) for l in jax.tree_util.tree_leaves(tree))
+
+
+@pytest.mark.parametrize("scheme", [FP, MF])
+def test_mlp_shapes(scheme):
+    cfg = mlp.Cfg()
+    p, s = mlp.init(jax.random.PRNGKey(0), cfg, scheme)
+    x = jnp.zeros((4, cfg.in_dim), jnp.float32)
+    logits, s2, aux = mlp.apply(p, s, x, scheme, True)
+    assert logits.shape == (4, cfg.classes)
+    assert aux["tap_a"].shape == mlp.tap_shape(cfg, 4)
+
+
+@pytest.mark.parametrize("scheme", [FP, MF])
+def test_cnn_shapes(scheme):
+    cfg = cnn.Cfg(size=16, width=8, blocks=2)
+    p, s = cnn.init(jax.random.PRNGKey(0), cfg, scheme)
+    x = jnp.zeros((2, 16, 16, 3), jnp.float32)
+    logits, s2, aux = cnn.apply(p, s, x, scheme, True)
+    assert logits.shape == (2, cfg.classes)
+    assert aux["tap_a"].shape == cnn.tap_shape(cfg, 2)
+    assert set(s2) == set(s)
+
+
+def test_cnn_depth_scales_params():
+    c2 = cnn.Cfg(blocks=2)
+    c3 = cnn.Cfg(blocks=3)
+    p2, _ = cnn.init(jax.random.PRNGKey(0), c2, FP)
+    p3, _ = cnn.init(jax.random.PRNGKey(0), c3, FP)
+    assert _leaves_count(p3) > _leaves_count(p2) * 1.3
+
+
+@pytest.mark.parametrize("scheme", [FP, MF])
+def test_transformer_shapes(scheme):
+    cfg = transformer.Cfg()
+    p, s = transformer.init(jax.random.PRNGKey(0), cfg, scheme)
+    x = jnp.zeros((2, cfg.seq), jnp.int32)
+    logits, _, aux = transformer.apply(p, s, x, scheme, True)
+    assert logits.shape == (2, cfg.seq, cfg.vocab)
+    assert aux["tap_a"].shape == transformer.tap_shape(cfg, 2)
+
+
+def test_init_deterministic():
+    cfg = cnn.Cfg()
+    p1, _ = cnn.init(jax.random.PRNGKey(7), cfg, MF)
+    p2, _ = cnn.init(jax.random.PRNGKey(7), cfg, MF)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tap_z_injection_is_additive():
+    cfg = mlp.Cfg()
+    p, s = mlp.init(jax.random.PRNGKey(0), cfg, FP)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (3, cfg.in_dim)).astype(np.float32))
+    z = jnp.zeros(mlp.tap_shape(cfg, 3), jnp.float32)
+    l0, _, _ = mlp.apply(p, s, x, FP, True)
+    l1, _, _ = mlp.apply(p, s, x, FP, True, tap_z=z)
+    assert np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_loss_and_correct_counts():
+    logits = jnp.asarray(np.eye(4, dtype=np.float32) * 10)
+    y = jnp.asarray(np.asarray([0, 1, 2, 0], np.int32))
+    sum_ce, correct, n = mlp.loss_and_correct(logits, y)
+    assert n == 4 and int(correct) == 3
+
+
+def test_transformer_token_correct_counts():
+    b, s, v = 2, 8, 16
+    logits = jnp.zeros((b, s, v), jnp.float32).at[..., 3].set(10.0)
+    y = jnp.full((b, s), 3, jnp.int32).at[0, 0].set(5)
+    sum_ce, correct, n = transformer.loss_and_correct(logits, y)
+    assert n == b * s and int(correct) == b * s - 1

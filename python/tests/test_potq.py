@@ -1,0 +1,138 @@
+"""ALS-PoTQ quantizer properties (the numeric contract), incl. hypothesis
+sweeps. These invariants are mirrored by the rust property tests in
+rust/src/potq — keep the two in sync."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+BITS = [3, 4, 5, 6]
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("b", BITS)
+def test_values_are_pot(b):
+    x = _rand((64, 32), scale=3e-4, seed=1)
+    d = np.asarray(quant.pot_value(jnp.asarray(x), b))
+    nz = d[d != 0]
+    l2 = np.log2(np.abs(nz))
+    assert np.array_equal(l2, np.round(l2)), "dequantized values must be PoT"
+
+
+@pytest.mark.parametrize("b", BITS)
+def test_exponent_range(b):
+    emax = quant.pot_emax(b)
+    x = _rand((128,), scale=7.3, seed=2)
+    e, s, beta = quant.pot_quantize(jnp.asarray(x), b)
+    e = np.asarray(e)
+    live = e != quant.ZERO_CODE
+    assert live.any()
+    assert e[live].min() >= -emax and e[live].max() <= emax
+    assert set(np.unique(np.asarray(s))) <= {0, 1}
+
+
+def test_sign_preserved():
+    x = _rand((256,), seed=3)
+    d = np.asarray(quant.pot_value(jnp.asarray(x), 5))
+    nz = d != 0
+    assert np.array_equal(np.sign(d[nz]), np.sign(x[nz]))
+
+
+def test_zero_block():
+    x = jnp.zeros((16, 16), jnp.float32)
+    e, s, beta = quant.pot_quantize(x, 5)
+    assert int(beta) == 0
+    assert np.all(np.asarray(e) == quant.ZERO_CODE)
+    assert np.all(np.asarray(quant.pot_dequantize(e, s, beta)) == 0)
+
+
+def test_subnormals_flush_to_zero():
+    x = np.asarray([1e-42, -1e-40, 0.0, 1.0], np.float32)  # first two subnormal
+    d = np.asarray(quant.pot_value(jnp.asarray(x), 5))
+    assert d[0] == 0 and d[1] == 0 and d[2] == 0 and d[3] != 0
+
+
+def test_max_maps_to_near_emax():
+    # after adaptive scaling the max magnitude lands within 1 of emax
+    x = _rand((512,), scale=1e-6, seed=4)
+    e, s, beta = quant.pot_quantize(jnp.asarray(x), 5)
+    amax_e = np.asarray(e)[np.argmax(np.abs(x))]
+    assert quant.pot_emax(5) - 1 <= amax_e <= quant.pot_emax(5)
+
+
+def test_relative_error_bound():
+    # PoT rounding in log domain: |f - q| / |f| <= 2^0.5 - 1 for values
+    # inside the representable range
+    x = np.abs(_rand((4096,), seed=5)) + 0.1
+    d = np.asarray(quant.pot_value(jnp.asarray(x), 5))
+    live = d != 0
+    rel = np.abs(x[live] - d[live]) / np.abs(x[live])
+    assert rel.max() <= 2**0.5 - 1 + 1e-6
+
+
+def test_quantize_idempotent():
+    x = _rand((128, 8), seed=6)
+    d1 = quant.pot_value(jnp.asarray(x), 5)
+    d2 = quant.pot_value(d1, 5)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("b", BITS)
+def test_beta_formula(b):
+    x = _rand((1000,), scale=2.0, seed=7)
+    _, _, beta = quant.pot_quantize(jnp.asarray(x), b)
+    expect = round(np.log2(np.max(np.abs(x)))) - quant.pot_emax(b)
+    assert abs(int(beta) - expect) <= 1  # ties at the sqrt2 boundary
+
+
+def test_round_log2_boundary_contract():
+    # exactly at a power of two: no carry; just below double: carry
+    x = np.asarray([1.0, 1.9999999, 2.0, 1.4142134, 1.4142137], np.float32)
+    e, is_zero = quant.round_log2_abs(jnp.asarray(x))
+    e = np.asarray(e)
+    assert e[0] == 0 and e[1] == 1 and e[2] == 1
+    assert e[3] == 0 and e[4] == 1  # straddles SQRT2_F32
+
+
+def test_gradient_scale_range_like_paper():
+    # paper: beta in roughly [-20,-10] for G, [-5,-2] for W — sanity-check
+    # that tiny-magnitude blocks produce strongly negative betas
+    g = _rand((4096,), scale=2e-5, seed=8)
+    _, _, beta = quant.pot_quantize(jnp.asarray(g), 5)
+    assert -26 <= int(beta) <= -10
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    scale_log=st.integers(-30, 20),
+    b=st.sampled_from(BITS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_roundtrip_properties(n, scale_log, b, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * 2.0**scale_log).astype(np.float32)
+    e, s, beta = quant.pot_quantize(jnp.asarray(x), b)
+    d = np.asarray(quant.pot_dequantize(e, s, beta))
+    e_np = np.asarray(e)
+    live = e_np != quant.ZERO_CODE
+    emax = quant.pot_emax(b)
+    # exponent bounds
+    if live.any():
+        assert e_np[live].min() >= -emax and e_np[live].max() <= emax
+    # sign agreement and a loose relative-error bound on live entries
+    if live.any():
+        assert np.array_equal(np.sign(d[live]), np.sign(x[live]))
+        rel = np.abs(d[live] - x[live]) / np.abs(x[live])
+        assert rel.max() <= 0.5
+    # anything quantized to zero must be small vs the block scale
+    dead = ~live
+    if dead.any() and live.any():
+        assert np.abs(x[dead]).max() <= 2.0 ** (float(beta) - emax + 1) * 2**emax

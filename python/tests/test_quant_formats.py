@@ -1,0 +1,141 @@
+"""WBC / PRC / STE / grad_quant / baseline-format unit tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import quant
+
+
+def _rand(shape, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def test_wbc_zero_mean():
+    w = jnp.asarray(_rand((64, 64), seed=0) + 0.3)
+    wc = quant.weight_bias_correction(w)
+    assert abs(float(jnp.mean(wc))) < 1e-6
+
+
+def test_ratio_clip_values():
+    a = jnp.asarray(np.linspace(-2, 2, 101).astype(np.float32))
+    out = np.asarray(quant.ratio_clip(a, jnp.float32(0.5)))
+    assert out.max() == pytest.approx(1.0)  # 0.5 * max|a| = 1
+    assert out.min() == pytest.approx(-1.0)
+    mid = np.abs(np.asarray(a)) < 1.0
+    assert np.array_equal(out[mid], np.asarray(a)[mid])
+
+
+def test_ratio_clip_gamma_gradient():
+    # PACT-style: raising gamma increases clipped outputs, so for a loss
+    # that wants larger outputs the gamma gradient must be negative.
+    a = jnp.asarray(np.asarray([0.1, 2.0, -2.0, 1.0], np.float32))
+
+    def loss(g):
+        return jnp.sum(quant.ratio_clip(a, g))
+
+    g = jax.grad(loss)(jnp.float32(0.25))
+    # t = 0.25*2 = 0.5: elements 2.0 and 1.0 clip at +t (+max each), -2.0
+    # clips at -t (-max), 0.1 is inside -> total +max = +2
+    assert float(g) == pytest.approx(2.0)
+
+    def loss2(g):
+        return jnp.sum(quant.ratio_clip(a, g)[1])  # only the +2.0 element
+
+    assert float(jax.grad(loss2)(jnp.float32(0.25))) == pytest.approx(2.0)
+
+
+def test_ste_identity_gradient():
+    x = jnp.asarray(_rand((32,), seed=1))
+    g = jax.grad(lambda v: jnp.sum(quant.ste(v, ("pot", 5))))(x)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_ste_forward_quantized():
+    x = jnp.asarray(_rand((32,), seed=2))
+    y = np.asarray(quant.ste(x, ("pot", 5)))
+    d = np.asarray(quant.pot_value(x, 5))
+    assert np.array_equal(y, d)
+
+
+def test_grad_quant_identity_forward():
+    x = jnp.asarray(_rand((16,), seed=3))
+    assert np.array_equal(np.asarray(quant.grad_quant(x, ("pot", 5), True)),
+                          np.asarray(x))
+
+
+def test_grad_quant_quantizes_cotangent():
+    x = jnp.asarray(_rand((64,), seed=4))
+    cot = jnp.asarray(_rand((64,), scale=1e-4, seed=5))
+
+    def f(v):
+        return jnp.vdot(quant.grad_quant(v, ("pot", 5), True), cot)
+
+    g = np.asarray(jax.grad(f)(x))
+    expect = np.asarray(quant.pot_value(cot, 5))
+    assert np.array_equal(g, expect)
+
+
+def test_grad_quant_respects_6bit_last_layer():
+    cot = jnp.asarray(_rand((64,), scale=1e-4, seed=6))
+    x = jnp.zeros((64,), jnp.float32)
+
+    def f(v, fmt):
+        return jnp.vdot(quant.grad_quant(v, fmt, True), cot)
+
+    g5 = np.asarray(jax.grad(lambda v: f(v, ("pot", 5)))(x))
+    g6 = np.asarray(jax.grad(lambda v: f(v, ("pot", 6)))(x))
+    # 6-bit keeps strictly more non-zeros (wider exponent range)
+    assert (g6 != 0).sum() >= (g5 != 0).sum()
+
+
+def test_int_value_levels():
+    x = jnp.asarray(_rand((512,), seed=7))
+    d = np.asarray(quant.int_value(x, 4))
+    scale = np.abs(np.asarray(x)).max() / 7
+    q = d / scale
+    assert np.allclose(q, np.round(q), atol=1e-4)
+    assert np.abs(q).max() <= 7 + 1e-4
+
+
+def test_fp8_value_coarse_but_close():
+    x = jnp.asarray(_rand((512,), seed=8))
+    d = np.asarray(quant.fp8_value(x))
+    # S2FP8 shift keeps everything except the deep sub-window tail; check
+    # relative error on values above the shifted flush threshold
+    xa = np.abs(np.asarray(x))
+    live = xa > xa.max() * 2.0**-13
+    rel = np.abs(d - np.asarray(x))[live] / xa[live]
+    assert rel.max() < 0.08  # e4m3: ~2^-4 max relative step
+    assert not np.array_equal(d, np.asarray(x))
+
+
+def test_fp8_shift_covers_any_scale():
+    # the S2FP8 point: plain e4m3 would clamp at 448 / flush below 2^-6;
+    # the shifted format tracks the tensor's own window at any scale
+    for scale in [1000.0, 1e-5]:
+        x = jnp.asarray(np.asarray([scale, -scale, scale / 4], np.float32))
+        d = np.asarray(quant.fp8_value(x))
+        rel = np.abs(d - np.asarray(x)) / np.abs(np.asarray(x))
+        assert rel.max() < 0.07, (scale, d)
+
+
+def test_scheme_registry():
+    mf = quant.get_scheme("mf")
+    assert mf.w == ("pot", 5) and mf.g_last == ("pot", 6)
+    assert mf.wbc and mf.prc and mf.als
+    assert not quant.get_scheme("fp32").quantized
+    with pytest.raises(KeyError):
+        quant.get_scheme("nope")
+
+
+def test_noals_disables_scaling():
+    # without ALS, small-magnitude blocks underflow to all-zero (the
+    # Table 5 "training collapses" mechanism)
+    g = jnp.asarray(_rand((256,), scale=1e-4, seed=9))
+    d = np.asarray(quant.pot_value(g, 5, als=False))
+    assert np.all(d == 0)
+    d_als = np.asarray(quant.pot_value(g, 5, als=True))
+    assert (d_als != 0).mean() > 0.9

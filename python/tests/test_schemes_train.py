@@ -1,0 +1,97 @@
+"""Scheme-level training behaviour: the L2 facts the paper's tables rest
+on, checked at pytest scale (small models, few steps)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import train
+from compile.models import mlp
+
+
+def _task_batch(rng, n=32):
+    cls = rng.integers(0, 10, n)
+    pat = np.stack([np.sin(np.arange(768) * 0.01 * (c + 1)) for c in cls])
+    x = (pat + rng.standard_normal((n, 768)) * 0.8).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(cls.astype(np.int32))
+
+
+def _run(scheme, steps=40, seed=0, use_pallas=False, batch=32):
+    b = train.build(f"s_{scheme}_{use_pallas}", "mlp", mlp.Cfg(), scheme,
+                    batch, use_pallas=use_pallas)
+    state = b.fns["init"](jnp.int32(seed))
+    step = jax.jit(b.fns["train"])
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        x, y = _task_batch(rng, batch)
+        state = step(state, x, y, jnp.float32(0.05))
+    return b, state
+
+
+@pytest.mark.parametrize("scheme", ["mf", "luq4", "fp8", "int8", "wpot5"])
+def test_all_quant_schemes_learn(scheme):
+    b, state = _run(scheme)
+    loss = float(b.fns["slice"](state)[0])
+    assert loss < 1.0, f"{scheme} failed to learn: {loss}"
+
+
+def test_mf_close_to_fp32():
+    # the Table 3/4 headline at pytest scale: MF within a small margin
+    rng = np.random.default_rng(99)
+    xe, ye = _task_batch(rng, 64)
+    accs = {}
+    for scheme in ["fp32", "mf"]:
+        b, state = _run(scheme, steps=60)
+        m = np.asarray(b.fns["eval"](state, xe[:32], ye[:32]))
+        accs[scheme] = m[1] / 32
+    assert accs["mf"] >= accs["fp32"] - 0.1, accs
+
+
+def test_pallas_variant_trains_like_jnp_variant():
+    # bit-equivalent kernels => near-identical trajectories
+    b1, s1 = _run("mf", steps=12, use_pallas=False, batch=16)
+    b2, s2 = _run("mf", steps=12, use_pallas=True, batch=16)
+    l1 = float(b1.fns["slice"](s1)[0])
+    l2 = float(b2.fns["slice"](s2)[0])
+    assert abs(l1 - l2) <= 0.05 * max(abs(l1), 0.05), (l1, l2)
+
+
+def test_pallas_forward_matches_jnp_forward_exactly_on_first_step():
+    # before any divergence accumulates, one step must match very closely
+    b1, _ = _run("mf", steps=0, use_pallas=False, batch=8)
+    b2, _ = _run("mf", steps=0, use_pallas=True, batch=8)
+    state = b1.fns["init"](jnp.int32(5))
+    rng = np.random.default_rng(5)
+    x, y = _task_batch(rng, 8)
+    out1 = np.asarray(b1.fns["train"](state, x, y, jnp.float32(0.05)))
+    out2 = np.asarray(b2.fns["train"](state, x, y, jnp.float32(0.05)))
+    denom = np.abs(out1).max()
+    assert np.abs(out1 - out2).max() / denom < 1e-5
+
+
+def test_gamma_is_trained():
+    b, state = _run("mf", steps=50)
+    man = b.manifest
+    arr = np.asarray(state)
+    gammas = [
+        arr[e["offset"]]
+        for e in man["layout"]
+        if e["path"].startswith("p/") and e["path"].endswith("gamma")
+    ]
+    assert gammas, "mf scheme must have gamma parameters"
+    moved = [g for g in gammas if abs(g - 0.9) > 1e-6]
+    assert moved, f"gamma never updated: {gammas}"
+    assert all(0.0 < g <= 2.0 for g in gammas), gammas
+
+
+def test_kernel_report_estimates():
+    from compile.kernels import report
+
+    rows = report.estimates()
+    assert len(rows) >= 6
+    assert all(r.vmem_util < 0.5 for r in rows)
+    mxu128 = next(r for r in rows if r.name == "mfmac_mxu tile=128")
+    log128 = next(r for r in rows if r.name == "mfmac_logdomain tile=128")
+    # log-domain operands are int8-packed -> smaller than f32 operands
+    assert log128.vmem_bytes < mxu128.vmem_bytes

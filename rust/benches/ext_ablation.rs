@@ -1,0 +1,54 @@
+//! Bench (extensions): design-choice ablations beyond the paper's tables —
+//!  * bit-width sweep b in {4, 5, 6} (why the paper picks b=5),
+//!  * unbiased stochastic PoT rounding for G (LUQ-style, extension),
+//!  * per-channel ALS for W (extension).
+//! MFT_BENCH_STEPS (default 250), MFT_BENCH_NOISE (default 2.0).
+
+use mftrain::coordinator::{run_sweep, summary_table, SweepConfig};
+use mftrain::runtime::Runtime;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SweepConfig {
+        steps: env_u64("MFT_BENCH_STEPS", 250),
+        noise: std::env::var("MFT_BENCH_NOISE")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2.0),
+        lr: 0.08,
+        seeds: env_u64("MFT_BENCH_SEEDS", 1),
+    };
+    let rt = Runtime::cpu()?;
+    println!("ext_ablation: steps {}, noise {}", cfg.steps, cfg.noise);
+
+    let bitwidth = ["cnn_fp32", "cnn_mf4", "cnn_mf", "cnn_mf6"];
+    let sums = run_sweep(&rt, &bitwidth, &cfg, |v, s, rec| {
+        println!("  {v} seed {s}: {:.2}%", rec.final_accuracy * 100.0);
+    })?;
+    summary_table("bit-width sweep (PoT b=4/5/6 vs FP32)", &sums).print();
+    // shape: b=4 below b=5; b=6 within noise of b=5 (diminishing returns)
+    let acc = |name: &str| {
+        sums.iter().find(|s| s.variant == name).map(|s| s.mean_acc()).unwrap_or(0.0)
+    };
+    println!(
+        "b=4 vs b=5 delta: {:+.2} pts (expect negative); b=6 vs b=5: {:+.2} pts",
+        (acc("cnn_mf4") - acc("cnn_mf")) * 100.0,
+        (acc("cnn_mf6") - acc("cnn_mf")) * 100.0
+    );
+
+    let ext = ["cnn_mf", "cnn_mf_sr", "cnn_mf_pc"];
+    let sums = run_sweep(&rt, &ext, &cfg, |v, s, rec| {
+        println!("  {v} seed {s}: {:.2}%", rec.final_accuracy * 100.0);
+    })?;
+    summary_table(
+        "extensions: stochastic-rounded G (mf_sr), per-channel ALS W (mf_pc)",
+        &sums,
+    )
+    .print();
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/ext_ablation.csv", summary_table("ext", &sums).to_csv())?;
+    Ok(())
+}

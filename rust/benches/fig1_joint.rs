@@ -1,0 +1,60 @@
+//! Bench: regenerate Figure 1 — the energy-accuracy joint comparison.
+//! Prints the scatter as (energy, accuracy) pairs plus an ASCII rendering,
+//! and verifies the Pareto claim (ours: lowest energy among training
+//! methods AND highest accuracy among energy-reducing methods).
+
+use mftrain::energy::figure1_series;
+use mftrain::models;
+use mftrain::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let arch = models::resnet50();
+    let pts = figure1_series(&arch, 256);
+
+    let mut t = Table::new(
+        "Figure 1 — energy-accuracy joint comparison (ResNet50 @ 256)",
+        &["method", "energy (J/iter)", "top-1 (%)", "from scratch"],
+    );
+    for p in &pts {
+        t.row(&[
+            p.method.clone(),
+            fnum(p.energy_j),
+            p.accuracy.map(|a| format!("{a:.2}")).unwrap_or_else(|| "-".into()),
+            if p.from_scratch { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+    t.print();
+
+    // ASCII scatter: x = accuracy (70..77), y = log10 energy
+    println!("ASCII scatter (x: top-1 70..77%, y: energy 0.1..100 J, log):");
+    let rows = 12;
+    let cols = 60;
+    let mut grid = vec![vec![' '; cols]; rows];
+    let mut labels = Vec::new();
+    for (i, p) in pts.iter().enumerate() {
+        let Some(acc) = p.accuracy else { continue };
+        let x = (((acc - 70.0) / 7.0) * (cols - 1) as f64).clamp(0.0, (cols - 1) as f64) as usize;
+        let y_f = ((p.energy_j.log10() - (-1.0)) / 3.0) * (rows - 1) as f64;
+        let y = rows - 1 - y_f.clamp(0.0, (rows - 1) as f64) as usize;
+        let c = char::from_digit(i as u32 % 10, 10).unwrap();
+        grid[y][x] = c;
+        labels.push(format!("{c}={}", p.method));
+    }
+    for row in grid {
+        println!("  |{}", row.into_iter().collect::<String>());
+    }
+    println!("  +{}", "-".repeat(cols));
+    println!("  {}", labels.join("  "));
+
+    // Pareto check
+    let ours = pts.iter().find(|p| p.method.starts_with("Ours")).unwrap();
+    let violations: Vec<_> = pts
+        .iter()
+        .filter(|p| !p.method.starts_with("Ours") && !p.method.starts_with("Original"))
+        .filter(|p| p.energy_j <= ours.energy_j)
+        .collect();
+    assert!(violations.is_empty(), "Pareto violation: {violations:?}");
+    println!("\nPareto check OK: ours has the lowest training energy ({} J) and accuracy {:.2}%",
+             fnum(ours.energy_j), ours.accuracy.unwrap());
+    Ok(())
+}

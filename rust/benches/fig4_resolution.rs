@@ -1,0 +1,70 @@
+//! Bench: regenerate Figure 4 — the rigid-resolution problem of PoT
+//! quantization. Prints the 3-bit vs 4-bit (vs 5/6-bit) quantization
+//! grids on normalized data and the MSE/long-tail error decomposition,
+//! plus the PRC clipping remedy.
+
+use mftrain::potq;
+use mftrain::stats::mse;
+use mftrain::util::prng::Pcg32;
+use mftrain::util::table::{fnum, Table};
+
+fn main() {
+    // the quantization grids (paper Fig. 4 top: levels on [0, 1])
+    let mut t = Table::new(
+        "Figure 4 — PoT quantization levels (normalized positive axis)",
+        &["bits", "levels (value = 2^e, e in [-emax, 0] after scaling)"],
+    );
+    for b in [3u32, 4, 5] {
+        let emax = potq::pot_emax(b);
+        let levels: Vec<String> = (-emax..=0)
+            .map(|e| format!("{:.4}", (2f64).powi(e)))
+            .collect();
+        t.row(&[b.to_string(), format!("0, {}", levels.join(", "))]);
+    }
+    t.note("higher bit-width only adds resolution near zero; the long-tail spacing \
+            (0.5 <-> 1.0) never improves — the rigid resolution problem");
+    t.print();
+
+    // MSE decomposition: near-zero region vs long-tail region
+    let mut rng = Pcg32::new(7);
+    let mut x = vec![0f32; 65536];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let amax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let mut t2 = Table::new(
+        "Figure 4 (bottom) — quantization error by region, N(0,1) data",
+        &["bits", "total MSE", "MSE near zero (|x|<0.25max)", "MSE long tail (|x|>=0.25max)"],
+    );
+    for b in [3u32, 4, 5, 6] {
+        let q = potq::pot_value(&x, b);
+        let near: Vec<usize> =
+            (0..x.len()).filter(|&i| x[i].abs() < 0.25 * amax).collect();
+        let tail: Vec<usize> =
+            (0..x.len()).filter(|&i| x[i].abs() >= 0.25 * amax).collect();
+        let sel = |idx: &[usize], v: &[f32]| idx.iter().map(|&i| v[i]).collect::<Vec<_>>();
+        t2.row(&[
+            b.to_string(),
+            fnum(mse(&x, &q)),
+            fnum(mse(&sel(&near, &x), &sel(&near, &q))),
+            fnum(mse(&sel(&tail, &x), &sel(&tail, &q))),
+        ]);
+    }
+    t2.note("near-zero MSE falls with bits; long-tail MSE barely moves — \
+             motivating PRC's range clipping");
+    t2.print();
+
+    // PRC remedy: clipping ratio sweep at b=5
+    let mut t3 = Table::new(
+        "PRC remedy — clip ratio vs 5-bit PoT MSE (the gamma sweep)",
+        &["gamma", "MSE after clip+quant", "fraction clipped (%)"],
+    );
+    for gamma in [1.0f32, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4] {
+        let clipped = potq::ratio_clip(&x, gamma);
+        let q = potq::pot_value(&clipped, 5);
+        let t_thr = amax * gamma;
+        let frac = x.iter().filter(|v| v.abs() > t_thr).count() as f64 / x.len() as f64;
+        t3.row(&[format!("{gamma:.1}"), fnum(mse(&x, &q)), format!("{:.2}", frac * 100.0)]);
+    }
+    t3.note("moderate clipping reduces overall MSE by densifying the effective grid — \
+             the mechanism behind PRC's ~1pt accuracy gain (Table 5)");
+    t3.print();
+}

@@ -1,0 +1,172 @@
+//! Perf bench (deliverable e): the L3 hot path. Measures
+//!   * rust-native potq / mfmac kernel throughput,
+//!   * data-generator throughput,
+//!   * end-to-end train-step latency per variant (upload + execute +
+//!     state feedback) and its breakdown,
+//!   * metrics-read cost (slice executable) vs full-state readback.
+//! Results feed EXPERIMENTS.md §Perf.
+//!
+//! MFT_BENCH_STEPS (default 40) = timed steps per variant.
+
+use std::time::Instant;
+
+use mftrain::data::{self, Dataset};
+use mftrain::potq;
+use mftrain::runtime::{Runtime, Session};
+use mftrain::util::prng::Pcg32;
+use mftrain::util::table::{fnum, Table};
+use mftrain::util::timer::{bench, fmt_duration};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("MFT_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+
+    // ---- rust-native kernel throughput ----------------------------------
+    let mut rng = Pcg32::new(0);
+    let n = 1 << 20;
+    let mut x = vec![0f32; n];
+    rng.fill_normal(&mut x, 0.0, 0.05);
+    let t = bench(2, 8, || {
+        let blk = potq::pot_quantize(&x, 5, None);
+        std::hint::black_box(blk.beta);
+    });
+    let mut t1 = Table::new("rust-native kernels", &["kernel", "size", "mean", "throughput"]);
+    t1.row(&[
+        "potq quantize".into(),
+        format!("{n} f32"),
+        fmt_duration(t.mean()),
+        format!("{:.1} Melem/s", t.throughput(n as u64) / 1e6),
+    ]);
+    let d = 128usize;
+    let a = &x[..d * d];
+    let w = &x[d * d..2 * d * d];
+    let t = bench(2, 8, || {
+        std::hint::black_box(potq::mfmac_matmul(a, w, d, d, d, 5));
+    });
+    t1.row(&[
+        "mfmac matmul".into(),
+        format!("{d}x{d}x{d}"),
+        fmt_duration(t.mean()),
+        format!("{:.1} MMAC/s", t.throughput((d * d * d) as u64) / 1e6),
+    ]);
+
+    // ---- data generators --------------------------------------------------
+    // §Perf before/after: per-pixel template recomputation vs cached
+    let mut ds0 = data::images::PatternTask::image(64, 16, 3, 1.0, 0);
+    let t = bench(1, 8, || {
+        std::hint::black_box(ds0.next_batch_uncached().y.len());
+    });
+    t1.row(&[
+        "image batch gen (BEFORE: uncached)".into(),
+        "64x16x16x3".into(),
+        fmt_duration(t.mean()),
+        format!("{:.0} img/s", t.throughput(64)),
+    ]);
+    let mut ds = data::images::PatternTask::image(64, 16, 3, 1.0, 0);
+    let t = bench(1, 8, || {
+        std::hint::black_box(ds.next_batch().y.len());
+    });
+    t1.row(&[
+        "image batch gen (AFTER: cached templates)".into(),
+        "64x16x16x3".into(),
+        fmt_duration(t.mean()),
+        format!("{:.0} img/s", t.throughput(64)),
+    ]);
+    let mut sq = data::seq::SeqTask::new(32, 32, 64, 0);
+    let t = bench(1, 8, || {
+        std::hint::black_box(sq.next_batch().y.len());
+    });
+    t1.row(&[
+        "seq batch gen".into(),
+        "32x32".into(),
+        fmt_duration(t.mean()),
+        format!("{:.0} seq/s", t.throughput(32)),
+    ]);
+    t1.print();
+
+    // ---- end-to-end step latency per variant ------------------------------
+    let rt = Runtime::cpu()?;
+    let mut t2 = Table::new(
+        &format!("train-step latency via PJRT ({steps} timed steps)"),
+        &["variant", "compile (s)", "step mean", "p95", "steps/s", "examples/s",
+          "metrics read", "full state read"],
+    );
+    for variant in ["mlp_mf", "cnn_fp32", "cnn_mf", "transformer_mf"] {
+        let c0 = Instant::now();
+        let mut session = match Session::load(&rt, std::path::Path::new("artifacts"), variant) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skipping {variant}: {e:#}");
+                continue;
+            }
+        };
+        let compile_s = c0.elapsed().as_secs_f64();
+        session.init(0)?;
+        let man = session.manifest.clone();
+        let mut ds = data::for_variant(&man.model, &man.x.shape, &man.y.shape, 1.0, 0);
+        let batch = ds.next_batch();
+        for _ in 0..3 {
+            session.train_step(&batch, 0.05)?; // warmup
+        }
+        let mut samples = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let t0 = Instant::now();
+            session.train_step(&batch, 0.05)?;
+            // force completion: metrics() syncs on the output buffer
+            session.metrics()?;
+            samples.push(t0.elapsed());
+        }
+        let timing = mftrain::util::timer::Timing { samples };
+        let tm = bench(1, 10, || {
+            session.metrics().unwrap();
+        });
+        let ts = bench(1, 3, || {
+            session.state_to_host().unwrap();
+        });
+        t2.row(&[
+            variant.into(),
+            format!("{compile_s:.1}"),
+            fmt_duration(timing.mean()),
+            fmt_duration(timing.p95()),
+            format!("{:.1}", 1.0 / timing.mean().as_secs_f64()),
+            format!("{:.0}", man.batch as f64 / timing.mean().as_secs_f64()),
+            fmt_duration(tm.mean()),
+            fmt_duration(ts.mean()),
+        ]);
+    }
+    t2.note("metrics read (2 f32 via slice exe) must be far cheaper than a full state \
+             readback — that gap is the zero-copy hot-path design");
+    t2.print();
+
+    // ---- energy-per-step estimate for the measured variants ----------------
+    let mut t3 = Table::new(
+        "analytical energy per measured step (linear layers)",
+        &["variant", "arch", "batch", "FP32 MAC (mJ)", "MF-MAC (mJ)"],
+    );
+    for (variant, arch_name, batch) in [
+        ("cnn_mf", "mini_resnet14", 64u64),
+        ("transformer_mf", "mini_transformer", 32),
+    ] {
+        let arch = mftrain::models::by_name(arch_name).unwrap();
+        let ms = mftrain::energy::methods();
+        let fp = mftrain::energy::training_energy_joules(arch.fw_macs(), batch, &ms[0], false).2;
+        let ours = mftrain::energy::training_energy_joules(
+            arch.fw_macs(),
+            batch,
+            ms.iter().find(|m| m.name.starts_with("Ours")).unwrap(),
+            true,
+        )
+        .2;
+        t3.row(&[
+            variant.into(),
+            arch_name.into(),
+            batch.to_string(),
+            fnum(fp * 1e3),
+            fnum(ours * 1e3),
+        ]);
+    }
+    t3.print();
+    Ok(())
+}

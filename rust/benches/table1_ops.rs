@@ -1,0 +1,17 @@
+//! Bench: regenerate Table 1 (unit op energies) and sanity-check the MAC
+//! compositions against the paper's §6 arithmetic.
+
+use mftrain::energy;
+
+fn main() {
+    energy::table1().print();
+    let fp32 = energy::fp32_mac().energy_pj();
+    let mf = energy::mf_mac().energy_pj();
+    println!("FP32 MAC: {fp32:.3} pJ");
+    println!("MF-MAC:   {mf:.3} pJ  ({:.1}% reduction; paper ~96.6%)", (1.0 - mf / fp32) * 100.0);
+    println!(
+        "MF-MAC + ALS-PoTQ: {:.3} pJ ({:.1}% reduction; paper 95.8%)",
+        mf + energy::ALS_POTQ_OVERHEAD_PJ,
+        energy::report::headline_reduction() * 100.0
+    );
+}

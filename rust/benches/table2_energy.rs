@@ -1,0 +1,44 @@
+//! Bench: regenerate Table 2 — per-method training energy for ResNet50 on
+//! ImageNet at one iteration (batch 256), computed from MAC counts x op
+//! mixes, with the paper's reported numbers alongside.
+
+use mftrain::energy::{self, methods, training_energy_joules};
+use mftrain::models;
+use mftrain::util::table::{fnum, Table};
+
+fn main() {
+    let arch = models::resnet50();
+    println!(
+        "ResNet50 MACs: fw {:.3} G/example, training {:.2} G/example (paper: 12.36G)",
+        arch.fw_macs() as f64 / 1e9,
+        arch.train_macs() as f64 / 1e9
+    );
+    energy::table2(&arch, 256).print();
+
+    // paper-vs-computed deltas
+    let mut t = Table::new(
+        "computed vs paper (total J, ResNet50 @ 256)",
+        &["method", "computed", "paper", "delta"],
+    );
+    for m in methods() {
+        let (_, _, tot) = training_energy_joules(arch.fw_macs(), 256, &m, false);
+        if let Some((_, _, p)) = m.paper_joules {
+            t.row(&[
+                m.name.to_string(),
+                fnum(tot),
+                fnum(p),
+                format!("{:+.1}%", (tot - p) / p * 100.0),
+            ]);
+        }
+    }
+    t.note("ShiftAddNet's Appendix-C op mix is under-specified; see DESIGN.md");
+    t.print();
+
+    // with the quantization overhead (Appendix B -> the 95.8% headline)
+    let ours = methods().into_iter().find(|m| m.name.starts_with("Ours")).unwrap();
+    let (fw, bw, tot) = training_energy_joules(arch.fw_macs(), 256, &ours, true);
+    println!(
+        "Ours incl. ALS-PoTQ overhead: FW {} J, BW {} J, total {} J",
+        fnum(fw), fnum(bw), fnum(tot)
+    );
+}

@@ -1,0 +1,68 @@
+//! Bench: regenerate Table 3 (CNN accuracy, ImageNet -> synthetic-image
+//! substitution). Trains every from-scratch scheme with the identical
+//! schedule/seed and reports final accuracy + degradation vs FP32, with
+//! the paper's ResNet18 deltas alongside for shape comparison.
+//!
+//! MFT_BENCH_STEPS (default 250) and MFT_BENCH_NOISE (default 2.0) scale
+//! the runs.
+
+use mftrain::coordinator::run_variant;
+use mftrain::runtime::Runtime;
+use mftrain::util::table::Table;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f32(key: &str, default: f32) -> f32 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = env_u64("MFT_BENCH_STEPS", 250);
+    let noise = env_f32("MFT_BENCH_NOISE", 2.0);
+    let rt = Runtime::cpu()?;
+    println!("table3 bench: steps {steps}, noise {noise}");
+
+    // (variant, paper method analogue, paper ResNet18 delta)
+    let rows: &[(&str, &str, Option<f64>)] = &[
+        ("cnn_fp32", "Original", None),
+        ("cnn_int8", "8-bit (cf. unified INT8)", None),
+        ("cnn_fp8", "S2FP8", Some(-0.50)),
+        ("cnn_luq4", "LUQ", Some(-1.10)),
+        ("cnn_wpot5", "DeepShift (W-only PoT5)", Some(-4.77)),
+        ("cnn_wapot4", "LogNN (W/A PoT4)", None),
+        ("cnn_mf", "Ours (MF, PoT5 W/A/G)", Some(-0.58)),
+    ];
+
+    let mut t = Table::new(
+        &format!("Table 3 — accuracy by scheme (synthetic image task, {steps} steps)"),
+        &["variant", "paper analogue", "final acc (%)", "delta vs FP32 (pts)",
+          "paper delta (ResNet18)", "loss last"],
+    );
+    let mut fp32_acc = None;
+    for (variant, analogue, paper_delta) in rows {
+        let rec = run_variant(&rt, variant, steps, 0.08, noise, 0)?;
+        let acc = rec.final_accuracy * 100.0;
+        if *variant == "cnn_fp32" {
+            fp32_acc = Some(acc);
+        }
+        let delta = fp32_acc.map(|f| acc - f).unwrap_or(0.0);
+        let (_, last) = rec.loss_span().unwrap_or((f32::NAN, f32::NAN));
+        t.row(&[
+            variant.to_string(),
+            analogue.to_string(),
+            format!("{acc:.2}"),
+            format!("{delta:+.2}"),
+            paper_delta.map(|d| format!("{d:+.2}")).unwrap_or_else(|| "-".into()),
+            format!("{last:.3}"),
+        ]);
+        println!("  {variant}: acc {acc:.2}% ({:.1}s)", rec.wall_secs);
+    }
+    t.note("shape check: Ours should sit within ~1pt of FP32 and above W-only PoT / PoT4 schemes, \
+            as in the paper's Table 3");
+    t.print();
+    std::fs::create_dir_all("reports").ok();
+    std::fs::write("reports/table3_cnn.csv", t.to_csv())?;
+    Ok(())
+}

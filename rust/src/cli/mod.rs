@@ -1,0 +1,140 @@
+//! CLI argument parsing + subcommand dispatch (the registry has no clap).
+//!
+//! `mft <subcommand> [--flag value ...]`. Flags are `--key value` or
+//! `--key=value`; booleans are bare `--key`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let v: Vec<String> = argv.into_iter().collect();
+        let mut args = Args {
+            command: v.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < v.len() {
+            let a = &v[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, val)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), val.to_string());
+                } else if i + 1 < v.len() && !v[i + 1].starts_with("--") {
+                    // `--key value`
+                    args.flags.insert(rest.to_string(), v[i + 1].clone());
+                    i += 1;
+                } else {
+                    // bare `--key` = boolean true
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn str_flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.str_flag(key)
+            .with_context(|| format!("missing required flag --{key}"))
+    }
+}
+
+pub const USAGE: &str = "\
+mft — multiplication-free training coordinator (ALS-PoTQ + MF-MAC)
+
+USAGE:
+  mft train --config <file.toml> | --variant <name> [--steps N] [--lr F]
+            [--seed N] [--noise F] [--checkpoint path] [--artifacts DIR]
+  mft eval --variant <name> --checkpoint <path> [--batches N]
+  mft energy [--model resnet50] [--batch 256] [--overhead]
+  mft macs [--model resnet50]
+  mft distributions --variant <name> [--steps N] [--every N]
+  mft ablation [--steps N] [--seeds N]
+  mft sweep [--variants a,b,c] [--steps N] [--seeds N] [--markdown out.md]
+  mft hlo --variant <name> | --file <x.hlo.txt>   # op census / FLOPs
+  mft list [--artifacts DIR]
+  mft help
+
+Artifacts are produced by `make artifacts` (python AOT path, build-time
+only). See configs/*.toml for full training configs.";
+
+pub fn parse_env() -> Result<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        bail!("no subcommand given\n\n{USAGE}");
+    }
+    Args::parse(argv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = args("train --variant cnn_mf --steps 100 pos1 --lr=0.05");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.str_flag("variant"), Some("cnn_mf"));
+        assert_eq!(a.u64_flag("steps", 0).unwrap(), 100);
+        assert!((a.f64_flag("lr", 0.0).unwrap() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = args("energy --overhead --batch 128");
+        assert!(a.bool_flag("overhead"));
+        assert_eq!(a.u64_flag("batch", 0).unwrap(), 128);
+        let b = args("energy --batch 128 --overhead");
+        assert!(b.bool_flag("overhead"));
+    }
+
+    #[test]
+    fn missing_required() {
+        let a = args("eval");
+        assert!(a.require("checkpoint").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args("train --steps banana");
+        assert!(a.u64_flag("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Run configuration: TOML-subset files + programmatic defaults.
+//!
+//! A config names the artifact variant to train, the schedule, data
+//! parameters, and telemetry cadence. See configs/*.toml for examples.
+
+pub mod toml;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use self::toml::Doc;
+
+/// Learning-rate schedule: step decay (the paper's Appendix D recipe,
+/// scaled to synthetic-run lengths) with optional linear warmup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub decay_factor: f32,
+    pub decay_at: Vec<u64>,
+    pub warmup_steps: u64,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u64) -> f32 {
+        let mut lr = self.base;
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        for &d in &self.decay_at {
+            if step >= d {
+                lr *= self.decay_factor;
+            }
+        }
+        lr
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifact variant directory name, e.g. "cnn_mf"
+    pub variant: String,
+    pub artifacts_dir: String,
+    pub seed: u64,
+    pub steps: u64,
+    pub lr: LrSchedule,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub probe_every: u64,
+    /// noise level of the synthetic data task (higher = harder)
+    pub data_noise: f32,
+    pub prefetch_depth: usize,
+    pub checkpoint_path: Option<String>,
+    pub checkpoint_every: u64,
+    pub log_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            variant: "cnn_mf".into(),
+            artifacts_dir: "artifacts".into(),
+            seed: 0,
+            steps: 600,
+            lr: LrSchedule {
+                base: 0.1,
+                decay_factor: 0.1,
+                decay_at: vec![300, 480],
+                warmup_steps: 0,
+            },
+            eval_every: 100,
+            eval_batches: 8,
+            probe_every: 0,
+            data_noise: 1.0,
+            prefetch_depth: 4,
+            checkpoint_path: None,
+            checkpoint_every: 0,
+            log_every: 25,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = Doc::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = TrainConfig::default();
+        let decay_at = match doc.get("train.decay_at") {
+            Some(v) => {
+                let arr = v.as_arr().context("train.decay_at must be an array")?;
+                arr.iter()
+                    .map(|v| v.as_i64().map(|i| i as u64).context("decay_at entries must be ints"))
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => d.lr.decay_at.clone(),
+        };
+        let cfg = Self {
+            variant: doc.str_or("variant", &d.variant).to_string(),
+            artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir).to_string(),
+            seed: doc.i64_or("seed", d.seed as i64) as u64,
+            steps: doc.i64_or("train.steps", d.steps as i64) as u64,
+            lr: LrSchedule {
+                base: doc.f64_or("train.lr", d.lr.base as f64) as f32,
+                decay_factor: doc.f64_or("train.decay_factor", d.lr.decay_factor as f64) as f32,
+                decay_at,
+                warmup_steps: doc.i64_or("train.warmup_steps", 0) as u64,
+            },
+            eval_every: doc.i64_or("eval.every", d.eval_every as i64) as u64,
+            eval_batches: doc.i64_or("eval.batches", d.eval_batches as i64) as u64,
+            probe_every: doc.i64_or("telemetry.probe_every", 0) as u64,
+            data_noise: doc.f64_or("data.noise", d.data_noise as f64) as f32,
+            prefetch_depth: doc.i64_or("data.prefetch_depth", d.prefetch_depth as i64) as usize,
+            checkpoint_path: doc
+                .get("checkpoint.path")
+                .and_then(|v| v.as_str())
+                .map(str::to_string),
+            checkpoint_every: doc.i64_or("checkpoint.every", 0) as u64,
+            log_every: doc.i64_or("train.log_every", d.log_every as i64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.steps == 0 {
+            bail!("train.steps must be > 0");
+        }
+        if self.lr.base <= 0.0 || !self.lr.base.is_finite() {
+            bail!("train.lr must be positive and finite");
+        }
+        if self.prefetch_depth == 0 {
+            bail!("data.prefetch_depth must be >= 1");
+        }
+        if self.variant.is_empty() {
+            bail!("variant must be set");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_step_decay() {
+        let s = LrSchedule {
+            base: 0.1,
+            decay_factor: 0.1,
+            decay_at: vec![100, 200],
+            warmup_steps: 0,
+        };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(99), 0.1);
+        assert!((s.at(100) - 0.01).abs() < 1e-9);
+        assert!((s.at(250) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_warmup() {
+        let s = LrSchedule { base: 0.2, decay_factor: 0.1, decay_at: vec![], warmup_steps: 10 };
+        assert!((s.at(0) - 0.02).abs() < 1e-7);
+        assert!((s.at(4) - 0.1).abs() < 1e-7);
+        assert_eq!(s.at(10), 0.2);
+    }
+
+    #[test]
+    fn config_from_doc_and_defaults() {
+        let doc = toml::Doc::parse(
+            r#"
+variant = "mlp_mf"
+seed = 7
+[train]
+steps = 50
+lr = 0.05
+decay_at = [30]
+[data]
+noise = 0.25
+"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.variant, "mlp_mf");
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.lr.decay_at, vec![30]);
+        assert_eq!(cfg.data_noise, 0.25);
+        assert_eq!(cfg.eval_every, 100, "default applies");
+    }
+
+    #[test]
+    fn config_validation() {
+        let doc = toml::Doc::parse("variant = \"x\"\n[train]\nsteps = 0\n").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = toml::Doc::parse("[train]\nlr = -1.0\n").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! TOML-subset parser for run configs (the registry has no `toml` crate).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments. That is
+//! all our configs use; anything else is a parse error, not silence.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: dotted-path key -> value ("section.key").
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated ["))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .ok_or_else(|| err(&format!("bad value for {key}")))?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                doc.entries.insert(full, val);
+            } else {
+                return Err(err("expected section or key = value"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a basic string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        if inner.contains('"') {
+            return None;
+        }
+        return Some(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']')?.trim();
+        if inner.is_empty() {
+            return Some(Value::Arr(vec![]));
+        }
+        let mut out = Vec::new();
+        for part in inner.split(',') {
+            out.push(parse_value(part.trim())?);
+        }
+        return Some(Value::Arr(out));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Some(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = Doc::parse(
+            r#"
+# training run
+variant = "cnn_mf"
+[train]
+steps = 600
+lr = 0.1        # peak lr
+decay_at = [300, 450]
+verbose = true
+name = "has # inside"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("variant", ""), "cnn_mf");
+        assert_eq!(doc.i64_or("train.steps", 0), 600);
+        assert!((doc.f64_or("train.lr", 0.0) - 0.1).abs() < 1e-12);
+        assert!(doc.bool_or("train.verbose", false));
+        assert_eq!(doc.str_or("train.name", ""), "has # inside");
+        let arr = doc.get("train.decay_at").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].as_i64(), Some(450));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Doc::parse("a = 3\nb = 3.0\nc = 1e-4\n").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("b"), Some(&Value::Float(3.0)));
+        assert!((doc.f64_or("c", 0.0) - 1e-4).abs() < 1e-18);
+        // Int promotes to f64 on request
+        assert_eq!(doc.f64_or("a", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Doc::parse("ok = 1\nnot a kv\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Doc::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(Doc::parse("x = @@@\n").is_err());
+    }
+
+    #[test]
+    fn sections_scope_keys() {
+        let doc = Doc::parse("[a]\nk = 1\n[b.c]\nk = 2\n").unwrap();
+        assert_eq!(doc.i64_or("a.k", 0), 1);
+        assert_eq!(doc.i64_or("b.c.k", 0), 2);
+    }
+}

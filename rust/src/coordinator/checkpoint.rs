@@ -1,0 +1,133 @@
+//! Checkpointing: the packed state vector + integrity metadata, in a
+//! simple length-prefixed binary format (magic, version, variant-name,
+//! step, state data, xor checksum).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"MFTCKPT\x01";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub variant: String,
+    pub step: u64,
+    pub state: Vec<f32>,
+}
+
+fn checksum(state: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64; // FNV-1a over the raw bytes
+    for v in state {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(MAGIC)?;
+            let name = self.variant.as_bytes();
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name)?;
+            f.write_all(&self.step.to_le_bytes())?;
+            f.write_all(&(self.state.len() as u64).to_le_bytes())?;
+            // SAFETY-free raw serialize: little-endian f32s
+            let mut bytes = Vec::with_capacity(self.state.len() * 4);
+            for v in &self.state {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+            f.write_all(&checksum(&self.state).to_le_bytes())?;
+        }
+        std::fs::rename(&tmp, path).context("atomic checkpoint rename")?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an mftrain checkpoint", path.display());
+        }
+        let mut u32b = [0u8; 4];
+        f.read_exact(&mut u32b)?;
+        let name_len = u32::from_le_bytes(u32b) as usize;
+        if name_len > 4096 {
+            bail!("implausible variant-name length {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let step = u64::from_le_bytes(u64b);
+        f.read_exact(&mut u64b)?;
+        let n = u64::from_le_bytes(u64b) as usize;
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let state: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        f.read_exact(&mut u64b)?;
+        let want = u64::from_le_bytes(u64b);
+        let got = checksum(&state);
+        if want != got {
+            bail!("checkpoint checksum mismatch ({want:#x} != {got:#x})");
+        }
+        Ok(Checkpoint {
+            variant: String::from_utf8(name).context("variant name not utf-8")?,
+            step,
+            state,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            variant: "cnn_mf".into(),
+            step: 123,
+            state: (0..1000).map(|i| i as f32 * 0.5 - 10.0).collect(),
+        };
+        let path = std::env::temp_dir().join("mft_ckpt_roundtrip.bin");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let ck = Checkpoint { variant: "x".into(), step: 1, state: vec![1.0; 64] };
+        let path = std::env::temp_dir().join("mft_ckpt_corrupt.bin");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_files() {
+        let path = std::env::temp_dir().join("mft_ckpt_foreign.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

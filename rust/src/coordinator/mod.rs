@@ -1,0 +1,15 @@
+//! Layer-3 training orchestrator (the coordinator): step loop, prefetch
+//! workers, telemetry, checkpoints, and multi-run drivers for the paper's
+//! accuracy tables.
+
+pub mod checkpoint;
+pub mod prefetch;
+pub mod sweep;
+pub mod telemetry;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use prefetch::Prefetcher;
+pub use sweep::{run_sweep, summary_table, SweepConfig};
+pub use telemetry::{ProbeSnapshot, RunRecord, TensorStats};
+pub use trainer::{run_variant, Trainer};

@@ -1,0 +1,106 @@
+//! Data prefetch worker: a producer thread generating batches ahead of the
+//! training loop, connected by a bounded channel (backpressure = channel
+//! depth; the worker blocks when the trainer falls behind, never the other
+//! way around once the pipeline is warm).
+
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::thread::JoinHandle;
+
+use crate::data::{Batch, Dataset};
+
+pub struct Prefetcher {
+    rx: Receiver<Batch>,
+    handle: Option<JoinHandle<()>>,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    /// number of times the consumer had to wait for a batch
+    pub stalls: u64,
+    pub received: u64,
+}
+
+impl Prefetcher {
+    /// Spawn a worker producing from `dataset` with `depth` batches of
+    /// lookahead.
+    pub fn spawn(mut dataset: Box<dyn Dataset>, depth: usize) -> Prefetcher {
+        let (tx, rx) = sync_channel::<Batch>(depth.max(1));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("mft-prefetch".into())
+            .spawn(move || {
+                while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                    let b = dataset.next_batch();
+                    if tx.send(b).is_err() {
+                        break; // consumer dropped
+                    }
+                }
+            })
+            .expect("spawn prefetch worker");
+        Prefetcher { rx, handle: Some(handle), stop, stalls: 0, received: 0 }
+    }
+
+    /// Blocking fetch of the next batch (records whether we stalled).
+    pub fn next(&mut self) -> Batch {
+        self.received += 1;
+        match self.rx.try_recv() {
+            Ok(b) => b,
+            Err(TryRecvError::Empty) => {
+                self.stalls += 1;
+                self.rx.recv().expect("prefetch worker died")
+            }
+            Err(TryRecvError::Disconnected) => panic!("prefetch worker died"),
+        }
+    }
+
+    pub fn stall_rate(&self) -> f64 {
+        if self.received == 0 {
+            0.0
+        } else {
+            self.stalls as f64 / self.received as f64
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        // drain so a blocked sender wakes and observes the stop flag
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::PatternTask;
+
+    #[test]
+    fn produces_deterministic_stream() {
+        let mk = || Box::new(PatternTask::image(2, 8, 3, 1.0, 5));
+        let mut p1 = Prefetcher::spawn(mk(), 2);
+        let mut p2 = Prefetcher::spawn(mk(), 4);
+        for _ in 0..6 {
+            let (a, b) = (p1.next(), p2.next());
+            assert_eq!(a.x_f32, b.x_f32);
+            assert_eq!(a.y, b.y);
+        }
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let p = Prefetcher::spawn(Box::new(PatternTask::image(2, 8, 3, 1.0, 0)), 2);
+        drop(p); // must not hang
+    }
+
+    #[test]
+    fn stall_accounting() {
+        let mut p = Prefetcher::spawn(Box::new(PatternTask::image(1, 8, 3, 1.0, 0)), 1);
+        for _ in 0..4 {
+            p.next();
+        }
+        assert_eq!(p.received, 4);
+        assert!(p.stall_rate() <= 1.0);
+    }
+}

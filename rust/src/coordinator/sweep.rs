@@ -1,0 +1,154 @@
+//! Multi-run sweep orchestrator: run a set of (variant, seed) cells with a
+//! shared schedule, aggregate results, and render comparison tables /
+//! markdown. Powers `mft sweep` and the accuracy benches' multi-seed
+//! modes. Runs are sequential (one PJRT client, deterministic ordering);
+//! data generation overlaps via each trainer's own prefetch worker.
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::table::Table;
+
+use super::telemetry::RunRecord;
+use super::trainer::run_variant;
+
+/// One sweep cell specification.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub variant: String,
+    pub seed: u64,
+}
+
+/// Sweep-wide settings.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub steps: u64,
+    pub lr: f32,
+    pub noise: f32,
+    pub seeds: u64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self { steps: 250, lr: 0.08, noise: 2.0, seeds: 1 }
+    }
+}
+
+/// Aggregated result of one variant across seeds.
+#[derive(Clone, Debug)]
+pub struct VariantSummary {
+    pub variant: String,
+    pub accs: Vec<f64>,
+    pub final_losses: Vec<f32>,
+    pub wall_secs: f64,
+}
+
+impl VariantSummary {
+    pub fn mean_acc(&self) -> f64 {
+        self.accs.iter().sum::<f64>() / self.accs.len().max(1) as f64
+    }
+
+    pub fn min_acc(&self) -> f64 {
+        self.accs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn acc_spread(&self) -> f64 {
+        let max = self.accs.iter().cloned().fold(0.0, f64::max);
+        max - self.min_acc()
+    }
+}
+
+/// Run a full sweep: every variant x every seed.
+pub fn run_sweep(
+    rt: &Runtime,
+    variants: &[&str],
+    cfg: &SweepConfig,
+    mut on_cell: impl FnMut(&str, u64, &RunRecord),
+) -> Result<Vec<VariantSummary>> {
+    let mut out = Vec::new();
+    for &variant in variants {
+        let mut s = VariantSummary {
+            variant: variant.to_string(),
+            accs: Vec::new(),
+            final_losses: Vec::new(),
+            wall_secs: 0.0,
+        };
+        for seed in 0..cfg.seeds {
+            let rec = run_variant(rt, variant, cfg.steps, cfg.lr, cfg.noise, seed)?;
+            s.accs.push(rec.final_accuracy);
+            s.final_losses.push(rec.loss_span().map(|(_, l)| l).unwrap_or(f32::NAN));
+            s.wall_secs += rec.wall_secs;
+            on_cell(variant, seed, &rec);
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Render a sweep as a comparison table (first variant = baseline).
+pub fn summary_table(title: &str, summaries: &[VariantSummary]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["variant", "mean acc (%)", "min acc (%)", "spread (pts)",
+          "delta vs baseline", "wall (s)"],
+    );
+    let base = summaries.first().map(|s| s.mean_acc()).unwrap_or(0.0);
+    for s in summaries {
+        t.row(&[
+            s.variant.clone(),
+            format!("{:.2}", s.mean_acc() * 100.0),
+            format!("{:.2}", s.min_acc() * 100.0),
+            format!("{:.2}", s.acc_spread() * 100.0),
+            format!("{:+.2}", (s.mean_acc() - base) * 100.0),
+            format!("{:.1}", s.wall_secs),
+        ]);
+    }
+    t
+}
+
+/// Markdown rendering for EXPERIMENTS.md inserts.
+pub fn to_markdown(title: &str, summaries: &[VariantSummary]) -> String {
+    let base = summaries.first().map(|s| s.mean_acc()).unwrap_or(0.0);
+    let mut md = format!("### {title}\n\n| variant | mean acc | Δ vs baseline | seeds |\n|---|---|---|---|\n");
+    for s in summaries {
+        md.push_str(&format!(
+            "| {} | {:.2}% | {:+.2} pts | {} |\n",
+            s.variant,
+            s.mean_acc() * 100.0,
+            (s.mean_acc() - base) * 100.0,
+            s.accs.len()
+        ));
+    }
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(variant: &str, accs: &[f64]) -> VariantSummary {
+        VariantSummary {
+            variant: variant.into(),
+            accs: accs.to_vec(),
+            final_losses: vec![0.1; accs.len()],
+            wall_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn summary_statistics() {
+        let s = fake("x", &[0.9, 0.8, 0.85]);
+        assert!((s.mean_acc() - 0.85).abs() < 1e-12);
+        assert_eq!(s.min_acc(), 0.8);
+        assert!((s.acc_spread() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_and_markdown_render() {
+        let sums = vec![fake("fp32", &[0.95]), fake("mf", &[0.94])];
+        let t = summary_table("T", &sums).render();
+        assert!(t.contains("fp32") && t.contains("-1.00"));
+        let md = to_markdown("T", &sums);
+        assert!(md.contains("| mf | 94.00% | -1.00 pts | 1 |"));
+    }
+}

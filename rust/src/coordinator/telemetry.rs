@@ -1,0 +1,144 @@
+//! Training telemetry: loss curve, eval curve, probe-derived distribution
+//! snapshots (Figures 2/3/6 data) and run-level performance counters.
+
+use crate::potq;
+use crate::runtime::artifact::Manifest;
+use crate::stats::{fit_lognormal, log2_histogram, Histogram, Summary};
+
+/// One probe snapshot: W/A/G of the canonical layer at a training step.
+#[derive(Clone, Debug)]
+pub struct ProbeSnapshot {
+    pub step: u64,
+    pub w: TensorStats,
+    pub a: TensorStats,
+    pub g: TensorStats,
+}
+
+/// Distribution statistics of one probed tensor + its ALS-PoTQ image.
+#[derive(Clone, Debug)]
+pub struct TensorStats {
+    pub mean: f64,
+    pub std: f64,
+    pub abs_max: f64,
+    pub zero_fraction: f64,
+    /// beta of the 5-bit ALS-PoTQ quantization of this tensor
+    pub beta: i32,
+    /// MSE between tensor and its 5-bit PoT image
+    pub quant_mse: f64,
+    /// lognormality of |x| (sigma of log2|x|; None if degenerate)
+    pub log2_sigma: Option<f64>,
+    pub log2_hist: Histogram,
+}
+
+impl TensorStats {
+    pub fn compute(x: &[f32]) -> TensorStats {
+        let s = Summary::from_slice(x);
+        let blk = potq::pot_quantize(x, 5, None);
+        let deq = blk.dequantize();
+        let fit = fit_lognormal(x);
+        TensorStats {
+            mean: s.mean,
+            std: s.std(),
+            abs_max: s.abs_max,
+            zero_fraction: s.zero_fraction(),
+            beta: blk.beta,
+            quant_mse: crate::stats::mse(x, &deq),
+            log2_sigma: fit.as_ref().map(|f| f.sigma_log2),
+            log2_hist: log2_histogram(x, -40.0, 10.0, 50),
+        }
+    }
+}
+
+/// Split a raw probe vector into per-section stats using the manifest.
+pub fn snapshot_from_probe(man: &Manifest, step: u64, raw: &[f32]) -> ProbeSnapshot {
+    let section = |name: &str| -> &[f32] {
+        let s = man
+            .probe_sections
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("probe section {name} missing"));
+        &raw[s.offset..s.offset + s.size]
+    };
+    ProbeSnapshot {
+        step,
+        w: TensorStats::compute(section("w")),
+        a: TensorStats::compute(section("a")),
+        g: TensorStats::compute(section("g")),
+    }
+}
+
+/// Full run record returned by the trainer.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub variant: String,
+    pub loss_curve: Vec<(u64, f32)>,
+    /// (step, eval mean loss, eval accuracy)
+    pub eval_curve: Vec<(u64, f64, f64)>,
+    pub probes: Vec<ProbeSnapshot>,
+    pub final_accuracy: f64,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+    pub data_stall_rate: f64,
+}
+
+impl RunRecord {
+    pub fn best_accuracy(&self) -> f64 {
+        self.eval_curve
+            .iter()
+            .map(|&(_, _, acc)| acc)
+            .fold(0.0, f64::max)
+    }
+
+    /// first and last train loss — the "did it learn" signal
+    pub fn loss_span(&self) -> Option<(f32, f32)> {
+        Some((self.loss_curve.first()?.1, self.loss_curve.last()?.1))
+    }
+
+    /// weight-mean drift series for Figure 3 (step, mean(W))
+    pub fn weight_mean_series(&self) -> Vec<(u64, f64)> {
+        self.probes.iter().map(|p| (p.step, p.w.mean)).collect()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,train_loss\n");
+        for (s, l) in &self.loss_curve {
+            out.push_str(&format!("{s},{l}\n"));
+        }
+        out.push_str("step,eval_loss,eval_acc\n");
+        for (s, l, a) in &self.eval_curve {
+            out.push_str(&format!("{s},{l},{a}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn tensor_stats_basics() {
+        let mut r = Pcg32::new(0);
+        let mut x = vec![0f32; 4096];
+        r.fill_normal(&mut x, 0.1, 0.02);
+        let t = TensorStats::compute(&x);
+        assert!((t.mean - 0.1).abs() < 0.01);
+        assert!((t.std - 0.02).abs() < 0.005);
+        assert!(t.quant_mse > 0.0);
+        assert!(t.beta <= -4 && t.beta >= -11, "beta {}", t.beta);
+    }
+
+    #[test]
+    fn run_record_summaries() {
+        let mut r = RunRecord::default();
+        r.loss_curve = vec![(0, 2.0), (10, 1.0), (20, 0.5)];
+        r.eval_curve = vec![(10, 1.1, 0.4), (20, 0.6, 0.8)];
+        assert_eq!(r.loss_span(), Some((2.0, 0.5)));
+        assert_eq!(r.best_accuracy(), 0.8);
+        let csv = r.to_csv();
+        assert!(csv.contains("20,0.5"));
+        assert!(csv.contains("20,0.6,0.8"));
+    }
+}

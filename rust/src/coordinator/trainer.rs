@@ -1,0 +1,185 @@
+//! The training orchestrator: owns the session, the prefetch pipeline,
+//! the LR schedule, telemetry and checkpoints. This is the L3 event loop —
+//! the whole thing is rust + PJRT; python never runs here.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data;
+use crate::runtime::{Runtime, Session};
+
+use super::checkpoint::Checkpoint;
+use super::prefetch::Prefetcher;
+use super::telemetry::{snapshot_from_probe, RunRecord};
+
+pub struct Trainer<'rt> {
+    pub cfg: TrainConfig,
+    pub session: Session<'rt>,
+    train_data: Prefetcher,
+    eval_data: Box<dyn data::Dataset>,
+    quiet: bool,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
+        let session = Session::load(rt, Path::new(&cfg.artifacts_dir), &cfg.variant)?;
+        let man = &session.manifest;
+        let dataset = data::for_variant(
+            &man.model,
+            &man.x.shape,
+            &man.y.shape,
+            cfg.data_noise,
+            cfg.seed,
+        );
+        let eval_data = dataset.fork_eval();
+        let train_data = Prefetcher::spawn(dataset, cfg.prefetch_depth);
+        Ok(Self { cfg, session, train_data, eval_data, quiet: false })
+    }
+
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Initialize (or restore) and run the configured number of steps.
+    pub fn run(&mut self) -> Result<RunRecord> {
+        let mut rec = RunRecord { variant: self.cfg.variant.clone(), ..Default::default() };
+        let start_step = if let Some(path) = self.resumable_checkpoint() {
+            let ck = Checkpoint::load(&path)?;
+            anyhow::ensure!(
+                ck.variant == self.cfg.variant,
+                "checkpoint is for variant '{}', config wants '{}'",
+                ck.variant,
+                self.cfg.variant
+            );
+            self.session.state_from_host(&ck.state)?;
+            if !self.quiet {
+                println!("[mft] resumed {} at step {}", ck.variant, ck.step);
+            }
+            ck.step
+        } else {
+            self.session.init(self.cfg.seed as i32)?;
+            0
+        };
+
+        let t0 = Instant::now();
+        for step in start_step..self.cfg.steps {
+            let batch = self.train_data.next();
+            let lr = self.cfg.lr.at(step);
+            self.session.train_step(&batch, lr)?;
+
+            let last = step + 1 == self.cfg.steps;
+            if last || (self.cfg.log_every > 0 && (step + 1) % self.cfg.log_every == 0) {
+                let (loss, _) = self.session.metrics()?;
+                rec.loss_curve.push((step + 1, loss));
+                if !self.quiet {
+                    println!(
+                        "[mft] {} step {:>5}  lr {:.4}  loss {:.4}",
+                        self.cfg.variant, step + 1, lr, loss
+                    );
+                }
+                anyhow::ensure!(loss.is_finite(), "loss diverged at step {}", step + 1);
+            }
+            if self.cfg.eval_every > 0 && ((step + 1) % self.cfg.eval_every == 0 || last) {
+                let (eloss, eacc) = self.evaluate()?;
+                rec.eval_curve.push((step + 1, eloss, eacc));
+                if !self.quiet {
+                    println!(
+                        "[mft] {} step {:>5}  eval loss {:.4}  acc {:.2}%",
+                        self.cfg.variant, step + 1, eloss, eacc * 100.0
+                    );
+                }
+            }
+            if self.cfg.probe_every > 0 && (step + 1) % self.cfg.probe_every == 0 {
+                let batch = self.train_data.next();
+                let raw = self.session.probe(&batch)?;
+                rec.probes.push(snapshot_from_probe(&self.session.manifest, step + 1, &raw));
+            }
+            if self.cfg.checkpoint_every > 0
+                && (step + 1) % self.cfg.checkpoint_every == 0
+            {
+                self.save_checkpoint(step + 1)?;
+            }
+        }
+        rec.wall_secs = t0.elapsed().as_secs_f64();
+        rec.steps = self.cfg.steps - start_step;
+        rec.steps_per_sec = rec.steps as f64 / rec.wall_secs.max(1e-9);
+        rec.data_stall_rate = self.train_data.stall_rate();
+        rec.final_accuracy = rec.eval_curve.last().map(|e| e.2).unwrap_or(0.0);
+        if let Some(path) = self.final_checkpoint_path() {
+            self.save_checkpoint(self.cfg.steps)?;
+            if !self.quiet {
+                println!("[mft] checkpoint -> {}", path.display());
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Mean loss / accuracy over `eval_batches` held-out batches.
+    pub fn evaluate(&mut self) -> Result<(f64, f64)> {
+        let denom = self.session.manifest.eval_denom as f64;
+        let (mut sl, mut sc, mut n) = (0f64, 0f64, 0f64);
+        for _ in 0..self.cfg.eval_batches.max(1) {
+            let b = self.eval_data.next_batch();
+            let (l, c) = self.session.eval_batch(&b)?;
+            sl += l;
+            sc += c;
+            n += denom;
+        }
+        Ok((sl / n, sc / n))
+    }
+
+    fn resumable_checkpoint(&self) -> Option<std::path::PathBuf> {
+        let p = std::path::PathBuf::from(self.cfg.checkpoint_path.as_ref()?);
+        p.exists().then_some(p)
+    }
+
+    fn final_checkpoint_path(&self) -> Option<std::path::PathBuf> {
+        self.cfg.checkpoint_path.as_ref().map(std::path::PathBuf::from)
+    }
+
+    fn save_checkpoint(&self, step: u64) -> Result<()> {
+        let Some(path) = self.final_checkpoint_path() else {
+            return Ok(());
+        };
+        let state = self.session.state_to_host()?;
+        Checkpoint { variant: self.cfg.variant.clone(), step, state }
+            .save(&path)
+            .context("saving checkpoint")
+    }
+}
+
+/// Convenience: run one variant with the given config tweaks (used by the
+/// accuracy benches — Tables 3/4/5/6).
+pub fn run_variant(
+    rt: &Runtime,
+    variant: &str,
+    steps: u64,
+    lr: f32,
+    noise: f32,
+    seed: u64,
+) -> Result<RunRecord> {
+    let mut cfg = TrainConfig {
+        variant: variant.to_string(),
+        steps,
+        data_noise: noise,
+        seed,
+        ..TrainConfig::default()
+    };
+    cfg.lr.base = lr;
+    cfg.lr.decay_at = vec![steps * 6 / 10, steps * 85 / 100];
+    // transformers want linear warmup (Appendix D keeps the official
+    // recipe; our scaled recipe uses 15% warmup)
+    cfg.lr.warmup_steps = if variant.starts_with("transformer") {
+        steps * 15 / 100
+    } else {
+        0
+    };
+    cfg.eval_every = steps; // eval at the end only
+    cfg.log_every = (steps.max(4) / 4).max(1);
+    let mut t = Trainer::new(rt, cfg)?.quiet();
+    t.run()
+}

@@ -1,0 +1,243 @@
+//! Class-pattern image task: the ImageNet stand-in.
+//!
+//! Each of the 10 classes has a deterministic spatial template (a mix of
+//! oriented sinusoids + a class-specific blob); samples are template +
+//! Gaussian noise. `noise` scales the difficulty: at noise ~1.0 an FP32
+//! mini-ResNet reaches high-90s accuracy in a few hundred steps, leaving
+//! visible headroom for quantization-induced degradation — the quantity
+//! Table 3 compares.
+
+use crate::util::prng::Pcg32;
+
+use super::{Batch, Dataset};
+
+pub const CLASSES: u32 = 10;
+
+/// Deterministic class template value at (x, y, c) for image side `s`.
+fn template(class: u32, x: usize, y: usize, c: usize, s: usize) -> f32 {
+    let fx = x as f32 / s as f32;
+    let fy = y as f32 / s as f32;
+    let k = class as f32;
+    // oriented sinusoid: frequency and angle vary by class
+    let angle = k * std::f32::consts::PI / CLASSES as f32;
+    let freq = 2.0 + (class % 5) as f32;
+    let u = fx * angle.cos() + fy * angle.sin();
+    let wave = (2.0 * std::f32::consts::PI * freq * u).sin();
+    // class-specific blob location
+    let bx = (0.2 + 0.6 * ((class as f32 * 0.37) % 1.0)) - fx;
+    let by = (0.2 + 0.6 * ((class as f32 * 0.73) % 1.0)) - fy;
+    let blob = (-(bx * bx + by * by) * 18.0).exp();
+    // channels see phase-shifted mixes
+    let ch = c as f32 * 0.5;
+    0.8 * wave * (1.0 + ch * 0.2) + 1.5 * blob * (1.0 - ch * 0.3)
+}
+
+/// Image-classification dataset (NHWC f32) or its flattened MLP variant.
+pub struct PatternTask {
+    batch: usize,
+    side: usize,
+    channels: usize,
+    noise: f32,
+    flat: bool,
+    rng: Pcg32,
+    seed: u64,
+    /// class templates precomputed once (perf: the trig/exp evaluation
+    /// dominated batch generation; see EXPERIMENTS.md §Perf)
+    templates: Vec<Vec<f32>>,
+}
+
+fn build_templates(side: usize, channels: usize) -> Vec<Vec<f32>> {
+    (0..CLASSES)
+        .map(|class| {
+            let mut t = vec![0f32; side * side * channels];
+            for y in 0..side {
+                for x in 0..side {
+                    for c in 0..channels {
+                        t[(y * side + x) * channels + c] = template(class, x, y, c, side);
+                    }
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+impl PatternTask {
+    pub fn image(batch: usize, side: usize, channels: usize, noise: f32, seed: u64) -> Self {
+        Self {
+            batch,
+            side,
+            channels,
+            noise,
+            flat: false,
+            rng: Pcg32::new(seed),
+            seed,
+            templates: build_templates(side, channels),
+        }
+    }
+
+    /// Flattened variant for the MLP (batch, side*side*channels).
+    pub fn flat(batch: usize, dim: usize, noise: f32, seed: u64) -> Self {
+        // dim = side^2 * 3 for our configs
+        let side = ((dim / 3) as f64).sqrt() as usize;
+        assert_eq!(side * side * 3, dim, "flat dim must be side^2*3");
+        Self {
+            batch,
+            side,
+            channels: 3,
+            noise,
+            flat: true,
+            rng: Pcg32::new(seed),
+            seed,
+            templates: build_templates(side, 3),
+        }
+    }
+}
+
+impl PatternTask {
+    /// Pre-optimization batch path (template recomputed per pixel per
+    /// sample) — kept for the §Perf before/after measurement in
+    /// perf_runtime; numerically identical to `next_batch`.
+    pub fn next_batch_uncached(&mut self) -> Batch {
+        let (b, s, c) = (self.batch, self.side, self.channels);
+        let mut x = vec![0f32; b * s * s * c];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let class = self.rng.below(CLASSES);
+            y[i] = class as i32;
+            for yy in 0..s {
+                for xx in 0..s {
+                    for cc in 0..c {
+                        let idx = ((i * s + yy) * s + xx) * c + cc;
+                        x[idx] =
+                            template(class, xx, yy, cc, s) + self.noise * self.rng.normal();
+                    }
+                }
+            }
+        }
+        let x_shape = if self.flat { vec![b, s * s * c] } else { vec![b, s, s, c] };
+        Batch { x_f32: x, x_i32: Vec::new(), y, x_shape, y_shape: vec![b], x_is_int: false }
+    }
+}
+
+impl Dataset for PatternTask {
+    fn next_batch(&mut self) -> Batch {
+        let (b, s, c) = (self.batch, self.side, self.channels);
+        let mut x = vec![0f32; b * s * s * c];
+        let mut y = vec![0i32; b];
+        let plane = s * s * c;
+        for i in 0..b {
+            let class = self.rng.below(CLASSES);
+            y[i] = class as i32;
+            let tmpl = &self.templates[class as usize];
+            let out = &mut x[i * plane..(i + 1) * plane];
+            for (o, &t) in out.iter_mut().zip(tmpl) {
+                *o = t + self.noise * self.rng.normal();
+            }
+        }
+        let x_shape = if self.flat {
+            vec![b, s * s * c]
+        } else {
+            vec![b, s, s, c]
+        };
+        Batch {
+            x_f32: x,
+            x_i32: Vec::new(),
+            y,
+            x_shape,
+            y_shape: vec![b],
+            x_is_int: false,
+        }
+    }
+
+    fn fork_eval(&self) -> Box<dyn Dataset> {
+        let mut d = Self {
+            batch: self.batch,
+            side: self.side,
+            channels: self.channels,
+            noise: self.noise,
+            flat: self.flat,
+            rng: Pcg32::new(self.seed ^ EVAL_STREAM),
+            seed: self.seed ^ EVAL_STREAM,
+            templates: self.templates.clone(),
+        };
+        // decorrelate from the training stream
+        for _ in 0..7 {
+            d.rng.next_u32();
+        }
+        Box::new(d)
+    }
+}
+
+/// XOR mask deriving the held-out eval stream from the train seed.
+const EVAL_STREAM: u64 = 0xE7A1_5EED_0000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let mut d = PatternTask::image(4, 16, 3, 1.0, 0);
+        let b = d.next_batch();
+        assert_eq!(b.x_shape, vec![4, 16, 16, 3]);
+        assert_eq!(b.x_f32.len(), 4 * 16 * 16 * 3);
+        assert_eq!(b.y.len(), 4);
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn flat_variant_matches_mlp_spec() {
+        let mut d = PatternTask::flat(8, 768, 0.5, 1);
+        let b = d.next_batch();
+        assert_eq!(b.x_shape, vec![8, 768]);
+    }
+
+    #[test]
+    fn cached_and_uncached_paths_are_bit_identical() {
+        let mut a = PatternTask::image(3, 8, 3, 1.0, 11);
+        let mut b = PatternTask::image(3, 8, 3, 1.0, 11);
+        let (ba, bb) = (a.next_batch(), b.next_batch_uncached());
+        assert_eq!(ba.x_f32, bb.x_f32);
+        assert_eq!(ba.y, bb.y);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = PatternTask::image(2, 8, 3, 1.0, 42);
+        let mut b = PatternTask::image(2, 8, 3, 1.0, 42);
+        let (ba, bb) = (a.next_batch(), b.next_batch());
+        assert_eq!(ba.x_f32, bb.x_f32);
+        assert_eq!(ba.y, bb.y);
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // template distance between classes must dominate noise=0 samples
+        let s = 16;
+        let dist = |a: u32, b: u32| -> f32 {
+            let mut d = 0f32;
+            for y in 0..s {
+                for x in 0..s {
+                    for c in 0..3 {
+                        let t = template(a, x, y, c, s) - template(b, x, y, c, s);
+                        d += t * t;
+                    }
+                }
+            }
+            d.sqrt()
+        };
+        for a in 0..10u32 {
+            for b in (a + 1)..10 {
+                assert!(dist(a, b) > 3.0, "classes {a},{b} too close: {}", dist(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn eval_fork_differs_from_train_stream() {
+        let mut d = PatternTask::image(4, 8, 3, 1.0, 7);
+        let mut e = d.fork_eval();
+        assert_ne!(d.next_batch().x_f32, e.next_batch().x_f32);
+    }
+}

@@ -1,0 +1,68 @@
+//! Synthetic data pipelines (the ImageNet / WMT stand-ins; DESIGN.md
+//! §Substitutions). Deterministic given a seed, generated on the fly by
+//! the coordinator's prefetch workers.
+
+pub mod images;
+pub mod seq;
+
+/// One training batch in host memory, ready for upload.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// f32 inputs, or bit-cast token ids for integer inputs
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    /// labels (classes, or per-position tokens)
+    pub y: Vec<i32>,
+    /// shapes as the artifact expects them
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    /// true when x is integer (token) data
+    pub x_is_int: bool,
+}
+
+/// A deterministic batch source.
+pub trait Dataset: Send {
+    fn next_batch(&mut self) -> Batch;
+    /// an independent clone for eval (different stream, same task)
+    fn fork_eval(&self) -> Box<dyn Dataset>;
+}
+
+/// Build the dataset matching an artifact variant's input spec.
+pub fn for_variant(
+    model: &str,
+    x_shape: &[usize],
+    y_shape: &[usize],
+    noise: f32,
+    seed: u64,
+) -> Box<dyn Dataset> {
+    let ds: Box<dyn Dataset> = match model {
+        "transformer" => Box::new(seq::SeqTask::new(
+            x_shape[0],
+            x_shape[1],
+            seq::VOCAB,
+            seed,
+        )),
+        "mlp" => Box::new(images::PatternTask::flat(x_shape[0], x_shape[1], noise, seed)),
+        _ => Box::new(images::PatternTask::image(
+            x_shape[0],
+            x_shape[1],
+            x_shape[3],
+            noise,
+            seed,
+        )),
+    };
+    ds.tap_check(x_shape, y_shape)
+}
+
+trait TapCheck {
+    fn tap_check(self, x_shape: &[usize], y_shape: &[usize]) -> Self;
+}
+
+impl TapCheck for Box<dyn Dataset> {
+    fn tap_check(mut self, x_shape: &[usize], y_shape: &[usize]) -> Self {
+        let b = self.next_batch();
+        assert_eq!(b.x_shape, x_shape, "dataset x shape mismatch");
+        assert_eq!(b.y_shape, y_shape, "dataset y shape mismatch");
+        self
+    }
+}

@@ -1,0 +1,101 @@
+//! Sequence-transduction task: the WMT En-De stand-in.
+//!
+//! y[t] = (x[S-1-t] + SHIFT) mod VOCAB — reversal plus a token shift.
+//! Solving it requires genuine content-based long-range attention (each
+//! output position attends to a different input position), which is what
+//! makes it a meaningful Transformer workload rather than a lookup table.
+
+use crate::util::prng::Pcg32;
+
+use super::{Batch, Dataset};
+
+pub const VOCAB: usize = 64;
+pub const SHIFT: i32 = 1;
+
+pub struct SeqTask {
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    rng: Pcg32,
+    seed: u64,
+}
+
+impl SeqTask {
+    pub fn new(batch: usize, seq: usize, vocab: usize, seed: u64) -> Self {
+        Self { batch, seq, vocab, rng: Pcg32::new(seed), seed }
+    }
+
+    /// The deterministic target for one input sequence.
+    pub fn target(x: &[i32], vocab: usize) -> Vec<i32> {
+        let s = x.len();
+        (0..s)
+            .map(|t| (x[s - 1 - t] + SHIFT).rem_euclid(vocab as i32))
+            .collect()
+    }
+}
+
+impl Dataset for SeqTask {
+    fn next_batch(&mut self) -> Batch {
+        let (b, s) = (self.batch, self.seq);
+        let mut x = vec![0i32; b * s];
+        let mut y = vec![0i32; b * s];
+        for i in 0..b {
+            for t in 0..s {
+                x[i * s + t] = self.rng.below(self.vocab as u32) as i32;
+            }
+            let tgt = Self::target(&x[i * s..(i + 1) * s], self.vocab);
+            y[i * s..(i + 1) * s].copy_from_slice(&tgt);
+        }
+        Batch {
+            x_f32: Vec::new(),
+            x_i32: x,
+            y,
+            x_shape: vec![b, s],
+            y_shape: vec![b, s],
+            x_is_int: true,
+        }
+    }
+
+    fn fork_eval(&self) -> Box<dyn Dataset> {
+        Box::new(Self::new(self.batch, self.seq, self.vocab, self.seed ^ 0xE7A1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_is_reverse_shift() {
+        let x = vec![0, 1, 2, 63];
+        assert_eq!(SeqTask::target(&x, 64), vec![0, 3, 2, 1]);
+    }
+
+    #[test]
+    fn batch_consistency() {
+        let mut d = SeqTask::new(3, 8, VOCAB, 0);
+        let b = d.next_batch();
+        assert_eq!(b.x_shape, vec![3, 8]);
+        assert!(b.x_is_int);
+        for i in 0..3 {
+            let x = &b.x_i32[i * 8..(i + 1) * 8];
+            let y = &b.y[i * 8..(i + 1) * 8];
+            assert_eq!(y, SeqTask::target(x, VOCAB).as_slice());
+        }
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let mut d = SeqTask::new(16, 32, VOCAB, 1);
+        let b = d.next_batch();
+        assert!(b.x_i32.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+        assert!(b.y.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SeqTask::new(2, 4, VOCAB, 9).next_batch();
+        let b = SeqTask::new(2, 4, VOCAB, 9).next_batch();
+        assert_eq!(a.x_i32, b.x_i32);
+    }
+}

@@ -1,0 +1,14 @@
+//! Energy-consumption analysis engine (paper §6, Tables 1-2, Figure 1).
+//!
+//! Everything here is analytical — exactly as in the paper, which computes
+//! MAC counts x 45 nm unit energies rather than measuring silicon. That
+//! makes Tables 1-2 / Figure 1 the one part of the evaluation we reproduce
+//! *exactly* rather than via scaled-down substitution.
+
+pub mod methods;
+pub mod ops;
+pub mod report;
+
+pub use methods::{methods, training_energy_joules, Method};
+pub use ops::{fp32_mac, mf_mac, MacMix, Op, ALS_POTQ_OVERHEAD_PJ};
+pub use report::{figure1_series, table1, table2, EnergyAccuracyPoint};

@@ -1,0 +1,155 @@
+//! Table/figure generation for the energy analysis.
+
+use crate::models::Arch;
+use crate::util::table::{fnum, Table};
+
+use super::methods::{methods, training_energy_joules, Method};
+use super::ops::{fp32_mac, mf_mac, Op, ALS_POTQ_OVERHEAD_PJ};
+
+/// Table 1: unit op energies.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table 1 — unit energy of operations (45nm CMOS, pJ)",
+        &["class", "op", "energy (pJ)"],
+    );
+    let rows: &[(&str, Op)] = &[
+        ("Multiplier", Op::MulF32),
+        ("Multiplier", Op::MulI32),
+        ("Multiplier", Op::MulF8),
+        ("Multiplier", Op::MulI8),
+        ("Multiplier", Op::MulI4),
+        ("Adder", Op::AddF32),
+        ("Adder", Op::AddI32),
+        ("Adder", Op::AddI16),
+        ("Adder", Op::AddI8),
+        ("Adder", Op::AddI4),
+        ("Shift", Op::ShiftI32x4),
+        ("Shift", Op::ShiftI32x3),
+        ("Shift", Op::ShiftI4x3),
+        ("Logic", Op::Xor1),
+    ];
+    for (class, op) in rows {
+        t.row(&[class.to_string(), op.name().to_string(), fnum(op.energy_pj())]);
+    }
+    t
+}
+
+/// Table 2: training energy per iteration for `arch` at `batch`, all
+/// methods, computed from the op mixes with the paper's values alongside.
+pub fn table2(arch: &Arch, batch: u64) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Table 2 — MAC energy training {} @ batch {batch} ({} GMACs fw/example)",
+            arch.name,
+            fnum(arch.fw_macs() as f64 / 1e9)
+        ),
+        &["method", "W/A/G", "scratch", "fw mix", "FW (J)", "BW (J)", "Total (J)",
+          "paper total", "vs FP32"],
+    );
+    let fp32_total = training_energy_joules(
+        arch.fw_macs(),
+        batch,
+        &methods()[0],
+        false,
+    )
+    .2;
+    for m in methods() {
+        let (fw, bw, tot) = training_energy_joules(arch.fw_macs(), batch, &m, false);
+        t.row(&[
+            m.name.to_string(),
+            format!("{}/{}/{}", m.w_fmt, m.a_fmt, m.g_fmt),
+            if m.from_scratch { "yes" } else { "no" }.to_string(),
+            m.fw.label.to_string(),
+            fnum(fw),
+            fnum(bw),
+            fnum(tot),
+            m.paper_joules.map(|p| fnum(p.2)).unwrap_or_else(|| "-".into()),
+            format!("{:.1}%", tot / fp32_total * 100.0),
+        ]);
+    }
+    t.note(
+        "fine-tuning methods (INQ/LogNN/ShiftCNN) train in FP32; energies computed \
+         from Appendix-C op mixes x Table-1 unit energies",
+    );
+    t
+}
+
+/// §6 headline: linear-layer training energy reduction of the full scheme
+/// (MF-MAC + ALS-PoTQ overhead) vs the FP32 MAC.
+pub fn headline_reduction() -> f64 {
+    1.0 - (mf_mac().energy_pj() + ALS_POTQ_OVERHEAD_PJ) / fp32_mac().energy_pj()
+}
+
+/// One Figure-1 point: training energy vs ImageNet accuracy.
+#[derive(Clone, Debug)]
+pub struct EnergyAccuracyPoint {
+    pub method: String,
+    pub energy_j: f64,
+    pub accuracy: Option<f64>,
+    pub from_scratch: bool,
+}
+
+/// Figure 1 series for `arch` (the paper uses ResNet50 @ 256).
+pub fn figure1_series(arch: &Arch, batch: u64) -> Vec<EnergyAccuracyPoint> {
+    methods()
+        .into_iter()
+        .map(|m: Method| {
+            let (_, _, tot) = training_energy_joules(arch.fw_macs(), batch, &m, false);
+            EnergyAccuracyPoint {
+                method: m.name.to_string(),
+                energy_j: tot,
+                accuracy: m.resnet50_acc,
+                from_scratch: m.from_scratch,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::resnet50;
+
+    #[test]
+    fn headline_is_95_8_percent() {
+        let r = headline_reduction();
+        assert!((r - 0.958).abs() < 0.004, "headline reduction {r}");
+    }
+
+    #[test]
+    fn table2_has_all_methods() {
+        let t = table2(&resnet50(), 256);
+        assert_eq!(t.rows.len(), methods().len());
+        let render = t.render();
+        assert!(render.contains("Ours"));
+        assert!(render.contains("AdderNet"));
+    }
+
+    #[test]
+    fn figure1_ours_is_pareto_optimal() {
+        // our point must have the lowest energy, and no method with higher
+        // accuracy may have lower-or-equal energy (Figure 1's claim)
+        let pts = figure1_series(&resnet50(), 256);
+        let ours = pts.iter().find(|p| p.method.starts_with("Ours")).unwrap();
+        for p in &pts {
+            if p.method.starts_with("Ours") || p.method.starts_with("Original") {
+                continue;
+            }
+            assert!(p.energy_j > ours.energy_j, "{} beats ours on energy", p.method);
+            if let Some(acc) = p.accuracy {
+                // among energy-reducing methods nobody is both more
+                // accurate and within 2x of our energy
+                if acc > ours.accuracy.unwrap() {
+                    assert!(p.energy_j > 2.0 * ours.energy_j, "{}", p.method);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table1_contains_key_rows() {
+        let r = table1().render();
+        assert!(r.contains("FP32 Mul") && r.contains("3.70"));
+        assert!(r.contains("INT4 Add"));
+    }
+}

@@ -1,0 +1,205 @@
+//! HLO-text analyzer: the L2 profiling tool (DESIGN.md §Perf).
+//!
+//! Parses the HLO text artifacts (the same files the runtime compiles)
+//! into a lightweight IR — computations, instructions, shapes — and
+//! derives an op census, FLOP estimates for dot/convolution, and memory
+//! traffic estimates. `mft hlo --variant cnn_mf` prints the report; the
+//! perf pass uses it to verify that quantization did not introduce
+//! redundant recomputation and that fusion-relevant structure is sane.
+
+mod parse;
+
+pub use parse::{parse_module, HloComputation, HloInstr, HloModule, Shape};
+
+use std::collections::BTreeMap;
+
+/// Aggregated census of one HLO module.
+#[derive(Clone, Debug, Default)]
+pub struct Census {
+    /// opcode -> count, across all computations
+    pub op_counts: BTreeMap<String, usize>,
+    /// estimated FLOPs of dot/conv ops (2 * MACs)
+    pub dot_flops: u64,
+    pub conv_flops: u64,
+    /// total bytes of all instruction output buffers (an upper bound on
+    /// intermediate memory traffic)
+    pub output_bytes: u64,
+    /// bytes of the entry parameters / root
+    pub param_bytes: u64,
+    pub instr_total: usize,
+    pub computations: usize,
+    /// instructions belonging to fused computations
+    pub fused_instrs: usize,
+    pub custom_calls: Vec<String>,
+    /// while-loops (pallas interpret-mode lowers grids to these)
+    pub while_loops: usize,
+}
+
+impl Census {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.dot_flops + self.conv_flops
+    }
+}
+
+/// Analyze a parsed module.
+pub fn census(module: &HloModule) -> Census {
+    let mut c = Census { computations: module.computations.len(), ..Default::default() };
+    for comp in &module.computations {
+        let fused = comp.name.contains("fused");
+        for ins in &comp.instrs {
+            *c.op_counts.entry(ins.opcode.clone()).or_insert(0) += 1;
+            c.instr_total += 1;
+            if fused {
+                c.fused_instrs += 1;
+            }
+            c.output_bytes += ins.shape.byte_size();
+            match ins.opcode.as_str() {
+                "dot" => c.dot_flops += dot_flops(ins),
+                "convolution" => c.conv_flops += conv_flops(ins),
+                "custom-call" => {
+                    if let Some(t) = &ins.custom_call_target {
+                        c.custom_calls.push(t.clone());
+                    }
+                }
+                "while" => c.while_loops += 1,
+                "parameter" if comp.is_entry => c.param_bytes += ins.shape.byte_size(),
+                _ => {}
+            }
+        }
+    }
+    c
+}
+
+/// FLOPs of a dot: 2 * prod(output dims) * contracted size. We recover
+/// the contracted size from the lhs operand shape and the output shape.
+fn dot_flops(ins: &HloInstr) -> u64 {
+    let out: u64 = ins.shape.elements();
+    // contracted size = lhs elements / (lhs batch+free dims present in out)
+    let lhs = match ins.operand_shapes.first() {
+        Some(s) => s.elements(),
+        None => return 0,
+    };
+    let rhs = match ins.operand_shapes.get(1) {
+        Some(s) => s.elements(),
+        None => return 0,
+    };
+    if out == 0 {
+        return 0;
+    }
+    // lhs = M*K (possibly batched), rhs = K*N, out = M*N =>
+    // K = sqrt(lhs*rhs/out)
+    let k2 = (lhs as f64) * (rhs as f64) / (out as f64);
+    let k = k2.sqrt().round().max(1.0) as u64;
+    2 * out * k
+}
+
+/// FLOPs of a convolution: 2 * out_elems * (k_spatial * cin) using the
+/// kernel operand shape (HWIO): prod(kernel dims except O).
+fn conv_flops(ins: &HloInstr) -> u64 {
+    let out = ins.shape.elements();
+    let Some(kern) = ins.operand_shapes.get(1) else { return 0 };
+    let dims = &kern.dims;
+    if dims.is_empty() {
+        return 0;
+    }
+    // assume the last dim is output channels (HWIO / OIHW both have the
+    // product-of-all/cout structure we need)
+    let cout = *dims.last().unwrap() as u64;
+    let per_out = kern.elements() / cout.max(1);
+    2 * out * per_out
+}
+
+/// Human-readable analysis table of one artifact.
+pub fn report(module: &HloModule) -> crate::util::table::Table {
+    use crate::util::table::{fnum, Table};
+    let c = census(module);
+    let mut t = Table::new(
+        &format!("HLO census — {} ({} computations, {} instrs)",
+                 module.name, c.computations, c.instr_total),
+        &["metric", "value"],
+    );
+    t.row(&["dot FLOPs".to_string(), fnum(c.dot_flops as f64)]);
+    t.row(&["conv FLOPs".to_string(), fnum(c.conv_flops as f64)]);
+    t.row(&["intermediate bytes".to_string(), fnum(c.output_bytes as f64)]);
+    t.row(&["entry param bytes".to_string(), fnum(c.param_bytes as f64)]);
+    t.row(&["fused instr fraction".to_string(),
+            format!("{:.1}%", c.fused_instrs as f64 / c.instr_total.max(1) as f64 * 100.0)]);
+    t.row(&["while loops".to_string(), c.while_loops.to_string()]);
+    t.row(&["custom calls".to_string(),
+            if c.custom_calls.is_empty() { "none".into() } else { c.custom_calls.join(",") }]);
+    let mut ops: Vec<_> = c.op_counts.iter().collect();
+    ops.sort_by_key(|(_, n)| std::cmp::Reverse(**n));
+    for (op, n) in ops.iter().take(12) {
+        t.row(&[format!("op: {op}"), n.to_string()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_step, entry_computation_layout={(f32[8]{0}, f32[2,4]{1,0})->f32[8]{0}}
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.3 = f32[] parameter(1)
+  ROOT add.4 = f32[] add(Arg_0.2, Arg_1.3)
+}
+
+fused_computation {
+  p0 = f32[2,4]{1,0} parameter(0)
+  ROOT m = f32[2,4]{1,0} multiply(p0, p0)
+}
+
+ENTRY main.10 {
+  p0 = f32[8]{0} parameter(0)
+  p1 = f32[2,4]{1,0} parameter(1)
+  d = f32[2,2]{1,0} dot(p1, p1), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  cc = f32[4]{0} custom-call(p0), custom_call_target="foo_bar"
+  c = f32[] constant(0)
+  r = f32[] reduce(p0, c), dimensions={0}, to_apply=region_0.1
+  ROOT out = f32[8]{0} broadcast(r), dimensions={}
+}
+"#;
+
+    #[test]
+    fn parses_and_counts() {
+        let m = parse_module(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_step");
+        assert_eq!(m.computations.len(), 3);
+        let c = census(&m);
+        assert_eq!(c.count("dot"), 1);
+        assert_eq!(c.count("parameter"), 5);
+        assert_eq!(c.count("reduce"), 1);
+        assert_eq!(c.custom_calls, vec!["foo_bar".to_string()]);
+        assert!(c.fused_instrs >= 2);
+    }
+
+    #[test]
+    fn dot_flops_estimate() {
+        let m = parse_module(SAMPLE).unwrap();
+        let c = census(&m);
+        // (2,4) x (2,4 contracted on 4) -> (2,2): 2*4*4 = 2 * 2*2 * 4 = 32
+        assert_eq!(c.dot_flops, 32);
+    }
+
+    #[test]
+    fn entry_param_bytes() {
+        let m = parse_module(SAMPLE).unwrap();
+        let c = census(&m);
+        assert_eq!(c.param_bytes, (8 + 8) * 4);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = parse_module(SAMPLE).unwrap();
+        let r = report(&m).render();
+        assert!(r.contains("dot FLOPs"));
+        assert!(r.contains("op: parameter"));
+    }
+}

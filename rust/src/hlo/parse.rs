@@ -1,0 +1,369 @@
+//! Minimal HLO-text parser — enough structure for the census: module
+//! name, computations, instructions with opcode, result shape, operand
+//! shapes (recovered from the defining instructions), and selected
+//! attributes. The grammar is the stable "HloModule ... ENTRY ... { ... }"
+//! text emitted by XLA's HloModule::ToString, which is exactly what our
+//! AOT artifacts contain.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed tensor shape: element type + dims (layout braces ignored).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub ty: String,
+    pub dims: Vec<usize>,
+    /// tuple shapes keep their leaves
+    pub tuple: Vec<Shape>,
+}
+
+impl Shape {
+    pub fn scalar(ty: &str) -> Shape {
+        Shape { ty: ty.to_string(), dims: vec![], tuple: vec![] }
+    }
+
+    pub fn elements(&self) -> u64 {
+        if self.ty == "tuple" {
+            return self.tuple.iter().map(Shape::elements).sum();
+        }
+        self.dims.iter().map(|&d| d as u64).product::<u64>().max(1)
+    }
+
+    pub fn element_bytes(&self) -> u64 {
+        match self.ty.as_str() {
+            "f64" | "s64" | "u64" | "c64" => 8,
+            "f32" | "s32" | "u32" => 4,
+            "f16" | "bf16" | "s16" | "u16" => 2,
+            "s8" | "u8" | "pred" => 1,
+            _ => 4,
+        }
+    }
+
+    pub fn byte_size(&self) -> u64 {
+        if self.ty == "tuple" {
+            return self.tuple.iter().map(Shape::byte_size).sum();
+        }
+        self.elements() * self.element_bytes()
+    }
+
+    /// parse "f32[2,4]{1,0}" / "f32[]" / "(f32[2], s32[3])" / "pred[]".
+    /// XLA sprinkles `/*index=N*/` comments inside long tuples — stripped.
+    pub fn parse(s: &str) -> Option<Shape> {
+        let s = strip_block_comments(s);
+        let s = s.trim();
+        if let Some(inner) = s.strip_prefix('(') {
+            let inner = inner.strip_suffix(')')?;
+            if inner.trim().is_empty() {
+                // the empty tuple "()" (pallas while-loop carries emit it)
+                return Some(Shape { ty: "tuple".into(), dims: vec![], tuple: vec![] });
+            }
+            let mut leaves = Vec::new();
+            for part in split_top_level(inner, ',') {
+                leaves.push(Shape::parse(part.trim())?);
+            }
+            return Some(Shape { ty: "tuple".into(), dims: vec![], tuple: leaves });
+        }
+        let bracket = s.find('[')?;
+        let ty = s[..bracket].to_string();
+        if !ty.chars().all(|c| c.is_ascii_alphanumeric()) || ty.is_empty() {
+            return None;
+        }
+        let close = s[bracket..].find(']')? + bracket;
+        let dims_str = &s[bracket + 1..close];
+        let dims = if dims_str.trim().is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.trim().parse::<usize>().ok())
+                .collect::<Option<Vec<_>>>()?
+        };
+        Some(Shape { ty, dims, tuple: vec![] })
+    }
+}
+
+/// remove `/* ... */` block comments
+fn strip_block_comments(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(start) = rest.find("/*") {
+        out.push_str(&rest[..start]);
+        match rest[start..].find("*/") {
+            Some(end) => rest = &rest[start + end + 2..],
+            None => {
+                rest = "";
+                break;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+/// split on `sep` ignoring separators nested in (), [], {}
+fn split_top_level(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            c if c == sep && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// One HLO instruction.
+#[derive(Clone, Debug)]
+pub struct HloInstr {
+    pub name: String,
+    pub opcode: String,
+    pub shape: Shape,
+    pub operands: Vec<String>,
+    /// shapes of operands, resolved from their defining instructions
+    pub operand_shapes: Vec<Shape>,
+    pub custom_call_target: Option<String>,
+    pub is_root: bool,
+}
+
+/// One computation (ENTRY or sub-computation).
+#[derive(Clone, Debug)]
+pub struct HloComputation {
+    pub name: String,
+    pub is_entry: bool,
+    pub instrs: Vec<HloInstr>,
+}
+
+/// A parsed module.
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<HloComputation>,
+}
+
+impl HloModule {
+    pub fn entry(&self) -> Option<&HloComputation> {
+        self.computations.iter().find(|c| c.is_entry)
+    }
+}
+
+/// Parse one instruction line: `name = shape opcode(operands), attrs...`
+fn parse_instr(line: &str) -> Result<HloInstr> {
+    let line = line.trim().trim_end_matches(',');
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line.find(" = ").context("no ' = ' in instruction")?;
+    let name = line[..eq].trim().to_string();
+    let rhs = &line[eq + 3..];
+    // shape is the prefix up to the first space that follows the closing
+    // of the shape token (shapes contain no spaces except inside tuples)
+    let shape_end = find_shape_end(rhs).context("cannot find shape end")?;
+    let shape = Shape::parse(&rhs[..shape_end])
+        .with_context(|| format!("bad shape in: {rhs}"))?;
+    let rest = rhs[shape_end..].trim_start();
+    let paren = rest.find('(').context("no opcode args")?;
+    let opcode = rest[..paren].trim().to_string();
+    let close = matching_paren(rest, paren).context("unbalanced parens")?;
+    let operands: Vec<String> = split_top_level(&rest[paren + 1..close], ',')
+        .into_iter()
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let attrs = &rest[close + 1..];
+    let custom_call_target = attrs
+        .split("custom_call_target=\"")
+        .nth(1)
+        .and_then(|s| s.split('"').next())
+        .map(str::to_string);
+    Ok(HloInstr {
+        name,
+        opcode,
+        shape,
+        operands,
+        operand_shapes: vec![],
+        custom_call_target,
+        is_root,
+    })
+}
+
+fn find_shape_end(s: &str) -> Option<usize> {
+    // tuple shape
+    if s.starts_with('(') {
+        let close = matching_paren(s, 0)?;
+        return Some(close + 1);
+    }
+    // scalar/array shape: type[...] optionally followed by {layout}
+    let close = s.find(']')?;
+    let mut end = close + 1;
+    let bytes = s.as_bytes();
+    if end < s.len() && bytes[end] == b'{' {
+        // skip layout braces (may nest once for e.g. {1,0:T(8)} forms)
+        let mut depth = 0;
+        for (i, c) in s[end..].char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = end + i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    Some(end)
+}
+
+fn matching_paren(s: &str, open: usize) -> Option<usize> {
+    let mut depth = 0;
+    for (i, c) in s[open..].char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(open + i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Parse a full HLO text module.
+pub fn parse_module(text: &str) -> Result<HloModule> {
+    let mut name = String::new();
+    let mut computations: Vec<HloComputation> = Vec::new();
+    let mut current: Option<HloComputation> = None;
+
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule ") {
+            name = rest
+                .split(|c: char| c == ',' || c.is_whitespace())
+                .next()
+                .unwrap_or("")
+                .to_string();
+            continue;
+        }
+        if line.ends_with('{') && !line.contains(" = ") {
+            // computation header: `comp_name (params...) -> ... {` or
+            // `ENTRY main {` / `region_0.1 {`
+            let is_entry = line.starts_with("ENTRY");
+            let header = line.trim_start_matches("ENTRY ").trim_end_matches('{').trim();
+            let cname = header
+                .split(|c: char| c == '(' || c.is_whitespace())
+                .next()
+                .unwrap_or("")
+                .to_string();
+            current = Some(HloComputation { name: cname, is_entry, instrs: vec![] });
+            continue;
+        }
+        if line == "}" {
+            if let Some(c) = current.take() {
+                computations.push(c);
+            }
+            continue;
+        }
+        if let Some(c) = current.as_mut() {
+            if line.contains(" = ") {
+                match parse_instr(line) {
+                    Ok(ins) => c.instrs.push(ins),
+                    Err(e) => bail!("in computation {}: {e}: {line}", c.name),
+                }
+            }
+        }
+    }
+    if computations.is_empty() {
+        bail!("no computations parsed");
+    }
+    // resolve operand shapes within each computation
+    for comp in &mut computations {
+        let by_name: HashMap<String, Shape> = comp
+            .instrs
+            .iter()
+            .map(|i| (i.name.clone(), i.shape.clone()))
+            .collect();
+        for ins in &mut comp.instrs {
+            ins.operand_shapes = ins
+                .operands
+                .iter()
+                .filter_map(|o| {
+                    // operands may be "name" or "shape name"
+                    let id = o.split_whitespace().last().unwrap_or(o);
+                    by_name.get(id).cloned()
+                })
+                .collect();
+        }
+    }
+    Ok(HloModule { name, computations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_parsing() {
+        let s = Shape::parse("f32[2,4]{1,0}").unwrap();
+        assert_eq!(s.ty, "f32");
+        assert_eq!(s.dims, vec![2, 4]);
+        assert_eq!(s.byte_size(), 32);
+        assert_eq!(Shape::parse("f32[]").unwrap().elements(), 1);
+        assert_eq!(Shape::parse("pred[]").unwrap().element_bytes(), 1);
+        let t = Shape::parse("(f32[2]{0}, s32[3]{0})").unwrap();
+        assert_eq!(t.tuple.len(), 2);
+        assert_eq!(t.byte_size(), 8 + 12);
+        assert!(Shape::parse("notashape").is_none());
+    }
+
+    #[test]
+    fn instr_parsing() {
+        let i = parse_instr(
+            "  ROOT d.5 = f32[2,2]{1,0} dot(p1.2, p2.3), lhs_contracting_dims={1}",
+        )
+        .unwrap();
+        assert!(i.is_root);
+        assert_eq!(i.opcode, "dot");
+        assert_eq!(i.operands, vec!["p1.2", "p2.3"]);
+        assert_eq!(i.shape.dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn custom_call_target_extracted() {
+        let i = parse_instr(
+            "c = f32[4]{0} custom-call(x), custom_call_target=\"foo\", api_version=API_VERSION_TYPED_FFI",
+        )
+        .unwrap();
+        assert_eq!(i.custom_call_target.as_deref(), Some("foo"));
+    }
+
+    #[test]
+    fn tuple_root_instruction() {
+        let i = parse_instr("ROOT t = (f32[2]{0}, f32[3]{0}) tuple(a, b)").unwrap();
+        assert_eq!(i.opcode, "tuple");
+        assert_eq!(i.shape.tuple.len(), 2);
+    }
+
+    #[test]
+    fn split_top_level_nesting() {
+        let parts = split_top_level("a, b(c, d), e{f,g}", ',');
+        assert_eq!(parts, vec!["a", " b(c, d)", " e{f,g}"]);
+    }
+}

@@ -1,0 +1,25 @@
+//! mftrain — reproduction of "Ultra-low Precision Multiplication-free
+//! Training for Deep Neural Networks" (Liu et al., 2023) as a three-layer
+//! rust / JAX / Pallas stack (AOT via PJRT).
+//!
+//! * [`potq`] — the ALS-PoTQ format + MF-MAC, bit-exact mirror of the
+//!   Pallas kernels (the paper's §4-§5 contribution).
+//! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1).
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`coordinator`] — the training orchestrator (step loop, prefetch,
+//!   telemetry, checkpoints).
+//! * [`data`], [`models`], [`stats`], [`config`], [`cli`], [`util`],
+//!   [`testing`] — substrates (DESIGN.md §System inventory).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod hlo;
+pub mod models;
+pub mod potq;
+pub mod runtime;
+pub mod stats;
+pub mod testing;
+pub mod util;

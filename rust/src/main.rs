@@ -1,0 +1,310 @@
+//! `mft` — the leader binary: CLI dispatch over the coordinator library.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use mftrain::cli::{self, Args, USAGE};
+use mftrain::config::TrainConfig;
+use mftrain::coordinator::{Checkpoint, Trainer};
+use mftrain::energy;
+use mftrain::models;
+use mftrain::runtime::{Index, Runtime, Session};
+use mftrain::util::table::{fnum, Table};
+
+fn main() -> Result<()> {
+    let args = cli::parse_env()?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "energy" => cmd_energy(&args),
+        "macs" => cmd_macs(&args),
+        "distributions" => cmd_distributions(&args),
+        "ablation" => cmd_ablation(&args),
+        "sweep" => cmd_sweep(&args),
+        "hlo" => cmd_hlo(&args),
+        "list" => cmd_list(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.str_flag("config") {
+        TrainConfig::from_file(Path::new(path))?
+    } else {
+        TrainConfig::default()
+    };
+    if let Some(v) = args.str_flag("variant") {
+        cfg.variant = v.to_string();
+    }
+    if let Some(v) = args.str_flag("artifacts") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    if args.flags.contains_key("steps") {
+        cfg.steps = args.u64_flag("steps", cfg.steps)?;
+        cfg.lr.decay_at = vec![cfg.steps * 6 / 10, cfg.steps * 8 / 10];
+    }
+    if args.flags.contains_key("lr") {
+        cfg.lr.base = args.f64_flag("lr", cfg.lr.base as f64)? as f32;
+    }
+    cfg.seed = args.u64_flag("seed", cfg.seed)?;
+    if args.flags.contains_key("noise") {
+        cfg.data_noise = args.f64_flag("noise", cfg.data_noise as f64)? as f32;
+    }
+    if let Some(p) = args.str_flag("checkpoint") {
+        cfg.checkpoint_path = Some(p.to_string());
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let rt = Runtime::cpu()?;
+    println!("[mft] platform: {}", rt.platform());
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    let man = &trainer.session.manifest;
+    println!(
+        "[mft] variant {} — model {}, scheme {}, {} params, state {} f32",
+        man.name, man.model, man.scheme, man.n_params, man.state_len
+    );
+    let rec = trainer.run()?;
+    println!(
+        "[mft] done: {} steps in {:.1}s ({:.1} steps/s, data stall {:.1}%)",
+        rec.steps,
+        rec.wall_secs,
+        rec.steps_per_sec,
+        rec.data_stall_rate * 100.0
+    );
+    if let Some((first, last)) = rec.loss_span() {
+        println!("[mft] train loss {first:.4} -> {last:.4}");
+    }
+    println!("[mft] final eval accuracy {:.2}%", rec.final_accuracy * 100.0);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let variant = args.require("variant")?;
+    let ckpt = Checkpoint::load(Path::new(args.require("checkpoint")?))?;
+    if ckpt.variant != variant {
+        bail!("checkpoint is for '{}', not '{variant}'", ckpt.variant);
+    }
+    let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
+    let rt = Runtime::cpu()?;
+    let mut session = Session::load(&rt, Path::new(artifacts), variant)?;
+    session.state_from_host(&ckpt.state)?;
+    let man = session.manifest.clone();
+    let mut data = mftrain::data::for_variant(&man.model, &man.x.shape, &man.y.shape, 1.0, 7777);
+    let batches = args.u64_flag("batches", 16)?;
+    let (mut sl, mut sc, mut n) = (0f64, 0f64, 0f64);
+    for _ in 0..batches {
+        let b = data.next_batch();
+        let (l, c) = session.eval_batch(&b)?;
+        sl += l;
+        sc += c;
+        n += man.eval_denom as f64;
+    }
+    println!(
+        "eval {} @ step {}: loss {:.4}, accuracy {:.2}% over {} examples",
+        variant,
+        ckpt.step,
+        sl / n,
+        sc / n * 100.0,
+        n as u64
+    );
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let model = args.str_flag("model").unwrap_or("resnet50");
+    let batch = args.u64_flag("batch", 256)?;
+    let arch = models::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (see `mft macs`)"))?;
+    energy::table1().print();
+    energy::table2(&arch, batch).print();
+    if args.bool_flag("overhead") {
+        let mf = energy::mf_mac().energy_pj();
+        println!(
+            "\nMF-MAC: {:.3} pJ; + ALS-PoTQ overhead {:.3} pJ = {:.3} pJ per MAC",
+            mf,
+            energy::ALS_POTQ_OVERHEAD_PJ,
+            mf + energy::ALS_POTQ_OVERHEAD_PJ
+        );
+    }
+    println!(
+        "\nheadline: {:.1}% linear-layer training energy reduction vs FP32",
+        energy::report::headline_reduction() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_macs(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "MAC accounting (per example)",
+        &["model", "fw GMACs", "train GMACs", "linear params (M)"],
+    );
+    let names = [
+        "alexnet", "resnet18", "resnet50", "resnet101", "transformer_base",
+        "mini_mlp", "mini_resnet14", "mini_resnet20", "mini_transformer",
+    ];
+    let filter = args.str_flag("model");
+    for n in names {
+        if let Some(f) = filter {
+            if f != n {
+                continue;
+            }
+        }
+        let a = models::by_name(n).unwrap();
+        t.row(&[
+            n.to_string(),
+            fnum(a.fw_macs() as f64 / 1e9),
+            fnum(a.train_macs() as f64 / 1e9),
+            fnum(a.params() as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_distributions(args: &Args) -> Result<()> {
+    let variant = args.str_flag("variant").unwrap_or("cnn_mf");
+    let steps = args.u64_flag("steps", 120)?;
+    let every = args.u64_flag("every", 30)?;
+    let mut cfg = TrainConfig {
+        variant: variant.to_string(),
+        steps,
+        probe_every: every,
+        eval_every: 0,
+        log_every: 0,
+        ..TrainConfig::default()
+    };
+    cfg.lr.decay_at.clear();
+    let rt = Runtime::cpu()?;
+    let mut trainer = Trainer::new(&rt, cfg)?.quiet();
+    let rec = trainer.run()?;
+    let mut t = Table::new(
+        &format!("W/A/G distributions — {variant} (Figure 2/3/6 data)"),
+        &["step", "tensor", "mean", "std", "beta", "quant MSE", "log2|x| sigma", "log2|x| histogram"],
+    );
+    for p in &rec.probes {
+        for (name, s) in [("W", &p.w), ("A", &p.a), ("G", &p.g)] {
+            t.row(&[
+                p.step.to_string(),
+                name.to_string(),
+                fnum(s.mean),
+                fnum(s.std),
+                s.beta.to_string(),
+                fnum(s.quant_mse),
+                s.log2_sigma.map(fnum).unwrap_or_else(|| "-".into()),
+                s.log2_hist.sparkline(),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let steps = args.u64_flag("steps", 400)?;
+    let rt = Runtime::cpu()?;
+    let mut t = Table::new(
+        "Table 5 — ablation (ALS / WBC / PRC), synthetic CNN task",
+        &["ALS", "WBC", "PRC", "variant", "final acc (%)", "train loss"],
+    );
+    let rows = [
+        ("x", "-", "-", "cnn_mf_noals"),
+        ("ok", "x", "ok", "cnn_mf_nowbc"),
+        ("ok", "ok", "x", "cnn_mf_noprc"),
+        ("ok", "ok", "ok", "cnn_mf"),
+    ];
+    for (als, wbc, prc, variant) in rows {
+        let rec = mftrain::coordinator::run_variant(&rt, variant, steps, 0.08, 1.0, 1)?;
+        let (_, last) = rec.loss_span().unwrap_or((0.0, f32::NAN));
+        t.row(&[
+            als.to_string(),
+            wbc.to_string(),
+            prc.to_string(),
+            variant.to_string(),
+            format!("{:.2}", rec.final_accuracy * 100.0),
+            format!("{last:.4}"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let variants_arg = args
+        .str_flag("variants")
+        .unwrap_or("cnn_fp32,cnn_mf,cnn_luq4,cnn_fp8");
+    let variants: Vec<&str> = variants_arg.split(',').map(str::trim).collect();
+    let cfg = mftrain::coordinator::SweepConfig {
+        steps: args.u64_flag("steps", 250)?,
+        lr: args.f64_flag("lr", 0.08)? as f32,
+        noise: args.f64_flag("noise", 2.0)? as f32,
+        seeds: args.u64_flag("seeds", 1)?,
+    };
+    let rt = Runtime::cpu()?;
+    let sums = mftrain::coordinator::run_sweep(&rt, &variants, &cfg, |v, seed, rec| {
+        println!(
+            "[sweep] {v} seed {seed}: acc {:.2}% ({:.1}s)",
+            rec.final_accuracy * 100.0,
+            rec.wall_secs
+        );
+    })?;
+    mftrain::coordinator::summary_table(
+        &format!("sweep ({} steps, noise {}, {} seeds)", cfg.steps, cfg.noise, cfg.seeds),
+        &sums,
+    )
+    .print();
+    if let Some(out) = args.str_flag("markdown") {
+        std::fs::write(out, mftrain::coordinator::sweep::to_markdown("sweep", &sums))?;
+        println!("markdown -> {out}");
+    }
+    Ok(())
+}
+
+fn cmd_hlo(args: &Args) -> Result<()> {
+    let root = Path::new("artifacts");
+    if let Some(variant) = args.str_flag("variant") {
+        let man = mftrain::runtime::Manifest::load(&root.join(variant))?;
+        for key in ["train", "eval", "init", "probe", "slice"] {
+            let Ok(path) = man.artifact_path(key) else { continue };
+            let text = std::fs::read_to_string(&path)?;
+            let module = mftrain::hlo::parse_module(&text)?;
+            let mut table = mftrain::hlo::report(&module);
+            table.title = format!("{variant}/{key} — {}", table.title);
+            table.print();
+        }
+    } else if let Some(file) = args.str_flag("file") {
+        let text = std::fs::read_to_string(file)?;
+        let module = mftrain::hlo::parse_module(&text)?;
+        mftrain::hlo::report(&module).print();
+    } else {
+        bail!("hlo needs --variant <name> or --file <path>");
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let root = args.str_flag("artifacts").unwrap_or("artifacts");
+    let idx = Index::load(Path::new(root))?;
+    let mut t = Table::new("artifact variants", &["variant", "model", "scheme", "params", "state"]);
+    for v in &idx.variants {
+        let m = idx.manifest(v)?;
+        t.row(&[
+            m.name.clone(),
+            m.model.clone(),
+            m.scheme.clone(),
+            m.n_params.to_string(),
+            m.state_len.to_string(),
+        ]);
+    }
+    t.print();
+    println!("kernel artifacts: {}", idx.kernels.len());
+    Ok(())
+}

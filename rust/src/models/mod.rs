@@ -1,0 +1,290 @@
+//! Architecture specs for MAC accounting (Layer-3 mirror of the paper's
+//! evaluation networks). Only *linear* layers (conv + fc) are listed —
+//! that is the paper's energy scope (Table 2 counts MACs of linear layers).
+
+/// One linear layer for MAC counting.
+#[derive(Clone, Debug)]
+pub enum Layer {
+    /// conv: (in_ch, out_ch, kernel, stride, input spatial size, groups)
+    Conv { cin: u64, cout: u64, k: u64, stride: u64, hw: u64, groups: u64 },
+    /// fully connected: in features -> out features, applied `times` times
+    Linear { cin: u64, cout: u64, times: u64 },
+}
+
+impl Layer {
+    /// output spatial size of a SAME-padded strided conv
+    pub fn out_hw(&self) -> u64 {
+        match self {
+            Layer::Conv { stride, hw, .. } => hw.div_ceil(*stride),
+            Layer::Linear { .. } => 1,
+        }
+    }
+
+    /// forward MACs per example
+    pub fn macs(&self) -> u64 {
+        match self {
+            Layer::Conv { cin, cout, k, hw: _, stride: _, groups } => {
+                let o = self.out_hw();
+                k * k * (cin / groups) * cout * o * o
+            }
+            Layer::Linear { cin, cout, times } => cin * cout * times,
+        }
+    }
+}
+
+/// A named network = list of linear layers.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Arch {
+    /// forward MACs per example
+    pub fn fw_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// training MACs per example: fw + dX + dW, each the same MAC count
+    /// (the paper's "12.36G MACs for training ResNet50 at one iteration"
+    /// is 3x the 4.12G forward MACs).
+    pub fn train_macs(&self) -> u64 {
+        3 * self.fw_macs()
+    }
+
+    pub fn params(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv { cin, cout, k, groups, .. } => k * k * cin / groups * cout,
+                Layer::Linear { cin, cout, .. } => cin * cout,
+            })
+            .sum()
+    }
+}
+
+fn conv(cin: u64, cout: u64, k: u64, stride: u64, hw: u64) -> Layer {
+    Layer::Conv { cin, cout, k, stride, hw, groups: 1 }
+}
+
+/// ResNet basic block (3x3 + 3x3), returns (layers, out_hw).
+fn basic_block(cin: u64, cout: u64, stride: u64, hw: u64, layers: &mut Vec<Layer>) -> u64 {
+    layers.push(conv(cin, cout, 3, stride, hw));
+    let oh = hw.div_ceil(stride);
+    layers.push(conv(cout, cout, 3, 1, oh));
+    if cin != cout || stride != 1 {
+        layers.push(conv(cin, cout, 1, stride, hw));
+    }
+    oh
+}
+
+/// ResNet bottleneck block (1x1 -> 3x3 -> 1x1, expansion 4).
+fn bottleneck(cin: u64, width: u64, stride: u64, hw: u64, layers: &mut Vec<Layer>) -> u64 {
+    let cout = width * 4;
+    layers.push(conv(cin, width, 1, 1, hw));
+    layers.push(conv(width, width, 3, stride, hw));
+    let oh = hw.div_ceil(stride);
+    layers.push(conv(width, cout, 1, 1, oh));
+    if cin != cout || stride != 1 {
+        layers.push(conv(cin, cout, 1, stride, hw));
+    }
+    oh
+}
+
+fn resnet_imagenet(name: &'static str, blocks: [u64; 4], bottle: bool) -> Arch {
+    let mut layers = vec![conv(3, 64, 7, 2, 224)];
+    let mut hw = 56; // after stride-2 stem + stride-2 maxpool
+    let widths = [64u64, 128, 256, 512];
+    let mut cin = 64;
+    for (stage, &n) in blocks.iter().enumerate() {
+        let w = widths[stage];
+        for b in 0..n {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            if bottle {
+                hw = bottleneck(cin, w, stride, hw, &mut layers);
+                cin = w * 4;
+            } else {
+                hw = basic_block(cin, w, stride, hw, &mut layers);
+                cin = w;
+            }
+        }
+    }
+    layers.push(Layer::Linear { cin, cout: 1000, times: 1 });
+    Arch { name, layers }
+}
+
+pub fn resnet18() -> Arch {
+    resnet_imagenet("ResNet18", [2, 2, 2, 2], false)
+}
+
+pub fn resnet50() -> Arch {
+    resnet_imagenet("ResNet50", [3, 4, 6, 3], true)
+}
+
+pub fn resnet101() -> Arch {
+    resnet_imagenet("ResNet101", [3, 4, 23, 3], true)
+}
+
+pub fn alexnet() -> Arch {
+    // classic AlexNet (single-tower), 224x224 input
+    Arch {
+        name: "AlexNet",
+        layers: vec![
+            Layer::Conv { cin: 3, cout: 64, k: 11, stride: 4, hw: 224, groups: 1 },
+            Layer::Conv { cin: 64, cout: 192, k: 5, stride: 1, hw: 27, groups: 1 },
+            Layer::Conv { cin: 192, cout: 384, k: 3, stride: 1, hw: 13, groups: 1 },
+            Layer::Conv { cin: 384, cout: 256, k: 3, stride: 1, hw: 13, groups: 1 },
+            Layer::Conv { cin: 256, cout: 256, k: 3, stride: 1, hw: 13, groups: 1 },
+            Layer::Linear { cin: 256 * 6 * 6, cout: 4096, times: 1 },
+            Layer::Linear { cin: 4096, cout: 4096, times: 1 },
+            Layer::Linear { cin: 4096, cout: 1000, times: 1 },
+        ],
+    }
+}
+
+/// Transformer-base (Vaswani et al.): 6 encoder + 6 decoder layers,
+/// d=512, ffn=2048, vocab 37k — linear layers only, counted per token of
+/// a `seq`-token sentence pair.
+pub fn transformer_base(seq: u64) -> Arch {
+    let d = 512u64;
+    let ffn = 2048u64;
+    let vocab = 37000u64;
+    let mut layers = Vec::new();
+    // encoder: self-attn (q,k,v,o) + ffn
+    for _ in 0..6 {
+        layers.push(Layer::Linear { cin: d, cout: d, times: 4 * seq });
+        layers.push(Layer::Linear { cin: d, cout: ffn, times: seq });
+        layers.push(Layer::Linear { cin: ffn, cout: d, times: seq });
+    }
+    // decoder: self-attn + cross-attn + ffn
+    for _ in 0..6 {
+        layers.push(Layer::Linear { cin: d, cout: d, times: 8 * seq });
+        layers.push(Layer::Linear { cin: d, cout: ffn, times: seq });
+        layers.push(Layer::Linear { cin: ffn, cout: d, times: seq });
+    }
+    layers.push(Layer::Linear { cin: d, cout: vocab, times: seq });
+    Arch { name: "Transformer-base", layers }
+}
+
+/// Our synthetic-scale models (mirrors python/compile/models) — used to
+/// report measured-run energy in the E2E examples.
+pub fn mini_mlp() -> Arch {
+    Arch {
+        name: "mini-MLP",
+        layers: vec![
+            Layer::Linear { cin: 768, cout: 256, times: 1 },
+            Layer::Linear { cin: 256, cout: 128, times: 1 },
+            Layer::Linear { cin: 128, cout: 10, times: 1 },
+        ],
+    }
+}
+
+pub fn mini_resnet(blocks: u64) -> Arch {
+    let mut layers = vec![conv(3, 8, 3, 1, 16)];
+    let mut hw = 16u64;
+    let mut cin = 8u64;
+    for (stage, w) in [8u64, 16, 32].into_iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            hw = basic_block(cin, w, stride, hw, &mut layers);
+            cin = w;
+        }
+    }
+    layers.push(Layer::Linear { cin, cout: 10, times: 1 });
+    Arch { name: if blocks == 2 { "mini-ResNet14" } else { "mini-ResNet20" }, layers }
+}
+
+pub fn mini_transformer(seq: u64) -> Arch {
+    let d = 96u64;
+    let ffn = 192u64;
+    let mut layers = Vec::new();
+    for _ in 0..2 {
+        layers.push(Layer::Linear { cin: d, cout: d, times: 4 * seq });
+        layers.push(Layer::Linear { cin: d, cout: ffn, times: seq });
+        layers.push(Layer::Linear { cin: ffn, cout: d, times: seq });
+    }
+    layers.push(Layer::Linear { cin: d, cout: 64, times: seq });
+    Arch { name: "mini-Transformer", layers }
+}
+
+pub fn by_name(name: &str) -> Option<Arch> {
+    Some(match name {
+        "alexnet" => alexnet(),
+        "resnet18" => resnet18(),
+        "resnet50" => resnet50(),
+        "resnet101" => resnet101(),
+        "transformer_base" => transformer_base(32),
+        "mini_mlp" => mini_mlp(),
+        "mini_resnet14" => mini_resnet(2),
+        "mini_resnet20" => mini_resnet(3),
+        "mini_transformer" => mini_transformer(32),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_macs_match_paper() {
+        // paper Appendix C: 12.36G MACs for training (=3x fw) ->
+        // fw ~= 4.12G. Standard published value: ~4.1 GMACs.
+        let fw = resnet50().fw_macs() as f64 / 1e9;
+        assert!((3.9..4.3).contains(&fw), "ResNet50 fw GMACs = {fw}");
+        let train = resnet50().train_macs() as f64 / 1e9;
+        assert!((11.7..12.9).contains(&train), "train GMACs = {train}");
+    }
+
+    #[test]
+    fn resnet18_macs_standard_value() {
+        let fw = resnet18().fw_macs() as f64 / 1e9;
+        assert!((1.7..2.1).contains(&fw), "ResNet18 fw GMACs = {fw}");
+    }
+
+    #[test]
+    fn resnet101_deeper_than_50() {
+        let f50 = resnet50().fw_macs();
+        let f101 = resnet101().fw_macs();
+        assert!(f101 > f50 * 18 / 10, "{f101} vs {f50}");
+        let fw = f101 as f64 / 1e9;
+        assert!((7.2..8.3).contains(&fw), "ResNet101 fw GMACs = {fw}");
+    }
+
+    #[test]
+    fn alexnet_macs_standard_value() {
+        let fw = alexnet().fw_macs() as f64 / 1e9;
+        assert!((0.6..0.8).contains(&fw), "AlexNet fw GMACs = {fw}");
+    }
+
+    #[test]
+    fn alexnet_params_standard_value() {
+        let p = alexnet().params() as f64 / 1e6;
+        assert!((55.0..62.0).contains(&p), "AlexNet params = {p}M");
+    }
+
+    #[test]
+    fn transformer_base_macs_scale_with_seq() {
+        let a = transformer_base(16).fw_macs();
+        let b = transformer_base(32).fw_macs();
+        assert!((1.9..2.1).contains(&(b as f64 / a as f64)));
+        // ~65M-param model: per-token linear MACs ~ 60-80M (incl. vocab)
+        let per_tok = transformer_base(32).fw_macs() / 32;
+        assert!((50e6..100e6).contains(&(per_tok as f64)), "{per_tok}");
+    }
+
+    #[test]
+    fn conv_out_hw_and_macs() {
+        let l = conv(3, 8, 3, 2, 16);
+        assert_eq!(l.out_hw(), 8);
+        assert_eq!(l.macs(), 3 * 3 * 3 * 8 * 8 * 8);
+        let lin = Layer::Linear { cin: 10, cout: 20, times: 3 };
+        assert_eq!(lin.macs(), 600);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,241 @@
+//! MF-MAC: the paper's multiplication-free multiply-accumulate (Figure 5).
+//!
+//! Two models are provided:
+//!  * `mfmac_matmul` — the canonical real-number semantics (what the JAX
+//!    L2 path computes): exact signed powers of two accumulated in f32.
+//!  * `mfmac_accumulate_i64` — the hardware-faithful fixed-point model:
+//!    INT4 exponent add + XOR sign + integer accumulation at fixed-point
+//!    scale 2^(2*(beta-emax)), with an INT32 saturation report. This is
+//!    what the ASIC's INT32 accumulator would do; the report quantifies
+//!    when the paper's (unstated) no-overflow assumption holds.
+
+use super::quantize::{pot_emax, pot_quantize, pow2i, PotBlock, ZERO_CODE};
+
+/// Full MF-MAC matmul on raw f32 operands: quantize both with ALS-PoTQ,
+/// then exact log-domain accumulate. x is (m,k) row-major, w is (k,n).
+pub fn mfmac_matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, b: u32) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let xb = pot_quantize(x, b, None);
+    let wb = pot_quantize(w, b, None);
+    mfmac_matmul_quantized(&xb, &wb, m, k, n)
+}
+
+/// MF-MAC matmul over pre-quantized blocks. For each output element:
+/// INT4 exponent adds + sign XORs, accumulated as exact signed powers of
+/// two, then one scalar "shift" by beta_x + beta_w (the dequantization).
+pub fn mfmac_matmul_quantized(
+    xb: &PotBlock,
+    wb: &PotBlock,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(xb.len(), m * k);
+    assert_eq!(wb.len(), k * n);
+    let shift = pow2i(xb.beta + wb.beta);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for p in 0..k {
+                let ex = xb.e[i * k + p];
+                let ew = wb.e[p * n + j];
+                if ex == ZERO_CODE || ew == ZERO_CODE {
+                    continue;
+                }
+                // INT4 add + 1-bit XOR, materialized as a signed PoT
+                let e = ex + ew;
+                let s = xb.s[i * k + p] ^ wb.s[p * n + j];
+                let v = pow2i(e);
+                acc += if s == 1 { -v } else { v };
+            }
+            out[i * n + j] = acc * shift;
+        }
+    }
+    out
+}
+
+/// Saturation behaviour of the hardware INT32 accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct SaturationReport {
+    /// dot-product lanes whose running sum left the INT32 range
+    pub saturated_lanes: usize,
+    pub total_lanes: usize,
+    /// worst |accumulator| value observed, in accumulator LSBs
+    pub peak_magnitude: i64,
+}
+
+impl SaturationReport {
+    pub fn saturation_rate(&self) -> f64 {
+        if self.total_lanes == 0 {
+            0.0
+        } else {
+            self.saturated_lanes as f64 / self.total_lanes as f64
+        }
+    }
+}
+
+/// Fixed-point INT32-accumulator model of one MF-MAC matmul.
+///
+/// Exponent sums span [-2*emax, 2*emax]; the accumulator LSB is
+/// 2^(-2*emax) relative to the shifted block, so each term contributes
+/// +/- 2^(e_sum + 2*emax) in LSBs (1 ..= 2^(4*emax)). The running sum is
+/// clamped to INT32 as the hardware would.
+pub fn mfmac_accumulate_i64(
+    xb: &PotBlock,
+    wb: &PotBlock,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> (Vec<f32>, SaturationReport) {
+    assert_eq!(xb.bits, wb.bits);
+    let emax = pot_emax(xb.bits);
+    let mut rep = SaturationReport { total_lanes: m * n, ..Default::default() };
+    // final scale: 2^(beta_x + beta_w - 2*emax)
+    let scale_e = xb.beta + wb.beta - 2 * emax;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i64 = 0;
+            let mut sat = false;
+            for p in 0..k {
+                let ex = xb.e[i * k + p];
+                let ew = wb.e[p * n + j];
+                if ex == ZERO_CODE || ew == ZERO_CODE {
+                    continue;
+                }
+                let term = 1i64 << (ex + ew + 2 * emax) as u32;
+                let s = xb.s[i * k + p] ^ wb.s[p * n + j];
+                acc += if s == 1 { -term } else { term };
+                if acc > i32::MAX as i64 || acc < i32::MIN as i64 {
+                    sat = true;
+                    acc = acc.clamp(i32::MIN as i64, i32::MAX as i64);
+                }
+                rep.peak_magnitude = rep.peak_magnitude.max(acc.abs());
+            }
+            if sat {
+                rep.saturated_lanes += 1;
+            }
+            // scalar shift (dequantization). scale_e can leave f32's
+            // exponent range for pathological betas; use powi fallback.
+            let scale = if (-126..=127).contains(&scale_e) {
+                pow2i(scale_e)
+            } else {
+                (2f64).powi(scale_e) as f32
+            };
+            out[i * n + j] = acc as f32 * scale;
+        }
+    }
+    (out, rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn rand_mat(r: &mut Pcg32, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        r.fill_normal(&mut v, 0.0, std);
+        v
+    }
+
+    fn naive_quantized_matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let xq = super::super::pot_value(x, 5);
+        let wq = super::super::pot_value(w, 5);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for p in 0..k {
+                    acc += xq[i * k + p] as f64 * wq[p * n + j] as f64;
+                }
+                out[i * n + j] = acc as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_dequantized_matmul() {
+        let mut r = Pcg32::new(0);
+        let (m, k, n) = (16, 32, 8);
+        let x = rand_mat(&mut r, m * k, 0.3);
+        let w = rand_mat(&mut r, k * n, 0.01);
+        let y = mfmac_matmul(&x, &w, m, k, n, 5);
+        let y_ref = naive_quantized_matmul(&x, &w, m, k, n);
+        let denom = y_ref.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() / denom < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_operand_gives_zero() {
+        let x = vec![0f32; 8 * 8];
+        let mut r = Pcg32::new(1);
+        let w = rand_mat(&mut r, 8 * 8, 1.0);
+        assert!(mfmac_matmul(&x, &w, 8, 8, 8, 5).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn exact_on_pot_inputs() {
+        // diag(2, 0.5, 1, 4) @ 0.25 * ones -> exact
+        let mut x = vec![0f32; 16];
+        for (i, v) in [2.0f32, 0.5, 1.0, 4.0].iter().enumerate() {
+            x[i * 4 + i] = *v;
+        }
+        let w = vec![0.25f32; 16];
+        let y = mfmac_matmul(&x, &w, 4, 4, 4, 5);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = [2.0f32, 0.5, 1.0, 4.0][i] * 0.25;
+                assert_eq!(y[i * 4 + j], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn i64_accumulator_matches_f32_when_unsaturated() {
+        let mut r = Pcg32::new(2);
+        let (m, k, n) = (8, 16, 8);
+        let x = rand_mat(&mut r, m * k, 0.5);
+        let w = rand_mat(&mut r, k * n, 0.02);
+        let xb = pot_quantize(&x, 5, None);
+        let wb = pot_quantize(&w, 5, None);
+        let y_f = mfmac_matmul_quantized(&xb, &wb, m, k, n);
+        let (y_i, rep) = mfmac_accumulate_i64(&xb, &wb, m, k, n);
+        assert_eq!(rep.saturated_lanes, 0, "no saturation expected at K=16");
+        let denom = y_f.iter().fold(1e-30f32, |a, &v| a.max(v.abs()));
+        for (a, b) in y_f.iter().zip(&y_i) {
+            assert!((a - b).abs() / denom < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn i64_accumulator_saturates_on_adversarial_input() {
+        // all elements at max magnitude -> each term is 2^(4*emax) = 2^28
+        // LSBs; 32 of them exceed INT32
+        let x = vec![1.0f32; 4 * 32];
+        let w = vec![1.0f32; 32 * 4];
+        let xb = pot_quantize(&x, 5, None);
+        let wb = pot_quantize(&w, 5, None);
+        let (_, rep) = mfmac_accumulate_i64(&xb, &wb, 4, 32, 4);
+        assert!(rep.saturated_lanes > 0, "expected saturation");
+    }
+
+    #[test]
+    fn realistic_blocks_do_not_saturate() {
+        // normal data (the paper's spiky lognormal-ish case): exponent
+        // sums are spread out, INT32 accumulation is safe for K=256
+        let mut r = Pcg32::new(3);
+        let (m, k, n) = (4, 256, 4);
+        let x = rand_mat(&mut r, m * k, 1.0);
+        let w = rand_mat(&mut r, k * n, 0.05);
+        let xb = pot_quantize(&x, 5, None);
+        let wb = pot_quantize(&w, 5, None);
+        let (_, rep) = mfmac_accumulate_i64(&xb, &wb, m, k, n);
+        assert_eq!(rep.saturation_rate(), 0.0);
+    }
+}

@@ -1,0 +1,55 @@
+//! Rust-native mirror of the ALS-PoTQ / MF-MAC numeric contract.
+//!
+//! This is the same arithmetic as python/compile/quant.py, bit for bit
+//! (DESIGN.md §Numeric contract): exponent extraction from f32 bits, the
+//! `m > SQRT2_F32` log-domain rounding boundary, exact power-of-two
+//! construction from bits. The cross-validation test (tests/potq_cross.rs)
+//! executes the AOT-lowered quantizer through PJRT and asserts
+//! element-exact agreement with this module.
+
+mod mfmac;
+mod quantize;
+
+pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized, SaturationReport};
+pub use quantize::{
+    compute_beta, pot_dequantize, pot_emax, pot_quantize, pot_value, round_log2_abs,
+    PotBlock, SQRT2_F32, ZERO_CODE,
+};
+
+/// Weight Bias Correction (paper eq. 11): subtract the mean.
+pub fn weight_bias_correction(w: &[f32]) -> Vec<f32> {
+    if w.is_empty() {
+        return Vec::new();
+    }
+    let mean = w.iter().map(|&v| v as f64).sum::<f64>() / w.len() as f64;
+    let mean = mean as f32;
+    w.iter().map(|&v| v - mean).collect()
+}
+
+/// Parameterized Ratio Clipping (paper eq. 12): clip at gamma * max|A|.
+pub fn ratio_clip(a: &[f32], gamma: f32) -> Vec<f32> {
+    let amax = a.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let t = amax * gamma;
+    a.iter().map(|&v| v.clamp(-t, t)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wbc_centers() {
+        let w = vec![1.0, 2.0, 3.0, 6.0];
+        let c = weight_bias_correction(&w);
+        let mean: f32 = c.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert_eq!(c[0], 1.0 - 3.0);
+    }
+
+    #[test]
+    fn prc_clips_at_ratio() {
+        let a = vec![-4.0, -1.0, 0.5, 2.0];
+        let c = ratio_clip(&a, 0.5); // t = 2.0
+        assert_eq!(c, vec![-2.0, -1.0, 0.5, 2.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! ALS-PoTQ quantization (paper §4.1), bit-exact vs the JAX implementation.
+
+/// f32 closest to sqrt(2): the log-domain rounding boundary (0x3FB504F3).
+pub const SQRT2_F32: f32 = f32::from_bits(0x3FB504F3);
+
+/// Exponent code meaning "value is zero".
+pub const ZERO_CODE: i32 = -128;
+
+/// Largest exponent magnitude representable by a b-bit PoT number.
+pub fn pot_emax(b: u32) -> i32 {
+    (1i32 << (b - 2)) - 1
+}
+
+/// `(round(log2 |x|), is_zero)` — exact bit-level contract.
+/// Subnormals flush to zero; the exponent for zero entries is ZERO_CODE.
+pub fn round_log2_abs(x: f32) -> (i32, bool) {
+    let bits = x.to_bits();
+    let biased = ((bits >> 23) & 0xFF) as i32;
+    if biased == 0 {
+        return (ZERO_CODE, true);
+    }
+    let m23 = bits & 0x7F_FFFF;
+    // m in [1,2), exactly representable in f32
+    let m = 1.0f32 + m23 as f32 * (2.0f32).powi(-23);
+    (biased - 127 + (m > SQRT2_F32) as i32, false)
+}
+
+/// Exact 2^e for integer e in [-126, 127], built from bits.
+pub fn pow2i(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e), "pow2i out of range: {e}");
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Layer-wise scale exponent beta = round(log2(max|F| / 2^emax)) (eq. 7+10).
+pub fn compute_beta(f: &[f32], b: u32) -> i32 {
+    let amax = f.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let (e, is_zero) = round_log2_abs(amax);
+    if is_zero {
+        0
+    } else {
+        e - pot_emax(b)
+    }
+}
+
+/// A quantized block: exponents (ZERO_CODE for zeros), sign bits, and the
+/// shared block scale exponent beta.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PotBlock {
+    pub e: Vec<i32>,
+    pub s: Vec<u8>,
+    pub beta: i32,
+    pub bits: u32,
+}
+
+impl PotBlock {
+    pub fn len(&self) -> usize {
+        self.e.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.e.is_empty()
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.e
+            .iter()
+            .zip(&self.s)
+            .map(|(&e, &s)| pot_dequantize(e, s, self.beta))
+            .collect()
+    }
+}
+
+/// Quantize one element given the block beta (paper eqs. 2-3 after eq. 8's
+/// exponent-add scaling).
+pub fn pot_quantize_one(x: f32, b: u32, beta: i32) -> (i32, u8) {
+    let emax = pot_emax(b);
+    let (e_real, is_zero) = round_log2_abs(x);
+    if is_zero {
+        return (ZERO_CODE, 0);
+    }
+    let e = e_real - beta;
+    if e < -emax {
+        return (ZERO_CODE, 0);
+    }
+    (e.min(emax), (x.to_bits() >> 31) as u8)
+}
+
+/// ALS-PoTQ of a block. `beta = None` computes the adaptive layer-wise
+/// scale; `Some(0)` disables ALS (the Table 5 collapse column).
+pub fn pot_quantize(f: &[f32], b: u32, beta: Option<i32>) -> PotBlock {
+    let beta = beta.unwrap_or_else(|| compute_beta(f, b));
+    let mut e = Vec::with_capacity(f.len());
+    let mut s = Vec::with_capacity(f.len());
+    for &x in f {
+        let (ei, si) = pot_quantize_one(x, b, beta);
+        e.push(ei);
+        s.push(si);
+    }
+    PotBlock { e, s, beta, bits: b }
+}
+
+/// Dequantize one element.
+pub fn pot_dequantize(e: i32, s: u8, beta: i32) -> f32 {
+    if e == ZERO_CODE {
+        return 0.0;
+    }
+    let mag = pow2i(e + beta);
+    if s == 1 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Round-trip quantize-dequantize of a block.
+pub fn pot_value(f: &[f32], b: u32) -> Vec<f32> {
+    pot_quantize(f, b, None).dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn emax_values() {
+        assert_eq!(pot_emax(3), 1);
+        assert_eq!(pot_emax(4), 3);
+        assert_eq!(pot_emax(5), 7);
+        assert_eq!(pot_emax(6), 15);
+    }
+
+    #[test]
+    fn round_log2_known_values() {
+        assert_eq!(round_log2_abs(1.0), (0, false));
+        assert_eq!(round_log2_abs(2.0), (1, false));
+        assert_eq!(round_log2_abs(-4.0), (2, false));
+        assert_eq!(round_log2_abs(1.9999999), (1, false));
+        assert_eq!(round_log2_abs(0.75), (0, false)); // 0.75 > sqrt2/2
+        assert_eq!(round_log2_abs(0.0).1, true);
+        assert_eq!(round_log2_abs(1e-42).1, true); // subnormal flush
+        // straddle the sqrt2 boundary
+        assert_eq!(round_log2_abs(1.4142134), (0, false));
+        assert_eq!(round_log2_abs(1.4142137), (1, false));
+    }
+
+    #[test]
+    fn pow2i_exact() {
+        assert_eq!(pow2i(0), 1.0);
+        assert_eq!(pow2i(7), 128.0);
+        assert_eq!(pow2i(-7), 1.0 / 128.0);
+        assert_eq!(pow2i(-30), (2.0f32).powi(-30));
+    }
+
+    #[test]
+    fn quantized_values_are_pot() {
+        let mut r = Pcg32::new(0);
+        let mut x = vec![0f32; 1000];
+        r.fill_normal(&mut x, 0.0, 3e-4);
+        for v in pot_value(&x, 5) {
+            if v != 0.0 {
+                let l = v.abs().log2();
+                assert_eq!(l, l.round(), "{v} not PoT");
+            }
+        }
+    }
+
+    #[test]
+    fn exponent_range_and_sign() {
+        let mut r = Pcg32::new(1);
+        let mut x = vec![0f32; 512];
+        r.fill_normal(&mut x, 0.0, 7.3);
+        let blk = pot_quantize(&x, 5, None);
+        for (i, (&e, &s)) in blk.e.iter().zip(&blk.s).enumerate() {
+            if e != ZERO_CODE {
+                assert!((-7..=7).contains(&e));
+                assert_eq!(s == 1, x[i] < 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block() {
+        let blk = pot_quantize(&[0.0; 16], 5, None);
+        assert_eq!(blk.beta, 0);
+        assert!(blk.e.iter().all(|&e| e == ZERO_CODE));
+        assert!(blk.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut r = Pcg32::new(2);
+        let mut x = vec![0f32; 256];
+        r.fill_normal(&mut x, 0.0, 1.0);
+        let d1 = pot_value(&x, 5);
+        let d2 = pot_value(&d1, 5);
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        // inside the representable range the log-domain rounding error is
+        // at most a factor 2^0.5 -> rel err <= sqrt2 - 1
+        let mut r = Pcg32::new(3);
+        let mut x = vec![0f32; 4096];
+        r.fill_uniform(&mut x, 0.1, 4.0);
+        for (v, q) in x.iter().zip(pot_value(&x, 5)) {
+            assert!(((v - q).abs() / v.abs()) <= 2f32.sqrt() - 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn noals_underflows_small_gradients() {
+        let mut r = Pcg32::new(4);
+        let mut g = vec![0f32; 256];
+        r.fill_normal(&mut g, 0.0, 1e-4);
+        let blk = pot_quantize(&g, 5, Some(0)); // ALS disabled
+        assert!(blk.e.iter().all(|&e| e == ZERO_CODE), "should underflow");
+        let adaptive = pot_quantize(&g, 5, None);
+        let live = adaptive.e.iter().filter(|&&e| e != ZERO_CODE).count();
+        assert!(live > 230, "adaptive keeps the block alive ({live}/256)");
+    }
+
+    #[test]
+    fn beta_matches_paper_ranges() {
+        // W/A-scale data ~N(0, 0.05): beta around [-6,-3]; G-scale data
+        // ~N(0, 2e-5): beta around [-20,-14] (paper §4.1 empirical ranges)
+        let mut r = Pcg32::new(5);
+        let mut w = vec![0f32; 4096];
+        r.fill_normal(&mut w, 0.0, 0.05);
+        let bw = compute_beta(&w, 5);
+        assert!((-10..=-2).contains(&bw), "beta_w = {bw}");
+        let mut g = vec![0f32; 4096];
+        r.fill_normal(&mut g, 0.0, 2e-5);
+        let bg = compute_beta(&g, 5);
+        assert!((-22..=-12).contains(&bg), "beta_g = {bg}");
+    }
+}

@@ -1,0 +1,309 @@
+//! Artifact manifests: the metadata contract between aot.py and the rust
+//! coordinator (state layout, input shapes, file names).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One leaf in the packed state vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayoutEntry {
+    pub path: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Input tensor spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Probe output section (w / a / g).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeSection {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Parsed manifest.json of one artifact variant.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub model: String,
+    pub scheme: String,
+    pub batch: usize,
+    pub use_pallas: bool,
+    pub state_len: usize,
+    pub n_params: usize,
+    pub weight_decay: f64,
+    pub momentum: f64,
+    pub x: TensorSpec,
+    pub y: TensorSpec,
+    pub layout: Vec<LayoutEntry>,
+    pub loss_offset: usize,
+    pub step_offset: usize,
+    pub eval_denom: usize,
+    pub probe_weight_path: String,
+    pub probe_sections: Vec<ProbeSection>,
+    pub artifacts: BTreeMap<String, String>,
+    pub dir: PathBuf,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).with_context(|| format!("manifest missing key '{key}'"))
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    Ok(j.as_arr()
+        .context("shape must be an array")?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(variant_dir: &Path) -> Result<Manifest> {
+        let path = variant_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let tensor = |key: &str| -> Result<TensorSpec> {
+            let t = req(req(&j, "inputs")?, key)?;
+            Ok(TensorSpec {
+                shape: shape_of(req(t, "shape")?)?,
+                dtype: req(t, "dtype")?.as_str().context("dtype")?.to_string(),
+            })
+        };
+
+        let layout = req(&j, "layout")?
+            .as_arr()
+            .context("layout must be an array")?
+            .iter()
+            .map(|e| {
+                Ok(LayoutEntry {
+                    path: req(e, "path")?.as_str().context("path")?.to_string(),
+                    offset: req(e, "offset")?.as_usize().context("offset")?,
+                    size: req(e, "size")?.as_usize().context("size")?,
+                    shape: shape_of(req(e, "shape")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let probe = req(&j, "probe")?;
+        let probe_sections = req(probe, "sections")?
+            .as_arr()
+            .context("sections")?
+            .iter()
+            .map(|s| {
+                Ok(ProbeSection {
+                    name: req(s, "name")?.as_str().context("name")?.to_string(),
+                    offset: req(s, "offset")?.as_usize().context("offset")?,
+                    size: req(s, "size")?.as_usize().context("size")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = req(&j, "artifacts")?
+            .as_obj()
+            .context("artifacts")?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect::<BTreeMap<_, _>>();
+
+        let man = Manifest {
+            name: req(&j, "name")?.as_str().context("name")?.to_string(),
+            model: req(&j, "model")?.as_str().context("model")?.to_string(),
+            scheme: req(&j, "scheme")?.as_str().context("scheme")?.to_string(),
+            batch: req(&j, "batch")?.as_usize().context("batch")?,
+            use_pallas: req(&j, "use_pallas")?.as_bool().unwrap_or(false),
+            state_len: req(&j, "state_len")?.as_usize().context("state_len")?,
+            n_params: req(&j, "n_params")?.as_usize().context("n_params")?,
+            weight_decay: req(&j, "weight_decay")?.as_f64().context("weight_decay")?,
+            momentum: req(&j, "momentum")?.as_f64().context("momentum")?,
+            x: tensor("x")?,
+            y: tensor("y")?,
+            layout,
+            loss_offset: req(&j, "loss_offset")?.as_usize().context("loss_offset")?,
+            step_offset: req(&j, "step_offset")?.as_usize().context("step_offset")?,
+            eval_denom: req(&j, "eval_denom")?.as_usize().context("eval_denom")?,
+            probe_weight_path: req(probe, "weight_path")?
+                .as_str()
+                .context("weight_path")?
+                .to_string(),
+            probe_sections,
+            artifacts,
+            dir: variant_dir.to_path_buf(),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.state_len == 0 {
+            bail!("state_len is zero");
+        }
+        let mut end = 0usize;
+        for e in &self.layout {
+            if e.offset != end {
+                bail!("layout gap before {} (offset {} != {})", e.path, e.offset, end);
+            }
+            let prod: usize = e.shape.iter().product::<usize>().max(1);
+            if prod != e.size {
+                bail!("layout entry {}: shape/size mismatch", e.path);
+            }
+            end += e.size;
+        }
+        if end != self.state_len {
+            bail!("layout covers {end} of {} state elements", self.state_len);
+        }
+        if self.loss_offset >= self.state_len || self.step_offset >= self.state_len {
+            bail!("metric offsets out of range");
+        }
+        for key in ["init", "train", "eval", "slice"] {
+            if !self.artifacts.contains_key(key) {
+                bail!("manifest missing artifact '{key}'");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(key)
+            .with_context(|| format!("no artifact '{key}' in {}", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// find a layout entry by its pytree path, e.g. "p/fc0/w"
+    pub fn entry(&self, path: &str) -> Option<&LayoutEntry> {
+        self.layout.iter().find(|e| e.path == path)
+    }
+
+    /// all trainable parameter entries (under "p/")
+    pub fn param_entries(&self) -> impl Iterator<Item = &LayoutEntry> {
+        self.layout.iter().filter(|e| e.path.starts_with("p/"))
+    }
+}
+
+/// Top-level artifacts index (index.json).
+#[derive(Clone, Debug)]
+pub struct Index {
+    pub variants: Vec<String>,
+    pub kernels: Vec<KernelArtifact>,
+    pub root: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelArtifact {
+    pub name: String,
+    pub file: String,
+    pub bits: u32,
+    pub n: usize,
+}
+
+impl Index {
+    pub fn load(root: &Path) -> Result<Index> {
+        let text = std::fs::read_to_string(root.join("index.json"))
+            .with_context(|| format!("reading {}/index.json (run `make artifacts`)", root.display()))?;
+        let j = Json::parse(&text)?;
+        let variants = req(&j, "variants")?
+            .as_arr()
+            .context("variants")?
+            .iter()
+            .filter_map(|v| v.get("name").and_then(Json::as_str).map(str::to_string))
+            .collect();
+        let kernels = req(&j, "kernels")?
+            .as_arr()
+            .context("kernels")?
+            .iter()
+            .map(|k| {
+                Ok(KernelArtifact {
+                    name: req(k, "name")?.as_str().context("name")?.to_string(),
+                    file: req(k, "file")?.as_str().context("file")?.to_string(),
+                    bits: req(k, "bits")?.as_usize().context("bits")? as u32,
+                    n: k.get("n").and_then(Json::as_usize).unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Index { variants, kernels, root: root.to_path_buf() })
+    }
+
+    pub fn manifest(&self, variant: &str) -> Result<Manifest> {
+        Manifest::load(&self.root.join(variant))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, layout_end_pad: usize) -> PathBuf {
+        let txt = format!(
+            r#"{{
+ "name": "t", "model": "mlp", "scheme": "mf", "batch": 4,
+ "use_pallas": false, "state_len": {}, "n_params": 6,
+ "weight_decay": 0.0005, "momentum": 0.9,
+ "inputs": {{"x": {{"shape": [4, 3], "dtype": "float32"}},
+             "y": {{"shape": [4], "dtype": "int32"}}}},
+ "layout": [
+   {{"path": "p/fc0/w", "offset": 0, "size": 6, "shape": [3, 2]}},
+   {{"path": "x/loss", "offset": 6, "size": 1, "shape": []}},
+   {{"path": "x/step", "offset": 7, "size": {}, "shape": []}}
+ ],
+ "loss_offset": 6, "step_offset": 7,
+ "eval_outputs": ["sum_loss", "n_correct"], "eval_denom": 4,
+ "probe": {{"weight_path": "p/fc0/w",
+            "sections": [{{"name": "w", "offset": 0, "size": 6}}]}},
+ "artifacts": {{"init": "init.hlo.txt", "train": "train.hlo.txt",
+                "eval": "eval.hlo.txt", "slice": "slice.hlo.txt"}}
+}}"#,
+            8 + layout_end_pad,
+            1 + layout_end_pad
+        );
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), txt).unwrap();
+        dir.to_path_buf()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let dir = std::env::temp_dir().join("mft_manifest_ok");
+        write_manifest(&dir, 0);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.state_len, 8);
+        assert_eq!(m.x.shape, vec![4, 3]);
+        assert_eq!(m.y.dtype, "int32");
+        assert_eq!(m.entry("p/fc0/w").unwrap().shape, vec![3, 2]);
+        assert_eq!(m.param_entries().count(), 1);
+        assert!(m.artifact_path("train").unwrap().ends_with("train.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_layout_gap() {
+        let dir = std::env::temp_dir().join("mft_manifest_bad");
+        // state_len larger than layout coverage -> validation error
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = std::env::temp_dir().join("mft_manifest_ok2");
+        write_manifest(&src, 0);
+        let txt = std::fs::read_to_string(src.join("manifest.json"))
+            .unwrap()
+            .replace("\"state_len\": 8", "\"state_len\": 9");
+        std::fs::write(dir.join("manifest.json"), txt).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! The interchange is HLO *text* (jax >= 0.5 protos carry 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns them). One
+//! `Runtime` per process; executables are compiled once per variant.
+
+pub mod artifact;
+pub mod session;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use artifact::{Index, Manifest};
+pub use session::Session;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text from disk and compile it on this client.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {}", path.display()))
+    }
+
+    /// Execute a compiled module on f32 host inputs, returning the single
+    /// f32 output (used by the micro-kernel artifacts and tests).
+    pub fn run_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<f32>> {
+        let bufs = inputs
+            .iter()
+            .map(|(data, dims)| {
+                self.client
+                    .buffer_from_host_buffer::<f32>(data, dims, None)
+                    .map_err(Into::into)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let mut out = exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        anyhow::ensure!(out.len() == 1 && out[0].len() == 1, "expected single output");
+        Ok(out.remove(0).remove(0).to_literal_sync()?.to_vec::<f32>()?)
+    }
+}

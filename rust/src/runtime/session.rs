@@ -1,0 +1,182 @@
+//! A loaded training session: the compiled executables of one artifact
+//! variant plus the device-resident state buffer.
+//!
+//! Hot-path contract (DESIGN.md): `train_step` feeds the state buffer
+//! back via `execute_b` with zero host copies; scalar metrics go through
+//! the tiny `slice` executable; full state copies happen only for
+//! checkpoints and probes.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtLoadedExecutable};
+
+use crate::data::Batch;
+
+use super::artifact::Manifest;
+use super::Runtime;
+
+pub struct Session<'rt> {
+    pub manifest: Manifest,
+    rt: &'rt Runtime,
+    init_exe: PjRtLoadedExecutable,
+    train_exe: PjRtLoadedExecutable,
+    eval_exe: PjRtLoadedExecutable,
+    /// compiled on first use — the probe graph is large and most runs
+    /// never probe
+    probe_exe: Option<PjRtLoadedExecutable>,
+    slice_exe: PjRtLoadedExecutable,
+    state: Option<PjRtBuffer>,
+    /// monotonically increasing local step counter (mirrors state's)
+    pub steps_taken: u64,
+}
+
+fn single_output(mut out: Vec<Vec<PjRtBuffer>>) -> Result<PjRtBuffer> {
+    if out.len() != 1 || out[0].len() != 1 {
+        bail!("expected a single output buffer, got {}x{}", out.len(),
+              out.first().map(Vec::len).unwrap_or(0));
+    }
+    Ok(out.remove(0).remove(0))
+}
+
+impl<'rt> Session<'rt> {
+    pub fn load(rt: &'rt Runtime, artifacts_root: &Path, variant: &str) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_root.join(variant))
+            .with_context(|| format!("loading manifest for variant '{variant}'"))?;
+        let compile = |key: &str| -> Result<PjRtLoadedExecutable> {
+            rt.compile_file(&manifest.artifact_path(key)?)
+                .with_context(|| format!("compiling {variant}/{key}"))
+        };
+        Ok(Self {
+            init_exe: compile("init")?,
+            train_exe: compile("train")?,
+            eval_exe: compile("eval")?,
+            probe_exe: None,
+            slice_exe: compile("slice")?,
+            manifest,
+            rt,
+            state: None,
+            steps_taken: 0,
+        })
+    }
+
+    /// Initialize the state vector on device from a seed (runs the AOT
+    /// `init` computation — jax.random untruncated-normal weight init).
+    pub fn init(&mut self, seed: i32) -> Result<()> {
+        let seed_lit = Literal::scalar(seed);
+        let out = self.init_exe.execute::<&Literal>(&[&seed_lit])?;
+        self.state = Some(single_output(out)?);
+        self.steps_taken = 0;
+        Ok(())
+    }
+
+    fn upload_x(&self, batch: &Batch) -> Result<PjRtBuffer> {
+        let dims: Vec<usize> = batch.x_shape.clone();
+        if batch.x_is_int {
+            self.rt
+                .client
+                .buffer_from_host_buffer::<i32>(&batch.x_i32, &dims, None)
+                .map_err(Into::into)
+        } else {
+            self.rt
+                .client
+                .buffer_from_host_buffer::<f32>(&batch.x_f32, &dims, None)
+                .map_err(Into::into)
+        }
+    }
+
+    fn upload_y(&self, batch: &Batch) -> Result<PjRtBuffer> {
+        self.rt
+            .client
+            .buffer_from_host_buffer::<i32>(&batch.y, &batch.y_shape, None)
+            .map_err(Into::into)
+    }
+
+    /// One training step; the state buffer is replaced by the step output
+    /// (no host copy). Returns nothing — read metrics via `metrics()`.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<()> {
+        let state = self.state.as_ref().context("call init() first")?;
+        let x = self.upload_x(batch)?;
+        let y = self.upload_y(batch)?;
+        let lr_buf = self
+            .rt
+            .client
+            .buffer_from_host_buffer::<f32>(&[lr], &[], None)?;
+        let out = self
+            .train_exe
+            .execute_b::<&PjRtBuffer>(&[state, &x, &y, &lr_buf])?;
+        self.state = Some(single_output(out)?);
+        self.steps_taken += 1;
+        Ok(())
+    }
+
+    /// (last train loss, in-state step counter) via the slice executable —
+    /// copies 2 floats, not the whole state.
+    pub fn metrics(&self) -> Result<(f32, u64)> {
+        let state = self.state.as_ref().context("call init() first")?;
+        let out = self.slice_exe.execute_b::<&PjRtBuffer>(&[state])?;
+        let lit = single_output(out)?.to_literal_sync()?;
+        let v = lit.to_vec::<f32>()?;
+        Ok((v[0], v[1] as u64))
+    }
+
+    /// Evaluate one batch: (sum_loss, n_correct).
+    pub fn eval_batch(&self, batch: &Batch) -> Result<(f64, f64)> {
+        let state = self.state.as_ref().context("call init() first")?;
+        let x = self.upload_x(batch)?;
+        let y = self.upload_y(batch)?;
+        let out = self.eval_exe.execute_b::<&PjRtBuffer>(&[state, &x, &y])?;
+        let v = single_output(out)?.to_literal_sync()?.to_vec::<f32>()?;
+        Ok((v[0] as f64, v[1] as f64))
+    }
+
+    /// Run the probe computation: returns the raw [W | A | G] vector.
+    /// The probe executable is compiled lazily on first call.
+    pub fn probe(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+        if self.probe_exe.is_none() {
+            anyhow::ensure!(
+                self.manifest.artifacts.contains_key("probe"),
+                "variant has no probe artifact"
+            );
+            let path = self.manifest.artifact_path("probe")?;
+            self.probe_exe = Some(
+                self.rt
+                    .compile_file(&path)
+                    .with_context(|| format!("compiling {}/probe", self.manifest.name))?,
+            );
+        }
+        let exe = self.probe_exe.as_ref().unwrap();
+        let state = self.state.as_ref().context("call init() first")?;
+        let x = self.upload_x(batch)?;
+        let y = self.upload_y(batch)?;
+        let out = exe.execute_b::<&PjRtBuffer>(&[state, &x, &y])?;
+        Ok(single_output(out)?.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Copy the full state vector to host (checkpointing / inspection).
+    pub fn state_to_host(&self) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().context("call init() first")?;
+        Ok(state.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// Replace the device state from a host vector (checkpoint restore).
+    pub fn state_from_host(&mut self, v: &[f32]) -> Result<()> {
+        if v.len() != self.manifest.state_len {
+            bail!(
+                "state length {} does not match manifest state_len {}",
+                v.len(),
+                self.manifest.state_len
+            );
+        }
+        let buf = self
+            .rt
+            .client
+            .buffer_from_host_buffer::<f32>(v, &[v.len()], None)?;
+        self.state = Some(buf);
+        Ok(())
+    }
+
+    pub fn has_state(&self) -> bool {
+        self.state.is_some()
+    }
+}

@@ -1,0 +1,254 @@
+//! Distribution telemetry: histograms, summary moments, and log-domain
+//! views — powers Figures 2, 3 and 6 (W/A/G distribution plots) and the
+//! Figure 4 resolution study.
+
+/// Running summary statistics (Welford) over a stream of f32.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub abs_max: f64,
+    pub zeros: u64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        let x = x as f64;
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.abs_max = self.abs_max.max(x.abs());
+        if x == 0.0 {
+            self.zeros += 1;
+        }
+    }
+
+    pub fn from_slice(xs: &[f32]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn zero_fraction(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.zeros as f64 / self.n as f64
+        }
+    }
+}
+
+/// Fixed-range linear histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[b.min(last)] += 1;
+        }
+    }
+
+    pub fn fill(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Density normalized so the integral over the range is ~1.
+    pub fn density(&self) -> Vec<f64> {
+        let t = self.total().max(1) as f64;
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.counts.iter().map(|&c| c as f64 / (t * w)).collect()
+    }
+
+    /// Sparkline rendering for terminal reports.
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let peak = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        self.counts
+            .iter()
+            .map(|&c| BARS[(c as f64 / peak as f64 * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+/// Histogram over log2|x| of the non-zero entries — the natural domain for
+/// PoT quantization (Figure 2's x-axis is effectively this).
+pub fn log2_histogram(xs: &[f32], lo: f64, hi: f64, bins: usize) -> Histogram {
+    let mut h = Histogram::new(lo, hi, bins);
+    for &x in xs {
+        if x != 0.0 && x.is_finite() {
+            h.push((x.abs() as f64).log2());
+        }
+    }
+    h
+}
+
+/// Fit of log2|x| to a normal (i.e. |x| lognormal): the paper's
+/// "spiky long-tailed near-lognormal" observation, quantified.
+#[derive(Clone, Debug)]
+pub struct LogNormalFit {
+    pub mu_log2: f64,
+    pub sigma_log2: f64,
+    pub n: u64,
+    /// excess kurtosis of log2|x| — 0 for an exact lognormal
+    pub excess_kurtosis: f64,
+}
+
+pub fn fit_lognormal(xs: &[f32]) -> Option<LogNormalFit> {
+    let logs: Vec<f64> = xs
+        .iter()
+        .filter(|v| **v != 0.0 && v.is_finite())
+        .map(|&v| (v.abs() as f64).log2())
+        .collect();
+    if logs.len() < 8 {
+        return None;
+    }
+    let n = logs.len() as f64;
+    let mu = logs.iter().sum::<f64>() / n;
+    let var = logs.iter().map(|l| (l - mu).powi(2)).sum::<f64>() / n;
+    let m4 = logs.iter().map(|l| (l - mu).powi(4)).sum::<f64>() / n;
+    let kurt = if var > 0.0 { m4 / (var * var) - 3.0 } else { 0.0 };
+    Some(LogNormalFit {
+        mu_log2: mu,
+        sigma_log2: var.sqrt(),
+        n: logs.len() as u64,
+        excess_kurtosis: kurt,
+    })
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn summary_moments() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert_eq!(s.abs_max, 4.0);
+    }
+
+    #[test]
+    fn histogram_bins_and_flows() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.fill(&[-1.0, 0.5, 5.5, 9.99, 10.0, 42.0]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[5], 1);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.total(), 6);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut r = Pcg32::new(0);
+        let mut x = vec![0f32; 10_000];
+        r.fill_normal(&mut x, 0.0, 1.0);
+        let mut h = Histogram::new(-5.0, 5.0, 50);
+        h.fill(&x);
+        let w = 10.0 / 50.0;
+        let integral: f64 = h.density().iter().map(|d| d * w).sum();
+        assert!((integral - 1.0).abs() < 0.01, "{integral}");
+    }
+
+    #[test]
+    fn lognormal_fit_recovers_parameters() {
+        // |x| = 2^(mu + sigma*z): log2|x| ~ N(mu, sigma)
+        let mut r = Pcg32::new(1);
+        let (mu, sigma) = (-6.0f64, 2.0f64);
+        let xs: Vec<f32> = (0..50_000)
+            .map(|_| {
+                let z = r.normal() as f64;
+                let sgn = if r.uniform() < 0.5 { -1.0 } else { 1.0 };
+                (sgn * (mu + sigma * z).exp2()) as f32
+            })
+            .collect();
+        let fit = fit_lognormal(&xs).unwrap();
+        assert!((fit.mu_log2 - mu).abs() < 0.1, "{:?}", fit);
+        assert!((fit.sigma_log2 - sigma).abs() < 0.1, "{:?}", fit);
+        assert!(fit.excess_kurtosis.abs() < 0.2, "{:?}", fit);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn sparkline_length() {
+        let mut h = Histogram::new(0.0, 1.0, 16);
+        h.fill(&[0.5; 100]);
+        assert_eq!(h.sparkline().chars().count(), 16);
+    }
+}

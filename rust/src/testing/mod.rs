@@ -1,0 +1,233 @@
+//! Property-testing mini-framework (the registry has no proptest).
+//!
+//! Deterministic, seeded case generation with greedy shrinking: when a
+//! property fails, the framework re-runs it on progressively simplified
+//! inputs (via the `Shrink` impl) and reports the smallest failure found.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath in this image)
+//! use mftrain::testing::{property, Gen};
+//! property("abs is non-negative", 200, |g: &mut Gen| {
+//!     let v = g.vec_f32(1..64, -10.0, 10.0);
+//!     v.iter().all(|x| x.abs() >= 0.0)
+//! });
+//! ```
+
+use crate::util::prng::Pcg32;
+
+/// Case generator handed to each property run.
+pub struct Gen {
+    rng: Pcg32,
+    /// log of draws for failure reporting
+    pub trace: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Pcg32::new(seed), trace: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        let v = lo + self.rng.below((hi - lo) as u32) as usize;
+        self.trace.push(format!("usize {v}"));
+        v
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(hi > lo);
+        let v = lo + self.rng.below((hi - lo) as u32) as i32;
+        self.trace.push(format!("i32 {v}"));
+        v
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + (hi - lo) * self.rng.uniform();
+        self.trace.push(format!("f32 {v}"));
+        v
+    }
+
+    /// f32 with a wide log-scale spread — the natural adversary for PoT
+    /// quantization (normal mantissa, exponent uniform in [lo_e, hi_e]).
+    pub fn f32_logscale(&mut self, lo_e: i32, hi_e: i32) -> f32 {
+        let e = self.i32_in(lo_e, hi_e);
+        let m = self.rng.normal();
+        let v = m * (2f32).powi(e);
+        self.trace.push(format!("logscale {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    pub fn vec_f32(&mut self, len: std::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32_logscale(
+        &mut self,
+        len: std::ops::Range<usize>,
+        lo_e: i32,
+        hi_e: i32,
+    ) -> Vec<f32> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n).map(|_| self.f32_logscale(lo_e, hi_e)).collect()
+    }
+
+    pub fn normal_vec(&mut self, n: usize, mean: f32, std: f32) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        self.rng.fill_normal(&mut v, mean, std);
+        v
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing seed if any
+/// returns false. Re-running with the printed seed reproduces the case.
+pub fn property<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> bool,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut g = Gen::new(seed);
+        if !prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x});\n  draws: {}",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// Shrinkable failing input for value-level properties.
+pub trait Shrink: Sized + Clone {
+    /// candidate simplifications, most aggressive first
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for Vec<f32> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+            let mut one_less = self.clone();
+            one_less.pop();
+            out.push(one_less);
+        }
+        // zero-out halves, round values toward simple magnitudes
+        if self.iter().any(|&v| v != 0.0 && v != 1.0) {
+            out.push(self.iter().map(|&v| if v.abs() < 1.0 { 0.0 } else { v }).collect());
+            out.push(self.iter().map(|&v| v.signum()).collect());
+        }
+        out
+    }
+}
+
+impl Shrink for i32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+        }
+        out
+    }
+}
+
+/// Property over an explicit input type with shrinking: generate with
+/// `gen`, test with `prop`; on failure greedily shrink and panic with the
+/// minimal counterexample (Debug-printed).
+pub fn property_shrink<T, G, P>(name: &str, cases: u64, mut gen: G, mut prop: P)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> bool,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_8000 + case;
+        let mut g = Gen::new(seed);
+        let input = gen(&mut g);
+        if !prop(&input) {
+            let mut worst = input;
+            // greedy shrink loop, bounded
+            'outer: for _ in 0..1000 {
+                for cand in worst.shrink() {
+                    if !prop(&cand) {
+                        worst = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x});\n  minimal counterexample: {worst:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivially true", 50, |g| {
+            count += 1;
+            g.f32_in(0.0, 1.0) < 2.0
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_seed() {
+        property("always false", 10, |_| false);
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // property: no element > 100. Generator plants one large value in
+        // a big vector; the shrinker should cut it down drastically.
+        let result = std::panic::catch_unwind(|| {
+            property_shrink(
+                "bounded",
+                5,
+                |g: &mut Gen| {
+                    let mut v = g.vec_f32(64..65, 0.0, 1.0);
+                    v[10] = 500.0;
+                    v
+                },
+                |v: &Vec<f32>| v.iter().all(|&x| x <= 100.0),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+        // the reported vector should be much smaller than 64 elements
+        let count = msg.matches(',').count();
+        assert!(count < 40, "shrunk poorly: {msg}");
+    }
+
+    #[test]
+    fn logscale_generator_spans_exponents() {
+        let mut g = Gen::new(0);
+        let v = g.vec_f32_logscale(500..501, -20, 10);
+        let max = v.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        let min_nz = v
+            .iter()
+            .filter(|v| **v != 0.0)
+            .fold(f32::INFINITY, |a, &b| a.min(b.abs()));
+        assert!(max / min_nz > 1e6, "wide dynamic range expected");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Gen::new(123);
+        let mut b = Gen::new(123);
+        assert_eq!(a.vec_f32(8..9, 0.0, 1.0), b.vec_f32(8..9, 0.0, 1.0));
+    }
+}

@@ -1,0 +1,6 @@
+//! Shared substrates: PRNG, JSON, timing, table rendering.
+
+pub mod json;
+pub mod prng;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,186 @@
+//! Deterministic PRNG substrate (the registry has no `rand` crate).
+//!
+//! SplitMix64 for seeding, PCG32 (XSH-RR) as the workhorse stream, and
+//! Box–Muller for normal deviates. All generators are `Clone` and cheap;
+//! data workers derive independent streams via `split`.
+
+/// SplitMix64 — used to expand one u64 seed into stream/state pairs.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG32 (XSH-RR 64/32).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::from_state(sm.next_u64(), sm.next_u64())
+    }
+
+    pub fn from_state(state: u64, stream: u64) -> Self {
+        let mut r = Self { state: 0, inc: (stream << 1) | 1 };
+        r.next_u32();
+        r.state = r.state.wrapping_add(state);
+        r.next_u32();
+        r
+    }
+
+    /// Derive an independent stream (for worker threads).
+    pub fn split(&mut self) -> Pcg32 {
+        let a = self.next_u32() as u64;
+        let b = self.next_u32() as u64;
+        let c = self.next_u32() as u64;
+        let d = self.next_u32() as u64;
+        Pcg32::from_state((a << 32) | b, (c << 32) | d)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 24 bits of precision (exact f32 grid).
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) (Lemire's multiply-shift, unbiased enough
+    /// for data generation; n must be > 0).
+    pub fn below(&mut self, n: u32) -> u32 {
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box–Muller (untruncated — the paper insists
+    /// weight init must be *untruncated* normal; our synthetic data uses
+    /// the same generator).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.uniform();
+            if u1 > 0.0 {
+                let u2 = self.uniform();
+                let r = (-2.0 * (u1 as f64).ln()).sqrt();
+                let th = 2.0 * std::f64::consts::PI * u2 as f64;
+                return (r * th.cos()) as f32;
+            }
+        }
+    }
+
+    pub fn fill_normal(&mut self, buf: &mut [f32], mean: f32, std: f32) {
+        for v in buf.iter_mut() {
+            *v = mean + std * self.normal();
+        }
+    }
+
+    pub fn fill_uniform(&mut self, buf: &mut [f32], lo: f32, hi: f32) {
+        for v in buf.iter_mut() {
+            *v = lo + (hi - lo) * self.uniform();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // first outputs for seed 0 (known-answer from the reference impl)
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_distinct_streams() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        assert_eq!(xs, ys);
+        let mut c = Pcg32::new(43);
+        let zs: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg32::new(7);
+        let mut w1 = root.split();
+        let mut w2 = root.split();
+        let a: Vec<u32> = (0..16).map(|_| w1.next_u32()).collect();
+        let b: Vec<u32> = (0..16).map(|_| w2.next_u32()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Pcg32::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Pcg32::new(2);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let k = r.below(10);
+            assert!(k < 10);
+            seen[k as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all buckets hit");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0f64, 0f64);
+        let mut tail = 0usize;
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+            if x.abs() > 3.0 {
+                tail += 1;
+            }
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+        // untruncated: P(|z|>3) ~ 0.27% -> expect > 0.1% in 200k draws
+        assert!(tail > n / 1000, "untruncated tails present ({tail})");
+    }
+}

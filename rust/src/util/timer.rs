@@ -1,0 +1,107 @@
+//! Micro-benchmark timing utilities (the registry has no criterion).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics for repeated runs of a closure.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub samples: Vec<Duration>,
+}
+
+impl Timing {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn best(&self) -> Duration {
+        self.samples.iter().min().copied().unwrap_or_default()
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> Duration {
+        self.percentile(95.0)
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.samples.clone();
+        v.sort();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn throughput(&self, items_per_run: u64) -> f64 {
+        let m = self.mean().as_secs_f64();
+        if m == 0.0 {
+            0.0
+        } else {
+            items_per_run as f64 / m
+        }
+    }
+}
+
+/// Run `f` for `warmup` untimed + `runs` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    Timing { samples }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing {
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+        };
+        assert_eq!(t.mean(), Duration::from_millis(20));
+        assert_eq!(t.best(), Duration::from_millis(10));
+        assert_eq!(t.p50(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn bench_runs_expected_counts() {
+        let mut n = 0;
+        let t = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.samples.len(), 5);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00ms");
+        assert!(fmt_duration(Duration::from_micros(7)).ends_with("µs"));
+    }
+}

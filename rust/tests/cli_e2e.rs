@@ -1,0 +1,115 @@
+//! CLI end-to-end: drive the `mft` binary as a subprocess the way a user
+//! would (energy/macs work without artifacts; train/list need them).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn mft() -> Command {
+    // cargo builds the bin next to the test executable's parent dir
+    let mut path = PathBuf::from(env!("CARGO_BIN_EXE_mft"));
+    if !path.exists() {
+        path = PathBuf::from("target/release/mft");
+    }
+    Command::new(path)
+}
+
+fn have_artifacts() -> bool {
+    PathBuf::from("artifacts/index.json").exists()
+}
+
+#[test]
+fn energy_subcommand_prints_tables() {
+    let out = mft().args(["energy", "--model", "resnet50"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("Table 1"));
+    assert!(s.contains("Table 2"));
+    assert!(s.contains("Ours (MF)"));
+    assert!(s.contains("95.8"));
+}
+
+#[test]
+fn macs_subcommand_reports_resnet50() {
+    let out = mft().args(["macs", "--model", "resnet50"]).output().unwrap();
+    assert!(out.status.success());
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("resnet50"));
+    assert!(s.contains("4.0"), "fw GMACs ~4.1:\n{s}");
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = mft().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    let s = String::from_utf8_lossy(&out.stderr);
+    assert!(s.contains("USAGE"), "{s}");
+}
+
+#[test]
+fn unknown_model_is_a_clean_error() {
+    let out = mft().args(["energy", "--model", "nope"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown model"));
+}
+
+#[test]
+fn list_subcommand_enumerates_variants() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let out = mft().arg("list").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    for v in ["cnn_mf", "mlp_mf", "transformer_mf", "cnn_mf_noals"] {
+        assert!(s.contains(v), "missing {v} in:\n{s}");
+    }
+}
+
+#[test]
+fn train_and_eval_roundtrip_via_cli() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let ckpt = std::env::temp_dir().join("mft_cli_e2e.ckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let out = mft()
+        .args([
+            "train", "--variant", "mlp_mf", "--steps", "12", "--lr", "0.05",
+            "--noise", "1.0", "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("final eval accuracy"), "{s}");
+    assert!(ckpt.exists());
+
+    let out = mft()
+        .args(["eval", "--variant", "mlp_mf", "--batches", "2", "--checkpoint"])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("accuracy"));
+}
+
+#[test]
+fn train_with_config_file() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let cfg = std::env::temp_dir().join("mft_cli_cfg.toml");
+    std::fs::write(
+        &cfg,
+        "variant = \"mlp_mf\"\n[train]\nsteps = 8\nlr = 0.05\ndecay_at = []\n\
+         log_every = 4\n[eval]\nevery = 8\nbatches = 2\n",
+    )
+    .unwrap();
+    let out = mft().args(["train", "--config"]).arg(&cfg).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("step     8"));
+}

@@ -1,0 +1,120 @@
+//! Cross-validation of the numeric contract: the AOT-lowered JAX/Pallas
+//! quantizer + MF-MAC kernels, executed through PJRT, must agree with the
+//! rust-native mirror — bit-exactly for the quantizer, to f32-accumulation
+//! tolerance for the matmuls. Requires `make artifacts`.
+
+use std::path::Path;
+
+use mftrain::potq;
+use mftrain::runtime::{Index, Runtime};
+use mftrain::util::prng::Pcg32;
+
+fn setup() -> Option<(Index, Runtime)> {
+    let root = Path::new("artifacts");
+    if !root.join("index.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some((Index::load(root).unwrap(), Runtime::cpu().unwrap()))
+}
+
+fn gen_block(seed: u64, n: usize, std: f32) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    let mut x = vec![0f32; n];
+    rng.fill_normal(&mut x, 0.0, std);
+    x
+}
+
+#[test]
+fn potq_kernels_bit_exact_across_bit_widths() {
+    let Some((idx, rt)) = setup() else { return };
+    for b in [3u32, 4, 5, 6] {
+        let k = idx
+            .kernels
+            .iter()
+            .find(|k| k.name == format!("potq_b{b}"))
+            .unwrap_or_else(|| panic!("potq_b{b} artifact missing"));
+        let exe = rt.compile_file(&idx.root.join(&k.file)).unwrap();
+        // sweep several magnitude regimes incl. gradient-scale data
+        for (seed, std) in [(1u64, 1.0f32), (2, 0.05), (3, 3e-4), (4, 2e-6), (5, 40.0)] {
+            let x = gen_block(seed * 100 + b as u64, k.n, std);
+            let out = rt.run_f32(&exe, &[(&x, &[k.n])]).unwrap();
+            let blk = potq::pot_quantize(&x, b, None);
+            assert_eq!(out[3 * k.n] as i32, blk.beta, "beta b={b} std={std}");
+            for i in 0..k.n {
+                assert_eq!(out[k.n + i] as i32, blk.e[i], "e[{i}] b={b} std={std}");
+                assert_eq!(out[2 * k.n + i] as u8, blk.s[i], "s[{i}] b={b}");
+                let native = potq::pot_dequantize(blk.e[i], blk.s[i], blk.beta);
+                assert_eq!(
+                    out[i].to_bits(),
+                    native.to_bits(),
+                    "deq[{i}] b={b} std={std}: {} vs {native}",
+                    out[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn potq_kernel_handles_zero_and_constant_blocks() {
+    let Some((idx, rt)) = setup() else { return };
+    let k = idx.kernels.iter().find(|k| k.name == "potq_b5").unwrap();
+    let exe = rt.compile_file(&idx.root.join(&k.file)).unwrap();
+    // all-zero block
+    let x = vec![0f32; k.n];
+    let out = rt.run_f32(&exe, &[(&x, &[k.n])]).unwrap();
+    assert!(out[..k.n].iter().all(|&v| v == 0.0));
+    assert_eq!(out[3 * k.n], 0.0, "beta of zero block");
+    // constant power-of-two block: exact round trip
+    let x = vec![0.25f32; k.n];
+    let out = rt.run_f32(&exe, &[(&x, &[k.n])]).unwrap();
+    assert!(out[..k.n].iter().all(|&v| v == 0.25), "PoT values survive exactly");
+}
+
+#[test]
+fn mfmac_kernels_match_native_matmul() {
+    let Some((idx, rt)) = setup() else { return };
+    let d = 64usize;
+    let a = gen_block(10, d * d, 0.5);
+    let w = gen_block(11, d * d, 0.02);
+    let native = potq::mfmac_matmul(&a, &w, d, d, d, 5);
+    let denom = native.iter().fold(1e-30f32, |m, &v| m.max(v.abs()));
+    for name in ["mfmac_ref", "mfmac_pallas", "mfmac_mxu_pallas"] {
+        let k = idx
+            .kernels
+            .iter()
+            .find(|k| k.name == name)
+            .unwrap_or_else(|| panic!("{name} missing"));
+        let exe = rt.compile_file(&idx.root.join(&k.file)).unwrap();
+        let y = rt.run_f32(&exe, &[(&a, &[d, d]), (&w, &[d, d])]).unwrap();
+        for i in 0..d * d {
+            assert!(
+                (y[i] - native[i]).abs() / denom < 1e-5,
+                "{name}[{i}]: {} vs {}",
+                y[i],
+                native[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_and_jnp_mfmac_agree_with_each_other() {
+    // the two lowered schedules (log-domain pallas vs dequantize+dot) are
+    // the same computation in different orders
+    let Some((idx, rt)) = setup() else { return };
+    let d = 64usize;
+    let a = gen_block(20, d * d, 2.0);
+    let w = gen_block(21, d * d, 1e-3);
+    let mut results = Vec::new();
+    for name in ["mfmac_ref", "mfmac_pallas"] {
+        let k = idx.kernels.iter().find(|k| k.name == name).unwrap();
+        let exe = rt.compile_file(&idx.root.join(&k.file)).unwrap();
+        results.push(rt.run_f32(&exe, &[(&a, &[d, d]), (&w, &[d, d])]).unwrap());
+    }
+    let denom = results[0].iter().fold(1e-30f32, |m, &v| m.max(v.abs()));
+    for i in 0..d * d {
+        assert!((results[0][i] - results[1][i]).abs() / denom < 1e-6);
+    }
+}

@@ -1,0 +1,191 @@
+//! Property-based tests (via the in-repo testing harness) on the
+//! coordinator-side invariants: quantizer round-trip laws, MF-MAC
+//! equivalences, energy-model monotonicity, layout/config laws.
+
+use mftrain::energy::{methods, training_energy_joules};
+use mftrain::models;
+use mftrain::potq::{self, ZERO_CODE};
+use mftrain::testing::{property, property_shrink, Gen};
+
+#[test]
+fn prop_quantized_values_are_signed_pot() {
+    property("potq values are signed powers of two", 150, |g: &mut Gen| {
+        let b = [3u32, 4, 5, 6][g.usize_in(0, 4)];
+        let x = g.vec_f32_logscale(1..400, -28, 12);
+        potq::pot_value(&x, b).iter().all(|&v| {
+            v == 0.0 || {
+                let l = v.abs().log2();
+                l == l.round()
+            }
+        })
+    });
+}
+
+#[test]
+fn prop_exponents_bounded_and_signs_match() {
+    property("exponent range / sign agreement", 150, |g: &mut Gen| {
+        let b = [4u32, 5][g.usize_in(0, 2)];
+        let x = g.vec_f32_logscale(1..300, -25, 8);
+        let blk = potq::pot_quantize(&x, b, None);
+        let emax = potq::pot_emax(b);
+        blk.e.iter().zip(&blk.s).zip(&x).all(|((&e, &s), &v)| {
+            e == ZERO_CODE || ((-emax..=emax).contains(&e) && ((s == 1) == (v < 0.0)))
+        })
+    });
+}
+
+#[test]
+fn prop_quantization_idempotent() {
+    property("quantize(dequantize(x)) is identity", 100, |g: &mut Gen| {
+        let x = g.vec_f32_logscale(1..200, -20, 5);
+        let d1 = potq::pot_value(&x, 5);
+        let d2 = potq::pot_value(&d1, 5);
+        d1 == d2
+    });
+}
+
+#[test]
+fn prop_scaling_invariance_by_powers_of_two() {
+    // ALS makes the quantizer scale-invariant: quantizing 2^k * x gives
+    // 2^k * quantize(x) (up to f32 range)
+    property("PoT scale invariance", 100, |g: &mut Gen| {
+        let x = g.vec_f32_logscale(1..150, -10, 5);
+        let k = g.i32_in(-8, 9);
+        let scale = (2f32).powi(k);
+        let base = potq::pot_value(&x, 5);
+        let scaled: Vec<f32> = x.iter().map(|&v| v * scale).collect();
+        let qs = potq::pot_value(&scaled, 5);
+        base.iter().zip(&qs).all(|(&a, &b)| (a * scale).to_bits() == b.to_bits())
+    });
+}
+
+#[test]
+fn prop_mfmac_equals_dequantized_dot() {
+    property("mfmac == dot of dequantized operands", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 8);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 8);
+        let a = g.normal_vec(m * k, 0.0, 1.0);
+        let w = g.normal_vec(k * n, 0.0, 0.03);
+        let y = potq::mfmac_matmul(&a, &w, m, k, n, 5);
+        let aq = potq::pot_value(&a, 5);
+        let wq = potq::pot_value(&w, 5);
+        let mut ok = true;
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for p in 0..k {
+                    acc += aq[i * k + p] as f64 * wq[p * n + j] as f64;
+                }
+                let denom = acc.abs().max(1e-9);
+                ok &= ((y[i * n + j] as f64 - acc) / denom).abs() < 1e-5;
+            }
+        }
+        ok
+    });
+}
+
+#[test]
+fn prop_wbc_output_is_centered() {
+    property_shrink(
+        "wbc centers any block",
+        60,
+        |g: &mut Gen| {
+            let mut v = g.vec_f32(1..200, -3.0, 3.0);
+            let shift = g.f32_in(-5.0, 5.0);
+            v.iter_mut().for_each(|x| *x += shift);
+            v
+        },
+        |v: &Vec<f32>| {
+            let c = potq::weight_bias_correction(v);
+            if c.is_empty() {
+                return true;
+            }
+            let mean = c.iter().map(|&x| x as f64).sum::<f64>() / c.len() as f64;
+            // tolerance scales with magnitude (f32 summation error)
+            let scale = v.iter().fold(1f64, |m, &x| m.max(x.abs() as f64));
+            mean.abs() < 1e-5 * scale
+        },
+    );
+}
+
+#[test]
+fn prop_prc_clip_bounds_and_interior_identity() {
+    property("prc clips to gamma*max and keeps interior", 100, |g: &mut Gen| {
+        let v = g.vec_f32(1..200, -10.0, 10.0);
+        let gamma = g.f32_in(0.1, 1.0);
+        let amax = v.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let t = amax * gamma;
+        potq::ratio_clip(&v, gamma)
+            .iter()
+            .zip(&v)
+            .all(|(&c, &o)| c.abs() <= t * (1.0 + 1e-6) && (o.abs() > t || c == o))
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_macs_and_positive() {
+    property("training energy is positive & monotone in MACs", 60, |g: &mut Gen| {
+        let macs = g.usize_in(1, 1_000_000) as u64;
+        let batch = g.usize_in(1, 512) as u64;
+        methods().iter().all(|m| {
+            let (fw, bw, tot) = training_energy_joules(macs, batch, m, false);
+            let (_, _, tot2) = training_energy_joules(macs * 2, batch, m, false);
+            fw > 0.0 && bw > 0.0 && (tot - (fw + bw)).abs() < 1e-12 && tot2 > tot
+        })
+    });
+}
+
+#[test]
+fn prop_arch_macs_scale_with_resolution() {
+    // conv MAC counting: doubling spatial size ~4x the MACs
+    property("conv MACs scale ~quadratically in hw", 40, |g: &mut Gen| {
+        let hw = g.usize_in(4, 64) as u64;
+        let l1 = models::Layer::Conv { cin: 8, cout: 8, k: 3, stride: 1, hw, groups: 1 };
+        let l2 = models::Layer::Conv { cin: 8, cout: 8, k: 3, stride: 1, hw: hw * 2, groups: 1 };
+        l2.macs() == 4 * l1.macs()
+    });
+}
+
+#[test]
+fn prop_lr_schedule_non_increasing_after_warmup() {
+    property("lr schedule monotone non-increasing post-warmup", 80, |g: &mut Gen| {
+        let base = g.f32_in(0.001, 1.0);
+        let warm = g.usize_in(0, 20) as u64;
+        let d1 = g.usize_in(20, 200) as u64;
+        let d2 = d1 + g.usize_in(1, 200) as u64;
+        let s = mftrain::config::LrSchedule {
+            base,
+            decay_factor: 0.1,
+            decay_at: vec![d1, d2],
+            warmup_steps: warm,
+        };
+        let mut prev = f32::INFINITY;
+        (warm..400).all(|step| {
+            let lr = s.at(step);
+            let ok = lr <= prev + 1e-9 && lr > 0.0;
+            prev = lr;
+            ok
+        })
+    });
+}
+
+#[test]
+fn prop_int32_accumulator_agrees_when_peak_small() {
+    property("i64 fixed-point acc == f32 acc when unsaturated", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 5);
+        let k = g.usize_in(1, 16);
+        let n = g.usize_in(1, 5);
+        let a = g.normal_vec(m * k, 0.0, 0.7);
+        let w = g.normal_vec(k * n, 0.0, 0.01);
+        let ab = potq::pot_quantize(&a, 5, None);
+        let wb = potq::pot_quantize(&w, 5, None);
+        let yf = potq::mfmac_matmul_quantized(&ab, &wb, m, k, n);
+        let (yi, rep) = potq::mfmac_accumulate_i64(&ab, &wb, m, k, n);
+        if rep.saturated_lanes > 0 {
+            return true; // saturation is legitimate divergence
+        }
+        let denom = yf.iter().fold(1e-20f32, |mx, &v| mx.max(v.abs()));
+        yf.iter().zip(&yi).all(|(&p, &q)| ((p - q).abs() / denom) < 1e-4)
+    });
+}

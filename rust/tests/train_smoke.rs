@@ -1,0 +1,176 @@
+//! Integration: full training loops through PJRT on the AOT artifacts —
+//! loss decreases, checkpoints round-trip through the runtime, the Pallas
+//! end-to-end variant executes, ablation collapse reproduces.
+//! Requires `make artifacts`.
+
+use std::path::Path;
+
+use mftrain::config::TrainConfig;
+use mftrain::coordinator::{run_variant, Checkpoint, Trainer};
+use mftrain::runtime::{Runtime, Session};
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/index.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn mlp_mf_loss_decreases() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let rec = run_variant(&rt, "mlp_mf", 40, 0.05, 1.0, 0).unwrap();
+    let (first, last) = rec.loss_span().unwrap();
+    assert!(last < first * 0.5, "loss {first} -> {last}");
+    assert!(rec.final_accuracy > 0.5, "acc {}", rec.final_accuracy);
+}
+
+#[test]
+fn mlp_pallas_variant_composes_end_to_end() {
+    // the variant whose HLO contains the interpret-mode Pallas MF-MAC
+    // kernels in both forward and backward
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let rec = run_variant(&rt, "mlp_mf_pallas", 25, 0.05, 1.0, 0).unwrap();
+    let (first, last) = rec.loss_span().unwrap();
+    assert!(last < first, "pallas variant must train: {first} -> {last}");
+}
+
+#[test]
+fn pallas_and_jnp_variants_agree_numerically() {
+    // same scheme, same seed, same data => near-identical training
+    // trajectories (pallas kernels are bit-equivalent modulo f32
+    // accumulation order inside the matmul)
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let a = run_variant(&rt, "mlp_mf", 15, 0.05, 1.0, 3).unwrap();
+    let b = run_variant(&rt, "mlp_mf_pallas", 15, 0.05, 1.0, 3).unwrap();
+    let (_, la) = a.loss_span().unwrap();
+    let (_, lb) = b.loss_span().unwrap();
+    assert!(
+        (la - lb).abs() <= 0.05 * la.abs().max(0.05),
+        "trajectories diverged: {la} vs {lb}"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_runtime() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let dir = std::env::temp_dir().join("mft_it_ckpt");
+    let path = dir.join("mlp.ckpt");
+    std::fs::remove_file(&path).ok();
+
+    // train 10 steps, checkpointing at the end
+    let mut cfg = TrainConfig {
+        variant: "mlp_mf".into(),
+        steps: 10,
+        eval_every: 0,
+        log_every: 0,
+        checkpoint_path: Some(path.to_string_lossy().into_owned()),
+        ..TrainConfig::default()
+    };
+    cfg.lr.base = 0.05;
+    cfg.lr.decay_at.clear();
+    let mut t = Trainer::new(&rt, cfg.clone()).unwrap().quiet();
+    t.run().unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.variant, "mlp_mf");
+    assert_eq!(ck.step, 10);
+
+    // resume to 20: the trainer must pick the checkpoint up
+    cfg.steps = 20;
+    let mut t2 = Trainer::new(&rt, cfg).unwrap().quiet();
+    let rec = t2.run().unwrap();
+    assert_eq!(rec.steps, 10, "resumed run trains only the remaining steps");
+    let ck2 = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck2.step, 20);
+
+    // restoring the state into a session reproduces eval results
+    let mut s = Session::load(&rt, Path::new("artifacts"), "mlp_mf").unwrap();
+    s.state_from_host(&ck2.state).unwrap();
+    let man = s.manifest.clone();
+    let mut ds = mftrain::data::for_variant(&man.model, &man.x.shape, &man.y.shape, 1.0, 99);
+    let b = ds.next_batch();
+    let (l1, c1) = s.eval_batch(&b).unwrap();
+    let (l2, c2) = s.eval_batch(&b).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn noals_ablation_freezes_training() {
+    // Table 5 column 1 at the systems level: without adaptive layer-wise
+    // scaling, gradients underflow and the loss barely moves
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let rec = run_variant(&rt, "cnn_mf_noals", 12, 0.08, 1.5, 0).unwrap();
+    let (first, last) = rec.loss_span().unwrap();
+    assert!(
+        (last - first).abs() < 0.35 * first.abs().max(0.1),
+        "no-ALS should train poorly, got {first} -> {last}"
+    );
+}
+
+#[test]
+fn metrics_match_state_vector() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut s = Session::load(&rt, Path::new("artifacts"), "mlp_mf").unwrap();
+    s.init(1).unwrap();
+    let man = s.manifest.clone();
+    let mut ds = mftrain::data::for_variant(&man.model, &man.x.shape, &man.y.shape, 1.0, 1);
+    let b = ds.next_batch();
+    s.train_step(&b, 0.01).unwrap();
+    s.train_step(&b, 0.01).unwrap();
+    let (loss, step) = s.metrics().unwrap();
+    let host = s.state_to_host().unwrap();
+    assert_eq!(host[man.loss_offset], loss);
+    assert_eq!(host[man.step_offset] as u64, step);
+    assert_eq!(step, 2);
+}
+
+#[test]
+fn probe_sections_are_consistent() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let mut s = Session::load(&rt, Path::new("artifacts"), "mlp_mf").unwrap();
+    s.init(0).unwrap();
+    let man = s.manifest.clone();
+    let mut ds = mftrain::data::for_variant(&man.model, &man.x.shape, &man.y.shape, 1.0, 2);
+    let b = ds.next_batch();
+    let raw = s.probe(&b).unwrap();
+    let total: usize = man.probe_sections.last().map(|s| s.offset + s.size).unwrap();
+    assert_eq!(raw.len(), total);
+    // the W section must equal the weights stored in the state vector
+    let host = s.state_to_host().unwrap();
+    // layout paths are rooted at the state tree ("p/<layer>/w"); the
+    // manifest's probe path is relative to params
+    let wentry = man
+        .entry(&format!("p/{}", man.probe_weight_path))
+        .expect("probe weight in layout");
+    let wsec = man.probe_sections.iter().find(|s| s.name == "w").unwrap();
+    assert_eq!(wsec.size, wentry.size);
+    for i in 0..wsec.size {
+        assert_eq!(raw[wsec.offset + i], host[wentry.offset + i], "W[{i}]");
+    }
+    // the G section must be non-trivial
+    let gsec = man.probe_sections.iter().find(|s| s.name == "g").unwrap();
+    assert!(raw[gsec.offset..gsec.offset + gsec.size].iter().any(|&v| v != 0.0));
+}
