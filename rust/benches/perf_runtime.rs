@@ -1,5 +1,7 @@
 //! Perf bench (deliverable e): the L3 hot path. Measures
 //!   * rust-native potq / mfmac kernel throughput,
+//!   * the MacEngine sweep (scalar / blocked / threaded) across
+//!     paper-relevant matmul shapes -> BENCH_kernels.json,
 //!   * data-generator throughput,
 //!   * end-to-end train-step latency per variant (upload + execute +
 //!     state feedback) and its breakdown,
@@ -8,14 +10,105 @@
 //!
 //! MFT_BENCH_STEPS (default 40) = timed steps per variant.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use mftrain::data::{self, Dataset};
-use mftrain::potq;
+use mftrain::potq::{self, BlockedEngine, MacEngine, PotTensor, ScalarEngine, ThreadedEngine};
 use mftrain::runtime::{Runtime, Session};
+use mftrain::util::json::Json;
 use mftrain::util::prng::Pcg32;
 use mftrain::util::table::{fnum, Table};
 use mftrain::util::timer::{bench, fmt_duration};
+
+/// Bytes per element of the seed's unpacked PotBlock (i32 exponent + u8
+/// sign) vs the packed PotTensor code — the bandwidth lever this sweep
+/// tracks alongside raw throughput.
+const UNPACKED_BYTES_PER_ELEM: f64 = 9.0;
+const PACKED_BYTES_PER_ELEM: f64 = 1.0;
+
+/// Sweep the three engines over paper-relevant shapes; returns the table
+/// rows and writes BENCH_kernels.json for trajectory tracking.
+fn engine_sweep() -> anyhow::Result<()> {
+    let shapes: [(usize, usize, usize, usize); 2] =
+        [(64, 512, 512, 5), (256, 1024, 1024, 2)];
+    let engines: [(&str, Box<dyn MacEngine>); 3] = [
+        ("scalar", Box::new(ScalarEngine)),
+        ("blocked", Box::new(BlockedEngine::default())),
+        ("threaded", Box::new(ThreadedEngine::default())),
+    ];
+    let mut t = Table::new(
+        "MacEngine sweep (packed PoT operands, 5-bit codes)",
+        &["shape", "engine", "mean", "GMAC/s", "GFLOP-equiv/s", "speedup vs scalar"],
+    );
+    let mut results = Vec::new();
+    let mut rng = Pcg32::new(42);
+    for &(m, k, n, runs) in &shapes {
+        let mut x = vec![0f32; m * k];
+        let mut w = vec![0f32; k * n];
+        rng.fill_normal(&mut x, 0.0, 0.5);
+        rng.fill_normal(&mut w, 0.0, 0.02);
+        let xq = PotTensor::quantize_2d(&x, m, k, 5, None);
+        let wq = PotTensor::quantize_2d(&w, k, n, 5, None);
+        let macs = (m * k * n) as u64;
+        let reference = ScalarEngine.matmul(&xq, &wq);
+        let mut scalar_mean = 0f64;
+        for (name, engine) in &engines {
+            if *name != "scalar" {
+                let y = engine.matmul(&xq, &wq);
+                assert!(
+                    y.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "engine '{name}' is not bit-exact with scalar on {m}x{k}x{n}"
+                );
+            }
+            let timing = bench(1, runs, || {
+                std::hint::black_box(engine.matmul(&xq, &wq));
+            });
+            let mean = timing.mean().as_secs_f64();
+            if *name == "scalar" {
+                scalar_mean = mean;
+            }
+            let speedup = if mean > 0.0 { scalar_mean / mean } else { 0.0 };
+            t.row(&[
+                format!("{m}x{k}x{n}"),
+                name.to_string(),
+                fmt_duration(timing.mean()),
+                format!("{:.2}", timing.throughput(macs) / 1e9),
+                format!("{:.2}", timing.throughput(2 * macs) / 1e9),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut o = BTreeMap::new();
+            o.insert("shape".into(), Json::Str(format!("{m}x{k}x{n}")));
+            o.insert("m".into(), Json::Num(m as f64));
+            o.insert("k".into(), Json::Num(k as f64));
+            o.insert("n".into(), Json::Num(n as f64));
+            o.insert("engine".into(), Json::Str(name.to_string()));
+            o.insert("mean_secs".into(), Json::Num(mean));
+            o.insert("gmacs_per_s".into(), Json::Num(timing.throughput(macs) / 1e9));
+            o.insert(
+                "gflop_equiv_per_s".into(),
+                Json::Num(timing.throughput(2 * macs) / 1e9),
+            );
+            o.insert("speedup_vs_scalar".into(), Json::Num(speedup));
+            results.push(Json::Obj(o));
+        }
+    }
+    t.note("all engines verified bit-exact against scalar before timing; \
+            operands are 1 byte/elem packed codes (9 byte/elem before the \
+            PotTensor refactor)");
+    t.print();
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("mfmac_kernels".into()));
+    root.insert("bits".into(), Json::Num(5.0));
+    let mut fmt = BTreeMap::new();
+    fmt.insert("packed_pot".into(), Json::Num(PACKED_BYTES_PER_ELEM));
+    fmt.insert("unpacked_seed".into(), Json::Num(UNPACKED_BYTES_PER_ELEM));
+    root.insert("bytes_per_elem".into(), Json::Obj(fmt));
+    root.insert("results".into(), Json::Arr(results));
+    std::fs::write("BENCH_kernels.json", Json::Obj(root).to_string())?;
+    println!("engine sweep -> BENCH_kernels.json");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::var("MFT_BENCH_STEPS")
@@ -86,8 +179,17 @@ fn main() -> anyhow::Result<()> {
     ]);
     t1.print();
 
+    // ---- MacEngine sweep -> BENCH_kernels.json ----------------------------
+    engine_sweep()?;
+
     // ---- end-to-end step latency per variant ------------------------------
-    let rt = Runtime::cpu()?;
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping PJRT sections: {e:#}");
+            return Ok(());
+        }
+    };
     let mut t2 = Table::new(
         &format!("train-step latency via PJRT ({steps} timed steps)"),
         &["variant", "compile (s)", "step mean", "p95", "steps/s", "examples/s",

@@ -70,6 +70,40 @@ impl Args {
         self.str_flag(key)
             .with_context(|| format!("missing required flag --{key}"))
     }
+
+    /// `--engine scalar|blocked|threaded` (+ `--threads N`) resolved to a
+    /// MacEngine. Unknown names list the registry instead of guessing.
+    pub fn engine_flag(&self, default: &str) -> Result<Box<dyn crate::potq::MacEngine + Send>> {
+        let name = self.str_flag("engine").unwrap_or(default);
+        let threads = self.u64_flag("threads", 0)? as usize;
+        crate::potq::engine_by_name(name, threads).with_context(|| {
+            format!(
+                "unknown engine '{name}' (available: {})",
+                crate::potq::ENGINE_NAMES.join("|")
+            )
+        })
+    }
+
+    /// `--shape MxKxN` (e.g. 64x512x512).
+    pub fn shape_flag(
+        &self,
+        key: &str,
+        default: (usize, usize, usize),
+    ) -> Result<(usize, usize, usize)> {
+        match self.str_flag(key) {
+            None => Ok(default),
+            Some(s) => {
+                let parts: Vec<&str> = s.split('x').collect();
+                if parts.len() != 3 {
+                    bail!("--{key} must be MxKxN, got '{s}'");
+                }
+                let dim = |t: &str| -> Result<usize> {
+                    t.parse().with_context(|| format!("--{key}: '{t}' is not a dimension"))
+                };
+                Ok((dim(parts[0])?, dim(parts[1])?, dim(parts[2])?))
+            }
+        }
+    }
 }
 
 pub const USAGE: &str = "\
@@ -80,6 +114,9 @@ USAGE:
             [--seed N] [--noise F] [--checkpoint path] [--artifacts DIR]
   mft eval --variant <name> --checkpoint <path> [--batches N]
   mft energy [--model resnet50] [--batch 256] [--overhead]
+  mft kernels [--engine scalar|blocked|threaded] [--threads N]
+              [--shape MxKxN] [--bits 5] [--seed N] [--check]
+              [--json out.json]
   mft macs [--model resnet50]
   mft distributions --variant <name> [--steps N] [--every N]
   mft ablation [--steps N] [--seeds N]
@@ -102,6 +139,7 @@ pub fn parse_env() -> Result<Args> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::potq::MacEngine;
 
     fn args(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
@@ -136,5 +174,32 @@ mod tests {
     fn bad_number_is_error() {
         let a = args("train --steps banana");
         assert!(a.u64_flag("steps", 0).is_err());
+    }
+
+    #[test]
+    fn engine_flag_resolves_registry_names() {
+        for name in ["scalar", "blocked", "threaded"] {
+            let a = args(&format!("kernels --engine {name} --threads 2"));
+            assert_eq!(a.engine_flag("scalar").unwrap().name(), name);
+        }
+        // default when the flag is absent
+        let a = args("kernels");
+        assert_eq!(a.engine_flag("blocked").unwrap().name(), "blocked");
+        // unknown engines are a clean error listing the registry
+        let a = args("kernels --engine gpu");
+        let err = format!("{:#}", a.engine_flag("scalar").unwrap_err());
+        assert!(err.contains("scalar|blocked|threaded"), "{err}");
+    }
+
+    #[test]
+    fn shape_flag_parses_mxkxn() {
+        let a = args("kernels --shape 64x512x256");
+        assert_eq!(a.shape_flag("shape", (1, 1, 1)).unwrap(), (64, 512, 256));
+        let a = args("kernels");
+        assert_eq!(a.shape_flag("shape", (8, 8, 8)).unwrap(), (8, 8, 8));
+        for bad in ["64x512", "ax2x3", "1x2x3x4"] {
+            let a = args(&format!("kernels --shape {bad}"));
+            assert!(a.shape_flag("shape", (1, 1, 1)).is_err(), "{bad}");
+        }
     }
 }

@@ -23,6 +23,10 @@ pub struct TensorStats {
     pub zero_fraction: f64,
     /// beta of the 5-bit ALS-PoTQ quantization of this tensor
     pub beta: i32,
+    /// fraction of elements whose packed PoT code is nonzero (live MACs)
+    pub pot_live_fraction: f64,
+    /// bytes of the packed PoT image (1 byte/elem in the PotTensor format)
+    pub packed_bytes: usize,
     /// MSE between tensor and its 5-bit PoT image
     pub quant_mse: f64,
     /// lognormality of |x| (sigma of log2|x|; None if degenerate)
@@ -36,12 +40,19 @@ impl TensorStats {
         let blk = potq::pot_quantize(x, 5, None);
         let deq = blk.dequantize();
         let fit = fit_lognormal(x);
+        let live = if blk.is_empty() {
+            0.0
+        } else {
+            blk.count_nonzero() as f64 / blk.len() as f64
+        };
         TensorStats {
             mean: s.mean,
             std: s.std(),
             abs_max: s.abs_max,
             zero_fraction: s.zero_fraction(),
             beta: blk.beta,
+            pot_live_fraction: live,
+            packed_bytes: blk.bytes(),
             quant_mse: crate::stats::mse(x, &deq),
             log2_sigma: fit.as_ref().map(|f| f.sigma_log2),
             log2_hist: log2_histogram(x, -40.0, 10.0, 50),
@@ -128,6 +139,8 @@ mod tests {
         assert!((t.std - 0.02).abs() < 0.005);
         assert!(t.quant_mse > 0.0);
         assert!(t.beta <= -4 && t.beta >= -11, "beta {}", t.beta);
+        assert!(t.pot_live_fraction > 0.9 && t.pot_live_fraction <= 1.0);
+        assert_eq!(t.packed_bytes, 4096, "1 byte per element");
     }
 
     #[test]

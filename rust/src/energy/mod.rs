@@ -10,5 +10,5 @@ pub mod ops;
 pub mod report;
 
 pub use methods::{methods, training_energy_joules, Method};
-pub use ops::{fp32_mac, mf_mac, MacMix, Op, ALS_POTQ_OVERHEAD_PJ};
+pub use ops::{fp32_mac, mf_mac, mfmac_census, MacCensus, MacMix, Op, ALS_POTQ_OVERHEAD_PJ};
 pub use report::{figure1_series, table1, table2, EnergyAccuracyPoint};

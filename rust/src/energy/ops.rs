@@ -102,6 +102,63 @@ pub fn mf_mac() -> MacMix {
 /// scalar INT32 shift (<0.005 pJ) ~= 0.04 pJ per quantized number.
 pub const ALS_POTQ_OVERHEAD_PJ: f64 = 0.038;
 
+/// Dynamic MF-MAC op census of one (m,k)x(k,n) matmul, derived from the
+/// packed operand codes: a MAC whose either operand carries the zero code
+/// executes no INT4 add / XOR / INT32 accumulate at all (the LUT dead
+/// zone in `potq::engine`), so the *live* op count — not the dense MAC
+/// count — is what the hardware would actually spend.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MacCensus {
+    /// dense MAC count m*k*n
+    pub total_macs: u64,
+    /// MACs with both operands nonzero
+    pub live_macs: u64,
+}
+
+impl MacCensus {
+    pub fn live_fraction(&self) -> f64 {
+        if self.total_macs == 0 {
+            0.0
+        } else {
+            self.live_macs as f64 / self.total_macs as f64
+        }
+    }
+
+    /// Energy of the live MACs under the paper's MF-MAC mix.
+    pub fn energy_pj(&self) -> f64 {
+        self.live_macs as f64 * mf_mac().energy_pj()
+    }
+
+    /// Energy if every dense MAC executed (the paper's Table 2 counting).
+    pub fn dense_energy_pj(&self) -> f64 {
+        self.total_macs as f64 * mf_mac().energy_pj()
+    }
+}
+
+/// Census over packed operands. x must be (m,k), w must be (k,n). Runs in
+/// O(mk + kn): for each inner index p, every nonzero of x's column p pairs
+/// with every nonzero of w's row p.
+pub fn mfmac_census(x: &crate::potq::PotTensor, w: &crate::potq::PotTensor) -> MacCensus {
+    assert_eq!(x.shape().len(), 2, "x must be 2-D");
+    assert_eq!(w.shape().len(), 2, "w must be 2-D");
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "inner dims differ");
+    let (xc, wc) = (x.codes(), w.codes());
+    let mut live = 0u64;
+    for p in 0..k {
+        let nx = (0..m)
+            .filter(|&i| xc[i * k + p] & crate::potq::MAG_MASK != 0)
+            .count() as u64;
+        let nw = wc[p * n..(p + 1) * n]
+            .iter()
+            .filter(|&&c| c & crate::potq::MAG_MASK != 0)
+            .count() as u64;
+        live += nx * nw;
+    }
+    MacCensus { total_macs: (m * k * n) as u64, live_macs: live }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +186,60 @@ mod tests {
         assert!((red_q - 0.958) .abs() < 0.003, "reduction w/ quant {red_q}");
         // Appendix B: total ~0.195 pJ
         assert!((with_q - 0.195).abs() < 0.01);
+    }
+
+    #[test]
+    fn census_counts_live_macs_from_packed_codes() {
+        use crate::potq::PotTensor;
+        // x: 2x3 with one zero; w: 3x2 with one zero row entry
+        let x = PotTensor::quantize_2d(&[1.0, 0.0, 2.0, 4.0, 1.0, 0.5], 2, 3, 5, None);
+        let w = PotTensor::quantize_2d(&[1.0, 2.0, 0.0, 0.25, 1.0, 1.0], 3, 2, 5, None);
+        let c = mfmac_census(&x, &w);
+        assert_eq!(c.total_macs, 12);
+        // p=0: 2 live x * 2 live w = 4; p=1: 1 * 1 = 1; p=2: 2 * 2 = 4
+        assert_eq!(c.live_macs, 9);
+        assert!((c.live_fraction() - 9.0 / 12.0).abs() < 1e-12);
+        assert!(c.energy_pj() < c.dense_energy_pj());
+    }
+
+    #[test]
+    fn census_brute_force_agreement() {
+        use crate::potq::{PotTensor, MAG_MASK};
+        use crate::util::prng::Pcg32;
+        let mut r = Pcg32::new(11);
+        let (m, k, n) = (5, 9, 4);
+        let mut xv = vec![0f32; m * k];
+        let mut wv = vec![0f32; k * n];
+        r.fill_normal(&mut xv, 0.0, 1e-4);
+        r.fill_normal(&mut wv, 0.0, 1e-4);
+        // plant exact zeros so the census provably sees dead MACs
+        for (i, v) in xv.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v = 0.0;
+            }
+        }
+        for (i, v) in wv.iter_mut().enumerate() {
+            if i % 4 == 0 {
+                *v = 0.0;
+            }
+        }
+        let x = PotTensor::quantize_2d(&xv, m, k, 5, None);
+        let w = PotTensor::quantize_2d(&wv, k, n, 5, None);
+        let c = mfmac_census(&x, &w);
+        let mut brute = 0u64;
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    let live_x = x.code(i * k + p) & MAG_MASK != 0;
+                    let live_w = w.code(p * n + j) & MAG_MASK != 0;
+                    if live_x && live_w {
+                        brute += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(c.live_macs, brute);
+        assert!(c.live_macs < c.total_macs, "want some dead MACs in this block");
     }
 
     #[test]

@@ -3,8 +3,18 @@
 //! rust / JAX / Pallas stack (AOT via PJRT).
 //!
 //! * [`potq`] — the ALS-PoTQ format + MF-MAC, bit-exact mirror of the
-//!   Pallas kernels (the paper's §4-§5 contribution).
-//! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1).
+//!   Pallas kernels (the paper's §4-§5 contribution). The quantized
+//!   representation is the packed `PotTensor` (one code byte per element:
+//!   exponent nibble + sign bit + reserved zero code); the kernels sit
+//!   behind the pluggable `MacEngine` trait with three implementations —
+//!   `ScalarEngine` (bit-exact reference), `BlockedEngine` (m/n/k cache
+//!   tiles + a 256-entry pow2 LUT indexed by the packed code sum) and
+//!   `ThreadedEngine` (row-band parallelism). All engines accumulate
+//!   exactly in integer fixed point, so every schedule is bit-identical;
+//!   future backends (SIMD nibble kernels, sharded per-tile beta) plug in
+//!   behind the same trait.
+//! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1), including
+//!   the dynamic MAC census derived from packed codes (`mfmac_census`).
 //! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
 //! * [`coordinator`] — the training orchestrator (step loop, prefetch,
 //!   telemetry, checkpoints).

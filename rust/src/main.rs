@@ -18,6 +18,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "energy" => cmd_energy(&args),
+        "kernels" => cmd_kernels(&args),
         "macs" => cmd_macs(&args),
         "distributions" => cmd_distributions(&args),
         "ablation" => cmd_ablation(&args),
@@ -139,6 +140,77 @@ fn cmd_energy(args: &Args) -> Result<()> {
         "\nheadline: {:.1}% linear-layer training energy reduction vs FP32",
         energy::report::headline_reduction() * 100.0
     );
+    Ok(())
+}
+
+fn cmd_kernels(args: &Args) -> Result<()> {
+    use mftrain::potq::{MacEngine, PotTensor, ScalarEngine};
+    use mftrain::util::prng::Pcg32;
+    use mftrain::util::timer::{bench, fmt_duration};
+
+    let engine = args.engine_flag("blocked")?;
+    let (m, k, n) = args.shape_flag("shape", (64, 512, 512))?;
+    let bits = args.u64_flag("bits", 5)? as u32;
+    anyhow::ensure!((3..=6).contains(&bits), "--bits must be in 3..=6");
+
+    let mut rng = Pcg32::new(args.u64_flag("seed", 0)?);
+    let mut x = vec![0f32; m * k];
+    let mut w = vec![0f32; k * n];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    rng.fill_normal(&mut w, 0.0, 0.02);
+    let xq = PotTensor::quantize_2d(&x, m, k, bits, None);
+    let wq = PotTensor::quantize_2d(&w, k, n, bits, None);
+
+    if args.bool_flag("check") {
+        let reference = ScalarEngine.matmul(&xq, &wq);
+        let got = engine.matmul(&xq, &wq);
+        for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
+            anyhow::ensure!(
+                a.to_bits() == b.to_bits(),
+                "engine '{}' diverges from scalar at [{i}]: {a} vs {b}",
+                engine.name()
+            );
+        }
+        println!("[mft] check: '{}' is bit-exact with scalar on {m}x{k}x{n}", engine.name());
+    }
+
+    let t = bench(1, 5, || {
+        std::hint::black_box(engine.matmul(&xq, &wq));
+    });
+    let macs = (m * k * n) as u64;
+    let census = mftrain::energy::mfmac_census(&xq, &wq);
+    let (_, sat) = engine.matmul_i32_saturating(&xq, &wq);
+
+    let mut tb = Table::new(
+        &format!("MF-MAC kernel — engine '{}' ({bits}-bit codes)", engine.name()),
+        &["shape", "mean", "GMAC/s", "GFLOP-equiv/s", "live MACs", "sat lanes", "bytes/elem"],
+    );
+    tb.row(&[
+        format!("{m}x{k}x{n}"),
+        fmt_duration(t.mean()),
+        format!("{:.2}", t.throughput(macs) / 1e9),
+        format!("{:.2}", t.throughput(2 * macs) / 1e9),
+        format!("{:.1}%", census.live_fraction() * 100.0),
+        format!("{:.2}%", sat.saturation_rate() * 100.0),
+        "1 (packed PoT)".to_string(),
+    ]);
+    tb.print();
+
+    if let Some(path) = args.str_flag("json") {
+        use mftrain::util::json::Json;
+        use std::collections::BTreeMap;
+        let mut o = BTreeMap::new();
+        o.insert("engine".to_string(), Json::Str(engine.name().to_string()));
+        o.insert("shape".to_string(), Json::Str(format!("{m}x{k}x{n}")));
+        o.insert("bits".to_string(), Json::Num(bits as f64));
+        o.insert("mean_secs".to_string(), Json::Num(t.mean().as_secs_f64()));
+        o.insert("gmacs_per_s".to_string(), Json::Num(t.throughput(macs) / 1e9));
+        o.insert("live_mac_fraction".to_string(), Json::Num(census.live_fraction()));
+        o.insert("saturation_rate".to_string(), Json::Num(sat.saturation_rate()));
+        o.insert("bytes_per_elem".to_string(), Json::Num(1.0));
+        std::fs::write(path, Json::Obj(o).to_string())?;
+        println!("json -> {path}");
+    }
     Ok(())
 }
 

@@ -1,0 +1,595 @@
+//! Pluggable MF-MAC kernel engines over packed [`PotTensor`] operands.
+//!
+//! One abstraction, three implementations:
+//!  * [`ScalarEngine`] — the seed's naive i-j-p loops, kept as the
+//!    bit-exact reference.
+//!  * [`BlockedEngine`] — cache-tiled over m/n/k with a 256-entry pow2
+//!    LUT indexed by the packed code sum and wide tile accumulators.
+//!  * [`ThreadedEngine`] — row-band parallelism (`std::thread::scope`)
+//!    on top of the blocked kernel.
+//!
+//! All engines accumulate each output lane as an *exact* integer sum of
+//! signed power-of-two terms (fixed point at 2^(beta_x + beta_w - 2*emax))
+//! and convert to f32 through one shared rounding path — integer addition
+//! is associative, so every tiling/threading schedule produces bit-identical
+//! output. That is the property the cross-engine equivalence tests pin.
+//!
+//! The LUT trick: a packed code is `sign<<7 | (32 + e + emax)` with 0 as
+//! the zero code (quantize.rs). For codes cx, cw the index
+//! `((cx ^ cw) & 0x80) + (cx & 0x7F) + (cw & 0x7F)` is at most 252 and
+//! decodes the full signed product term: the magnitude sum lands in
+//! [64, 124] iff both operands are nonzero, so entries below 64 are zero
+//! and zero operands cost nothing — no branch in the inner loop.
+
+use super::quantize::{pot_emax, PotTensor, MAG_MASK, MAG_OFFSET, SIGN_BIT};
+
+/// Saturation behaviour of the hardware INT32 accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct SaturationReport {
+    /// dot-product lanes whose running sum left the INT32 range
+    pub saturated_lanes: usize,
+    pub total_lanes: usize,
+    /// worst |accumulator| value observed, in accumulator LSBs
+    pub peak_magnitude: i64,
+}
+
+impl SaturationReport {
+    pub fn saturation_rate(&self) -> f64 {
+        if self.total_lanes == 0 {
+            0.0
+        } else {
+            self.saturated_lanes as f64 / self.total_lanes as f64
+        }
+    }
+}
+
+/// A multiplication-free matmul kernel over packed PoT operands.
+///
+/// `x` is (m,k) row-major, `w` is (k,n) row-major; both must carry 2-D
+/// shapes and the same bit width. Implementations must be bit-exact with
+/// [`ScalarEngine`] on both entry points.
+pub trait MacEngine: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Exact log-domain accumulate (the paper's real-number semantics).
+    fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32>;
+
+    /// Hardware-faithful INT32-saturating fixed-point accumulate.
+    fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport);
+}
+
+/// Validate operand shapes/bit widths and return (m, k, n).
+fn dims2(x: &PotTensor, w: &PotTensor) -> (usize, usize, usize) {
+    assert_eq!(x.shape().len(), 2, "x must be 2-D, got shape {:?}", x.shape());
+    assert_eq!(w.shape().len(), 2, "w must be 2-D, got shape {:?}", w.shape());
+    assert_eq!(x.bits, w.bits, "operand bit widths differ");
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "inner dims differ: x is {m}x{k}, w is {k2}x{n}");
+    (m, k, n)
+}
+
+/// 2^e as f64 (f64's exponent range covers every reachable scale).
+fn pow2_f64(e: i32) -> f64 {
+    (2f64).powi(e)
+}
+
+/// The one shared integer-accumulator -> f32 rounding path. Every engine
+/// must go through this so results stay bit-identical across schedules.
+#[inline]
+fn finish(acc: i128, scale: f64) -> f32 {
+    (acc as f64 * scale) as f32
+}
+
+/// Fixed-point output scale 2^(beta_x + beta_w - 2*emax): the accumulator
+/// LSB is 2^(-2*emax) relative to the shifted block, exactly as in the
+/// seed's `mfmac_accumulate_i64` model.
+fn lane_scale(x: &PotTensor, w: &PotTensor) -> f64 {
+    pow2_f64(x.beta + w.beta - 2 * pot_emax(x.bits))
+}
+
+/// 256-entry signed pow2 LUT indexed by the packed code sum (see module
+/// docs). Entries are term values in accumulator LSBs: +/- 2^(magsum-64)
+/// for live magnitude sums, 0 for any sum involving a zero code.
+fn pow2_lut() -> [i64; 256] {
+    let mut lut = [0i64; 256];
+    for magsum in 64..128usize {
+        let shift = (magsum - 64) as u32;
+        if shift <= 62 {
+            lut[magsum] = 1i64 << shift;
+            lut[128 + magsum] = -(1i64 << shift);
+        }
+    }
+    lut
+}
+
+#[inline]
+fn lut_index(cx: u8, cw: u8) -> usize {
+    (((cx ^ cw) & SIGN_BIT) as usize) + ((cx & MAG_MASK) as usize) + ((cw & MAG_MASK) as usize)
+}
+
+// ---------------------------------------------------------------------------
+// kernel implementations (shared by the engine impls and the mfmac wrappers)
+// ---------------------------------------------------------------------------
+
+/// Naive i-j-p reference kernel: unpack-free shifts off the magnitude
+/// fields, exact i128 accumulation.
+pub(crate) fn matmul_scalar_impl(
+    x: &PotTensor,
+    w: &PotTensor,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let scale = lane_scale(x, w);
+    let (xc, wc) = (x.codes(), w.codes());
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc: i128 = 0;
+            for p in 0..k {
+                let cx = xc[i * k + p];
+                let cw = wc[p * n + j];
+                let (mx, mw) = ((cx & MAG_MASK) as i32, (cw & MAG_MASK) as i32);
+                if mx == 0 || mw == 0 {
+                    continue;
+                }
+                // INT4 exponent add + 1-bit sign XOR, fixed point at
+                // 2^-2emax: magsum - 2*MAG_OFFSET == ex + ew + 2*emax >= 0
+                let term = 1i128 << (mx + mw - 2 * MAG_OFFSET) as u32;
+                acc += if (cx ^ cw) & SIGN_BIT != 0 { -term } else { term };
+            }
+            out[i * n + j] = finish(acc, scale);
+        }
+    }
+    out
+}
+
+/// Cache-tiled kernel over a row band [i0, i1) of x, writing into
+/// `out_band` (length (i1-i0)*n). i-p-j inner order: the w row and the
+/// accumulator row stream contiguously; k/n tiling keeps both panels hot.
+#[allow(clippy::too_many_arguments)]
+fn matmul_blocked_band(
+    x: &PotTensor,
+    w: &PotTensor,
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    tiles: (usize, usize, usize),
+    out_band: &mut [f32],
+) {
+    let (mc, kc, nc) = tiles;
+    let band = i1 - i0;
+    debug_assert_eq!(out_band.len(), band * n);
+    if band == 0 || n == 0 {
+        return;
+    }
+    let scale = lane_scale(x, w);
+    let lut = pow2_lut();
+    let (xc, wc) = (x.codes(), w.codes());
+    let mut acc = vec![0i128; band * n];
+    for jc in (0..n).step_by(nc.max(1)) {
+        let je = (jc + nc).min(n);
+        for pc in (0..k).step_by(kc.max(1)) {
+            let pe = (pc + kc).min(k);
+            for ic in (i0..i1).step_by(mc.max(1)) {
+                let ie = (ic + mc).min(i1);
+                for i in ic..ie {
+                    let xrow = &xc[i * k..i * k + k];
+                    let arow = &mut acc[(i - i0) * n + jc..(i - i0) * n + je];
+                    for p in pc..pe {
+                        let cx = xrow[p];
+                        if cx & MAG_MASK == 0 {
+                            continue; // zero x code: whole row of terms is 0
+                        }
+                        let wrow = &wc[p * n + jc..p * n + je];
+                        for (a, &cw) in arow.iter_mut().zip(wrow) {
+                            *a += lut[lut_index(cx, cw)] as i128;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for (o, &a) in out_band.iter_mut().zip(acc.iter()) {
+        *o = finish(a, scale);
+    }
+}
+
+/// INT32-saturating fixed-point kernel over a row band [i0, i1).
+///
+/// The running clamp makes this model order-sensitive, so there is exactly
+/// one schedule: ascending p per lane (the seed's reference order). Tiling
+/// buys nothing under the per-step clamp + peak bookkeeping; band
+/// parallelism stays bit-exact because lanes are independent and the
+/// report merge (sum lanes, max peak) is order-free.
+pub(crate) fn saturating_band(
+    x: &PotTensor,
+    w: &PotTensor,
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    out_band: &mut [f32],
+) -> SaturationReport {
+    let scale = lane_scale(x, w);
+    let (xc, wc) = (x.codes(), w.codes());
+    let mut rep = SaturationReport {
+        total_lanes: (i1 - i0) * n,
+        ..Default::default()
+    };
+    for i in i0..i1 {
+        for j in 0..n {
+            let mut acc: i64 = 0;
+            let mut sat = false;
+            for p in 0..k {
+                let cx = xc[i * k + p];
+                let cw = wc[p * n + j];
+                let (mx, mw) = ((cx & MAG_MASK) as i32, (cw & MAG_MASK) as i32);
+                if mx == 0 || mw == 0 {
+                    continue;
+                }
+                let term = 1i64 << (mx + mw - 2 * MAG_OFFSET) as u32;
+                acc += if (cx ^ cw) & SIGN_BIT != 0 { -term } else { term };
+                if acc > i32::MAX as i64 || acc < i32::MIN as i64 {
+                    sat = true;
+                    acc = acc.clamp(i32::MIN as i64, i32::MAX as i64);
+                }
+                rep.peak_magnitude = rep.peak_magnitude.max(acc.abs());
+            }
+            if sat {
+                rep.saturated_lanes += 1;
+            }
+            out_band[(i - i0) * n + j] = finish(acc as i128, scale);
+        }
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// engines
+// ---------------------------------------------------------------------------
+
+/// The seed's naive scalar loops — the bit-exact reference.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarEngine;
+
+impl MacEngine for ScalarEngine {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
+        let (m, k, n) = dims2(x, w);
+        matmul_scalar_impl(x, w, m, k, n)
+    }
+
+    fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
+        let (m, k, n) = dims2(x, w);
+        let mut out = vec![0f32; m * n];
+        let rep = saturating_band(x, w, k, n, 0, m, &mut out);
+        (out, rep)
+    }
+}
+
+/// Cache-tiled single-thread kernel (m/n/k tiles + the code-sum LUT).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockedEngine {
+    /// m-tile: output rows kept hot per k-panel pass
+    pub mc: usize,
+    /// k-tile: x/w panel depth per pass
+    pub kc: usize,
+    /// n-tile: output columns per pass (accumulator + w row segment)
+    pub nc: usize,
+}
+
+impl Default for BlockedEngine {
+    fn default() -> Self {
+        // u8 operands: a 64x256 x panel is 16 KiB, a 256x512 w panel is
+        // 128 KiB — both L2-resident on any target this runs on.
+        BlockedEngine { mc: 64, kc: 256, nc: 512 }
+    }
+}
+
+impl BlockedEngine {
+    pub fn with_tiles(mc: usize, kc: usize, nc: usize) -> Self {
+        BlockedEngine { mc: mc.max(1), kc: kc.max(1), nc: nc.max(1) }
+    }
+}
+
+impl MacEngine for BlockedEngine {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
+        let (m, k, n) = dims2(x, w);
+        let mut out = vec![0f32; m * n];
+        matmul_blocked_band(x, w, k, n, 0, m, (self.mc, self.kc, self.nc), &mut out);
+        out
+    }
+
+    fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
+        let (m, k, n) = dims2(x, w);
+        let mut out = vec![0f32; m * n];
+        let rep = saturating_band(x, w, k, n, 0, m, &mut out);
+        (out, rep)
+    }
+}
+
+/// Row-band parallelism over the blocked kernel (`--threads N`).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadedEngine {
+    /// worker count; 0 = one per available core
+    pub threads: usize,
+    pub inner: BlockedEngine,
+}
+
+impl Default for ThreadedEngine {
+    fn default() -> Self {
+        ThreadedEngine { threads: 0, inner: BlockedEngine::default() }
+    }
+}
+
+impl ThreadedEngine {
+    pub fn new(threads: usize) -> Self {
+        ThreadedEngine { threads, ..Default::default() }
+    }
+
+    fn worker_count(&self, rows: usize) -> usize {
+        let t = if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        };
+        t.clamp(1, rows.max(1))
+    }
+
+    /// Split [0, m) into per-worker row bands and run `f` on each band's
+    /// disjoint output chunk in a scoped thread.
+    fn run_bands<F>(&self, m: usize, n: usize, out: &mut [f32], f: F)
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        let workers = self.worker_count(m);
+        let band = (m + workers - 1) / workers.max(1);
+        if workers <= 1 || m == 0 || n == 0 {
+            f(0, m, out);
+            return;
+        }
+        std::thread::scope(|s| {
+            for (b, chunk) in out.chunks_mut(band * n).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    let i0 = b * band;
+                    let i1 = (i0 + band).min(m);
+                    f(i0, i1, chunk);
+                });
+            }
+        });
+    }
+}
+
+impl MacEngine for ThreadedEngine {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
+        let (m, k, n) = dims2(x, w);
+        let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
+        let mut out = vec![0f32; m * n];
+        self.run_bands(m, n, &mut out, |i0, i1, chunk| {
+            matmul_blocked_band(x, w, k, n, i0, i1, tiles, chunk);
+        });
+        out
+    }
+
+    fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
+        // mirrors run_bands, but joins handles to collect per-band reports;
+        // keep the band math here and in run_bands in lockstep
+        let (m, k, n) = dims2(x, w);
+        let workers = self.worker_count(m);
+        let band = ((m + workers - 1) / workers.max(1)).max(1);
+        let mut out = vec![0f32; m * n];
+        let mut reports: Vec<SaturationReport> = Vec::new();
+        if workers <= 1 || m == 0 || n == 0 {
+            let rep = saturating_band(x, w, k, n, 0, m, &mut out);
+            return (out, rep);
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = out
+                .chunks_mut(band * n)
+                .enumerate()
+                .map(|(b, chunk)| {
+                    s.spawn(move || {
+                        let i0 = b * band;
+                        let i1 = (i0 + band).min(m);
+                        saturating_band(x, w, k, n, i0, i1, chunk)
+                    })
+                })
+                .collect();
+            for h in handles {
+                reports.push(h.join().expect("saturating worker panicked"));
+            }
+        });
+        let mut rep = SaturationReport::default();
+        for r in reports {
+            rep.saturated_lanes += r.saturated_lanes;
+            rep.total_lanes += r.total_lanes;
+            rep.peak_magnitude = rep.peak_magnitude.max(r.peak_magnitude);
+        }
+        (out, rep)
+    }
+}
+
+/// Engine registry for the CLI / benches.
+pub const ENGINE_NAMES: [&str; 3] = ["scalar", "blocked", "threaded"];
+
+/// Look up an engine by name. `threads` only affects "threaded" (0 = one
+/// worker per core).
+pub fn engine_by_name(name: &str, threads: usize) -> Option<Box<dyn MacEngine + Send>> {
+    match name {
+        "scalar" => Some(Box::new(ScalarEngine)),
+        "blocked" => Some(Box::new(BlockedEngine::default())),
+        "threaded" => Some(Box::new(ThreadedEngine::new(threads))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potq::PotTensor;
+    use crate::util::prng::Pcg32;
+
+    fn rand_tensor(seed: u64, rows: usize, cols: usize, std: f32, b: u32) -> PotTensor {
+        let mut r = Pcg32::new(seed);
+        let mut v = vec![0f32; rows * cols];
+        r.fill_normal(&mut v, 0.0, std);
+        PotTensor::quantize_2d(&v, rows, cols, b, None)
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], label: &str) {
+        assert_eq!(a.len(), b.len(), "{label}: length");
+        for (i, (p, q)) in a.iter().zip(b).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{label}[{i}]: {p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn lut_matches_shift_decode() {
+        let lut = pow2_lut();
+        for b in [3u32, 4, 5, 6] {
+            let emax = pot_emax(b);
+            for ex in -emax..=emax {
+                for ew in -emax..=emax {
+                    for (sx, sw) in [(0u8, 0u8), (0, 1), (1, 0), (1, 1)] {
+                        let cx = crate::potq::pack_code(ex, sx, emax);
+                        let cw = crate::potq::pack_code(ew, sw, emax);
+                        let got = lut[lut_index(cx, cw)];
+                        let want = {
+                            let v = 1i64 << (ex + ew + 2 * emax) as u32;
+                            if (sx ^ sw) == 1 {
+                                -v
+                            } else {
+                                v
+                            }
+                        };
+                        assert_eq!(got, want, "b={b} ex={ex} ew={ew} sx={sx} sw={sw}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_zero_dead_zone() {
+        let lut = pow2_lut();
+        let emax = pot_emax(5);
+        let zero = crate::potq::pack_code(crate::potq::ZERO_CODE, 0, emax);
+        for e in -emax..=emax {
+            for s in [0u8, 1] {
+                let c = crate::potq::pack_code(e, s, emax);
+                assert_eq!(lut[lut_index(zero, c)], 0);
+                assert_eq!(lut[lut_index(c, zero)], 0);
+            }
+        }
+        assert_eq!(lut[lut_index(zero, zero)], 0);
+    }
+
+    #[test]
+    fn engines_bit_exact_on_random_shapes() {
+        let shapes = [(1usize, 1usize, 1usize), (3, 17, 5), (8, 64, 8), (33, 40, 31)];
+        for (idx, &(m, k, n)) in shapes.iter().enumerate() {
+            for b in [4u32, 5] {
+                let x = rand_tensor(100 + idx as u64, m, k, 0.5, b);
+                let w = rand_tensor(200 + idx as u64, k, n, 0.02, b);
+                let ys = ScalarEngine.matmul(&x, &w);
+                let yb = BlockedEngine::with_tiles(5, 7, 3).matmul(&x, &w);
+                let yt = ThreadedEngine::new(3).matmul(&x, &w);
+                assert_bits_eq(&ys, &yb, "scalar vs blocked");
+                assert_bits_eq(&ys, &yt, "scalar vs threaded");
+            }
+        }
+    }
+
+    #[test]
+    fn engines_bit_exact_on_saturating_path() {
+        let (m, k, n) = (9, 48, 7);
+        // max-magnitude operands force saturation (every term 2^(4emax))
+        let ones_x = vec![1.0f32; m * k];
+        let ones_w = vec![1.0f32; k * n];
+        let x = PotTensor::quantize_2d(&ones_x, m, k, 5, None);
+        let w = PotTensor::quantize_2d(&ones_w, k, n, 5, None);
+        let (ys, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
+        let (yb, rb) = BlockedEngine::default().matmul_i32_saturating(&x, &w);
+        let (yt, rt) = ThreadedEngine::new(4).matmul_i32_saturating(&x, &w);
+        assert!(rs.saturated_lanes > 0, "expected saturation");
+        assert_bits_eq(&ys, &yb, "sat scalar vs blocked");
+        assert_bits_eq(&ys, &yt, "sat scalar vs threaded");
+        assert_eq!(rs.saturated_lanes, rb.saturated_lanes);
+        assert_eq!(rs.saturated_lanes, rt.saturated_lanes);
+        assert_eq!(rs.total_lanes, rt.total_lanes);
+        assert_eq!(rs.peak_magnitude, rt.peak_magnitude);
+    }
+
+    #[test]
+    fn k_zero_gives_zero_output() {
+        let x = PotTensor::quantize_2d(&[], 4, 0, 5, None);
+        let w = PotTensor::quantize_2d(&[], 0, 6, 5, None);
+        for eng in [
+            Box::new(ScalarEngine) as Box<dyn MacEngine>,
+            Box::new(BlockedEngine::default()),
+            Box::new(ThreadedEngine::new(2)),
+        ] {
+            let y = eng.matmul(&x, &w);
+            assert_eq!(y.len(), 24, "{}", eng.name());
+            assert!(y.iter().all(|&v| v == 0.0), "{}", eng.name());
+        }
+    }
+
+    #[test]
+    fn extreme_beta_shift_is_finite() {
+        // regression for the out-of-range shift hazard: two gradient-scale
+        // blocks have beta ~ -140 each; the combined scale exponent is far
+        // below f32's range and used to trip pow2i's debug_assert
+        let (m, k, n) = (4, 16, 4);
+        let mut r = Pcg32::new(7);
+        let mut g1 = vec![0f32; m * k];
+        let mut g2 = vec![0f32; k * n];
+        r.fill_normal(&mut g1, 0.0, 1e-38);
+        r.fill_normal(&mut g2, 0.0, 1e-38);
+        let x = PotTensor::quantize_2d(&g1, m, k, 5, None);
+        let w = PotTensor::quantize_2d(&g2, k, n, 5, None);
+        assert!(x.beta + w.beta < -140, "betas {} {}", x.beta, w.beta);
+        for y in ScalarEngine.matmul(&x, &w) {
+            assert!(y.is_finite());
+        }
+        let (y, _) = ScalarEngine.matmul_i32_saturating(&x, &w);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn engine_by_name_registry() {
+        for name in ENGINE_NAMES {
+            assert_eq!(engine_by_name(name, 2).unwrap().name(), name);
+        }
+        assert!(engine_by_name("gpu", 1).is_none());
+    }
+
+    #[test]
+    fn threaded_band_split_covers_all_rows() {
+        // m not divisible by workers, workers > m, single row
+        for (m, threads) in [(7usize, 3usize), (2, 8), (1, 4), (16, 4)] {
+            let x = rand_tensor(m as u64, m, 12, 1.0, 5);
+            let w = rand_tensor(99, 12, 5, 0.1, 5);
+            let ys = ScalarEngine.matmul(&x, &w);
+            let yt = ThreadedEngine::new(threads).matmul(&x, &w);
+            assert_bits_eq(&ys, &yt, "band split");
+        }
+    }
+}

@@ -1,138 +1,65 @@
 //! MF-MAC: the paper's multiplication-free multiply-accumulate (Figure 5).
 //!
-//! Two models are provided:
-//!  * `mfmac_matmul` — the canonical real-number semantics (what the JAX
-//!    L2 path computes): exact signed powers of two accumulated in f32.
-//!  * `mfmac_accumulate_i64` — the hardware-faithful fixed-point model:
-//!    INT4 exponent add + XOR sign + integer accumulation at fixed-point
-//!    scale 2^(2*(beta-emax)), with an INT32 saturation report. This is
-//!    what the ASIC's INT32 accumulator would do; the report quantifies
-//!    when the paper's (unstated) no-overflow assumption holds.
+//! These are the stable convenience entry points; the kernels themselves
+//! live behind the [`MacEngine`](super::engine::MacEngine) trait
+//! (scalar / blocked / threaded). Two semantics are provided:
+//!  * `mfmac_matmul` / `mfmac_matmul_quantized` — the canonical
+//!    real-number semantics (what the JAX L2 path computes): INT4
+//!    exponent add + XOR sign, accumulated *exactly* (integer fixed
+//!    point), one scalar shift by beta_x + beta_w at the end.
+//!  * `mfmac_accumulate_i64` — the hardware-faithful model: the same
+//!    terms pushed through a saturating INT32 accumulator, with a
+//!    report quantifying when the paper's (unstated) no-overflow
+//!    assumption holds.
 
-use super::quantize::{pot_emax, pot_quantize, pow2i, PotBlock, ZERO_CODE};
+use super::engine::{matmul_scalar_impl, saturating_band, MacEngine, SaturationReport, ScalarEngine};
+use super::quantize::PotTensor;
 
 /// Full MF-MAC matmul on raw f32 operands: quantize both with ALS-PoTQ,
 /// then exact log-domain accumulate. x is (m,k) row-major, w is (k,n).
 pub fn mfmac_matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, b: u32) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
-    let xb = pot_quantize(x, b, None);
-    let wb = pot_quantize(w, b, None);
-    mfmac_matmul_quantized(&xb, &wb, m, k, n)
+    let xb = PotTensor::quantize_2d(x, m, k, b, None);
+    let wb = PotTensor::quantize_2d(w, k, n, b, None);
+    ScalarEngine.matmul(&xb, &wb)
 }
 
-/// MF-MAC matmul over pre-quantized blocks. For each output element:
-/// INT4 exponent adds + sign XORs, accumulated as exact signed powers of
-/// two, then one scalar "shift" by beta_x + beta_w (the dequantization).
+/// MF-MAC matmul over pre-quantized packed tensors (reference schedule).
+/// Accepts 1-D tensors of the right length for backward compatibility
+/// with callers that pass dims explicitly.
 pub fn mfmac_matmul_quantized(
-    xb: &PotBlock,
-    wb: &PotBlock,
+    xb: &PotTensor,
+    wb: &PotTensor,
     m: usize,
     k: usize,
     n: usize,
 ) -> Vec<f32> {
-    assert_eq!(xb.len(), m * k);
-    assert_eq!(wb.len(), k * n);
-    let shift = pow2i(xb.beta + wb.beta);
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            let mut acc = 0f32;
-            for p in 0..k {
-                let ex = xb.e[i * k + p];
-                let ew = wb.e[p * n + j];
-                if ex == ZERO_CODE || ew == ZERO_CODE {
-                    continue;
-                }
-                // INT4 add + 1-bit XOR, materialized as a signed PoT
-                let e = ex + ew;
-                let s = xb.s[i * k + p] ^ wb.s[p * n + j];
-                let v = pow2i(e);
-                acc += if s == 1 { -v } else { v };
-            }
-            out[i * n + j] = acc * shift;
-        }
-    }
-    out
+    assert_eq!(xb.bits, wb.bits);
+    matmul_scalar_impl(xb, wb, m, k, n)
 }
 
-/// Saturation behaviour of the hardware INT32 accumulator.
-#[derive(Clone, Debug, Default)]
-pub struct SaturationReport {
-    /// dot-product lanes whose running sum left the INT32 range
-    pub saturated_lanes: usize,
-    pub total_lanes: usize,
-    /// worst |accumulator| value observed, in accumulator LSBs
-    pub peak_magnitude: i64,
-}
-
-impl SaturationReport {
-    pub fn saturation_rate(&self) -> f64 {
-        if self.total_lanes == 0 {
-            0.0
-        } else {
-            self.saturated_lanes as f64 / self.total_lanes as f64
-        }
-    }
-}
-
-/// Fixed-point INT32-accumulator model of one MF-MAC matmul.
-///
-/// Exponent sums span [-2*emax, 2*emax]; the accumulator LSB is
-/// 2^(-2*emax) relative to the shifted block, so each term contributes
-/// +/- 2^(e_sum + 2*emax) in LSBs (1 ..= 2^(4*emax)). The running sum is
-/// clamped to INT32 as the hardware would.
+/// Fixed-point INT32-accumulator model of one MF-MAC matmul (reference
+/// schedule). See [`SaturationReport`].
 pub fn mfmac_accumulate_i64(
-    xb: &PotBlock,
-    wb: &PotBlock,
+    xb: &PotTensor,
+    wb: &PotTensor,
     m: usize,
     k: usize,
     n: usize,
 ) -> (Vec<f32>, SaturationReport) {
     assert_eq!(xb.bits, wb.bits);
-    let emax = pot_emax(xb.bits);
-    let mut rep = SaturationReport { total_lanes: m * n, ..Default::default() };
-    // final scale: 2^(beta_x + beta_w - 2*emax)
-    let scale_e = xb.beta + wb.beta - 2 * emax;
+    assert_eq!(xb.len(), m * k);
+    assert_eq!(wb.len(), k * n);
     let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            let mut acc: i64 = 0;
-            let mut sat = false;
-            for p in 0..k {
-                let ex = xb.e[i * k + p];
-                let ew = wb.e[p * n + j];
-                if ex == ZERO_CODE || ew == ZERO_CODE {
-                    continue;
-                }
-                let term = 1i64 << (ex + ew + 2 * emax) as u32;
-                let s = xb.s[i * k + p] ^ wb.s[p * n + j];
-                acc += if s == 1 { -term } else { term };
-                if acc > i32::MAX as i64 || acc < i32::MIN as i64 {
-                    sat = true;
-                    acc = acc.clamp(i32::MIN as i64, i32::MAX as i64);
-                }
-                rep.peak_magnitude = rep.peak_magnitude.max(acc.abs());
-            }
-            if sat {
-                rep.saturated_lanes += 1;
-            }
-            // scalar shift (dequantization). scale_e can leave f32's
-            // exponent range for pathological betas; use powi fallback.
-            let scale = if (-126..=127).contains(&scale_e) {
-                pow2i(scale_e)
-            } else {
-                (2f64).powi(scale_e) as f32
-            };
-            out[i * n + j] = acc as f32 * scale;
-        }
-    }
+    let rep = saturating_band(xb, wb, k, n, 0, m, &mut out);
     (out, rep)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::potq::pot_quantize;
     use crate::util::prng::Pcg32;
 
     fn rand_mat(r: &mut Pcg32, len: usize, std: f32) -> Vec<f32> {
@@ -197,7 +124,20 @@ mod tests {
     }
 
     #[test]
-    fn i64_accumulator_matches_f32_when_unsaturated() {
+    fn quantized_wrapper_accepts_flat_tensors() {
+        let mut r = Pcg32::new(5);
+        let (m, k, n) = (6, 12, 4);
+        let x = rand_mat(&mut r, m * k, 0.4);
+        let w = rand_mat(&mut r, k * n, 0.05);
+        let xb = pot_quantize(&x, 5, None); // 1-D shape
+        let wb = pot_quantize(&w, 5, None);
+        let y1 = mfmac_matmul_quantized(&xb, &wb, m, k, n);
+        let y2 = mfmac_matmul(&x, &w, m, k, n, 5);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn i64_accumulator_matches_exact_when_unsaturated() {
         let mut r = Pcg32::new(2);
         let (m, k, n) = (8, 16, 8);
         let x = rand_mat(&mut r, m * k, 0.5);
@@ -237,5 +177,17 @@ mod tests {
         let wb = pot_quantize(&w, 5, None);
         let (_, rep) = mfmac_accumulate_i64(&xb, &wb, m, k, n);
         assert_eq!(rep.saturation_rate(), 0.0);
+    }
+
+    #[test]
+    fn gradient_scale_betas_do_not_overflow_the_shift() {
+        // regression (satellite): pow2i(beta_x + beta_w) used to hit a
+        // debug_assert when both operands are gradient-scale blocks
+        let mut r = Pcg32::new(4);
+        let (m, k, n) = (4, 8, 4);
+        let x = rand_mat(&mut r, m * k, 1e-30);
+        let w = rand_mat(&mut r, k * n, 1e-30);
+        let y = mfmac_matmul(&x, &w, m, k, n, 5);
+        assert!(y.iter().all(|v| v.is_finite()));
     }
 }

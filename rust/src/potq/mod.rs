@@ -6,14 +6,25 @@
 //! construction from bits. The cross-validation test (tests/potq_cross.rs)
 //! executes the AOT-lowered quantizer through PJRT and asserts
 //! element-exact agreement with this module.
+//!
+//! Layout: [`quantize`] owns the packed [`PotTensor`] format (one code
+//! byte per element), [`engine`] owns the pluggable [`MacEngine`] kernels
+//! (scalar reference / cache-blocked / threaded), [`mfmac`] keeps the
+//! stable convenience entry points on top.
 
+pub mod engine;
 mod mfmac;
 mod quantize;
 
-pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized, SaturationReport};
+pub use engine::{
+    engine_by_name, BlockedEngine, MacEngine, SaturationReport, ScalarEngine, ThreadedEngine,
+    ENGINE_NAMES,
+};
+pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized};
 pub use quantize::{
-    compute_beta, pot_dequantize, pot_emax, pot_quantize, pot_value, round_log2_abs,
-    PotBlock, SQRT2_F32, ZERO_CODE,
+    compute_beta, pack_code, pot_dequantize, pot_emax, pot_quantize, pot_quantize_one, pot_value,
+    pow2i, pow2i_saturating, round_log2_abs, unpack_code, PotTensor, MAG_MASK, MAG_OFFSET,
+    SIGN_BIT, SQRT2_F32, ZERO_CODE,
 };
 
 /// Weight Bias Correction (paper eq. 11): subtract the mean.

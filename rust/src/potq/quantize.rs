@@ -1,14 +1,57 @@
 //! ALS-PoTQ quantization (paper §4.1), bit-exact vs the JAX implementation.
+//!
+//! The quantized representation is the packed [`PotTensor`]: one `u8`
+//! code per element (4-bit exponent nibble + sign bit + a reserved zero
+//! code) instead of the seed's parallel `Vec<i32>` exponent / `Vec<u8>`
+//! sign planes (9 bytes/elem). The packing is what makes the MF-MAC
+//! kernels bandwidth- and cache-friendly; see `potq::engine`.
 
 /// f32 closest to sqrt(2): the log-domain rounding boundary (0x3FB504F3).
 pub const SQRT2_F32: f32 = f32::from_bits(0x3FB504F3);
 
-/// Exponent code meaning "value is zero".
+/// Exponent code meaning "value is zero" (unpacked representation).
 pub const ZERO_CODE: i32 = -128;
+
+/// Sign bit of a packed code.
+pub const SIGN_BIT: u8 = 0x80;
+
+/// Magnitude field of a packed code (bits 0-6).
+pub const MAG_MASK: u8 = 0x7F;
+
+/// Offset added to the biased exponent inside the magnitude field.
+///
+/// A nonzero element with exponent `e in [-emax, emax]` stores
+/// `MAG_OFFSET + e + emax` in bits 0-6; the zero code stores 0. The +32
+/// offset puts every nonzero magnitude in [32, 62], so the *sum* of two
+/// magnitude fields is >= 64 iff both operands are nonzero — the MF-MAC
+/// LUT (engine.rs) decodes a whole product term from one code sum and
+/// zero operands fall into the [0, 63] dead zone with no branch.
+pub const MAG_OFFSET: i32 = 32;
 
 /// Largest exponent magnitude representable by a b-bit PoT number.
 pub fn pot_emax(b: u32) -> i32 {
     (1i32 << (b - 2)) - 1
+}
+
+/// Pack an unpacked (exponent, sign) pair into one code byte.
+/// `e` must be ZERO_CODE or within [-emax, emax].
+#[inline]
+pub fn pack_code(e: i32, s: u8, emax: i32) -> u8 {
+    if e == ZERO_CODE {
+        return 0;
+    }
+    debug_assert!((1..=15).contains(&emax), "emax {emax} exceeds the packed format");
+    debug_assert!((-emax..=emax).contains(&e), "exponent {e} out of [-{emax}, {emax}]");
+    ((s & 1) << 7) | (MAG_OFFSET + e + emax) as u8
+}
+
+/// Unpack one code byte into (exponent-or-ZERO_CODE, sign).
+#[inline]
+pub fn unpack_code(c: u8, emax: i32) -> (i32, u8) {
+    if c & MAG_MASK == 0 {
+        return (ZERO_CODE, 0);
+    }
+    ((c & MAG_MASK) as i32 - MAG_OFFSET - emax, (c >> 7) & 1)
 }
 
 /// `(round(log2 |x|), is_zero)` — exact bit-level contract.
@@ -31,6 +74,22 @@ pub fn pow2i(e: i32) -> f32 {
     f32::from_bits(((e + 127) as u32) << 23)
 }
 
+/// 2^e clamped to f32's finite normal range: exponents above 127 saturate
+/// to f32::MAX, exponents below -126 flush to 0.0. Unlike [`pow2i`] this
+/// never hits a debug_assert (or produces garbage bits in release) when a
+/// combined scale exponent leaves [-126, 127] — e.g. the `beta_x + beta_w`
+/// shift of two gradient-scale blocks, or `e + beta` during dequantize of
+/// near-subnormal data.
+pub fn pow2i_saturating(e: i32) -> f32 {
+    if e > 127 {
+        f32::MAX
+    } else if e < -126 {
+        0.0
+    } else {
+        pow2i(e)
+    }
+}
+
 /// Layer-wise scale exponent beta = round(log2(max|F| / 2^emax)) (eq. 7+10).
 pub fn compute_beta(f: &[f32], b: u32) -> i32 {
     let amax = f.iter().fold(0f32, |m, &v| m.max(v.abs()));
@@ -42,30 +101,154 @@ pub fn compute_beta(f: &[f32], b: u32) -> i32 {
     }
 }
 
-/// A quantized block: exponents (ZERO_CODE for zeros), sign bits, and the
-/// shared block scale exponent beta.
+/// A packed quantized tensor: one code byte per element plus shape/stride
+/// metadata, the shared block scale exponent beta, and the bit width.
+///
+/// Storage is exactly `len()` bytes (vs 9 bytes/elem for the seed's
+/// unpacked planes) — the operand format the paper's 4-bit + sign claim
+/// actually implies, and the format every `MacEngine` kernel consumes.
 #[derive(Clone, Debug, PartialEq)]
-pub struct PotBlock {
-    pub e: Vec<i32>,
-    pub s: Vec<u8>,
+pub struct PotTensor {
+    codes: Vec<u8>,
+    shape: Vec<usize>,
+    /// row-major element strides matching `shape`
+    strides: Vec<usize>,
     pub beta: i32,
     pub bits: u32,
 }
 
-impl PotBlock {
+fn row_major_strides(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+impl PotTensor {
+    /// ALS-PoTQ of a flat block into a 1-D tensor. `beta = None` computes
+    /// the adaptive layer-wise scale; `Some(0)` disables ALS (the Table 5
+    /// collapse column).
+    pub fn quantize(f: &[f32], b: u32, beta: Option<i32>) -> PotTensor {
+        // the packed magnitude field [32, 62] only holds emax <= 15
+        assert!((3..=6).contains(&b), "packed PoT codes support 3..=6 bits, got {b}");
+        let beta = beta.unwrap_or_else(|| compute_beta(f, b));
+        let emax = pot_emax(b);
+        let codes = f
+            .iter()
+            .map(|&x| {
+                let (e, s) = pot_quantize_one(x, b, beta);
+                pack_code(e, s, emax)
+            })
+            .collect();
+        PotTensor {
+            codes,
+            shape: vec![f.len()],
+            strides: vec![1],
+            beta,
+            bits: b,
+        }
+    }
+
+    /// Quantize a row-major (rows, cols) matrix.
+    pub fn quantize_2d(
+        f: &[f32],
+        rows: usize,
+        cols: usize,
+        b: u32,
+        beta: Option<i32>,
+    ) -> PotTensor {
+        assert_eq!(f.len(), rows * cols, "data length != rows*cols");
+        PotTensor::quantize(f, b, beta).with_shape(&[rows, cols])
+    }
+
+    /// Reinterpret with a new shape (same element count, row-major).
+    pub fn with_shape(mut self, shape: &[usize]) -> PotTensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.codes.len(),
+            "shape {shape:?} does not cover {} elements",
+            self.codes.len()
+        );
+        self.shape = shape.to_vec();
+        self.strides = row_major_strides(shape);
+        self
+    }
+
+    /// Build directly from packed codes (engine/test plumbing).
+    pub fn from_codes(codes: Vec<u8>, shape: &[usize], beta: i32, bits: u32) -> PotTensor {
+        assert_eq!(shape.iter().product::<usize>(), codes.len());
+        let strides = row_major_strides(shape);
+        PotTensor { codes, shape: shape.to_vec(), strides, beta, bits }
+    }
+
     pub fn len(&self) -> usize {
-        self.e.len()
+        self.codes.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.e.is_empty()
+        self.codes.is_empty()
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    /// Packed operand bytes — one per element.
+    pub fn bytes(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn emax(&self) -> i32 {
+        pot_emax(self.bits)
+    }
+
+    /// Raw packed codes (row-major).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// Packed code at flat index i.
+    #[inline]
+    pub fn code(&self, i: usize) -> u8 {
+        self.codes[i]
+    }
+
+    /// Unpacked exponent at flat index i (ZERO_CODE for zeros).
+    #[inline]
+    pub fn exponent(&self, i: usize) -> i32 {
+        unpack_code(self.codes[i], self.emax()).0
+    }
+
+    /// Sign bit at flat index i (0 for zeros, matching the seed contract).
+    #[inline]
+    pub fn sign(&self, i: usize) -> u8 {
+        unpack_code(self.codes[i], self.emax()).1
+    }
+
+    /// Unpacked (exponent, sign) at flat index i.
+    #[inline]
+    pub fn get(&self, i: usize) -> (i32, u8) {
+        unpack_code(self.codes[i], self.emax())
+    }
+
+    /// Number of elements that did not quantize to the zero code.
+    pub fn count_nonzero(&self) -> usize {
+        self.codes.iter().filter(|&&c| c & MAG_MASK != 0).count()
     }
 
     pub fn dequantize(&self) -> Vec<f32> {
-        self.e
+        let emax = self.emax();
+        self.codes
             .iter()
-            .zip(&self.s)
-            .map(|(&e, &s)| pot_dequantize(e, s, self.beta))
+            .map(|&c| {
+                let (e, s) = unpack_code(c, emax);
+                pot_dequantize(e, s, self.beta)
+            })
             .collect()
     }
 }
@@ -85,26 +268,18 @@ pub fn pot_quantize_one(x: f32, b: u32, beta: i32) -> (i32, u8) {
     (e.min(emax), (x.to_bits() >> 31) as u8)
 }
 
-/// ALS-PoTQ of a block. `beta = None` computes the adaptive layer-wise
-/// scale; `Some(0)` disables ALS (the Table 5 collapse column).
-pub fn pot_quantize(f: &[f32], b: u32, beta: Option<i32>) -> PotBlock {
-    let beta = beta.unwrap_or_else(|| compute_beta(f, b));
-    let mut e = Vec::with_capacity(f.len());
-    let mut s = Vec::with_capacity(f.len());
-    for &x in f {
-        let (ei, si) = pot_quantize_one(x, b, beta);
-        e.push(ei);
-        s.push(si);
-    }
-    PotBlock { e, s, beta, bits: b }
+/// ALS-PoTQ of a block into a packed 1-D [`PotTensor`].
+pub fn pot_quantize(f: &[f32], b: u32, beta: Option<i32>) -> PotTensor {
+    PotTensor::quantize(f, b, beta)
 }
 
-/// Dequantize one element.
+/// Dequantize one element. The scale exponent `e + beta` can leave f32's
+/// range for near-subnormal blocks, so this saturates rather than UB.
 pub fn pot_dequantize(e: i32, s: u8, beta: i32) -> f32 {
     if e == ZERO_CODE {
         return 0.0;
     }
-    let mag = pow2i(e + beta);
+    let mag = pow2i_saturating(e + beta);
     if s == 1 {
         -mag
     } else {
@@ -153,6 +328,58 @@ mod tests {
     }
 
     #[test]
+    fn pow2i_saturating_clamps_out_of_range() {
+        // regression for the shift hazard: beta_x + beta_w of two
+        // gradient-scale blocks can leave [-126, 127]
+        assert_eq!(pow2i_saturating(-127), 0.0);
+        assert_eq!(pow2i_saturating(-300), 0.0);
+        assert_eq!(pow2i_saturating(128), f32::MAX);
+        assert_eq!(pow2i_saturating(400), f32::MAX);
+        // in range it is exactly pow2i
+        for e in [-126, -40, 0, 31, 127] {
+            assert_eq!(pow2i_saturating(e), pow2i(e));
+        }
+    }
+
+    #[test]
+    fn pack_unpack_all_codes() {
+        for b in [3u32, 4, 5, 6] {
+            let emax = pot_emax(b);
+            assert_eq!(unpack_code(pack_code(ZERO_CODE, 0, emax), emax), (ZERO_CODE, 0));
+            for e in -emax..=emax {
+                for s in [0u8, 1] {
+                    let c = pack_code(e, s, emax);
+                    assert_ne!(c & MAG_MASK, 0, "nonzero must not alias the zero code");
+                    // nonzero magnitude fields live in the LUT live zone
+                    assert!((32..=62).contains(&(c & MAG_MASK)), "mag field {}", c & MAG_MASK);
+                    assert_eq!(unpack_code(c, emax), (e, s), "b={b} e={e} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_storage_is_one_byte_per_element() {
+        let mut r = Pcg32::new(9);
+        let mut x = vec![0f32; 777];
+        r.fill_normal(&mut x, 0.0, 1.0);
+        let t = pot_quantize(&x, 5, None);
+        assert_eq!(t.bytes(), 777);
+        assert_eq!(t.len(), 777);
+        assert_eq!(std::mem::size_of_val(&t.codes()[0]) * t.len(), 777);
+    }
+
+    #[test]
+    fn shape_and_strides_are_row_major() {
+        let t = pot_quantize(&[1.0; 24], 5, None).with_shape(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.strides(), &[12, 4, 1]);
+        let m = PotTensor::quantize_2d(&[0.5; 12], 3, 4, 5, None);
+        assert_eq!(m.shape(), &[3, 4]);
+        assert_eq!(m.strides(), &[4, 1]);
+    }
+
+    #[test]
     fn quantized_values_are_pot() {
         let mut r = Pcg32::new(0);
         let mut x = vec![0f32; 1000];
@@ -171,10 +398,11 @@ mod tests {
         let mut x = vec![0f32; 512];
         r.fill_normal(&mut x, 0.0, 7.3);
         let blk = pot_quantize(&x, 5, None);
-        for (i, (&e, &s)) in blk.e.iter().zip(&blk.s).enumerate() {
+        for (i, &v) in x.iter().enumerate() {
+            let (e, s) = blk.get(i);
             if e != ZERO_CODE {
                 assert!((-7..=7).contains(&e));
-                assert_eq!(s == 1, x[i] < 0.0);
+                assert_eq!(s == 1, v < 0.0);
             }
         }
     }
@@ -183,7 +411,8 @@ mod tests {
     fn zero_block() {
         let blk = pot_quantize(&[0.0; 16], 5, None);
         assert_eq!(blk.beta, 0);
-        assert!(blk.e.iter().all(|&e| e == ZERO_CODE));
+        assert!((0..blk.len()).all(|i| blk.exponent(i) == ZERO_CODE));
+        assert_eq!(blk.count_nonzero(), 0);
         assert!(blk.dequantize().iter().all(|&v| v == 0.0));
     }
 
@@ -215,9 +444,9 @@ mod tests {
         let mut g = vec![0f32; 256];
         r.fill_normal(&mut g, 0.0, 1e-4);
         let blk = pot_quantize(&g, 5, Some(0)); // ALS disabled
-        assert!(blk.e.iter().all(|&e| e == ZERO_CODE), "should underflow");
+        assert_eq!(blk.count_nonzero(), 0, "should underflow");
         let adaptive = pot_quantize(&g, 5, None);
-        let live = adaptive.e.iter().filter(|&&e| e != ZERO_CODE).count();
+        let live = adaptive.count_nonzero();
         assert!(live > 230, "adaptive keeps the block alive ({live}/256)");
     }
 
@@ -234,5 +463,16 @@ mod tests {
         r.fill_normal(&mut g, 0.0, 2e-5);
         let bg = compute_beta(&g, 5);
         assert!((-22..=-12).contains(&bg), "beta_g = {bg}");
+    }
+
+    #[test]
+    fn near_subnormal_block_dequantizes_finite() {
+        // regression: e + beta below -126 used to trip pow2i's
+        // debug_assert; now it flushes to zero
+        let x = vec![1.5e-38f32, -1.2e-38, 0.0, 1.4e-38];
+        let blk = pot_quantize(&x, 6, None);
+        for v in blk.dequantize() {
+            assert!(v.is_finite());
+        }
     }
 }

@@ -81,6 +81,20 @@ impl Gen {
         self.rng.fill_normal(&mut v, mean, std);
         v
     }
+
+    /// Random packed PoT operand for engine-equivalence properties. The
+    /// mixture covers the adversarial regimes: all-zero blocks, huge
+    /// dynamic range (emax saturation + zero-code underflow), and the
+    /// ordinary log-scale case.
+    pub fn pot_tensor(&mut self, rows: usize, cols: usize, bits: u32) -> crate::potq::PotTensor {
+        let n = rows * cols;
+        let data: Vec<f32> = match self.usize_in(0, 4) {
+            0 => vec![0.0; n],
+            1 => (0..n).map(|_| self.f32_logscale(-40, 40)).collect(),
+            _ => (0..n).map(|_| self.f32_logscale(-12, 6)).collect(),
+        };
+        crate::potq::PotTensor::quantize_2d(&data, rows, cols, bits, None)
+    }
 }
 
 /// Run `cases` random cases of `prop`; panic with the failing seed if any
@@ -229,5 +243,23 @@ mod tests {
         let mut a = Gen::new(123);
         let mut b = Gen::new(123);
         assert_eq!(a.vec_f32(8..9, 0.0, 1.0), b.vec_f32(8..9, 0.0, 1.0));
+    }
+
+    #[test]
+    fn pot_tensor_generator_shapes_and_modes() {
+        let mut g = Gen::new(77);
+        let mut saw_zero_block = false;
+        let mut saw_live_block = false;
+        for _ in 0..40 {
+            let t = g.pot_tensor(4, 6, 5);
+            assert_eq!(t.shape(), &[4, 6]);
+            assert_eq!(t.len(), 24);
+            if t.count_nonzero() == 0 {
+                saw_zero_block = true;
+            } else {
+                saw_live_block = true;
+            }
+        }
+        assert!(saw_zero_block && saw_live_block, "mixture should cover both");
     }
 }

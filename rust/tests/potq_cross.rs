@@ -42,9 +42,12 @@ fn potq_kernels_bit_exact_across_bit_widths() {
             let blk = potq::pot_quantize(&x, b, None);
             assert_eq!(out[3 * k.n] as i32, blk.beta, "beta b={b} std={std}");
             for i in 0..k.n {
-                assert_eq!(out[k.n + i] as i32, blk.e[i], "e[{i}] b={b} std={std}");
-                assert_eq!(out[2 * k.n + i] as u8, blk.s[i], "s[{i}] b={b}");
-                let native = potq::pot_dequantize(blk.e[i], blk.s[i], blk.beta);
+                // unpack the packed code back to the (exponent, sign)
+                // planes the AOT kernel emits
+                let (e, s) = blk.get(i);
+                assert_eq!(out[k.n + i] as i32, e, "e[{i}] b={b} std={std}");
+                assert_eq!(out[2 * k.n + i] as u8, s, "s[{i}] b={b}");
+                let native = potq::pot_dequantize(e, s, blk.beta);
                 assert_eq!(
                     out[i].to_bits(),
                     native.to_bits(),

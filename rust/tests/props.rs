@@ -4,7 +4,9 @@
 
 use mftrain::energy::{methods, training_energy_joules};
 use mftrain::models;
-use mftrain::potq::{self, ZERO_CODE};
+use mftrain::potq::{
+    self, BlockedEngine, MacEngine, ScalarEngine, ThreadedEngine, ZERO_CODE,
+};
 use mftrain::testing::{property, property_shrink, Gen};
 
 #[test]
@@ -28,9 +30,67 @@ fn prop_exponents_bounded_and_signs_match() {
         let x = g.vec_f32_logscale(1..300, -25, 8);
         let blk = potq::pot_quantize(&x, b, None);
         let emax = potq::pot_emax(b);
-        blk.e.iter().zip(&blk.s).zip(&x).all(|((&e, &s), &v)| {
+        x.iter().enumerate().all(|(i, &v)| {
+            let (e, s) = blk.get(i);
             e == ZERO_CODE || ((-emax..=emax).contains(&e) && ((s == 1) == (v < 0.0)))
         })
+    });
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    // code space round trip: every representable (exponent, sign) pair
+    // survives pack -> unpack, and quantize stores exactly what
+    // pot_quantize_one computes
+    property("pack/unpack round-trips the code space", 150, |g: &mut Gen| {
+        let b = [3u32, 4, 5, 6][g.usize_in(0, 4)];
+        let emax = potq::pot_emax(b);
+        let e = if g.bool() { ZERO_CODE } else { g.i32_in(-emax, emax + 1) };
+        let s = if e == ZERO_CODE { 0 } else { g.bool() as u8 };
+        if potq::unpack_code(potq::pack_code(e, s, emax), emax) != (e, s) {
+            return false;
+        }
+        let x = g.vec_f32_logscale(1..120, -30, 10);
+        let blk = potq::pot_quantize(&x, b, None);
+        x.iter()
+            .enumerate()
+            .all(|(i, &v)| blk.get(i) == potq::pot_quantize_one(v, b, blk.beta))
+    });
+}
+
+#[test]
+fn prop_engines_bit_exact() {
+    // scalar vs blocked vs threaded on random shapes, including k=0,
+    // all-zero blocks, and emax-saturating inputs (the Gen mixture)
+    property("engine cross-equivalence is bit-exact", 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 10);
+        let k = g.usize_in(0, 24); // k = 0 is a legal empty reduction
+        let n = g.usize_in(1, 10);
+        let b = [4u32, 5][g.usize_in(0, 2)];
+        let x = g.pot_tensor(m, k, b);
+        let w = g.pot_tensor(k, n, b);
+        let blocked = BlockedEngine::with_tiles(
+            g.usize_in(1, 8),
+            g.usize_in(1, 16),
+            g.usize_in(1, 8),
+        );
+        let threaded = ThreadedEngine::new(g.usize_in(1, 5));
+        let ys = ScalarEngine.matmul(&x, &w);
+        let yb = blocked.matmul(&x, &w);
+        let yt = threaded.matmul(&x, &w);
+        let exact = ys.len() == m * n
+            && ys.iter().zip(&yb).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ys.iter().zip(&yt).all(|(a, c)| a.to_bits() == c.to_bits());
+        // the saturating path must agree too (same reference order)
+        let (ss, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
+        let (sb, rb) = blocked.matmul_i32_saturating(&x, &w);
+        let (st, rt) = threaded.matmul_i32_saturating(&x, &w);
+        exact
+            && ss.iter().zip(&sb).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ss.iter().zip(&st).all(|(a, c)| a.to_bits() == c.to_bits())
+            && rs.saturated_lanes == rb.saturated_lanes
+            && rs.saturated_lanes == rt.saturated_lanes
+            && rs.peak_magnitude == rt.peak_magnitude
     });
 }
 
