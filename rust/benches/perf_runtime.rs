@@ -97,6 +97,65 @@ fn engine_sweep() -> anyhow::Result<()> {
             operands are 1 byte/elem packed codes (9 byte/elem before the \
             PotTensor refactor)");
     t.print();
+
+    // ---- batched entry point: N GEMMs per call (LUT/thread-scope
+    // amortized) vs N separate matmul calls — the native trainer's
+    // backward pass shape ------------------------------------------------
+    let (bm, bk, bn, group) = (64usize, 256usize, 256usize, 6usize);
+    let mut bx = vec![0f32; bm * bk];
+    let mut bw = vec![0f32; bk * bn];
+    let mut tb = Table::new(
+        &format!("matmul_batch — {group} GEMMs of {bm}x{bk}x{bn} per call"),
+        &["engine", "singles mean", "batch mean", "batch speedup"],
+    );
+    for (name, engine) in &engines {
+        let tensors: Vec<(PotTensor, PotTensor)> = (0..group)
+            .map(|_| {
+                rng.fill_normal(&mut bx, 0.0, 0.5);
+                rng.fill_normal(&mut bw, 0.0, 0.02);
+                (
+                    PotTensor::quantize_2d(&bx, bm, bk, 5, None),
+                    PotTensor::quantize_2d(&bw, bk, bn, 5, None),
+                )
+            })
+            .collect();
+        let pairs: Vec<(&PotTensor, &PotTensor)> = tensors.iter().map(|(x, w)| (x, w)).collect();
+        // bit-exactness of the batched path before timing it
+        let batched = engine.matmul_batch(&pairs);
+        for ((x, w), got) in pairs.iter().zip(&batched) {
+            let want = engine.matmul(x, w);
+            assert!(
+                want.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "engine '{name}' batch output diverges from singles"
+            );
+        }
+        let t_single = bench(1, 3, || {
+            for (x, w) in &pairs {
+                std::hint::black_box(engine.matmul(x, w));
+            }
+        });
+        let t_batch = bench(1, 3, || {
+            std::hint::black_box(engine.matmul_batch(&pairs));
+        });
+        let speedup = t_single.mean().as_secs_f64() / t_batch.mean().as_secs_f64().max(1e-12);
+        tb.row(&[
+            name.to_string(),
+            fmt_duration(t_single.mean()),
+            fmt_duration(t_batch.mean()),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("shape".into(), Json::Str(format!("{group}x({bm}x{bk}x{bn})")));
+        o.insert("engine".into(), Json::Str(name.to_string()));
+        o.insert("mode".into(), Json::Str("batch".into()));
+        o.insert("mean_secs".into(), Json::Num(t_batch.mean().as_secs_f64()));
+        o.insert("singles_mean_secs".into(), Json::Num(t_single.mean().as_secs_f64()));
+        o.insert("batch_speedup".into(), Json::Num(speedup));
+        results.push(Json::Obj(o));
+    }
+    tb.note("batched results are asserted bit-exact against per-call matmul");
+    tb.print();
+
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("mfmac_kernels".into()));
     root.insert("bits".into(), Json::Num(5.0));

@@ -112,7 +112,13 @@ mft — multiplication-free training coordinator (ALS-PoTQ + MF-MAC)
 USAGE:
   mft train --config <file.toml> | --variant <name> [--steps N] [--lr F]
             [--seed N] [--noise F] [--checkpoint path] [--artifacts DIR]
+            [--backend auto|pjrt|native] [--engine scalar|blocked|threaded]
+            [--threads N] [--bits 3..6]
+            # native backend: the in-process multiplication-free trainer
+            # (no artifacts needed); variants: mlp_mf, mlp_fp32,
+            # tiny_mlp_mf, tiny_mlp_fp32
   mft eval --variant <name> --checkpoint <path> [--batches N]
+           [--engine ...] [--threads N] [--bits N]   # native checkpoints
   mft energy [--model resnet50] [--batch 256] [--overhead]
   mft kernels [--engine scalar|blocked|threaded] [--threads N]
               [--shape MxKxN] [--bits 5] [--seed N] [--check]

@@ -54,6 +54,19 @@ pub struct TrainConfig {
     pub checkpoint_path: Option<String>,
     pub checkpoint_every: u64,
     pub log_every: u64,
+    /// execution backend: "auto" (PJRT when artifacts exist, else native),
+    /// "pjrt", or "native"
+    pub backend: String,
+    /// MacEngine for the native backend: scalar | blocked | threaded
+    pub engine: String,
+    /// worker count for the threaded engine (0 = one per core)
+    pub threads: usize,
+    /// PoT code width for the native backend (3..=6)
+    pub bits: u32,
+    /// initial learnable activation-clip ratio (PRC, eq. 12)
+    pub gamma: f32,
+    /// fixed gradient-clip ratio (>= 1 disables)
+    pub grad_gamma: f32,
 }
 
 impl Default for TrainConfig {
@@ -77,6 +90,12 @@ impl Default for TrainConfig {
             checkpoint_path: None,
             checkpoint_every: 0,
             log_every: 25,
+            backend: "auto".into(),
+            engine: "blocked".into(),
+            threads: 0,
+            bits: 5,
+            gamma: 0.9,
+            grad_gamma: 1.0,
         }
     }
 }
@@ -122,6 +141,12 @@ impl TrainConfig {
                 .map(str::to_string),
             checkpoint_every: doc.i64_or("checkpoint.every", 0) as u64,
             log_every: doc.i64_or("train.log_every", d.log_every as i64) as u64,
+            backend: doc.str_or("backend", &d.backend).to_string(),
+            engine: doc.str_or("native.engine", &d.engine).to_string(),
+            threads: doc.i64_or("native.threads", d.threads as i64) as usize,
+            bits: doc.i64_or("native.bits", d.bits as i64) as u32,
+            gamma: doc.f64_or("native.gamma", d.gamma as f64) as f32,
+            grad_gamma: doc.f64_or("native.grad_gamma", d.grad_gamma as f64) as f32,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -139,6 +164,25 @@ impl TrainConfig {
         }
         if self.variant.is_empty() {
             bail!("variant must be set");
+        }
+        if !matches!(self.backend.as_str(), "auto" | "pjrt" | "native") {
+            bail!("backend must be auto|pjrt|native, got '{}'", self.backend);
+        }
+        if !crate::potq::ENGINE_NAMES.contains(&self.engine.as_str()) {
+            bail!(
+                "native.engine must be one of {}, got '{}'",
+                crate::potq::ENGINE_NAMES.join("|"),
+                self.engine
+            );
+        }
+        if !(3..=6).contains(&self.bits) {
+            bail!("native.bits must be in 3..=6");
+        }
+        if !(self.gamma > 0.0 && self.gamma <= 1.0) {
+            bail!("native.gamma must be in (0, 1]");
+        }
+        if !(self.grad_gamma > 0.0 && self.grad_gamma.is_finite()) {
+            bail!("native.grad_gamma must be positive and finite");
         }
         Ok(())
     }
@@ -200,5 +244,44 @@ noise = 0.25
         assert!(TrainConfig::from_doc(&doc).is_err());
         let doc = toml::Doc::parse("[train]\nlr = -1.0\n").unwrap();
         assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn native_backend_fields_parse_and_validate() {
+        let doc = toml::Doc::parse(
+            r#"
+variant = "tiny_mlp_mf"
+backend = "native"
+[native]
+engine = "threaded"
+threads = 2
+bits = 4
+gamma = 0.8
+grad_gamma = 0.95
+"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.engine, "threaded");
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.bits, 4);
+        assert!((cfg.gamma - 0.8).abs() < 1e-6);
+        assert!((cfg.grad_gamma - 0.95).abs() < 1e-6);
+        // defaults
+        let d = TrainConfig::default();
+        assert_eq!(d.backend, "auto");
+        assert_eq!(d.engine, "blocked");
+        assert_eq!(d.bits, 5);
+        // bad values are rejected
+        for bad in [
+            "backend = \"gpu\"\n",
+            "[native]\nengine = \"cuda\"\n",
+            "[native]\nbits = 9\n",
+            "[native]\ngamma = 0.0\n",
+        ] {
+            let doc = toml::Doc::parse(bad).unwrap();
+            assert!(TrainConfig::from_doc(&doc).is_err(), "{bad}");
+        }
     }
 }

@@ -16,8 +16,10 @@ pub struct Checkpoint {
     pub state: Vec<f32>,
 }
 
-fn checksum(state: &[f32]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64; // FNV-1a over the raw bytes
+/// FNV-1a over the raw state bytes — the integrity checksum, exposed so
+/// determinism tests can compare whole training runs by one u64.
+pub fn state_digest(state: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
     for v in state {
         for b in v.to_le_bytes() {
             h ^= b as u64;
@@ -28,6 +30,10 @@ fn checksum(state: &[f32]) -> u64 {
 }
 
 impl Checkpoint {
+    /// Digest of the stored state vector (bit-level identity proxy).
+    pub fn digest(&self) -> u64 {
+        state_digest(&self.state)
+    }
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).ok();
@@ -48,7 +54,7 @@ impl Checkpoint {
                 bytes.extend_from_slice(&v.to_le_bytes());
             }
             f.write_all(&bytes)?;
-            f.write_all(&checksum(&self.state).to_le_bytes())?;
+            f.write_all(&state_digest(&self.state).to_le_bytes())?;
         }
         std::fs::rename(&tmp, path).context("atomic checkpoint rename")?;
         Ok(())
@@ -83,7 +89,7 @@ impl Checkpoint {
             .collect();
         f.read_exact(&mut u64b)?;
         let want = u64::from_le_bytes(u64b);
-        let got = checksum(&state);
+        let got = state_digest(&state);
         if want != got {
             bail!("checkpoint checksum mismatch ({want:#x} != {got:#x})");
         }

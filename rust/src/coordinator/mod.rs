@@ -8,7 +8,7 @@ pub mod sweep;
 pub mod telemetry;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{state_digest, Checkpoint};
 pub use prefetch::Prefetcher;
 pub use sweep::{run_sweep, summary_table, SweepConfig};
 pub use telemetry::{ProbeSnapshot, RunRecord, TensorStats};

@@ -2,7 +2,7 @@
 //! snapshots (Figures 2/3/6 data) and run-level performance counters.
 
 use crate::potq;
-use crate::runtime::artifact::Manifest;
+use crate::runtime::artifact::ProbeSection;
 use crate::stats::{fit_lognormal, log2_histogram, Histogram, Summary};
 
 /// One probe snapshot: W/A/G of the canonical layer at a training step.
@@ -60,11 +60,12 @@ impl TensorStats {
     }
 }
 
-/// Split a raw probe vector into per-section stats using the manifest.
-pub fn snapshot_from_probe(man: &Manifest, step: u64, raw: &[f32]) -> ProbeSnapshot {
+/// Split a raw probe vector into per-section stats using the session's
+/// probe layout (works for any backend: PJRT manifests and the native
+/// session both describe their probe output as [w | a | g] sections).
+pub fn snapshot_from_probe(sections: &[ProbeSection], step: u64, raw: &[f32]) -> ProbeSnapshot {
     let section = |name: &str| -> &[f32] {
-        let s = man
-            .probe_sections
+        let s = sections
             .iter()
             .find(|s| s.name == name)
             .unwrap_or_else(|| panic!("probe section {name} missing"));

@@ -1,6 +1,8 @@
 //! The training orchestrator: owns the session, the prefetch pipeline,
-//! the LR schedule, telemetry and checkpoints. This is the L3 event loop —
-//! the whole thing is rust + PJRT; python never runs here.
+//! the LR schedule, telemetry and checkpoints. This is the L3 event loop;
+//! it drives any [`SessionBackend`] — the PJRT artifact executor or the
+//! native MacEngine trainer — through the same interface, so checkpoints,
+//! telemetry and the prefetch pipeline behave identically on both.
 
 use std::path::Path;
 use std::time::Instant;
@@ -9,7 +11,7 @@ use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data;
-use crate::runtime::{Runtime, Session};
+use crate::runtime::{NativeSession, Runtime, Session, SessionBackend};
 
 use super::checkpoint::Checkpoint;
 use super::prefetch::Prefetcher;
@@ -17,20 +19,32 @@ use super::telemetry::{snapshot_from_probe, RunRecord};
 
 pub struct Trainer<'rt> {
     pub cfg: TrainConfig,
-    pub session: Session<'rt>,
+    pub session: Box<dyn SessionBackend + 'rt>,
     train_data: Prefetcher,
     eval_data: Box<dyn data::Dataset>,
     quiet: bool,
 }
 
 impl<'rt> Trainer<'rt> {
+    /// PJRT backend: load the variant's AOT artifacts.
     pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
         let session = Session::load(rt, Path::new(&cfg.artifacts_dir), &cfg.variant)?;
-        let man = &session.manifest;
+        Self::with_session(Box::new(session), cfg)
+    }
+
+    /// Native backend: the in-process MF training loop, no artifacts.
+    pub fn native(cfg: TrainConfig) -> Result<Trainer<'static>> {
+        let session = NativeSession::from_config(&cfg)?;
+        Trainer::with_session(Box::new(session), cfg)
+    }
+
+    /// Wire the coordinator plumbing around an already-built backend.
+    pub fn with_session(session: Box<dyn SessionBackend + 'rt>, cfg: TrainConfig) -> Result<Self> {
+        let info = session.info();
         let dataset = data::for_variant(
-            &man.model,
-            &man.x.shape,
-            &man.y.shape,
+            &info.model,
+            &info.x_shape,
+            &info.y_shape,
             cfg.data_noise,
             cfg.seed,
         );
@@ -54,6 +68,12 @@ impl<'rt> Trainer<'rt> {
                 "checkpoint is for variant '{}', config wants '{}'",
                 ck.variant,
                 self.cfg.variant
+            );
+            anyhow::ensure!(
+                ck.step <= self.cfg.steps,
+                "checkpoint is at step {} but the run is configured for only {} steps",
+                ck.step,
+                self.cfg.steps
             );
             self.session.state_from_host(&ck.state)?;
             if !self.quiet {
@@ -96,7 +116,8 @@ impl<'rt> Trainer<'rt> {
             if self.cfg.probe_every > 0 && (step + 1) % self.cfg.probe_every == 0 {
                 let batch = self.train_data.next();
                 let raw = self.session.probe(&batch)?;
-                rec.probes.push(snapshot_from_probe(&self.session.manifest, step + 1, &raw));
+                let sections = self.session.info().probe_sections.clone();
+                rec.probes.push(snapshot_from_probe(&sections, step + 1, &raw));
             }
             if self.cfg.checkpoint_every > 0
                 && (step + 1) % self.cfg.checkpoint_every == 0
@@ -120,7 +141,7 @@ impl<'rt> Trainer<'rt> {
 
     /// Mean loss / accuracy over `eval_batches` held-out batches.
     pub fn evaluate(&mut self) -> Result<(f64, f64)> {
-        let denom = self.session.manifest.eval_denom as f64;
+        let denom = self.session.info().eval_denom as f64;
         let (mut sl, mut sc, mut n) = (0f64, 0f64, 0f64);
         for _ in 0..self.cfg.eval_batches.max(1) {
             let b = self.eval_data.next_batch();

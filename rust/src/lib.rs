@@ -9,15 +9,25 @@
 //!   behind the pluggable `MacEngine` trait with three implementations —
 //!   `ScalarEngine` (bit-exact reference), `BlockedEngine` (m/n/k cache
 //!   tiles + a 256-entry pow2 LUT indexed by the packed code sum) and
-//!   `ThreadedEngine` (row-band parallelism). All engines accumulate
-//!   exactly in integer fixed point, so every schedule is bit-identical;
-//!   future backends (SIMD nibble kernels, sharded per-tile beta) plug in
-//!   behind the same trait.
+//!   `ThreadedEngine` (row-band parallelism) — plus a batched
+//!   `matmul_batch` entry point that amortizes LUT/thread-scope setup
+//!   across a layer's GEMMs. All engines accumulate exactly in integer
+//!   fixed point, so every schedule is bit-identical; future backends
+//!   (SIMD nibble kernels, sharded per-tile beta) plug in behind the same
+//!   trait. `potq::nn` composes these into the *native training loop*: an
+//!   MLP whose every linear-layer GEMM (fw/dX/dW) runs on a MacEngine
+//!   over quantized operands, with ALS, WBC, PRC (learnable gamma,
+//!   straight-through grad), a PoT-snapped learning rate applied by
+//!   exponent add, and a per-step op census proving zero FP32 multiplies
+//!   in linear layers.
 //! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1), including
 //!   the dynamic MAC census derived from packed codes (`mfmac_census`).
-//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`runtime`] — execution backends behind the `SessionBackend`
+//!   interface: the PJRT loader/executor for AOT HLO artifacts, and
+//!   `NativeSession`, the artifact-free native MF trainer
+//!   (`mft train --backend native`).
 //! * [`coordinator`] — the training orchestrator (step loop, prefetch,
-//!   telemetry, checkpoints).
+//!   telemetry, checkpoints), backend-agnostic over `SessionBackend`.
 //! * [`data`], [`models`], [`stats`], [`config`], [`cli`], [`util`],
 //!   [`testing`] — substrates (DESIGN.md §System inventory).
 

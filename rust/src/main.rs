@@ -9,7 +9,7 @@ use mftrain::config::TrainConfig;
 use mftrain::coordinator::{Checkpoint, Trainer};
 use mftrain::energy;
 use mftrain::models;
-use mftrain::runtime::{Index, Runtime, Session};
+use mftrain::runtime::{Index, NativeSession, Runtime, Session, SessionBackend};
 use mftrain::util::table::{fnum, Table};
 
 fn main() -> Result<()> {
@@ -39,8 +39,19 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     } else {
         TrainConfig::default()
     };
+    if let Some(v) = args.str_flag("backend") {
+        cfg.backend = v.to_string();
+    }
+    if let Some(v) = args.str_flag("engine") {
+        cfg.engine = v.to_string();
+    }
+    cfg.threads = args.u64_flag("threads", cfg.threads as u64)? as usize;
+    cfg.bits = args.u64_flag("bits", cfg.bits as u64)? as u32;
     if let Some(v) = args.str_flag("variant") {
         cfg.variant = v.to_string();
+    } else if cfg.backend == "native" && args.str_flag("config").is_none() {
+        // bare `mft train --backend native`: default to the native MLP
+        cfg.variant = "mlp_mf".to_string();
     }
     if let Some(v) = args.str_flag("artifacts") {
         cfg.artifacts_dir = v.to_string();
@@ -63,15 +74,44 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Resolve `backend = "auto"`: PJRT when artifacts exist, else the native
+/// backend when the variant has a native spec, else PJRT (whose error
+/// names the missing artifacts).
+fn resolve_backend(cfg: &TrainConfig) -> &'static str {
+    match cfg.backend.as_str() {
+        "pjrt" => "pjrt",
+        "native" => "native",
+        _ => {
+            let have_artifacts =
+                Path::new(&cfg.artifacts_dir).join(&cfg.variant).join("manifest.json").exists();
+            if !have_artifacts && models::native_spec(&cfg.variant).is_some() {
+                "native"
+            } else {
+                "pjrt"
+            }
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let rt = Runtime::cpu()?;
-    println!("[mft] platform: {}", rt.platform());
-    let mut trainer = Trainer::new(&rt, cfg)?;
-    let man = &trainer.session.manifest;
+    if resolve_backend(&cfg) == "native" {
+        println!("[mft] backend: native ({} engine)", cfg.engine);
+        let mut trainer = Trainer::native(cfg)?;
+        run_and_report(&mut trainer)
+    } else {
+        let rt = Runtime::cpu()?;
+        println!("[mft] platform: {}", rt.platform());
+        let mut trainer = Trainer::new(&rt, cfg)?;
+        run_and_report(&mut trainer)
+    }
+}
+
+fn run_and_report(trainer: &mut Trainer) -> Result<()> {
+    let info = trainer.session.info();
     println!(
         "[mft] variant {} — model {}, scheme {}, {} params, state {} f32",
-        man.name, man.model, man.scheme, man.n_params, man.state_len
+        info.name, info.model, info.scheme, info.n_params, info.state_len
     );
     let rec = trainer.run()?;
     println!(
@@ -95,23 +135,45 @@ fn cmd_eval(args: &Args) -> Result<()> {
         bail!("checkpoint is for '{}', not '{variant}'", ckpt.variant);
     }
     let artifacts = args.str_flag("artifacts").unwrap_or("artifacts");
-    let rt = Runtime::cpu()?;
-    let mut session = Session::load(&rt, Path::new(artifacts), variant)?;
-    session.state_from_host(&ckpt.state)?;
-    let man = session.manifest.clone();
-    let mut data = mftrain::data::for_variant(&man.model, &man.x.shape, &man.y.shape, 1.0, 7777);
     let batches = args.u64_flag("batches", 16)?;
+    let have_manifest = Path::new(artifacts).join(variant).join("manifest.json").exists();
+    if !have_manifest && models::native_spec(variant).is_some() {
+        // native checkpoints evaluate without artifacts; quantization
+        // knobs must match training (the state vector does not carry
+        // them), so honour the same flags `train` takes
+        let mut cfg = TrainConfig { variant: variant.to_string(), ..TrainConfig::default() };
+        if let Some(v) = args.str_flag("engine") {
+            cfg.engine = v.to_string();
+        }
+        cfg.threads = args.u64_flag("threads", cfg.threads as u64)? as usize;
+        cfg.bits = args.u64_flag("bits", cfg.bits as u64)? as u32;
+        cfg.validate()?;
+        let mut session = NativeSession::from_config(&cfg)?;
+        session.state_from_host(&ckpt.state)?;
+        eval_and_print(&mut session, &ckpt, batches)
+    } else {
+        let rt = Runtime::cpu()?;
+        let mut session = Session::load(&rt, Path::new(artifacts), variant)?;
+        session.state_from_host(&ckpt.state)?;
+        eval_and_print(&mut session, &ckpt, batches)
+    }
+}
+
+fn eval_and_print(session: &mut dyn SessionBackend, ckpt: &Checkpoint, batches: u64) -> Result<()> {
+    let info = session.info().clone();
+    let mut data =
+        mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, 7777);
     let (mut sl, mut sc, mut n) = (0f64, 0f64, 0f64);
     for _ in 0..batches {
         let b = data.next_batch();
         let (l, c) = session.eval_batch(&b)?;
         sl += l;
         sc += c;
-        n += man.eval_denom as f64;
+        n += info.eval_denom as f64;
     }
     println!(
         "eval {} @ step {}: loss {:.4}, accuracy {:.2}% over {} examples",
-        variant,
+        ckpt.variant,
         ckpt.step,
         sl / n,
         sc / n * 100.0,

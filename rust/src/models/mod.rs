@@ -207,6 +207,46 @@ pub fn mini_transformer(seq: u64) -> Arch {
     Arch { name: "mini-Transformer", layers }
 }
 
+/// Spec of a model the *native* (PJRT-free) trainer can build: an MLP
+/// trained on the flat PatternTask, every linear-layer GEMM routed
+/// through a `MacEngine`. `dims[0]` must be a flat image dim (side^2 * 3)
+/// and `batch` a power of two so the native loss scale stays an exponent
+/// add (see `potq::nn`).
+#[derive(Clone, Debug)]
+pub struct NativeSpec {
+    /// variant name (`mft train --variant <name> --backend native`)
+    pub name: &'static str,
+    /// model family key for `data::for_variant`
+    pub model: &'static str,
+    /// "mf" | "fp32"
+    pub scheme: &'static str,
+    pub batch: usize,
+    /// layer widths [d_in, hidden..., classes]
+    pub dims: Vec<usize>,
+}
+
+/// Variants the native backend knows how to build.
+pub const NATIVE_VARIANTS: [&str; 4] = ["mlp_mf", "mlp_fp32", "tiny_mlp_mf", "tiny_mlp_fp32"];
+
+pub fn native_spec(variant: &str) -> Option<NativeSpec> {
+    let spec = |name, scheme, batch, dims: &[usize]| NativeSpec {
+        name,
+        model: "mlp",
+        scheme,
+        batch,
+        dims: dims.to_vec(),
+    };
+    Some(match variant {
+        // mirrors the mini_mlp artifact variant (16x16x3 flat images)
+        "mlp_mf" => spec("mlp_mf", "mf", 32, &[768, 256, 128, 10]),
+        "mlp_fp32" => spec("mlp_fp32", "fp32", 32, &[768, 256, 128, 10]),
+        // debug-budget variant for the unconditional smoke tests (4x4x3)
+        "tiny_mlp_mf" => spec("tiny_mlp_mf", "mf", 16, &[48, 32, 10]),
+        "tiny_mlp_fp32" => spec("tiny_mlp_fp32", "fp32", 16, &[48, 32, 10]),
+        _ => return None,
+    })
+}
+
 pub fn by_name(name: &str) -> Option<Arch> {
     Some(match name {
         "alexnet" => alexnet(),
@@ -286,5 +326,20 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("resnet50").is_some());
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn native_specs_are_well_formed() {
+        for v in NATIVE_VARIANTS {
+            let s = native_spec(v).unwrap();
+            assert_eq!(s.name, v);
+            assert!(s.dims.len() >= 2, "{v}");
+            assert!(s.batch.is_power_of_two(), "{v}: batch must be a power of two");
+            // flat PatternTask contract: d_in = side^2 * 3
+            let side = ((s.dims[0] / 3) as f64).sqrt() as usize;
+            assert_eq!(side * side * 3, s.dims[0], "{v}: d_in must be side^2*3");
+            assert!(matches!(s.scheme, "mf" | "fp32"), "{v}");
+        }
+        assert!(native_spec("cnn_mf").is_none());
     }
 }

@@ -56,6 +56,16 @@ pub trait MacEngine: Sync {
 
     /// Hardware-faithful INT32-saturating fixed-point accumulate.
     fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport);
+
+    /// Batched entry point: run several independent GEMMs in one call so
+    /// implementations can amortize per-call setup (the 256-entry code-sum
+    /// LUT, thread-scope spawn) across a whole layer's GEMMs — e.g. the
+    /// backward pass's dX and dW share one call. Results must be
+    /// bit-identical to calling [`MacEngine::matmul`] per pair; the
+    /// default implementation does exactly that.
+    fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
+        pairs.iter().map(|(x, w)| self.matmul(x, w)).collect()
+    }
 }
 
 /// Validate operand shapes/bit widths and return (m, k, n).
@@ -150,6 +160,8 @@ pub(crate) fn matmul_scalar_impl(
 /// Cache-tiled kernel over a row band [i0, i1) of x, writing into
 /// `out_band` (length (i1-i0)*n). i-p-j inner order: the w row and the
 /// accumulator row stream contiguously; k/n tiling keeps both panels hot.
+/// The LUT is passed in so batched callers build it once per call, not
+/// once per GEMM/band.
 #[allow(clippy::too_many_arguments)]
 fn matmul_blocked_band(
     x: &PotTensor,
@@ -159,6 +171,7 @@ fn matmul_blocked_band(
     i0: usize,
     i1: usize,
     tiles: (usize, usize, usize),
+    lut: &[i64; 256],
     out_band: &mut [f32],
 ) {
     let (mc, kc, nc) = tiles;
@@ -168,7 +181,6 @@ fn matmul_blocked_band(
         return;
     }
     let scale = lane_scale(x, w);
-    let lut = pow2_lut();
     let (xc, wc) = (x.codes(), w.codes());
     let mut acc = vec![0i128; band * n];
     for jc in (0..n).step_by(nc.max(1)) {
@@ -307,8 +319,9 @@ impl MacEngine for BlockedEngine {
 
     fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
         let (m, k, n) = dims2(x, w);
+        let lut = pow2_lut();
         let mut out = vec![0f32; m * n];
-        matmul_blocked_band(x, w, k, n, 0, m, (self.mc, self.kc, self.nc), &mut out);
+        matmul_blocked_band(x, w, k, n, 0, m, (self.mc, self.kc, self.nc), &lut, &mut out);
         out
     }
 
@@ -317,6 +330,20 @@ impl MacEngine for BlockedEngine {
         let mut out = vec![0f32; m * n];
         let rep = saturating_band(x, w, k, n, 0, m, &mut out);
         (out, rep)
+    }
+
+    /// One LUT build for the whole batch; otherwise identical per-GEMM.
+    fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
+        let lut = pow2_lut();
+        pairs
+            .iter()
+            .map(|(x, w)| {
+                let (m, k, n) = dims2(x, w);
+                let mut out = vec![0f32; m * n];
+                matmul_blocked_band(x, w, k, n, 0, m, (self.mc, self.kc, self.nc), &lut, &mut out);
+                out
+            })
+            .collect()
     }
 }
 
@@ -381,11 +408,49 @@ impl MacEngine for ThreadedEngine {
     fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
         let (m, k, n) = dims2(x, w);
         let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
+        let lut = pow2_lut();
         let mut out = vec![0f32; m * n];
         self.run_bands(m, n, &mut out, |i0, i1, chunk| {
-            matmul_blocked_band(x, w, k, n, i0, i1, tiles, chunk);
+            matmul_blocked_band(x, w, k, n, i0, i1, tiles, &lut, chunk);
         });
         out
+    }
+
+    /// One LUT build and one thread scope for the whole batch: every
+    /// (GEMM, row-band) work item is spawned into a single scope, so
+    /// small backward-pass GEMMs overlap instead of paying a spawn/join
+    /// barrier each. The configured worker budget is split across the
+    /// batch's GEMMs (ceil-divided, min 1) so total live threads stay at
+    /// ~the single-GEMM budget instead of multiplying by the batch size.
+    /// Band decomposition per GEMM is row-based like [`Self::matmul`],
+    /// and integer accumulation is exact, so output is bit-identical.
+    fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
+        let lut = pow2_lut();
+        let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
+        let dims: Vec<(usize, usize, usize)> = pairs.iter().map(|(x, w)| dims2(x, w)).collect();
+        let mut outs: Vec<Vec<f32>> =
+            dims.iter().map(|&(m, _, n)| vec![0f32; m * n]).collect();
+        let budget = self.worker_count(usize::MAX).div_ceil(pairs.len().max(1)).max(1);
+        std::thread::scope(|s| {
+            for (idx, out) in outs.iter_mut().enumerate() {
+                let (m, k, n) = dims[idx];
+                let (x, w) = pairs[idx];
+                if m == 0 || n == 0 {
+                    continue;
+                }
+                let workers = budget.min(m.max(1));
+                let band = ((m + workers - 1) / workers.max(1)).max(1);
+                for (b, chunk) in out.chunks_mut(band * n).enumerate() {
+                    let lut = &lut;
+                    s.spawn(move || {
+                        let i0 = b * band;
+                        let i1 = (i0 + band).min(m);
+                        matmul_blocked_band(x, w, k, n, i0, i1, tiles, lut, chunk);
+                    });
+                }
+            }
+        });
+        outs
     }
 
     fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
@@ -535,6 +600,53 @@ mod tests {
         assert_eq!(rs.saturated_lanes, rt.saturated_lanes);
         assert_eq!(rs.total_lanes, rt.total_lanes);
         assert_eq!(rs.peak_magnitude, rt.peak_magnitude);
+    }
+
+    #[test]
+    fn matmul_batch_bit_exact_with_singles() {
+        // mixed shapes in one batch, as the trainer's fw/dX/dW issue them
+        let shapes = [(4usize, 12usize, 6usize), (6, 4, 12), (12, 4, 6), (1, 1, 1)];
+        let tensors: Vec<(PotTensor, PotTensor)> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, k, n))| {
+                (
+                    rand_tensor(300 + i as u64, m, k, 0.6, 5),
+                    rand_tensor(400 + i as u64, k, n, 0.04, 5),
+                )
+            })
+            .collect();
+        let pairs: Vec<(&PotTensor, &PotTensor)> =
+            tensors.iter().map(|(x, w)| (x, w)).collect();
+        for eng in [
+            Box::new(ScalarEngine) as Box<dyn MacEngine>,
+            Box::new(BlockedEngine::with_tiles(3, 5, 4)),
+            Box::new(ThreadedEngine::new(3)),
+        ] {
+            let batched = eng.matmul_batch(&pairs);
+            assert_eq!(batched.len(), pairs.len(), "{}", eng.name());
+            for (i, (x, w)) in pairs.iter().enumerate() {
+                let single = eng.matmul(x, w);
+                assert_bits_eq(&single, &batched[i], &format!("{} batch[{i}]", eng.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_batch_handles_empty_and_degenerate() {
+        for eng in [
+            Box::new(ScalarEngine) as Box<dyn MacEngine>,
+            Box::new(BlockedEngine::default()),
+            Box::new(ThreadedEngine::new(2)),
+        ] {
+            assert!(eng.matmul_batch(&[]).is_empty(), "{}", eng.name());
+            // k = 0 (empty reduction) inside a batch
+            let x = PotTensor::quantize_2d(&[], 3, 0, 5, None);
+            let w = PotTensor::quantize_2d(&[], 0, 4, 5, None);
+            let out = eng.matmul_batch(&[(&x, &w)]);
+            assert_eq!(out[0].len(), 12, "{}", eng.name());
+            assert!(out[0].iter().all(|&v| v == 0.0), "{}", eng.name());
+        }
     }
 
     #[test]

@@ -10,10 +10,13 @@
 //! Layout: [`quantize`] owns the packed [`PotTensor`] format (one code
 //! byte per element), [`engine`] owns the pluggable [`MacEngine`] kernels
 //! (scalar reference / cache-blocked / threaded), [`mfmac`] keeps the
-//! stable convenience entry points on top.
+//! stable convenience entry points on top, and [`nn`] builds the native
+//! multiplication-free training loop (forward/backward MLP whose every
+//! linear-layer GEMM runs on a MacEngine) from those pieces.
 
 pub mod engine;
 mod mfmac;
+pub mod nn;
 mod quantize;
 
 pub use engine::{
@@ -23,8 +26,8 @@ pub use engine::{
 pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized};
 pub use quantize::{
     compute_beta, pack_code, pot_dequantize, pot_emax, pot_quantize, pot_quantize_one, pot_value,
-    pow2i, pow2i_saturating, round_log2_abs, unpack_code, PotTensor, MAG_MASK, MAG_OFFSET,
-    SIGN_BIT, SQRT2_F32, ZERO_CODE,
+    pow2i, pow2i_saturating, round_log2_abs, scale_pow2, unpack_code, PotTensor, MAG_MASK,
+    MAG_OFFSET, SIGN_BIT, SQRT2_F32, ZERO_CODE,
 };
 
 /// Weight Bias Correction (paper eq. 11): subtract the mean.

@@ -1,0 +1,761 @@
+//! Native multiplication-free neural-net training (the paper's §4-§5
+//! pipeline executed end to end in rust, no PJRT).
+//!
+//! [`MfMlp`] is an MLP whose every linear-layer GEMM — forward, dX and
+//! dW — routes through a [`MacEngine`] on ALS-PoTQ-quantized
+//! [`PotTensor`] operands:
+//!
+//!  * per-tensor adaptive beta (ALS) via the quantizer's `beta = None`
+//!    path, recomputed for every operand of every GEMM each step;
+//!  * [`weight_bias_correction`] (eq. 11) applied to weights before
+//!    quantization;
+//!  * [`ratio_clip`] (eq. 12) applied to activations with a per-layer
+//!    *learnable* gamma (straight-through gradient, PACT-style) and to
+//!    gradients with a fixed configured ratio;
+//!  * SGD whose learning rate is snapped to the nearest power of two and
+//!    applied with [`scale_pow2`] (an integer exponent-field add), so the
+//!    update path is multiplication-free too;
+//!  * the 1/batch loss scale applied the same way when the batch size is
+//!    a power of two.
+//!
+//! Every step returns a [`StepCensus`]: zero FP32 multiplies may occur in
+//! linear layers under [`Scheme::Mf`] (asserted), while the per-GEMM
+//! [`MacCensus`] records the INT4-add / 1-bit-XOR / INT32-accumulate work
+//! the MF hardware would actually execute. The loss layer (softmax
+//! cross-entropy) and the scalar PRC-gamma bookkeeping are outside the
+//! paper's linear-layer scope; explicit FP32 multiplies there are counted
+//! separately as `overhead_fp32_muls`.
+//!
+//! [`Scheme::Fp32`] is the plain FP32 baseline (no quantization, WBC or
+//! PRC) — its census records one FP32 multiply per dense MAC, which is
+//! what the census test contrasts against.
+
+use crate::energy::{mfmac_census, MacCensus};
+use crate::util::prng::Pcg32;
+
+use super::engine::MacEngine;
+use super::quantize::{round_log2_abs, scale_pow2, PotTensor};
+use super::{ratio_clip, weight_bias_correction};
+
+/// Lower clamp for the learnable PRC gamma (an all-clipping layer would
+/// kill its own gradient signal).
+const GAMMA_MIN: f32 = 0.05;
+
+/// Numeric scheme of the native trainer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Multiplication-free: ALS-PoTQ + WBC + PRC, GEMMs on a MacEngine.
+    Mf,
+    /// Plain FP32 baseline (census contrast; no quantization).
+    Fp32,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "mf" => Some(Scheme::Mf),
+            "fp32" => Some(Scheme::Fp32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Mf => "mf",
+            Scheme::Fp32 => "fp32",
+        }
+    }
+}
+
+/// Static configuration of a native model.
+#[derive(Clone, Debug)]
+pub struct NnConfig {
+    /// layer widths [d_in, hidden..., classes]
+    pub dims: Vec<usize>,
+    /// PoT code width (3..=6)
+    pub bits: u32,
+    pub scheme: Scheme,
+    /// initial learnable activation-clip ratio (eq. 12); < 1 so the
+    /// straight-through gamma gradient is live from step one
+    pub gamma_init: f32,
+    /// fixed gradient-clip ratio; >= 1 disables gradient clipping
+    pub grad_gamma: f32,
+}
+
+impl NnConfig {
+    pub fn mf(dims: &[usize]) -> NnConfig {
+        NnConfig {
+            dims: dims.to_vec(),
+            bits: 5,
+            scheme: Scheme::Mf,
+            gamma_init: 0.9,
+            grad_gamma: 1.0,
+        }
+    }
+
+    pub fn fp32(dims: &[usize]) -> NnConfig {
+        NnConfig { scheme: Scheme::Fp32, ..NnConfig::mf(dims) }
+    }
+
+    /// Trainable parameter count (weights + biases + per-layer gamma),
+    /// derivable from the dims alone.
+    pub fn n_params(&self) -> usize {
+        self.dims.windows(2).map(|d| d[0] * d[1] + d[1] + 1).sum()
+    }
+
+    /// Packed state length: params + [loss, step] tail.
+    pub fn state_len(&self) -> usize {
+        self.n_params() + 2
+    }
+}
+
+/// One linear layer: FP32 master weights + bias + learnable PRC gamma.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    /// (fan_in, fan_out) row-major
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub gamma: f32,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+/// Census of one GEMM inside a train step.
+#[derive(Clone, Debug)]
+pub struct GemmCensus {
+    /// "fw0" / "dx1" / "dw1" ...
+    pub label: String,
+    pub census: MacCensus,
+}
+
+/// Op census of one training step — the paper's central invariant made
+/// checkable: under [`Scheme::Mf`], `linear_fp32_muls == 0`.
+#[derive(Clone, Debug, Default)]
+pub struct StepCensus {
+    /// FP32 multiplies executed inside linear-layer GEMMs (fw/dX/dW)
+    pub linear_fp32_muls: u64,
+    /// FP32 multiplies outside the linear-layer scope: loss-layer scaling
+    /// on non-PoT batch sizes, PRC threshold/gamma bookkeeping, the FP32
+    /// baseline's weight update
+    pub overhead_fp32_muls: u64,
+    /// per-GEMM MF-MAC censuses (empty under the FP32 scheme)
+    pub gemms: Vec<GemmCensus>,
+}
+
+impl StepCensus {
+    /// MACs with both operands live — each costs one INT4 add, one 1-bit
+    /// XOR and one INT32 accumulate on the MF hardware.
+    pub fn live_macs(&self) -> u64 {
+        self.gemms.iter().map(|g| g.census.live_macs).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.gemms.iter().map(|g| g.census.total_macs).sum()
+    }
+
+    /// Live-MAC energy under the paper's MF-MAC mix (pJ).
+    pub fn mf_energy_pj(&self) -> f64 {
+        self.gemms.iter().map(|g| g.census.energy_pj()).sum()
+    }
+}
+
+/// Raw probe capture of the canonical (first) layer: weights, post-ReLU
+/// output activations, weight gradient — the [W | A | G] vector the
+/// telemetry probe path consumes.
+#[derive(Clone, Debug)]
+pub struct ProbeRaw {
+    pub w: Vec<f32>,
+    pub a: Vec<f32>,
+    pub g: Vec<f32>,
+}
+
+impl ProbeRaw {
+    pub fn concat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.w.len() + self.a.len() + self.g.len());
+        v.extend_from_slice(&self.w);
+        v.extend_from_slice(&self.a);
+        v.extend_from_slice(&self.g);
+        v
+    }
+}
+
+/// Result of one forward(+backward) pass.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// mean cross-entropy over the batch
+    pub loss: f32,
+    /// summed cross-entropy (eval aggregation wants the sum)
+    pub loss_sum: f64,
+    pub n_correct: usize,
+    pub census: StepCensus,
+    pub probe: Option<ProbeRaw>,
+}
+
+/// Forward-pass cache of one layer (Mf scheme: the quantized operands are
+/// reused by the backward GEMMs via code transposition).
+struct FwCache {
+    amax: f32,
+    aq: Option<PotTensor>,
+    wq: Option<PotTensor>,
+}
+
+/// The native multiplication-free MLP.
+#[derive(Clone, Debug)]
+pub struct MfMlp {
+    pub cfg: NnConfig,
+    pub layers: Vec<Linear>,
+    pub last_loss: f32,
+    pub steps: u64,
+}
+
+impl MfMlp {
+    /// He-style init from an untruncated normal (the paper's requirement),
+    /// deterministic in the seed.
+    pub fn init(cfg: NnConfig, seed: u64) -> MfMlp {
+        assert!(cfg.dims.len() >= 2, "need at least [d_in, classes]");
+        assert!((3..=6).contains(&cfg.bits), "bits must be 3..=6");
+        let mut rng = Pcg32::new(seed ^ 0x11AF_5EED);
+        let layers = cfg
+            .dims
+            .windows(2)
+            .map(|d| {
+                let (fan_in, fan_out) = (d[0], d[1]);
+                let mut w = vec![0f32; fan_in * fan_out];
+                let std = (2.0 / fan_in as f64).sqrt() as f32;
+                rng.fill_normal(&mut w, 0.0, std);
+                Linear { w, b: vec![0.0; fan_out], gamma: cfg.gamma_init, fan_in, fan_out }
+            })
+            .collect();
+        MfMlp { cfg, layers, last_loss: f32::NAN, steps: 0 }
+    }
+
+    pub fn classes(&self) -> usize {
+        *self.cfg.dims.last().unwrap()
+    }
+
+    /// Trainable parameter count (weights + biases + per-layer gamma).
+    pub fn n_params(&self) -> usize {
+        self.cfg.n_params()
+    }
+
+    /// Packed state length: params + [loss, step] tail. The step counter
+    /// lives in the vector as an f32 — the same contract as the PJRT
+    /// state's step slot, exact up to 2^24 steps.
+    pub fn state_len(&self) -> usize {
+        self.cfg.state_len()
+    }
+
+    /// One SGD step on a batch. `x` is (m, d_in) row-major, `y` holds m
+    /// class labels.
+    pub fn train_step(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        engine: &dyn MacEngine,
+        lr: f32,
+    ) -> StepResult {
+        self.run(x, y, engine, Some(lr), false)
+    }
+
+    /// Loss/accuracy on a batch without touching any state.
+    pub fn eval_batch(&mut self, x: &[f32], y: &[i32], engine: &dyn MacEngine) -> StepResult {
+        self.run(x, y, engine, None, false)
+    }
+
+    /// Forward + backward without an update, capturing [W | A | G] of the
+    /// first layer.
+    pub fn probe_step(&mut self, x: &[f32], y: &[i32], engine: &dyn MacEngine) -> StepResult {
+        self.run(x, y, engine, None, true)
+    }
+
+    fn run(
+        &mut self,
+        x: &[f32],
+        y: &[i32],
+        engine: &dyn MacEngine,
+        lr: Option<f32>,
+        want_probe: bool,
+    ) -> StepResult {
+        let m = y.len();
+        let nl = self.layers.len();
+        assert!(m > 0, "empty batch");
+        assert_eq!(x.len(), m * self.cfg.dims[0], "x does not match (batch, d_in)");
+        let (bits, scheme) = (self.cfg.bits, self.cfg.scheme);
+        let mut census = StepCensus::default();
+
+        // ---- forward --------------------------------------------------
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nl + 1);
+        acts.push(x.to_vec());
+        let mut caches: Vec<FwCache> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let layer = &self.layers[l];
+            let (k, n) = (layer.fan_in, layer.fan_out);
+            let a = &acts[l];
+            let amax = a.iter().fold(0f32, |mx, &v| mx.max(v.abs()));
+            let mut cache = FwCache { amax, aq: None, wq: None };
+            let mut z = match scheme {
+                Scheme::Mf => {
+                    // PRC (learnable gamma) then ALS-PoTQ on activations;
+                    // WBC then ALS-PoTQ on weights; GEMM on the engine.
+                    // Same arithmetic as [`ratio_clip`], reusing the amax
+                    // already computed for the cache.
+                    let t = layer.gamma * amax;
+                    let a_clip: Vec<f32> = a.iter().map(|&v| v.clamp(-t, t)).collect();
+                    census.overhead_fp32_muls += 1; // t = gamma * amax
+                    let aq = PotTensor::quantize_2d(&a_clip, m, k, bits, None);
+                    let wc = weight_bias_correction(&layer.w);
+                    let wq = PotTensor::quantize_2d(&wc, k, n, bits, None);
+                    census.gemms.push(GemmCensus {
+                        label: format!("fw{l}"),
+                        census: mfmac_census(&aq, &wq),
+                    });
+                    let z = engine.matmul(&aq, &wq);
+                    cache.aq = Some(aq);
+                    cache.wq = Some(wq);
+                    z
+                }
+                Scheme::Fp32 => {
+                    census.linear_fp32_muls += (m * k * n) as u64;
+                    matmul_f32(a, &layer.w, m, k, n)
+                }
+            };
+            for row in z.chunks_mut(n) {
+                for (v, &bb) in row.iter_mut().zip(&layer.b) {
+                    *v += bb; // FP32 adds only
+                }
+            }
+            let out = if l + 1 == nl {
+                z
+            } else {
+                z.iter().map(|&v| v.max(0.0)).collect()
+            };
+            acts.push(out);
+            caches.push(cache);
+        }
+
+        // ---- loss: softmax cross-entropy (outside linear-layer scope) --
+        let classes = self.classes();
+        let logits = &acts[nl];
+        let mut p = vec![0f32; m * classes];
+        let mut loss_sum = 0f64;
+        let mut n_correct = 0usize;
+        for (i, row) in logits.chunks(classes).enumerate() {
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let exps: Vec<f64> = row.iter().map(|&v| ((v - mx) as f64).exp()).collect();
+            let sum: f64 = exps.iter().sum();
+            let yi = y[i] as usize;
+            assert!(yi < classes, "label {yi} out of range");
+            loss_sum += sum.ln() - (row[yi] - mx) as f64;
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            if argmax == yi {
+                n_correct += 1;
+            }
+            for (pc, &e) in p[i * classes..(i + 1) * classes].iter_mut().zip(&exps) {
+                *pc = (e / sum) as f32;
+            }
+        }
+        let loss = (loss_sum / m as f64) as f32;
+
+        let mut probe: Option<ProbeRaw> = None;
+        if lr.is_some() || want_probe {
+            // dZ = (p - onehot) / m; the batch scale is an exponent add
+            // when m is a power of two (our configs), an FP32 multiply
+            // (counted as loss-layer overhead) otherwise
+            let mut dz = p;
+            for (i, &yi) in y.iter().enumerate() {
+                dz[i * classes + yi as usize] -= 1.0;
+            }
+            if m.is_power_of_two() {
+                let e = -(m.trailing_zeros() as i32);
+                for v in dz.iter_mut() {
+                    *v = scale_pow2(*v, e);
+                }
+            } else {
+                let inv = 1.0 / m as f32;
+                for v in dz.iter_mut() {
+                    *v *= inv;
+                }
+                census.overhead_fp32_muls += (m * classes) as u64;
+            }
+
+            // lr snapped to the nearest power of two -> exponent-add SGD
+            let lr_e = lr.map(|l| {
+                let (e, zero) = round_log2_abs(l);
+                assert!(!zero, "lr quantizes to zero");
+                e
+            });
+
+            // ---- backward (reverse layer order) ------------------------
+            for l in (0..nl).rev() {
+                let (k, n) = (self.layers[l].fan_in, self.layers[l].fan_out);
+                let a = &acts[l];
+                // PRC on gradients (fixed ratio; >= 1 is the identity and
+                // borrows dz instead of copying it)
+                let clipped;
+                let g_clip: &[f32] = if self.cfg.grad_gamma >= 1.0 {
+                    &dz
+                } else {
+                    census.overhead_fp32_muls += 1;
+                    clipped = ratio_clip(&dz, self.cfg.grad_gamma);
+                    &clipped
+                };
+                let (dx, dw) = match scheme {
+                    Scheme::Mf => {
+                        let aq = caches[l].aq.as_ref().unwrap();
+                        let wq = caches[l].wq.as_ref().unwrap();
+                        let gq = PotTensor::quantize_2d(g_clip, m, n, bits, None);
+                        let wq_t = wq.transpose2d();
+                        let aq_t = aq.transpose2d();
+                        census.gemms.push(GemmCensus {
+                            label: format!("dx{l}"),
+                            census: mfmac_census(&gq, &wq_t),
+                        });
+                        census.gemms.push(GemmCensus {
+                            label: format!("dw{l}"),
+                            census: mfmac_census(&aq_t, &gq),
+                        });
+                        // one batched call: LUT/thread-scope amortized
+                        let mut outs = engine.matmul_batch(&[(&gq, &wq_t), (&aq_t, &gq)]);
+                        let dw = outs.pop().unwrap();
+                        let dx = outs.pop().unwrap();
+                        (dx, dw)
+                    }
+                    Scheme::Fp32 => {
+                        census.linear_fp32_muls += 2 * (m * k * n) as u64;
+                        let w = &self.layers[l].w;
+                        (
+                            matmul_f32_nt(g_clip, w, m, n, k),
+                            matmul_f32_tn(a, g_clip, m, k, n),
+                        )
+                    }
+                };
+                // bias gradient: column sums (adds only)
+                let mut db = vec![0f32; n];
+                for dzrow in dz.chunks(n) {
+                    for (o, &g) in db.iter_mut().zip(dzrow) {
+                        *o += g;
+                    }
+                }
+                if want_probe && l == 0 {
+                    probe = Some(ProbeRaw {
+                        w: self.layers[0].w.clone(),
+                        a: acts[1].clone(),
+                        g: dw.clone(),
+                    });
+                }
+                if let Some(lr_e) = lr_e {
+                    let lr = lr.unwrap();
+                    let layer = &mut self.layers[l];
+                    match scheme {
+                        Scheme::Mf => {
+                            // straight-through PRC gamma gradient: clipped
+                            // elements contribute sign(a) * amax * dX
+                            let amax = caches[l].amax;
+                            let t = layer.gamma * amax;
+                            census.overhead_fp32_muls += 1;
+                            let mut dgamma = 0f64;
+                            for (&av, &d) in a.iter().zip(&dx) {
+                                if av.abs() > t {
+                                    let signed = if av > 0.0 { d } else { -d };
+                                    dgamma += signed as f64;
+                                }
+                            }
+                            dgamma *= amax as f64;
+                            census.overhead_fp32_muls += 2; // amax fold + lr*dgamma
+                            // multiplication-free weight update: exponent add
+                            for (wv, &g) in layer.w.iter_mut().zip(&dw) {
+                                *wv -= scale_pow2(g, lr_e);
+                            }
+                            for (bv, &g) in layer.b.iter_mut().zip(&db) {
+                                *bv -= scale_pow2(g, lr_e);
+                            }
+                            layer.gamma =
+                                (layer.gamma - lr * dgamma as f32).clamp(GAMMA_MIN, 1.0);
+                        }
+                        Scheme::Fp32 => {
+                            census.overhead_fp32_muls += (layer.w.len() + layer.b.len()) as u64;
+                            for (wv, &g) in layer.w.iter_mut().zip(&dw) {
+                                *wv -= lr * g;
+                            }
+                            for (bv, &g) in layer.b.iter_mut().zip(&db) {
+                                *bv -= lr * g;
+                            }
+                        }
+                    }
+                }
+                // propagate through the previous ReLU (mask = select, no
+                // multiply); the PRC clip is straight-through
+                if l > 0 {
+                    dz = dx
+                        .iter()
+                        .zip(&acts[l])
+                        .map(|(&d, &av)| if av > 0.0 { d } else { 0.0 })
+                        .collect();
+                }
+            }
+        }
+
+        if scheme == Scheme::Mf {
+            // the paper's central invariant, checked on every step
+            assert_eq!(
+                census.linear_fp32_muls, 0,
+                "FP32 multiplies leaked into a linear layer"
+            );
+        }
+        if lr.is_some() {
+            self.steps += 1;
+            self.last_loss = loss;
+        }
+        StepResult { loss, loss_sum, n_correct, census, probe }
+    }
+
+    /// Pack all trainable state + [loss, step] into one f32 vector (the
+    /// checkpoint format the coordinator already speaks).
+    pub fn state_to_vec(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.state_len());
+        for l in &self.layers {
+            v.extend_from_slice(&l.w);
+            v.extend_from_slice(&l.b);
+            v.push(l.gamma);
+        }
+        v.push(self.last_loss);
+        v.push(self.steps as f32);
+        v
+    }
+
+    /// Restore from a packed state vector (checkpoint resume).
+    pub fn state_from_vec(&mut self, v: &[f32]) -> Result<(), String> {
+        if v.len() != self.state_len() {
+            return Err(format!(
+                "state length {} does not match model state_len {}",
+                v.len(),
+                self.state_len()
+            ));
+        }
+        let mut off = 0;
+        for l in self.layers.iter_mut() {
+            l.w.copy_from_slice(&v[off..off + l.w.len()]);
+            off += l.w.len();
+            l.b.copy_from_slice(&v[off..off + l.b.len()]);
+            off += l.b.len();
+            l.gamma = v[off];
+            off += 1;
+        }
+        self.last_loss = v[off];
+        self.steps = v[off + 1] as u64;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FP32 baseline GEMMs (Scheme::Fp32 only)
+// ---------------------------------------------------------------------------
+
+/// out = a @ w, a (m,k), w (k,n).
+fn matmul_f32(a: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for (arow, orow) in a.chunks(k).zip(out.chunks_mut(n)) {
+        for (p, &av) in arow.iter().enumerate() {
+            let wrow = &w[p * n..(p + 1) * n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += av * wv;
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), m * n);
+    out
+}
+
+/// out = g @ w^T, g (m,n), w (k,n) -> (m,k).
+fn matmul_f32_nt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * k];
+    for (grow, orow) in g.chunks(n).zip(out.chunks_mut(k)) {
+        for (p, o) in orow.iter_mut().enumerate() {
+            let wrow = &w[p * n..(p + 1) * n];
+            *o = wrow.iter().zip(grow).map(|(&wv, &gv)| wv * gv).sum();
+        }
+    }
+    out
+}
+
+/// out = a^T @ g, a (m,k), g (m,n) -> (k,n).
+fn matmul_f32_tn(a: &[f32], g: &[f32], _m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; k * n];
+    for (arow, grow) in a.chunks(k).zip(g.chunks(n)) {
+        for (p, &av) in arow.iter().enumerate() {
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &gv) in orow.iter_mut().zip(grow) {
+                *o += av * gv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potq::{BlockedEngine, ScalarEngine, ThreadedEngine};
+
+    /// Tiny deterministic classification batch: class-dependent mean.
+    fn toy_batch(seed: u64, m: usize, d: usize, classes: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut r = Pcg32::new(seed);
+        let mut x = vec![0f32; m * d];
+        let mut y = vec![0i32; m];
+        for i in 0..m {
+            let c = r.below(classes as u32) as i32;
+            y[i] = c;
+            for j in 0..d {
+                let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+                let centre = (c as f32 - classes as f32 / 2.0) * 0.5 * sign;
+                x[i * d + j] = centre + 0.3 * r.normal();
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn mf_training_reduces_loss_on_toy_task() {
+        let mut model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 1);
+        let eng = BlockedEngine::default();
+        let (x, y) = toy_batch(7, 16, 12, 4);
+        let first = model.train_step(&x, &y, &eng, 0.1).loss;
+        for _ in 0..60 {
+            model.train_step(&x, &y, &eng, 0.1);
+        }
+        let last = model.last_loss;
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first * 0.7, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn fp32_baseline_also_learns() {
+        let mut model = MfMlp::init(NnConfig::fp32(&[12, 16, 4]), 1);
+        let eng = ScalarEngine;
+        let (x, y) = toy_batch(7, 16, 12, 4);
+        let first = model.train_step(&x, &y, &eng, 0.1).loss;
+        for _ in 0..60 {
+            model.train_step(&x, &y, &eng, 0.1);
+        }
+        assert!(model.last_loss < first * 0.5, "loss {first} -> {}", model.last_loss);
+    }
+
+    #[test]
+    fn census_mf_is_multiplication_free_fp32_is_not() {
+        let (x, y) = toy_batch(3, 8, 12, 4);
+        let eng = ScalarEngine;
+        let mut mf = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 2);
+        let res = mf.train_step(&x, &y, &eng, 0.05);
+        assert_eq!(res.census.linear_fp32_muls, 0);
+        assert!(res.census.live_macs() > 0, "live MACs must be recorded");
+        // 3 GEMMs per layer (fw, dX, dW)
+        assert_eq!(res.census.gemms.len(), 3 * mf.layers.len());
+        assert_eq!(res.census.total_macs(), 3 * (8 * 12 * 16 + 8 * 16 * 4) as u64);
+
+        let mut fp = MfMlp::init(NnConfig::fp32(&[12, 16, 4]), 2);
+        let res = fp.train_step(&x, &y, &eng, 0.05);
+        assert_eq!(res.census.linear_fp32_muls, 3 * (8 * 12 * 16 + 8 * 16 * 4) as u64);
+        assert!(res.census.gemms.is_empty());
+    }
+
+    #[test]
+    fn engines_produce_bit_identical_steps() {
+        let (x, y) = toy_batch(11, 8, 12, 4);
+        let engines: [Box<dyn MacEngine>; 3] = [
+            Box::new(ScalarEngine),
+            Box::new(BlockedEngine::with_tiles(3, 5, 2)),
+            Box::new(ThreadedEngine::new(3)),
+        ];
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        let mut losses: Vec<u32> = Vec::new();
+        for eng in &engines {
+            let mut model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 5);
+            for _ in 0..10 {
+                model.train_step(&x, &y, eng.as_ref(), 0.1);
+            }
+            states.push(model.state_to_vec());
+            losses.push(model.last_loss.to_bits());
+        }
+        assert_eq!(losses[0], losses[1], "scalar vs blocked loss");
+        assert_eq!(losses[0], losses[2], "scalar vs threaded loss");
+        assert_eq!(states[0], states[1], "scalar vs blocked state");
+        assert_eq!(states[0], states[2], "scalar vs threaded state");
+    }
+
+    #[test]
+    fn state_vec_roundtrip() {
+        let (x, y) = toy_batch(4, 8, 12, 4);
+        let eng = ScalarEngine;
+        let mut a = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 9);
+        for _ in 0..5 {
+            a.train_step(&x, &y, &eng, 0.1);
+        }
+        let v = a.state_to_vec();
+        assert_eq!(v.len(), a.state_len());
+        let mut b = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 1234);
+        b.state_from_vec(&v).unwrap();
+        assert_eq!(b.steps, 5);
+        assert_eq!(b.last_loss.to_bits(), a.last_loss.to_bits());
+        // identical continuation
+        let ra = a.train_step(&x, &y, &eng, 0.05);
+        let rb = b.train_step(&x, &y, &eng, 0.05);
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+        assert_eq!(a.state_to_vec(), b.state_to_vec());
+        // wrong length is a clean error
+        assert!(b.state_from_vec(&v[1..]).is_err());
+    }
+
+    #[test]
+    fn eval_is_pure_and_deterministic() {
+        let (x, y) = toy_batch(6, 8, 12, 4);
+        let eng = BlockedEngine::default();
+        let mut model = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 3);
+        let before = model.state_to_vec();
+        let e1 = model.eval_batch(&x, &y, &eng);
+        let e2 = model.eval_batch(&x, &y, &eng);
+        assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
+        assert_eq!(e1.n_correct, e2.n_correct);
+        assert_eq!(model.state_to_vec(), before, "eval must not mutate state");
+        assert_eq!(model.steps, 0);
+    }
+
+    #[test]
+    fn probe_sections_have_expected_sizes() {
+        let (x, y) = toy_batch(8, 8, 12, 4);
+        let eng = ScalarEngine;
+        let mut model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 3);
+        let before = model.state_to_vec();
+        let res = model.probe_step(&x, &y, &eng);
+        let probe = res.probe.expect("probe requested");
+        assert_eq!(probe.w.len(), 12 * 16);
+        assert_eq!(probe.a.len(), 8 * 16);
+        assert_eq!(probe.g.len(), 12 * 16);
+        assert!(probe.g.iter().any(|&v| v != 0.0), "G must be non-trivial");
+        assert_eq!(model.state_to_vec(), before, "probe must not update");
+    }
+
+    #[test]
+    fn gamma_stays_in_bounds_and_learns() {
+        let (x, y) = toy_batch(5, 16, 12, 4);
+        let eng = ScalarEngine;
+        let mut model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 8);
+        let g0: Vec<f32> = model.layers.iter().map(|l| l.gamma).collect();
+        for _ in 0..40 {
+            model.train_step(&x, &y, &eng, 0.1);
+        }
+        let moved = model
+            .layers
+            .iter()
+            .zip(&g0)
+            .any(|(l, &g)| (l.gamma - g).abs() > 1e-6);
+        assert!(moved, "learnable gamma never moved");
+        for l in &model.layers {
+            assert!((GAMMA_MIN..=1.0).contains(&l.gamma), "gamma {}", l.gamma);
+        }
+    }
+}

@@ -90,6 +90,32 @@ pub fn pow2i_saturating(e: i32) -> f32 {
     }
 }
 
+/// Multiplication-free scale of `v` by 2^k: an integer add on the f32
+/// exponent field (what the MF hardware's scalar shift unit does) instead
+/// of an FP32 multiply. Bit-identical to `v * 2^k` whenever both input
+/// and result are normal; subnormals flush to signed zero, overflow
+/// saturates to +/-f32::MAX, and inf/NaN pass through unchanged. This is
+/// how the native trainer applies the PoT-snapped learning rate and the
+/// 1/batch loss scale without any FP32 multiplication.
+pub fn scale_pow2(v: f32, k: i32) -> f32 {
+    let bits = v.to_bits();
+    let e = ((bits >> 23) & 0xFF) as i32;
+    if e == 255 {
+        return v; // inf / NaN
+    }
+    if e == 0 {
+        return f32::from_bits(bits & 0x8000_0000); // zero / subnormal flush
+    }
+    let ne = e + k;
+    if ne <= 0 {
+        f32::from_bits(bits & 0x8000_0000) // underflow -> signed zero
+    } else if ne >= 255 {
+        f32::from_bits((bits & 0x8000_0000) | 0x7F7F_FFFF) // saturate +/-MAX
+    } else {
+        f32::from_bits((bits & 0x807F_FFFF) | ((ne as u32) << 23))
+    }
+}
+
 /// Layer-wise scale exponent beta = round(log2(max|F| / 2^emax)) (eq. 7+10).
 pub fn compute_beta(f: &[f32], b: u32) -> i32 {
     let amax = f.iter().fold(0f32, |m, &v| m.max(v.abs()));
@@ -239,6 +265,22 @@ impl PotTensor {
     /// Number of elements that did not quantize to the zero code.
     pub fn count_nonzero(&self) -> usize {
         self.codes.iter().filter(|&&c| c & MAG_MASK != 0).count()
+    }
+
+    /// Transpose of a 2-D tensor: pure code movement (no arithmetic), so
+    /// the result shares beta/bits and stays bit-compatible with every
+    /// engine. The backward GEMMs (dX = dY.Wt, dW = Xt.dY) reuse the
+    /// forward operands' codes through this.
+    pub fn transpose2d(&self) -> PotTensor {
+        assert_eq!(self.shape.len(), 2, "transpose2d needs a 2-D tensor");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut codes = vec![0u8; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                codes[j * r + i] = self.codes[i * c + j];
+            }
+        }
+        PotTensor::from_codes(codes, &[c, r], self.beta, self.bits)
     }
 
     pub fn dequantize(&self) -> Vec<f32> {
@@ -463,6 +505,61 @@ mod tests {
         r.fill_normal(&mut g, 0.0, 2e-5);
         let bg = compute_beta(&g, 5);
         assert!((-22..=-12).contains(&bg), "beta_g = {bg}");
+    }
+
+    #[test]
+    fn scale_pow2_matches_fp32_multiply_on_normals() {
+        let mut r = Pcg32::new(6);
+        for _ in 0..2000 {
+            let v = (r.normal() * 3.0) * (2f32).powi((r.below(40) as i32) - 20);
+            if v == 0.0 {
+                continue;
+            }
+            let k = (r.below(21) as i32) - 10;
+            let want = v * (2f32).powi(k);
+            if want.is_normal() {
+                assert_eq!(scale_pow2(v, k).to_bits(), want.to_bits(), "v={v} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_pow2_edge_cases() {
+        assert_eq!(scale_pow2(0.0, 10).to_bits(), 0.0f32.to_bits());
+        assert_eq!(scale_pow2(-0.0, 10).to_bits(), (-0.0f32).to_bits());
+        // underflow flushes to signed zero
+        assert_eq!(scale_pow2(1.0, -300).to_bits(), 0.0f32.to_bits());
+        assert_eq!(scale_pow2(-1.0, -300).to_bits(), (-0.0f32).to_bits());
+        // overflow saturates to signed MAX
+        assert_eq!(scale_pow2(1.5, 300), f32::MAX);
+        assert_eq!(scale_pow2(-1.5, 300), -f32::MAX);
+        // inf / NaN pass through
+        assert_eq!(scale_pow2(f32::INFINITY, -4), f32::INFINITY);
+        assert!(scale_pow2(f32::NAN, 3).is_nan());
+        // subnormals flush (the quantizer flushes them anyway)
+        assert_eq!(scale_pow2(1e-42, 4), 0.0);
+    }
+
+    #[test]
+    fn transpose2d_moves_codes_and_keeps_metadata() {
+        let mut r = Pcg32::new(8);
+        let (rows, cols) = (5, 7);
+        let mut x = vec![0f32; rows * cols];
+        r.fill_normal(&mut x, 0.0, 0.3);
+        let t = PotTensor::quantize_2d(&x, rows, cols, 5, None);
+        let tt = t.transpose2d();
+        assert_eq!(tt.shape(), &[cols, rows]);
+        assert_eq!(tt.beta, t.beta);
+        assert_eq!(tt.bits, t.bits);
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(tt.code(j * rows + i), t.code(i * cols + j));
+            }
+        }
+        // involution
+        let back = tt.transpose2d();
+        assert_eq!(back.codes(), t.codes());
+        assert_eq!(back.shape(), t.shape());
     }
 
     #[test]

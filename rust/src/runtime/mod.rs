@@ -1,10 +1,16 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//! Execution backends behind the [`SessionBackend`] interface:
 //!
-//! The interchange is HLO *text* (jax >= 0.5 protos carry 64-bit ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns them). One
-//! `Runtime` per process; executables are compiled once per variant.
+//!  * the PJRT runtime — load AOT-compiled HLO text artifacts and execute
+//!    them. The interchange is HLO *text* (jax >= 0.5 protos carry 64-bit
+//!    ids that xla_extension 0.5.1 rejects; the text parser reassigns
+//!    them). One `Runtime` per process; executables are compiled once per
+//!    variant.
+//!  * the native backend ([`NativeSession`]) — the multiplication-free
+//!    training loop executed entirely in rust on a `potq::MacEngine`,
+//!    needing no artifacts and no PJRT.
 
 pub mod artifact;
+pub mod native;
 pub mod session;
 
 use std::path::Path;
@@ -12,7 +18,8 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 pub use artifact::{Index, Manifest};
-pub use session::Session;
+pub use native::NativeSession;
+pub use session::{Session, SessionBackend, SessionInfo};
 
 pub struct Runtime {
     pub client: xla::PjRtClient,

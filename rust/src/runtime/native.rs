@@ -1,0 +1,245 @@
+//! The native execution backend: a [`SessionBackend`] that runs the
+//! multiplication-free training loop entirely in rust on a
+//! [`MacEngine`] — no PJRT, no artifacts, no python AOT step.
+//!
+//! Built from a [`crate::models::NativeSpec`] (an MLP over the flat
+//! PatternTask), it drives [`crate::potq::nn::MfMlp`]: every linear-layer
+//! GEMM (fw, dX, dW) executes on quantized packed operands, and each
+//! train step's [`StepCensus`] is retained so callers can audit the
+//! zero-FP32-multiply invariant (`last_census()`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::Batch;
+use crate::models::{self, NativeSpec};
+use crate::potq::nn::{MfMlp, NnConfig, Scheme, StepCensus};
+use crate::potq::MacEngine;
+
+use super::artifact::ProbeSection;
+use super::session::{SessionBackend, SessionInfo};
+
+pub struct NativeSession {
+    info: SessionInfo,
+    spec: NativeSpec,
+    cfg: NnConfig,
+    engine: Box<dyn MacEngine + Send>,
+    model: Option<MfMlp>,
+    last_census: Option<StepCensus>,
+}
+
+impl NativeSession {
+    /// Build the session a [`TrainConfig`] describes: variant resolved
+    /// through the native-spec registry, engine through the MacEngine
+    /// registry.
+    pub fn from_config(cfg: &TrainConfig) -> Result<NativeSession> {
+        let spec = models::native_spec(&cfg.variant).with_context(|| {
+            format!(
+                "variant '{}' has no native spec (available: {})",
+                cfg.variant,
+                models::NATIVE_VARIANTS.join(", ")
+            )
+        })?;
+        let engine = crate::potq::engine_by_name(&cfg.engine, cfg.threads)
+            .with_context(|| format!("unknown engine '{}'", cfg.engine))?;
+        let scheme = Scheme::parse(spec.scheme).context("bad scheme in native spec")?;
+        let nn_cfg = NnConfig {
+            dims: spec.dims.clone(),
+            bits: cfg.bits,
+            scheme,
+            gamma_init: cfg.gamma,
+            grad_gamma: cfg.grad_gamma,
+        };
+        Ok(NativeSession::new(spec, nn_cfg, engine))
+    }
+
+    pub fn new(
+        spec: NativeSpec,
+        cfg: NnConfig,
+        engine: Box<dyn MacEngine + Send>,
+    ) -> NativeSession {
+        // probe layout mirrors the PJRT manifests: [W | A | G] of the
+        // canonical (first) layer, A being its post-ReLU batch output
+        let (w_len, a_len) = (cfg.dims[0] * cfg.dims[1], spec.batch * cfg.dims[1]);
+        let probe_sections = vec![
+            ProbeSection { name: "w".into(), offset: 0, size: w_len },
+            ProbeSection { name: "a".into(), offset: w_len, size: a_len },
+            ProbeSection { name: "g".into(), offset: w_len + a_len, size: w_len },
+        ];
+        let info = SessionInfo {
+            name: spec.name.to_string(),
+            model: spec.model.to_string(),
+            scheme: spec.scheme.to_string(),
+            backend: "native",
+            batch: spec.batch,
+            n_params: cfg.n_params(),
+            state_len: cfg.state_len(),
+            x_shape: vec![spec.batch, cfg.dims[0]],
+            y_shape: vec![spec.batch],
+            eval_denom: spec.batch,
+            probe_sections,
+        };
+        NativeSession { info, spec, cfg, engine, model: None, last_census: None }
+    }
+
+    /// Census of the most recent train/probe step.
+    pub fn last_census(&self) -> Option<&StepCensus> {
+        self.last_census.as_ref()
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    fn model_mut(&mut self) -> Result<&mut MfMlp> {
+        self.model.as_mut().context("call init() first")
+    }
+
+    fn batch_xy<'b>(&self, batch: &'b Batch) -> Result<(&'b [f32], &'b [i32])> {
+        if batch.x_is_int {
+            bail!("native backend expects f32 inputs");
+        }
+        let want = self.spec.batch * self.cfg.dims[0];
+        if batch.x_f32.len() != want {
+            bail!("batch x has {} elements, expected {}", batch.x_f32.len(), want);
+        }
+        Ok((&batch.x_f32, &batch.y))
+    }
+}
+
+impl SessionBackend for NativeSession {
+    fn info(&self) -> &SessionInfo {
+        &self.info
+    }
+
+    fn init(&mut self, seed: i32) -> Result<()> {
+        self.model = Some(MfMlp::init(self.cfg.clone(), seed as u32 as u64));
+        self.last_census = None;
+        Ok(())
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<()> {
+        let (x, y) = self.batch_xy(batch)?;
+        let engine = &*self.engine;
+        let model = self.model.as_mut().context("call init() first")?;
+        // the zero-FP32-multiply invariant is asserted inside MfMlp::run
+        // on every MF step; the census is retained here for callers
+        let res = model.train_step(x, y, engine, lr);
+        self.last_census = Some(res.census);
+        Ok(())
+    }
+
+    fn metrics(&self) -> Result<(f32, u64)> {
+        let model = self.model.as_ref().context("call init() first")?;
+        Ok((model.last_loss, model.steps))
+    }
+
+    fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)> {
+        let (x, y) = self.batch_xy(batch)?;
+        let engine = &*self.engine;
+        let model = self.model.as_mut().context("call init() first")?;
+        let res = model.eval_batch(x, y, engine);
+        Ok((res.loss_sum, res.n_correct as f64))
+    }
+
+    fn probe(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+        let (x, y) = self.batch_xy(batch)?;
+        let engine = &*self.engine;
+        let model = self.model.as_mut().context("call init() first")?;
+        let res = model.probe_step(x, y, engine);
+        self.last_census = Some(res.census);
+        Ok(res.probe.context("probe produced no capture")?.concat())
+    }
+
+    fn state_to_host(&self) -> Result<Vec<f32>> {
+        let model = self.model.as_ref().context("call init() first")?;
+        Ok(model.state_to_vec())
+    }
+
+    fn state_from_host(&mut self, v: &[f32]) -> Result<()> {
+        if self.model.is_none() {
+            // checkpoint restore without init(): weights are overwritten
+            self.model = Some(MfMlp::init(self.cfg.clone(), 0));
+        }
+        self.model_mut()?.state_from_vec(v).map_err(anyhow::Error::msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    fn session(variant: &str) -> NativeSession {
+        let cfg = TrainConfig { variant: variant.into(), ..TrainConfig::default() };
+        NativeSession::from_config(&cfg).unwrap()
+    }
+
+    fn batch_for(s: &NativeSession, seed: u64) -> Batch {
+        let info = s.info().clone();
+        let mut ds = data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, seed);
+        ds.next_batch()
+    }
+
+    #[test]
+    fn session_info_is_consistent() {
+        let s = session("tiny_mlp_mf");
+        let info = s.info();
+        assert_eq!(info.backend, "native");
+        assert_eq!(info.x_shape, vec![16, 48]);
+        assert_eq!(info.y_shape, vec![16]);
+        assert_eq!(info.eval_denom, 16);
+        let total: usize = info.probe_sections.iter().map(|p| p.size).sum();
+        assert_eq!(info.probe_sections.len(), 3);
+        assert_eq!(total, 48 * 32 + 16 * 32 + 48 * 32);
+    }
+
+    #[test]
+    fn lifecycle_train_metrics_eval_probe() {
+        let mut s = session("tiny_mlp_mf");
+        assert!(s.metrics().is_err(), "metrics before init must fail");
+        s.init(3).unwrap();
+        let b = batch_for(&s, 3);
+        s.train_step(&b, 0.05).unwrap();
+        let (loss, step) = s.metrics().unwrap();
+        assert!(loss.is_finite());
+        assert_eq!(step, 1);
+        let census = s.last_census().unwrap();
+        assert_eq!(census.linear_fp32_muls, 0);
+        assert!(census.live_macs() > 0);
+        let (sum_loss, correct) = s.eval_batch(&b).unwrap();
+        assert!(sum_loss.is_finite());
+        assert!((0.0..=16.0).contains(&correct));
+        let raw = s.probe(&b).unwrap();
+        let total: usize = s.info().probe_sections.iter().map(|p| p.size).sum();
+        assert_eq!(raw.len(), total);
+    }
+
+    #[test]
+    fn state_roundtrip_through_fresh_session() {
+        let mut a = session("tiny_mlp_mf");
+        a.init(1).unwrap();
+        let b = batch_for(&a, 1);
+        for _ in 0..3 {
+            a.train_step(&b, 0.05).unwrap();
+        }
+        let state = a.state_to_host().unwrap();
+        assert_eq!(state.len(), a.info().state_len);
+        // restore into a session that was never init()ed
+        let mut fresh = session("tiny_mlp_mf");
+        fresh.state_from_host(&state).unwrap();
+        assert_eq!(fresh.metrics().unwrap().1, 3);
+        let (ea, ca) = a.eval_batch(&b).unwrap();
+        let (eb, cb) = fresh.eval_batch(&b).unwrap();
+        assert_eq!(ea.to_bits(), eb.to_bits());
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn unknown_variant_and_engine_are_clean_errors() {
+        let cfg = TrainConfig { variant: "cnn_mf".into(), ..TrainConfig::default() };
+        let err = format!("{:#}", NativeSession::from_config(&cfg).unwrap_err());
+        assert!(err.contains("no native spec"), "{err}");
+        assert!(err.contains("tiny_mlp_mf"), "error should list variants: {err}");
+    }
+}

@@ -1,5 +1,8 @@
 //! A loaded training session: the compiled executables of one artifact
-//! variant plus the device-resident state buffer.
+//! variant plus the device-resident state buffer — and the
+//! [`SessionBackend`] trait that lets the coordinator drive any execution
+//! backend (PJRT here, the native MacEngine path in
+//! [`super::native::NativeSession`]) through one interface.
 //!
 //! Hot-path contract (DESIGN.md): `train_step` feeds the state buffer
 //! back via `execute_b` with zero host copies; scalar metrics go through
@@ -13,11 +16,52 @@ use xla::{Literal, PjRtBuffer, PjRtLoadedExecutable};
 
 use crate::data::Batch;
 
-use super::artifact::Manifest;
+use super::artifact::{Manifest, ProbeSection};
 use super::Runtime;
+
+/// Backend-independent description of a training session: everything the
+/// coordinator needs to build data pipelines, aggregate eval metrics and
+/// split probe vectors, without reaching into backend internals.
+#[derive(Clone, Debug)]
+pub struct SessionInfo {
+    /// variant name (artifact dir or native spec name)
+    pub name: String,
+    /// model family key for [`crate::data::for_variant`]
+    pub model: String,
+    pub scheme: String,
+    /// "pjrt" | "native"
+    pub backend: &'static str,
+    pub batch: usize,
+    pub n_params: usize,
+    pub state_len: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub eval_denom: usize,
+    pub probe_sections: Vec<ProbeSection>,
+}
+
+/// One training-session backend behind the coordinator's event loop.
+///
+/// The contract mirrors the PJRT session exactly: `init` seeds the state,
+/// `train_step` advances it in place, `metrics` reads (last loss, step)
+/// cheaply, `eval_batch` returns (sum_loss, n_correct), `probe` returns
+/// the raw [W | A | G] vector described by `info().probe_sections`, and
+/// the state vector round-trips through `state_to_host`/`state_from_host`
+/// for checkpoints.
+pub trait SessionBackend {
+    fn info(&self) -> &SessionInfo;
+    fn init(&mut self, seed: i32) -> Result<()>;
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<()>;
+    fn metrics(&self) -> Result<(f32, u64)>;
+    fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)>;
+    fn probe(&mut self, batch: &Batch) -> Result<Vec<f32>>;
+    fn state_to_host(&self) -> Result<Vec<f32>>;
+    fn state_from_host(&mut self, v: &[f32]) -> Result<()>;
+}
 
 pub struct Session<'rt> {
     pub manifest: Manifest,
+    info: SessionInfo,
     rt: &'rt Runtime,
     init_exe: PjRtLoadedExecutable,
     train_exe: PjRtLoadedExecutable,
@@ -47,6 +91,19 @@ impl<'rt> Session<'rt> {
             rt.compile_file(&manifest.artifact_path(key)?)
                 .with_context(|| format!("compiling {variant}/{key}"))
         };
+        let info = SessionInfo {
+            name: manifest.name.clone(),
+            model: manifest.model.clone(),
+            scheme: manifest.scheme.clone(),
+            backend: "pjrt",
+            batch: manifest.batch,
+            n_params: manifest.n_params,
+            state_len: manifest.state_len,
+            x_shape: manifest.x.shape.clone(),
+            y_shape: manifest.y.shape.clone(),
+            eval_denom: manifest.eval_denom,
+            probe_sections: manifest.probe_sections.clone(),
+        };
         Ok(Self {
             init_exe: compile("init")?,
             train_exe: compile("train")?,
@@ -54,6 +111,7 @@ impl<'rt> Session<'rt> {
             probe_exe: None,
             slice_exe: compile("slice")?,
             manifest,
+            info,
             rt,
             state: None,
             steps_taken: 0,
@@ -178,5 +236,39 @@ impl<'rt> Session<'rt> {
 
     pub fn has_state(&self) -> bool {
         self.state.is_some()
+    }
+}
+
+impl SessionBackend for Session<'_> {
+    fn info(&self) -> &SessionInfo {
+        &self.info
+    }
+
+    fn init(&mut self, seed: i32) -> Result<()> {
+        Session::init(self, seed)
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<()> {
+        Session::train_step(self, batch, lr)
+    }
+
+    fn metrics(&self) -> Result<(f32, u64)> {
+        Session::metrics(self)
+    }
+
+    fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)> {
+        Session::eval_batch(self, batch)
+    }
+
+    fn probe(&mut self, batch: &Batch) -> Result<Vec<f32>> {
+        Session::probe(self, batch)
+    }
+
+    fn state_to_host(&self) -> Result<Vec<f32>> {
+        Session::state_to_host(self)
+    }
+
+    fn state_from_host(&mut self, v: &[f32]) -> Result<()> {
+        Session::state_from_host(self, v)
     }
 }

@@ -53,6 +53,43 @@ fn unknown_model_is_a_clean_error() {
 }
 
 #[test]
+fn native_train_works_without_artifacts() {
+    // the native backend needs no `make artifacts`: this runs everywhere
+    let ckpt = std::env::temp_dir().join("mft_cli_native.ckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine",
+            "blocked", "--steps", "8", "--lr", "0.05", "--seed", "1", "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("backend: native"), "{s}");
+    assert!(s.contains("final eval accuracy"), "{s}");
+    assert!(ckpt.exists());
+}
+
+#[test]
+fn native_train_rejects_unknown_engine_and_variant() {
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine", "gpu"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("scalar|blocked|threaded"));
+
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "cnn_mf", "--steps", "2"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("no native spec"));
+}
+
+#[test]
 fn list_subcommand_enumerates_variants() {
     if !have_artifacts() {
         eprintln!("skipping: no artifacts");

@@ -184,6 +184,92 @@ fn prop_prc_clip_bounds_and_interior_identity() {
 }
 
 #[test]
+fn prop_prc_gamma_ge_one_is_identity() {
+    property("prc with gamma >= 1 is the bitwise identity", 100, |g: &mut Gen| {
+        let v = g.vec_f32_logscale(1..150, -20, 10);
+        let gamma = g.f32_in(1.0, 4.0);
+        potq::ratio_clip(&v, gamma)
+            .iter()
+            .zip(&v)
+            .all(|(c, o)| c.to_bits() == o.to_bits())
+    });
+}
+
+#[test]
+fn wbc_and_prc_degenerate_inputs_do_not_panic() {
+    // empty slices
+    assert!(potq::weight_bias_correction(&[]).is_empty());
+    assert!(potq::ratio_clip(&[], 0.5).is_empty());
+    // single element: WBC centers it to exactly zero, PRC keeps it
+    let c = potq::weight_bias_correction(&[3.25]);
+    assert_eq!(c, vec![0.0]);
+    assert_eq!(potq::ratio_clip(&[-2.5], 1.0), vec![-2.5]);
+    // NaN-bearing slices must not panic; non-NaN lanes stay finite
+    let v = [1.0f32, f32::NAN, -2.0, 0.0];
+    let w = potq::weight_bias_correction(&v);
+    assert_eq!(w.len(), 4);
+    let r = potq::ratio_clip(&v, 0.5);
+    assert_eq!(r.len(), 4);
+    assert!(r[3].abs() <= 1.0, "zero lane must stay bounded");
+    // all-NaN
+    let r = potq::ratio_clip(&[f32::NAN, f32::NAN], 0.9);
+    assert_eq!(r.len(), 2);
+}
+
+#[test]
+fn prop_scale_pow2_matches_fp32_multiply() {
+    // the native trainer's multiplication-free scaling must agree bit for
+    // bit with `v * 2^k` whenever the result is a normal f32
+    property("scale_pow2 == *2^k on normal results", 150, |g: &mut Gen| {
+        let v = g.f32_logscale(-30, 30);
+        let k = g.i32_in(-40, 41);
+        if !v.is_normal() {
+            return true; // subnormal inputs flush by design
+        }
+        let want = v * (2f32).powi(k.clamp(-126, 127));
+        let got = potq::scale_pow2(v, k.clamp(-126, 127));
+        !want.is_normal() || got.to_bits() == want.to_bits()
+    });
+}
+
+#[test]
+fn prop_matmul_batch_matches_singles() {
+    // the batched entry point (LUT amortized across GEMMs) is bit-exact
+    // with per-call matmul on every engine
+    property("matmul_batch == per-pair matmul, all engines", 30, |g: &mut Gen| {
+        let n_pairs = g.usize_in(1, 5);
+        let tensors: Vec<(potq::PotTensor, potq::PotTensor)> = (0..n_pairs)
+            .map(|_| {
+                let m = g.usize_in(1, 8);
+                let k = g.usize_in(0, 16);
+                let n = g.usize_in(1, 8);
+                (g.pot_tensor(m, k, 5), g.pot_tensor(k, n, 5))
+            })
+            .collect();
+        let pairs: Vec<(&potq::PotTensor, &potq::PotTensor)> =
+            tensors.iter().map(|(x, w)| (x, w)).collect();
+        let engines: [Box<dyn MacEngine>; 3] = [
+            Box::new(ScalarEngine),
+            Box::new(BlockedEngine::with_tiles(
+                g.usize_in(1, 6),
+                g.usize_in(1, 12),
+                g.usize_in(1, 6),
+            )),
+            Box::new(ThreadedEngine::new(g.usize_in(1, 4))),
+        ];
+        engines.iter().all(|eng| {
+            let batched = eng.matmul_batch(&pairs);
+            batched.len() == pairs.len()
+                && pairs.iter().zip(&batched).all(|((x, w), got)| {
+                    let want = eng.matmul(x, w);
+                    want.len() == got.len()
+                        && want.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits())
+                })
+        })
+    });
+}
+
+#[test]
 fn prop_energy_monotone_in_macs_and_positive() {
     property("training energy is positive & monotone in MACs", 60, |g: &mut Gen| {
         let macs = g.usize_in(1, 1_000_000) as u64;

@@ -1,13 +1,20 @@
-//! Integration: full training loops through PJRT on the AOT artifacts —
-//! loss decreases, checkpoints round-trip through the runtime, the Pallas
-//! end-to-end variant executes, ablation collapse reproduces.
-//! Requires `make artifacts`.
+//! Integration: full training loops.
+//!
+//! The *native* backend (potq::nn on a MacEngine, no PJRT) runs
+//! unconditionally — loss decreases, the run is bit-identical across all
+//! three engines, one train step is provably multiplication-free in its
+//! linear layers, and checkpoints round-trip/resume through the
+//! coordinator. The PJRT variants keep their original artifact gate
+//! (`make artifacts`).
 
 use std::path::Path;
 
 use mftrain::config::TrainConfig;
 use mftrain::coordinator::{run_variant, Checkpoint, Trainer};
-use mftrain::runtime::{Runtime, Session};
+use mftrain::models;
+use mftrain::potq::nn::{MfMlp, NnConfig, Scheme};
+use mftrain::potq::{engine_by_name, ENGINE_NAMES};
+use mftrain::runtime::{NativeSession, Runtime, Session, SessionBackend};
 
 fn have_artifacts() -> bool {
     let ok = Path::new("artifacts/index.json").exists();
@@ -16,6 +23,204 @@ fn have_artifacts() -> bool {
     }
     ok
 }
+
+/// Native run config: tiny model, every-step logging, no decay surprises.
+fn native_cfg(variant: &str, steps: u64, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        variant: variant.into(),
+        backend: "native".into(),
+        steps,
+        seed,
+        eval_every: steps,
+        eval_batches: 2,
+        log_every: 1,
+        data_noise: 1.0,
+        ..TrainConfig::default()
+    };
+    cfg.lr.base = 0.05;
+    cfg.lr.decay_at.clear();
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// native backend (unconditional)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_training_loss_decreases() {
+    let cfg = native_cfg("tiny_mlp_mf", 50, 3);
+    let mut t = Trainer::native(cfg).unwrap().quiet();
+    let rec = t.run().unwrap();
+    assert_eq!(rec.loss_curve.len(), 50);
+    assert!(
+        rec.loss_curve.iter().all(|&(_, l)| l.is_finite()),
+        "loss must stay finite"
+    );
+    // smoothed (window-averaged) loss strictly decreases end over end
+    let window = |r: std::ops::Range<usize>| -> f32 {
+        let s: f32 = rec.loss_curve[r.clone()].iter().map(|&(_, l)| l).sum();
+        s / r.len() as f32
+    };
+    let (head, tail) = (window(0..10), window(40..50));
+    assert!(tail < head * 0.85, "smoothed loss {head} -> {tail}");
+    let (first, last) = rec.loss_span().unwrap();
+    assert!(last < first, "raw loss {first} -> {last}");
+}
+
+#[test]
+fn native_fp32_baseline_trains_too() {
+    let cfg = native_cfg("tiny_mlp_fp32", 40, 3);
+    let mut t = Trainer::native(cfg).unwrap().quiet();
+    let rec = t.run().unwrap();
+    let (first, last) = rec.loss_span().unwrap();
+    assert!(last < first, "fp32 baseline must train: {first} -> {last}");
+}
+
+#[test]
+fn native_cross_engine_training_bit_identical() {
+    // extends the PR 1 single-GEMM equivalence pins to whole runs: same
+    // seed, three engines -> bit-identical loss curves and checkpoints
+    let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
+    let mut digests: Vec<u64> = Vec::new();
+    for engine in ENGINE_NAMES {
+        let ckpt = std::env::temp_dir().join(format!("mft_native_det_{engine}.ckpt"));
+        std::fs::remove_file(&ckpt).ok();
+        let mut cfg = native_cfg("tiny_mlp_mf", 30, 7);
+        cfg.engine = engine.into();
+        cfg.threads = 3;
+        cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+        let mut t = Trainer::native(cfg).unwrap().quiet();
+        let rec = t.run().unwrap();
+        curves.push(rec.loss_curve.iter().map(|&(s, l)| (s, l.to_bits())).collect());
+        let ck = Checkpoint::load(&ckpt).unwrap();
+        assert_eq!(ck.step, 30);
+        digests.push(ck.digest());
+    }
+    assert_eq!(curves[0], curves[1], "scalar vs blocked loss curves");
+    assert_eq!(curves[0], curves[2], "scalar vs threaded loss curves");
+    assert_eq!(digests[0], digests[1], "scalar vs blocked checkpoint");
+    assert_eq!(digests[0], digests[2], "scalar vs threaded checkpoint");
+}
+
+#[test]
+fn native_census_zero_fp32_muls_in_linear_layers() {
+    // the paper's central invariant: one native train step records zero
+    // FP32 multiplies in linear layers, while the live MF-MAC op counts
+    // (INT4 add + XOR + INT32 acc per live MAC) are non-trivial
+    let spec = models::native_spec("tiny_mlp_mf").unwrap();
+    let cfg = TrainConfig { variant: "tiny_mlp_mf".into(), ..TrainConfig::default() };
+    let mut s = NativeSession::from_config(&cfg).unwrap();
+    s.init(5).unwrap();
+    let info = s.info().clone();
+    let mut ds =
+        mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, 5);
+    let b = ds.next_batch();
+    s.train_step(&b, 0.05).unwrap();
+    let census = s.last_census().expect("census recorded");
+    assert_eq!(census.linear_fp32_muls, 0, "FP32 multiplies leaked into linear layers");
+    // fw + dX + dW per layer, all GEMMs accounted
+    assert_eq!(census.gemms.len(), 3 * (spec.dims.len() - 1));
+    let dense: u64 = 3 * spec
+        .dims
+        .windows(2)
+        .map(|d| (spec.batch * d[0] * d[1]) as u64)
+        .sum::<u64>();
+    assert_eq!(census.total_macs(), dense);
+    assert!(census.live_macs() > 0 && census.live_macs() <= dense);
+    assert!(census.mf_energy_pj() > 0.0);
+
+    // contrast: the FP32 baseline's census counts a multiply per MAC
+    let mut fp = MfMlp::init(
+        NnConfig {
+            dims: spec.dims.clone(),
+            bits: 5,
+            scheme: Scheme::Fp32,
+            gamma_init: 0.9,
+            grad_gamma: 1.0,
+        },
+        5,
+    );
+    let eng = engine_by_name("scalar", 0).unwrap();
+    let res = fp.train_step(&b.x_f32, &b.y, eng.as_ref(), 0.05);
+    assert_eq!(res.census.linear_fp32_muls, dense);
+}
+
+#[test]
+fn native_checkpoint_roundtrip_and_resume() {
+    let dir = std::env::temp_dir().join("mft_native_ckpt");
+    let path = dir.join("tiny.ckpt");
+    std::fs::remove_file(&path).ok();
+
+    let mut cfg = native_cfg("tiny_mlp_mf", 10, 1);
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    cfg.checkpoint_path = Some(path.to_string_lossy().into_owned());
+    let mut t = Trainer::native(cfg.clone()).unwrap().quiet();
+    t.run().unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.variant, "tiny_mlp_mf");
+    assert_eq!(ck.step, 10);
+
+    // resume to 20: only the remaining steps run
+    cfg.steps = 20;
+    let mut t2 = Trainer::native(cfg).unwrap().quiet();
+    let rec = t2.run().unwrap();
+    assert_eq!(rec.steps, 10, "resumed run trains only the remaining steps");
+    let ck2 = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck2.step, 20);
+    assert_ne!(ck.digest(), ck2.digest(), "state must advance");
+
+    // restoring into a fresh session reproduces eval exactly
+    let base = TrainConfig { variant: "tiny_mlp_mf".into(), ..TrainConfig::default() };
+    let mut s = NativeSession::from_config(&base).unwrap();
+    s.state_from_host(&ck2.state).unwrap();
+    let info = s.info().clone();
+    let mut ds =
+        mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, 99);
+    let b = ds.next_batch();
+    let (l1, c1) = s.eval_batch(&b).unwrap();
+    let (l2, c2) = s.eval_batch(&b).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn native_probe_feeds_telemetry() {
+    let mut cfg = native_cfg("tiny_mlp_mf", 12, 2);
+    cfg.probe_every = 4;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    let mut t = Trainer::native(cfg).unwrap().quiet();
+    let rec = t.run().unwrap();
+    assert_eq!(rec.probes.len(), 3);
+    for p in &rec.probes {
+        assert!(p.w.std > 0.0, "weights must have spread");
+        assert!(p.g.abs_max > 0.0, "gradient section must be non-trivial");
+        assert_eq!(p.w.packed_bytes, 48 * 32);
+    }
+}
+
+#[test]
+fn native_probe_betas_are_plausible() {
+    // the ALS betas of the probed W/A/G blocks must land in the paper's
+    // broad empirical envelope (finite, single-digit-to-tens negative /
+    // small positive exponents), proving ALS runs live on real blocks
+    let mut cfg = native_cfg("tiny_mlp_mf", 8, 4);
+    cfg.probe_every = 8;
+    cfg.eval_every = 0;
+    cfg.log_every = 0;
+    let mut t = Trainer::native(cfg).unwrap().quiet();
+    let rec = t.run().unwrap();
+    let p = rec.probes.last().unwrap();
+    for (name, s) in [("w", &p.w), ("a", &p.a), ("g", &p.g)] {
+        assert!((-40..=10).contains(&s.beta), "{name} beta {} out of envelope", s.beta);
+        assert!(s.pot_live_fraction > 0.0, "{name} quantized to all-zero");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (artifact-gated, unchanged contract)
+// ---------------------------------------------------------------------------
 
 #[test]
 fn mlp_mf_loss_decreases() {
