@@ -169,6 +169,88 @@ fn engine_sweep() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sharded native training throughput vs worker count -> BENCH_shard.json.
+/// The microbatch tiling is worker-independent, so every row trains the
+/// *same* seeded run — the sweep asserts the final states are bit-identical
+/// across worker counts before reporting speedups.
+fn shard_sweep() -> anyhow::Result<()> {
+    use mftrain::coordinator::state_digest;
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::{ShardPlan, ShardedMlp};
+
+    let dims = [768usize, 256, 128, 10];
+    let (batch, tile, classes) = (64usize, 8usize, 10usize);
+    let steps: usize = std::env::var("MFT_BENCH_SHARD_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let mut rng = Pcg32::new(17);
+    let mut x = vec![0f32; batch * dims[0]];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(classes as u32) as i32).collect();
+
+    let mut t = Table::new(
+        &format!(
+            "sharded MF training — batch {batch}, {} tiles of {tile}, {steps} timed steps",
+            batch / tile
+        ),
+        &["workers", "step mean", "steps/s", "examples/s", "speedup vs W=1"],
+    );
+    let mut results = Vec::new();
+    let mut base_mean = 0f64;
+    let mut digest0 = None;
+    for workers in [1usize, 2, 4, 8] {
+        let plan = ShardPlan::new(batch, tile, workers)?;
+        let model = MfMlp::init(NnConfig::mf(&dims), 3);
+        let mut sharded = ShardedMlp::new(model, plan, "blocked", 0)?;
+        sharded.train_step(&x, &y, 0.05); // warmup
+        let timing = bench(0, steps, || {
+            std::hint::black_box(sharded.train_step(&x, &y, 0.05).loss);
+        });
+        // the same seeded run regardless of W: pin it before reporting
+        let digest = state_digest(&sharded.model.state_to_vec());
+        match digest0 {
+            None => digest0 = Some(digest),
+            Some(d) => assert_eq!(d, digest, "W={workers} diverged from W=1"),
+        }
+        let mean = timing.mean().as_secs_f64();
+        if workers == 1 {
+            base_mean = mean;
+        }
+        let speedup = if mean > 0.0 { base_mean / mean } else { 0.0 };
+        t.row(&[
+            workers.to_string(),
+            fmt_duration(timing.mean()),
+            format!("{:.1}", 1.0 / mean.max(1e-12)),
+            format!("{:.0}", batch as f64 / mean.max(1e-12)),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("workers".into(), Json::Num(workers as f64));
+        o.insert("mean_secs".into(), Json::Num(mean));
+        o.insert("steps_per_s".into(), Json::Num(1.0 / mean.max(1e-12)));
+        o.insert("examples_per_s".into(), Json::Num(batch as f64 / mean.max(1e-12)));
+        o.insert("speedup_vs_1".into(), Json::Num(speedup));
+        o.insert("state_digest".into(), Json::Str(format!("{digest:#x}")));
+        results.push(Json::Obj(o));
+    }
+    t.note("all worker counts verified bit-identical (same state digest) before timing \
+            is reported; the combine is FP32 adds + exponent adds only");
+    t.print();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("shard_throughput".into()));
+    root.insert("batch".into(), Json::Num(batch as f64));
+    root.insert("tile".into(), Json::Num(tile as f64));
+    root.insert("n_tiles".into(), Json::Num((batch / tile) as f64));
+    root.insert("dims".into(), Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()));
+    root.insert("steps".into(), Json::Num(steps as f64));
+    root.insert("results".into(), Json::Arr(results));
+    std::fs::write("BENCH_shard.json", Json::Obj(root).to_string())?;
+    println!("shard sweep -> BENCH_shard.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::var("MFT_BENCH_STEPS")
         .ok()
@@ -240,6 +322,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- MacEngine sweep -> BENCH_kernels.json ----------------------------
     engine_sweep()?;
+
+    // ---- sharded training throughput -> BENCH_shard.json ------------------
+    shard_sweep()?;
 
     // ---- end-to-end step latency per variant ------------------------------
     let rt = match Runtime::cpu() {

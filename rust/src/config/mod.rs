@@ -67,6 +67,19 @@ pub struct TrainConfig {
     pub gamma: f32,
     /// fixed gradient-clip ratio (>= 1 disables)
     pub grad_gamma: f32,
+    /// SGD momentum in [0, 1); 0 disables (native backend; PoT-snapped
+    /// decay under the MF scheme)
+    pub momentum: f32,
+    /// L2 weight decay; 0 disables (native backend; PoT-snapped under MF)
+    pub weight_decay: f32,
+    /// data-parallel worker threads for the sharded native trainer
+    /// (`mft train --backend native --workers N`); must be >= 1. The
+    /// microbatch tiling is worker-independent, so any N gives a
+    /// bit-identical seeded run.
+    pub workers: usize,
+    /// rows per shard microbatch tile (power of two dividing the batch);
+    /// 0 = auto (four tiles per batch)
+    pub shard_tile: usize,
 }
 
 impl Default for TrainConfig {
@@ -96,6 +109,10 @@ impl Default for TrainConfig {
             bits: 5,
             gamma: 0.9,
             grad_gamma: 1.0,
+            momentum: 0.0,
+            weight_decay: 0.0,
+            workers: 1,
+            shard_tile: 0,
         }
     }
 }
@@ -147,6 +164,10 @@ impl TrainConfig {
             bits: doc.i64_or("native.bits", d.bits as i64) as u32,
             gamma: doc.f64_or("native.gamma", d.gamma as f64) as f32,
             grad_gamma: doc.f64_or("native.grad_gamma", d.grad_gamma as f64) as f32,
+            momentum: doc.f64_or("native.momentum", d.momentum as f64) as f32,
+            weight_decay: doc.f64_or("native.weight_decay", d.weight_decay as f64) as f32,
+            workers: doc.i64_or("shard.workers", d.workers as i64) as usize,
+            shard_tile: doc.i64_or("shard.tile", d.shard_tile as i64) as usize,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -183,6 +204,18 @@ impl TrainConfig {
         }
         if !(self.grad_gamma > 0.0 && self.grad_gamma.is_finite()) {
             bail!("native.grad_gamma must be positive and finite");
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            bail!("native.momentum must be in [0, 1), got {}", self.momentum);
+        }
+        if !(self.weight_decay >= 0.0 && self.weight_decay.is_finite()) {
+            bail!("native.weight_decay must be finite and >= 0");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1 (got 0); use 1 for a single-worker run");
+        }
+        if self.shard_tile != 0 && !self.shard_tile.is_power_of_two() {
+            bail!("shard.tile must be a power of two (or 0 for auto), got {}", self.shard_tile);
         }
         Ok(())
     }
@@ -279,6 +312,47 @@ grad_gamma = 0.95
             "[native]\nengine = \"cuda\"\n",
             "[native]\nbits = 9\n",
             "[native]\ngamma = 0.0\n",
+        ] {
+            let doc = toml::Doc::parse(bad).unwrap();
+            assert!(TrainConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn shard_and_optimizer_fields_parse_and_validate() {
+        let doc = toml::Doc::parse(
+            r#"
+variant = "tiny_mlp_mf"
+backend = "native"
+[native]
+momentum = 0.9
+weight_decay = 0.0005
+[shard]
+workers = 4
+tile = 4
+"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.shard_tile, 4);
+        assert!((cfg.momentum - 0.9).abs() < 1e-6);
+        assert!((cfg.weight_decay - 5e-4).abs() < 1e-9);
+        // defaults
+        let d = TrainConfig::default();
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.shard_tile, 0, "0 = auto tile");
+        assert_eq!(d.momentum, 0.0);
+        assert_eq!(d.weight_decay, 0.0);
+        // bad values are rejected with clear messages
+        let doc = toml::Doc::parse("[shard]\nworkers = 0\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("workers must be >= 1"), "{err}");
+        for bad in [
+            "[shard]\ntile = 3\n",
+            "[native]\nmomentum = 1.0\n",
+            "[native]\nmomentum = -0.5\n",
+            "[native]\nweight_decay = -1.0\n",
         ] {
             let doc = toml::Doc::parse(bad).unwrap();
             assert!(TrainConfig::from_doc(&doc).is_err(), "{bad}");

@@ -92,6 +92,9 @@ pub struct RunRecord {
     pub wall_secs: f64,
     pub steps_per_sec: f64,
     pub data_stall_rate: f64,
+    /// data-parallel workers the run was configured with (native backend
+    /// sharding; 1 elsewhere)
+    pub workers: usize,
 }
 
 impl RunRecord {

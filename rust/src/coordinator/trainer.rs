@@ -60,7 +60,11 @@ impl<'rt> Trainer<'rt> {
 
     /// Initialize (or restore) and run the configured number of steps.
     pub fn run(&mut self) -> Result<RunRecord> {
-        let mut rec = RunRecord { variant: self.cfg.variant.clone(), ..Default::default() };
+        let mut rec = RunRecord {
+            variant: self.cfg.variant.clone(),
+            workers: self.cfg.workers,
+            ..Default::default()
+        };
         let start_step = if let Some(path) = self.resumable_checkpoint() {
             let ck = Checkpoint::load(&path)?;
             anyhow::ensure!(

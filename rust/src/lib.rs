@@ -5,27 +5,36 @@
 //! * [`potq`] — the ALS-PoTQ format + MF-MAC, bit-exact mirror of the
 //!   Pallas kernels (the paper's §4-§5 contribution). The quantized
 //!   representation is the packed `PotTensor` (one code byte per element:
-//!   exponent nibble + sign bit + reserved zero code); the kernels sit
-//!   behind the pluggable `MacEngine` trait with three implementations —
-//!   `ScalarEngine` (bit-exact reference), `BlockedEngine` (m/n/k cache
-//!   tiles + a 256-entry pow2 LUT indexed by the packed code sum) and
-//!   `ThreadedEngine` (row-band parallelism) — plus a batched
-//!   `matmul_batch` entry point that amortizes LUT/thread-scope setup
-//!   across a layer's GEMMs. All engines accumulate exactly in integer
-//!   fixed point, so every schedule is bit-identical; future backends
-//!   (SIMD nibble kernels, sharded per-tile beta) plug in behind the same
-//!   trait. `potq::nn` composes these into the *native training loop*: an
-//!   MLP whose every linear-layer GEMM (fw/dX/dW) runs on a MacEngine
-//!   over quantized operands, with ALS, WBC, PRC (learnable gamma,
-//!   straight-through grad), a PoT-snapped learning rate applied by
-//!   exponent add, and a per-step op census proving zero FP32 multiplies
-//!   in linear layers.
+//!   exponent nibble + sign bit + reserved zero code), optionally carrying
+//!   a per-k-tile `TileScales` beta plane so sharded / tensor-parallel
+//!   producers can quantize each slice with a local adaptive scale; the
+//!   kernels sit behind the pluggable `MacEngine` trait with three
+//!   implementations — `ScalarEngine` (bit-exact reference),
+//!   `BlockedEngine` (m/n/k cache tiles + a 256-entry pow2 LUT indexed by
+//!   the packed code sum) and `ThreadedEngine` (row-band parallelism) —
+//!   plus a batched `matmul_batch` entry point that amortizes
+//!   LUT/thread-scope setup across a layer's GEMMs. All engines
+//!   accumulate exactly in integer fixed point (tile-scale deltas fold
+//!   into the code-sum path as exact shifts), so every schedule is
+//!   bit-identical. `potq::nn` composes these into the *native training
+//!   loop*: an MLP whose every linear-layer GEMM (fw/dX/dW) runs on a
+//!   MacEngine over quantized operands, with ALS, WBC, PRC (learnable
+//!   gamma, straight-through grad), and a PoT-snapped multiplication-free
+//!   optimizer (lr, momentum decay and weight decay all applied by
+//!   exponent add), with a per-step op census proving zero FP32
+//!   multiplies in linear layers. `potq::shard` scales the loop out:
+//!   `ShardPlan` splits the batch into worker-independent microbatch
+//!   tiles, `ShardedMlp` runs them on data-parallel worker threads (one
+//!   MacEngine each) and combines gradients multiplication-free (FP32
+//!   adds + a PoT-snapped 1/n_tiles exponent add), so a seeded run is
+//!   bit-identical for any `--workers N`.
 //! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1), including
 //!   the dynamic MAC census derived from packed codes (`mfmac_census`).
 //! * [`runtime`] — execution backends behind the `SessionBackend`
 //!   interface: the PJRT loader/executor for AOT HLO artifacts, and
 //!   `NativeSession`, the artifact-free native MF trainer
-//!   (`mft train --backend native`).
+//!   (`mft train --backend native --workers N`), which drives the
+//!   sharded subsystem.
 //! * [`coordinator`] — the training orchestrator (step loop, prefetch,
 //!   telemetry, checkpoints), backend-agnostic over `SessionBackend`.
 //! * [`data`], [`models`], [`stats`], [`config`], [`cli`], [`util`],

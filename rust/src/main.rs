@@ -18,6 +18,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
         "energy" => cmd_energy(&args),
+        "census" => cmd_census(&args),
         "kernels" => cmd_kernels(&args),
         "macs" => cmd_macs(&args),
         "distributions" => cmd_distributions(&args),
@@ -47,6 +48,14 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     cfg.threads = args.u64_flag("threads", cfg.threads as u64)? as usize;
     cfg.bits = args.u64_flag("bits", cfg.bits as u64)? as u32;
+    cfg.workers = args.u64_flag("workers", cfg.workers as u64)? as usize;
+    cfg.shard_tile = args.u64_flag("shard-tile", cfg.shard_tile as u64)? as usize;
+    if args.flags.contains_key("momentum") {
+        cfg.momentum = args.f64_flag("momentum", cfg.momentum as f64)? as f32;
+    }
+    if args.flags.contains_key("weight-decay") {
+        cfg.weight_decay = args.f64_flag("weight-decay", cfg.weight_decay as f64)? as f32;
+    }
     if let Some(v) = args.str_flag("variant") {
         cfg.variant = v.to_string();
     } else if cfg.backend == "native" && args.str_flag("config").is_none() {
@@ -96,7 +105,12 @@ fn resolve_backend(cfg: &TrainConfig) -> &'static str {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     if resolve_backend(&cfg) == "native" {
-        println!("[mft] backend: native ({} engine)", cfg.engine);
+        println!(
+            "[mft] backend: native ({} engine, {} worker{})",
+            cfg.engine,
+            cfg.workers,
+            if cfg.workers == 1 { "" } else { "s" }
+        );
         let mut trainer = Trainer::native(cfg)?;
         run_and_report(&mut trainer)
     } else {
@@ -140,13 +154,17 @@ fn cmd_eval(args: &Args) -> Result<()> {
     if !have_manifest && models::native_spec(variant).is_some() {
         // native checkpoints evaluate without artifacts; quantization
         // knobs must match training (the state vector does not carry
-        // them), so honour the same flags `train` takes
+        // them), so honour the same flags `train` takes — including
+        // --threads for the threaded engine and --workers for parallel
+        // sharded eval (both validated, not just --engine)
         let mut cfg = TrainConfig { variant: variant.to_string(), ..TrainConfig::default() };
         if let Some(v) = args.str_flag("engine") {
             cfg.engine = v.to_string();
         }
         cfg.threads = args.u64_flag("threads", cfg.threads as u64)? as usize;
         cfg.bits = args.u64_flag("bits", cfg.bits as u64)? as u32;
+        cfg.workers = args.u64_flag("workers", cfg.workers as u64)? as usize;
+        cfg.shard_tile = args.u64_flag("shard-tile", cfg.shard_tile as u64)? as usize;
         cfg.validate()?;
         let mut session = NativeSession::from_config(&cfg)?;
         session.state_from_host(&ckpt.state)?;
@@ -202,6 +220,111 @@ fn cmd_energy(args: &Args) -> Result<()> {
         "\nheadline: {:.1}% linear-layer training energy reduction vs FP32",
         energy::report::headline_reduction() * 100.0
     );
+    Ok(())
+}
+
+/// `mft census` — the *measured* counterpart of `mft energy`: run one
+/// real native training step and dump the per-GEMM live-MAC op census
+/// (INT4 add + XOR + INT32 acc per live MAC) plus the step-level
+/// multiplication-free invariant counters.
+fn cmd_census(args: &Args) -> Result<()> {
+    // same flag surface as `mft train` (engine/threads/bits/workers/
+    // shard-tile/momentum/weight-decay/seed/lr all apply — the census
+    // measures the exact step the training config describes), forced to
+    // the native backend
+    let mut cfg = build_config(args)?;
+    cfg.backend = "native".into();
+    if args.str_flag("variant").is_none() && args.str_flag("config").is_none() {
+        cfg.variant = "mlp_mf".to_string();
+    }
+    cfg.validate()?;
+    let variant = cfg.variant.clone();
+
+    let mut s = NativeSession::from_config(&cfg)?;
+    s.init(cfg.seed as i32)?;
+    let info = s.info().clone();
+    let mut ds =
+        mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, cfg.seed);
+    let b = ds.next_batch();
+    s.train_step(&b, args.f64_flag("lr", cfg.lr.base as f64)? as f32)?;
+    let census = s.last_census().expect("train step records a census").clone();
+
+    let plan = s.plan();
+    let mut t = Table::new(
+        &format!(
+            "measured MF-MAC census — {variant}, one train step ({} engine, {} workers, \
+             {} tiles of {})",
+            s.engine_name(),
+            plan.effective_workers(),
+            plan.n_tiles,
+            plan.tile
+        ),
+        &["GEMM", "dense MACs", "live MACs", "live %", "MF energy (pJ)"],
+    );
+    for g in &census.gemms {
+        t.row(&[
+            g.label.clone(),
+            g.census.total_macs.to_string(),
+            g.census.live_macs.to_string(),
+            format!("{:.1}", g.census.live_fraction() * 100.0),
+            fnum(g.census.energy_pj()),
+        ]);
+    }
+    t.row(&[
+        "total".into(),
+        census.total_macs().to_string(),
+        census.live_macs().to_string(),
+        format!(
+            "{:.1}",
+            if census.total_macs() > 0 {
+                census.live_macs() as f64 / census.total_macs() as f64 * 100.0
+            } else {
+                0.0
+            }
+        ),
+        fnum(census.mf_energy_pj()),
+    ]);
+    t.note(
+        "live MACs measured from the packed operand codes of a real step; \
+         each costs one INT4 add, one 1-bit XOR and one INT32 accumulate",
+    );
+    t.print();
+    println!(
+        "linear-layer FP32 multiplies: {}  (overhead: {}, combine exponent-adds: {})",
+        census.linear_fp32_muls, census.overhead_fp32_muls, census.combine_exp_adds
+    );
+
+    if let Some(path) = args.str_flag("json") {
+        use mftrain::util::json::Json;
+        use std::collections::BTreeMap;
+        let gemms: Vec<Json> = census
+            .gemms
+            .iter()
+            .map(|g| {
+                let mut o = BTreeMap::new();
+                o.insert("label".to_string(), Json::Str(g.label.clone()));
+                o.insert("total_macs".to_string(), Json::Num(g.census.total_macs as f64));
+                o.insert("live_macs".to_string(), Json::Num(g.census.live_macs as f64));
+                o.insert("live_fraction".to_string(), Json::Num(g.census.live_fraction()));
+                o.insert("mf_energy_pj".to_string(), Json::Num(g.census.energy_pj()));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("variant".to_string(), Json::Str(variant.to_string()));
+        o.insert("engine".to_string(), Json::Str(s.engine_name().to_string()));
+        o.insert("workers".to_string(), Json::Num(plan.effective_workers() as f64));
+        o.insert("n_tiles".to_string(), Json::Num(plan.n_tiles as f64));
+        o.insert("linear_fp32_muls".to_string(), Json::Num(census.linear_fp32_muls as f64));
+        o.insert("overhead_fp32_muls".to_string(), Json::Num(census.overhead_fp32_muls as f64));
+        o.insert("combine_exp_adds".to_string(), Json::Num(census.combine_exp_adds as f64));
+        o.insert("total_macs".to_string(), Json::Num(census.total_macs() as f64));
+        o.insert("live_macs".to_string(), Json::Num(census.live_macs() as f64));
+        o.insert("mf_energy_pj".to_string(), Json::Num(census.mf_energy_pj()));
+        o.insert("gemms".to_string(), Json::Arr(gemms));
+        std::fs::write(path, Json::Obj(o).to_string())?;
+        println!("json -> {path}");
+    }
     Ok(())
 }
 

@@ -21,7 +21,7 @@
 //! [64, 124] iff both operands are nonzero, so entries below 64 are zero
 //! and zero operands cost nothing — no branch in the inner loop.
 
-use super::quantize::{pot_emax, PotTensor, MAG_MASK, MAG_OFFSET, SIGN_BIT};
+use super::quantize::{pot_emax, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT};
 
 /// Saturation behaviour of the hardware INT32 accumulator.
 #[derive(Clone, Debug, Default)]
@@ -91,11 +91,55 @@ fn finish(acc: i128, scale: f64) -> f32 {
     (acc as f64 * scale) as f32
 }
 
-/// Fixed-point output scale 2^(beta_x + beta_w - 2*emax): the accumulator
-/// LSB is 2^(-2*emax) relative to the shifted block, exactly as in the
-/// seed's `mfmac_accumulate_i64` model.
-fn lane_scale(x: &PotTensor, w: &PotTensor) -> f64 {
-    pow2_f64(x.beta + w.beta - 2 * pot_emax(x.bits))
+/// Combined per-k tile-scale shifts of an operand pair. `None` when
+/// neither operand carries a tile plane (the fast path); otherwise
+/// `(shifts, dmin)` with `shifts[p] = delta_x(p) + delta_w(p) - dmin`,
+/// so every shift is >= 0 and the accumulator's fixed point moves down to
+/// `2^(beta_x + beta_w + dmin - 2*emax)`. Tile planes must run along the
+/// reduction axis (x: axis 1, w: axis 0); all engines derive shifts and
+/// dmin through this one helper, which is what keeps tiled results
+/// bit-identical across schedules.
+pub(crate) fn k_tile_shifts(
+    x: &PotTensor,
+    w: &PotTensor,
+    k: usize,
+) -> Option<(Vec<u32>, i32)> {
+    let (tx, tw) = (x.tile_scales(), w.tile_scales());
+    if tx.is_none() && tw.is_none() {
+        return None;
+    }
+    if let Some(t) = tx {
+        assert_eq!(t.axis, 1, "x tile scales must run along the reduction axis (k)");
+    }
+    if let Some(t) = tw {
+        assert_eq!(t.axis, 0, "w tile scales must run along the reduction axis (k)");
+    }
+    let delta = |t: Option<&TileScales>, p: usize| t.map_or(0, |ts| ts.delta_at(p));
+    let combined: Vec<i32> = (0..k).map(|p| delta(tx, p) + delta(tw, p)).collect();
+    let dmin = combined.iter().copied().min().unwrap_or(0);
+    let shifts: Vec<u32> = combined.into_iter().map(|d| (d - dmin) as u32).collect();
+    // TILE_DELTA_MIN guarantees the exact-sum headroom argument
+    debug_assert!(shifts.iter().all(|&s| s <= 32), "tile-shift spread out of envelope");
+    Some((shifts, dmin))
+}
+
+/// Fixed-point output scale 2^(beta_x + beta_w + dmin - 2*emax): the
+/// accumulator LSB is 2^(-2*emax) relative to the shifted block (exactly
+/// the seed's `mfmac_accumulate_i64` model), lowered by the tile plane's
+/// minimum combined delta when the operands are tiled.
+pub(crate) fn pair_scale(x: &PotTensor, w: &PotTensor, dmin: i32) -> f64 {
+    pow2_f64(x.beta + w.beta + dmin - 2 * pot_emax(x.bits))
+}
+
+/// Split the `k_tile_shifts` result into the per-kernel arguments.
+pub(crate) fn tile_args(x: &PotTensor, w: &PotTensor, k: usize) -> (Option<Vec<u32>>, f64) {
+    match k_tile_shifts(x, w, k) {
+        Some((shifts, dmin)) => {
+            let scale = pair_scale(x, w, dmin);
+            (Some(shifts), scale)
+        }
+        None => (None, pair_scale(x, w, 0)),
+    }
 }
 
 /// 256-entry signed pow2 LUT indexed by the packed code sum (see module
@@ -123,7 +167,9 @@ fn lut_index(cx: u8, cw: u8) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Naive i-j-p reference kernel: unpack-free shifts off the magnitude
-/// fields, exact i128 accumulation.
+/// fields, exact i128 accumulation. Tile-scaled operands fold their
+/// per-k-tile beta deltas into the term shift (still exact: see
+/// `TILE_DELTA_MIN` for the headroom argument).
 pub(crate) fn matmul_scalar_impl(
     x: &PotTensor,
     w: &PotTensor,
@@ -133,7 +179,7 @@ pub(crate) fn matmul_scalar_impl(
 ) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
-    let scale = lane_scale(x, w);
+    let (kshifts, scale) = tile_args(x, w, k);
     let (xc, wc) = (x.codes(), w.codes());
     let mut out = vec![0f32; m * n];
     for i in 0..m {
@@ -147,8 +193,11 @@ pub(crate) fn matmul_scalar_impl(
                     continue;
                 }
                 // INT4 exponent add + 1-bit sign XOR, fixed point at
-                // 2^-2emax: magsum - 2*MAG_OFFSET == ex + ew + 2*emax >= 0
-                let term = 1i128 << (mx + mw - 2 * MAG_OFFSET) as u32;
+                // 2^-2emax: magsum - 2*MAG_OFFSET == ex + ew + 2*emax >= 0;
+                // a tile plane adds its per-k shift on top (<= 32 by the
+                // TILE_DELTA_MIN clamp, so the k-term sum stays in i128)
+                let extra = kshifts.as_ref().map_or(0, |s| s[p]);
+                let term = 1i128 << ((mx + mw - 2 * MAG_OFFSET) as u32 + extra);
                 acc += if (cx ^ cw) & SIGN_BIT != 0 { -term } else { term };
             }
             out[i * n + j] = finish(acc, scale);
@@ -161,7 +210,10 @@ pub(crate) fn matmul_scalar_impl(
 /// `out_band` (length (i1-i0)*n). i-p-j inner order: the w row and the
 /// accumulator row stream contiguously; k/n tiling keeps both panels hot.
 /// The LUT is passed in so batched callers build it once per call, not
-/// once per GEMM/band.
+/// once per GEMM/band. `kshifts`/`scale` come from [`tile_args`]: when a
+/// tile-scale plane is present the LUT term is shifted by the per-k delta
+/// (exact — integer accumulation is still associative), so every cache
+/// schedule stays bit-identical.
 #[allow(clippy::too_many_arguments)]
 fn matmul_blocked_band(
     x: &PotTensor,
@@ -172,6 +224,8 @@ fn matmul_blocked_band(
     i1: usize,
     tiles: (usize, usize, usize),
     lut: &[i64; 256],
+    kshifts: Option<&[u32]>,
+    scale: f64,
     out_band: &mut [f32],
 ) {
     let (mc, kc, nc) = tiles;
@@ -180,7 +234,6 @@ fn matmul_blocked_band(
     if band == 0 || n == 0 {
         return;
     }
-    let scale = lane_scale(x, w);
     let (xc, wc) = (x.codes(), w.codes());
     let mut acc = vec![0i128; band * n];
     for jc in (0..n).step_by(nc.max(1)) {
@@ -198,8 +251,18 @@ fn matmul_blocked_band(
                             continue; // zero x code: whole row of terms is 0
                         }
                         let wrow = &wc[p * n + jc..p * n + je];
-                        for (a, &cw) in arow.iter_mut().zip(wrow) {
-                            *a += lut[lut_index(cx, cw)] as i128;
+                        match kshifts {
+                            None => {
+                                for (a, &cw) in arow.iter_mut().zip(wrow) {
+                                    *a += lut[lut_index(cx, cw)] as i128;
+                                }
+                            }
+                            Some(s) => {
+                                let sh = s[p];
+                                for (a, &cw) in arow.iter_mut().zip(wrow) {
+                                    *a += (lut[lut_index(cx, cw)] as i128) << sh;
+                                }
+                            }
                         }
                     }
                 }
@@ -218,6 +281,7 @@ fn matmul_blocked_band(
 /// buys nothing under the per-step clamp + peak bookkeeping; band
 /// parallelism stays bit-exact because lanes are independent and the
 /// report merge (sum lanes, max peak) is order-free.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn saturating_band(
     x: &PotTensor,
     w: &PotTensor,
@@ -225,9 +289,10 @@ pub(crate) fn saturating_band(
     n: usize,
     i0: usize,
     i1: usize,
+    kshifts: Option<&[u32]>,
+    scale: f64,
     out_band: &mut [f32],
 ) -> SaturationReport {
-    let scale = lane_scale(x, w);
     let (xc, wc) = (x.codes(), w.codes());
     let mut rep = SaturationReport {
         total_lanes: (i1 - i0) * n,
@@ -235,7 +300,9 @@ pub(crate) fn saturating_band(
     };
     for i in i0..i1 {
         for j in 0..n {
-            let mut acc: i64 = 0;
+            // i128 headroom covers tile-shifted terms (up to 2^92);
+            // the running clamp keeps |acc| within INT32 regardless
+            let mut acc: i128 = 0;
             let mut sat = false;
             for p in 0..k {
                 let cx = xc[i * k + p];
@@ -244,18 +311,19 @@ pub(crate) fn saturating_band(
                 if mx == 0 || mw == 0 {
                     continue;
                 }
-                let term = 1i64 << (mx + mw - 2 * MAG_OFFSET) as u32;
+                let extra = kshifts.map_or(0, |s| s[p]);
+                let term = 1i128 << ((mx + mw - 2 * MAG_OFFSET) as u32 + extra);
                 acc += if (cx ^ cw) & SIGN_BIT != 0 { -term } else { term };
-                if acc > i32::MAX as i64 || acc < i32::MIN as i64 {
+                if acc > i32::MAX as i128 || acc < i32::MIN as i128 {
                     sat = true;
-                    acc = acc.clamp(i32::MIN as i64, i32::MAX as i64);
+                    acc = acc.clamp(i32::MIN as i128, i32::MAX as i128);
                 }
-                rep.peak_magnitude = rep.peak_magnitude.max(acc.abs());
+                rep.peak_magnitude = rep.peak_magnitude.max(acc.unsigned_abs() as i64);
             }
             if sat {
                 rep.saturated_lanes += 1;
             }
-            out_band[(i - i0) * n + j] = finish(acc as i128, scale);
+            out_band[(i - i0) * n + j] = finish(acc, scale);
         }
     }
     rep
@@ -281,8 +349,9 @@ impl MacEngine for ScalarEngine {
 
     fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
         let (m, k, n) = dims2(x, w);
+        let (kshifts, scale) = tile_args(x, w, k);
         let mut out = vec![0f32; m * n];
-        let rep = saturating_band(x, w, k, n, 0, m, &mut out);
+        let rep = saturating_band(x, w, k, n, 0, m, kshifts.as_deref(), scale, &mut out);
         (out, rep)
     }
 }
@@ -320,15 +389,22 @@ impl MacEngine for BlockedEngine {
     fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
         let (m, k, n) = dims2(x, w);
         let lut = pow2_lut();
+        let (kshifts, scale) = tile_args(x, w, k);
         let mut out = vec![0f32; m * n];
-        matmul_blocked_band(x, w, k, n, 0, m, (self.mc, self.kc, self.nc), &lut, &mut out);
+        matmul_blocked_band(
+            x, w, k, n, 0, m,
+            (self.mc, self.kc, self.nc),
+            &lut, kshifts.as_deref(), scale,
+            &mut out,
+        );
         out
     }
 
     fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
         let (m, k, n) = dims2(x, w);
+        let (kshifts, scale) = tile_args(x, w, k);
         let mut out = vec![0f32; m * n];
-        let rep = saturating_band(x, w, k, n, 0, m, &mut out);
+        let rep = saturating_band(x, w, k, n, 0, m, kshifts.as_deref(), scale, &mut out);
         (out, rep)
     }
 
@@ -339,8 +415,14 @@ impl MacEngine for BlockedEngine {
             .iter()
             .map(|(x, w)| {
                 let (m, k, n) = dims2(x, w);
+                let (kshifts, scale) = tile_args(x, w, k);
                 let mut out = vec![0f32; m * n];
-                matmul_blocked_band(x, w, k, n, 0, m, (self.mc, self.kc, self.nc), &lut, &mut out);
+                matmul_blocked_band(
+                    x, w, k, n, 0, m,
+                    (self.mc, self.kc, self.nc),
+                    &lut, kshifts.as_deref(), scale,
+                    &mut out,
+                );
                 out
             })
             .collect()
@@ -409,9 +491,10 @@ impl MacEngine for ThreadedEngine {
         let (m, k, n) = dims2(x, w);
         let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
         let lut = pow2_lut();
+        let (kshifts, scale) = tile_args(x, w, k);
         let mut out = vec![0f32; m * n];
         self.run_bands(m, n, &mut out, |i0, i1, chunk| {
-            matmul_blocked_band(x, w, k, n, i0, i1, tiles, &lut, chunk);
+            matmul_blocked_band(x, w, k, n, i0, i1, tiles, &lut, kshifts.as_deref(), scale, chunk);
         });
         out
     }
@@ -428,6 +511,11 @@ impl MacEngine for ThreadedEngine {
         let lut = pow2_lut();
         let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
         let dims: Vec<(usize, usize, usize)> = pairs.iter().map(|(x, w)| dims2(x, w)).collect();
+        let extras: Vec<(Option<Vec<u32>>, f64)> = pairs
+            .iter()
+            .zip(&dims)
+            .map(|((x, w), &(_, k, _))| tile_args(x, w, k))
+            .collect();
         let mut outs: Vec<Vec<f32>> =
             dims.iter().map(|&(m, _, n)| vec![0f32; m * n]).collect();
         let budget = self.worker_count(usize::MAX).div_ceil(pairs.len().max(1)).max(1);
@@ -442,10 +530,13 @@ impl MacEngine for ThreadedEngine {
                 let band = ((m + workers - 1) / workers.max(1)).max(1);
                 for (b, chunk) in out.chunks_mut(band * n).enumerate() {
                     let lut = &lut;
+                    let (kshifts, scale) = (&extras[idx].0, extras[idx].1);
                     s.spawn(move || {
                         let i0 = b * band;
                         let i1 = (i0 + band).min(m);
-                        matmul_blocked_band(x, w, k, n, i0, i1, tiles, lut, chunk);
+                        matmul_blocked_band(
+                            x, w, k, n, i0, i1, tiles, lut, kshifts.as_deref(), scale, chunk,
+                        );
                     });
                 }
             }
@@ -459,10 +550,11 @@ impl MacEngine for ThreadedEngine {
         let (m, k, n) = dims2(x, w);
         let workers = self.worker_count(m);
         let band = ((m + workers - 1) / workers.max(1)).max(1);
+        let (kshifts, scale) = tile_args(x, w, k);
         let mut out = vec![0f32; m * n];
         let mut reports: Vec<SaturationReport> = Vec::new();
         if workers <= 1 || m == 0 || n == 0 {
-            let rep = saturating_band(x, w, k, n, 0, m, &mut out);
+            let rep = saturating_band(x, w, k, n, 0, m, kshifts.as_deref(), scale, &mut out);
             return (out, rep);
         }
         std::thread::scope(|s| {
@@ -470,10 +562,11 @@ impl MacEngine for ThreadedEngine {
                 .chunks_mut(band * n)
                 .enumerate()
                 .map(|(b, chunk)| {
+                    let kshifts = kshifts.as_deref();
                     s.spawn(move || {
                         let i0 = b * band;
                         let i1 = (i0 + band).min(m);
-                        saturating_band(x, w, k, n, i0, i1, chunk)
+                        saturating_band(x, w, k, n, i0, i1, kshifts, scale, chunk)
                     })
                 })
                 .collect();
@@ -683,6 +776,106 @@ mod tests {
         }
         let (y, _) = ScalarEngine.matmul_i32_saturating(&x, &w);
         assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    /// Random 2-D tensor carrying a per-k-tile beta plane along `axis`,
+    /// with slabs at visibly different scales so the deltas are live.
+    fn rand_tiled(seed: u64, rows: usize, cols: usize, axis: usize, tile: usize) -> PotTensor {
+        let mut r = Pcg32::new(seed);
+        let mut v = vec![0f32; rows * cols];
+        r.fill_normal(&mut v, 0.0, 0.5);
+        for (idx, x) in v.iter_mut().enumerate() {
+            let c = if axis == 0 { idx / cols } else { idx % cols };
+            // alternate slab scale by tile index: 1, 1/16, 1, 1/16, ...
+            if (c / tile) % 2 == 1 {
+                *x *= 1.0 / 16.0;
+            }
+        }
+        PotTensor::quantize_2d_tiled(&v, rows, cols, 5, axis, tile)
+    }
+
+    #[test]
+    fn tiled_matmul_matches_dequantized_reference() {
+        // exact-case check plus a float reference over random operands
+        let (m, k, n) = (5, 16, 7);
+        let x = rand_tiled(500, m, k, 1, 4);
+        let w = rand_tiled(600, k, n, 0, 4);
+        assert!(x.tile_scales().unwrap().deltas.iter().any(|&d| d < 0));
+        let y = ScalarEngine.matmul(&x, &w);
+        let (xd, wd) = (x.dequantize(), w.dequantize());
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for p in 0..k {
+                    acc += xd[i * k + p] as f64 * wd[p * n + j] as f64;
+                }
+                let denom = acc.abs().max(1e-9);
+                assert!(
+                    ((y[i * n + j] as f64 - acc) / denom).abs() < 1e-5,
+                    "[{i},{j}]: {} vs {acc}",
+                    y[i * n + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engines_bit_exact_on_tiled_operands() {
+        // tile planes on x only, w only, and both; partial last tiles too
+        let cases: [(usize, usize, usize, usize, bool, bool); 4] = [
+            (4, 16, 5, 4, true, true),
+            (3, 12, 6, 4, true, false),
+            (6, 10, 4, 4, false, true), // k=10: partial last tile
+            (1, 8, 1, 2, true, true),
+        ];
+        for (idx, &(m, k, n, tile, tile_x, tile_w)) in cases.iter().enumerate() {
+            let x = if tile_x {
+                rand_tiled(700 + idx as u64, m, k, 1, tile)
+            } else {
+                rand_tensor(700 + idx as u64, m, k, 0.5, 5)
+            };
+            let w = if tile_w {
+                rand_tiled(800 + idx as u64, k, n, 0, tile)
+            } else {
+                rand_tensor(800 + idx as u64, k, n, 0.04, 5)
+            };
+            let ys = ScalarEngine.matmul(&x, &w);
+            let yb = BlockedEngine::with_tiles(3, 5, 2).matmul(&x, &w);
+            let yt = ThreadedEngine::new(3).matmul(&x, &w);
+            assert_bits_eq(&ys, &yb, &format!("tiled[{idx}] scalar vs blocked"));
+            assert_bits_eq(&ys, &yt, &format!("tiled[{idx}] scalar vs threaded"));
+            // batched path too
+            let pairs = [(&x, &w), (&x, &w)];
+            for eng in [
+                Box::new(ScalarEngine) as Box<dyn MacEngine>,
+                Box::new(BlockedEngine::with_tiles(2, 3, 3)),
+                Box::new(ThreadedEngine::new(2)),
+            ] {
+                for out in eng.matmul_batch(&pairs) {
+                    assert_bits_eq(&ys, &out, &format!("tiled[{idx}] {} batch", eng.name()));
+                }
+            }
+            // saturating model stays engine-invariant on tiled operands
+            let (ss, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
+            let (sb, rb) = BlockedEngine::default().matmul_i32_saturating(&x, &w);
+            let (st, rt) = ThreadedEngine::new(3).matmul_i32_saturating(&x, &w);
+            assert_bits_eq(&ss, &sb, &format!("tiled[{idx}] sat scalar vs blocked"));
+            assert_bits_eq(&ss, &st, &format!("tiled[{idx}] sat scalar vs threaded"));
+            assert_eq!(rs.saturated_lanes, rb.saturated_lanes);
+            assert_eq!(rs.peak_magnitude, rt.peak_magnitude);
+        }
+    }
+
+    #[test]
+    fn tiled_operand_on_output_axis_is_rejected() {
+        // tile planes must run along the reduction axis; a plane on the
+        // m/n axis has no code-sum folding and must fail loudly
+        let x = rand_tiled(900, 8, 4, 1, 2); // (m=8, k=4), tiles on k: fine
+        let w = rand_tensor(901, 4, 6, 0.1, 5);
+        let _ = ScalarEngine.matmul(&x, &w);
+        let x_bad = rand_tiled(902, 8, 4, 0, 2); // tiles along m: rejected
+        let r = std::panic::catch_unwind(|| ScalarEngine.matmul(&x_bad, &w));
+        assert!(r.is_err(), "m-axis tile plane must be rejected");
     }
 
     #[test]

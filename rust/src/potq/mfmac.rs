@@ -51,8 +51,9 @@ pub fn mfmac_accumulate_i64(
     assert_eq!(xb.bits, wb.bits);
     assert_eq!(xb.len(), m * k);
     assert_eq!(wb.len(), k * n);
+    let (kshifts, scale) = super::engine::tile_args(xb, wb, k);
     let mut out = vec![0f32; m * n];
-    let rep = saturating_band(xb, wb, k, n, 0, m, &mut out);
+    let rep = saturating_band(xb, wb, k, n, 0, m, kshifts.as_deref(), scale, &mut out);
     (out, rep)
 }
 

@@ -8,16 +8,21 @@
 //! element-exact agreement with this module.
 //!
 //! Layout: [`quantize`] owns the packed [`PotTensor`] format (one code
-//! byte per element), [`engine`] owns the pluggable [`MacEngine`] kernels
-//! (scalar reference / cache-blocked / threaded), [`mfmac`] keeps the
-//! stable convenience entry points on top, and [`nn`] builds the native
+//! byte per element, plus the optional per-k-tile [`TileScales`] beta
+//! plane), [`engine`] owns the pluggable [`MacEngine`] kernels (scalar
+//! reference / cache-blocked / threaded, all of which fold tile-scale
+//! deltas into their code-sum path bit-exactly), [`mfmac`] keeps the
+//! stable convenience entry points on top, [`nn`] builds the native
 //! multiplication-free training loop (forward/backward MLP whose every
-//! linear-layer GEMM runs on a MacEngine) from those pieces.
+//! linear-layer GEMM runs on a MacEngine) from those pieces, and
+//! [`shard`] scales that loop out to data-parallel worker threads with a
+//! multiplication-free gradient combine.
 
 pub mod engine;
 mod mfmac;
 pub mod nn;
 mod quantize;
+pub mod shard;
 
 pub use engine::{
     engine_by_name, BlockedEngine, MacEngine, SaturationReport, ScalarEngine, ThreadedEngine,
@@ -25,10 +30,12 @@ pub use engine::{
 };
 pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized};
 pub use quantize::{
-    compute_beta, pack_code, pot_dequantize, pot_emax, pot_quantize, pot_quantize_one, pot_value,
-    pow2i, pow2i_saturating, round_log2_abs, scale_pow2, unpack_code, PotTensor, MAG_MASK,
-    MAG_OFFSET, SIGN_BIT, SQRT2_F32, ZERO_CODE,
+    beta_from_amax, compute_beta, pack_code, pot_dequantize, pot_emax, pot_quantize,
+    pot_quantize_one, pot_value, pow2i, pow2i_saturating, round_log2_abs, scale_pow2,
+    unpack_code, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT, SQRT2_F32,
+    TILE_DELTA_MIN, ZERO_CODE,
 };
+pub use shard::{ShardPlan, ShardedMlp};
 
 /// Weight Bias Correction (paper eq. 11): subtract the mean.
 pub fn weight_bias_correction(w: &[f32]) -> Vec<f32> {

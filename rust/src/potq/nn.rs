@@ -12,11 +12,18 @@
 //!  * [`ratio_clip`] (eq. 12) applied to activations with a per-layer
 //!    *learnable* gamma (straight-through gradient, PACT-style) and to
 //!    gradients with a fixed configured ratio;
-//!  * SGD whose learning rate is snapped to the nearest power of two and
-//!    applied with [`scale_pow2`] (an integer exponent-field add), so the
-//!    update path is multiplication-free too;
+//!  * SGD whose learning rate — and, when configured, momentum decay
+//!    (1 - mu) and L2 weight decay — are snapped to the nearest power of
+//!    two and applied with [`scale_pow2`] (an integer exponent-field
+//!    add), so the whole update path is multiplication-free;
 //!  * the 1/batch loss scale applied the same way when the batch size is
 //!    a power of two.
+//!
+//! The pass itself is split for the sharded trainer (`potq::shard`):
+//! [`MfMlp::forward_backward`] takes `&self` and returns [`LayerGrads`],
+//! so worker threads can run concurrent microbatch passes against one
+//! weight snapshot, and [`MfMlp::apply_grads`] applies the (possibly
+//! cross-shard-combined) gradients as one optimizer step.
 //!
 //! Every step returns a [`StepCensus`]: zero FP32 multiplies may occur in
 //! linear layers under [`Scheme::Mf`] (asserted), while the per-GEMM
@@ -80,6 +87,15 @@ pub struct NnConfig {
     pub gamma_init: f32,
     /// fixed gradient-clip ratio; >= 1 disables gradient clipping
     pub grad_gamma: f32,
+    /// SGD momentum in [0, 1); 0 disables the velocity buffers. Under
+    /// [`Scheme::Mf`] the velocity decay (1 - momentum) is snapped to the
+    /// nearest power of two so the whole update stays exponent-add-only
+    /// (the PJRT manifests carry momentum = 0.9, which snaps to 0.875).
+    pub momentum: f32,
+    /// L2 weight decay (on weights only, not biases/gamma); 0 disables.
+    /// PoT-snapped under [`Scheme::Mf`], applied as `g += 2^wd_e * w` by
+    /// exponent add.
+    pub weight_decay: f32,
 }
 
 impl NnConfig {
@@ -90,6 +106,8 @@ impl NnConfig {
             scheme: Scheme::Mf,
             gamma_init: 0.9,
             grad_gamma: 1.0,
+            momentum: 0.0,
+            weight_decay: 0.0,
         }
     }
 
@@ -138,6 +156,9 @@ pub struct StepCensus {
     /// on non-PoT batch sizes, PRC threshold/gamma bookkeeping, the FP32
     /// baseline's weight update
     pub overhead_fp32_muls: u64,
+    /// exponent-field adds (`scale_pow2`) spent by the sharded gradient
+    /// combine — the multiplication-free 1/n_tiles averaging
+    pub combine_exp_adds: u64,
     /// per-GEMM MF-MAC censuses (empty under the FP32 scheme)
     pub gemms: Vec<GemmCensus>,
 }
@@ -156,6 +177,24 @@ impl StepCensus {
     /// Live-MAC energy under the paper's MF-MAC mix (pJ).
     pub fn mf_energy_pj(&self) -> f64 {
         self.gemms.iter().map(|g| g.census.energy_pj()).sum()
+    }
+
+    /// Fold another census in: op counters add, per-GEMM censuses merge
+    /// by label (summing MAC counts), so a sharded step reports one row
+    /// per logical GEMM no matter how many microbatch tiles computed it.
+    pub fn merge(&mut self, other: &StepCensus) {
+        self.linear_fp32_muls += other.linear_fp32_muls;
+        self.overhead_fp32_muls += other.overhead_fp32_muls;
+        self.combine_exp_adds += other.combine_exp_adds;
+        for g in &other.gemms {
+            match self.gemms.iter_mut().find(|mine| mine.label == g.label) {
+                Some(mine) => {
+                    mine.census.total_macs += g.census.total_macs;
+                    mine.census.live_macs += g.census.live_macs;
+                }
+                None => self.gemms.push(g.clone()),
+            }
+        }
     }
 }
 
@@ -179,6 +218,16 @@ impl ProbeRaw {
     }
 }
 
+/// Per-layer gradients of one forward/backward pass: weights, biases,
+/// straight-through PRC gamma. The unit a sharded worker ships to the
+/// gradient combine.
+#[derive(Clone, Debug)]
+pub struct LayerGrads {
+    pub dw: Vec<f32>,
+    pub db: Vec<f32>,
+    pub dgamma: f32,
+}
+
 /// Result of one forward(+backward) pass.
 #[derive(Clone, Debug)]
 pub struct StepResult {
@@ -189,6 +238,8 @@ pub struct StepResult {
     pub n_correct: usize,
     pub census: StepCensus,
     pub probe: Option<ProbeRaw>,
+    /// per-layer gradients when requested (shard workers consume these)
+    pub grads: Option<Vec<LayerGrads>>,
 }
 
 /// Forward-pass cache of one layer (Mf scheme: the quantized operands are
@@ -204,6 +255,10 @@ struct FwCache {
 pub struct MfMlp {
     pub cfg: NnConfig,
     pub layers: Vec<Linear>,
+    /// momentum velocity buffers (w, b) per layer; empty when
+    /// `cfg.momentum == 0`. Optimizer state is not part of the packed
+    /// checkpoint vector — restoring a checkpoint cold-starts momentum.
+    vel: Vec<(Vec<f32>, Vec<f32>)>,
     pub last_loss: f32,
     pub steps: u64,
 }
@@ -214,8 +269,17 @@ impl MfMlp {
     pub fn init(cfg: NnConfig, seed: u64) -> MfMlp {
         assert!(cfg.dims.len() >= 2, "need at least [d_in, classes]");
         assert!((3..=6).contains(&cfg.bits), "bits must be 3..=6");
+        assert!(
+            (0.0..1.0).contains(&cfg.momentum),
+            "momentum must be in [0, 1), got {}",
+            cfg.momentum
+        );
+        assert!(
+            cfg.weight_decay >= 0.0 && cfg.weight_decay.is_finite(),
+            "weight_decay must be finite and >= 0"
+        );
         let mut rng = Pcg32::new(seed ^ 0x11AF_5EED);
-        let layers = cfg
+        let layers: Vec<Linear> = cfg
             .dims
             .windows(2)
             .map(|d| {
@@ -226,7 +290,15 @@ impl MfMlp {
                 Linear { w, b: vec![0.0; fan_out], gamma: cfg.gamma_init, fan_in, fan_out }
             })
             .collect();
-        MfMlp { cfg, layers, last_loss: f32::NAN, steps: 0 }
+        let vel = if cfg.momentum > 0.0 {
+            layers
+                .iter()
+                .map(|l| (vec![0f32; l.w.len()], vec![0f32; l.b.len()]))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        MfMlp { cfg, layers, vel, last_loss: f32::NAN, steps: 0 }
     }
 
     pub fn classes(&self) -> usize {
@@ -254,26 +326,37 @@ impl MfMlp {
         engine: &dyn MacEngine,
         lr: f32,
     ) -> StepResult {
-        self.run(x, y, engine, Some(lr), false)
+        let mut res = self.forward_backward(x, y, engine, true, false);
+        let grads = res.grads.take().expect("training pass computes gradients");
+        self.apply_grads(&grads, lr, &mut res.census);
+        res.grads = Some(grads);
+        self.steps += 1;
+        self.last_loss = res.loss;
+        res
     }
 
     /// Loss/accuracy on a batch without touching any state.
     pub fn eval_batch(&mut self, x: &[f32], y: &[i32], engine: &dyn MacEngine) -> StepResult {
-        self.run(x, y, engine, None, false)
+        self.forward_backward(x, y, engine, false, false)
     }
 
     /// Forward + backward without an update, capturing [W | A | G] of the
     /// first layer.
     pub fn probe_step(&mut self, x: &[f32], y: &[i32], engine: &dyn MacEngine) -> StepResult {
-        self.run(x, y, engine, None, true)
+        self.forward_backward(x, y, engine, false, true)
     }
 
-    fn run(
-        &mut self,
+    /// Forward pass (+ backward when gradients or a probe are wanted)
+    /// without touching any model state — `&self`, so sharded workers can
+    /// run concurrent passes against one shared weight snapshot. The
+    /// caller applies the returned [`LayerGrads`] via
+    /// [`MfMlp::apply_grads`] (possibly after a cross-shard combine).
+    pub fn forward_backward(
+        &self,
         x: &[f32],
         y: &[i32],
         engine: &dyn MacEngine,
-        lr: Option<f32>,
+        want_grads: bool,
         want_probe: bool,
     ) -> StepResult {
         let m = y.len();
@@ -362,7 +445,8 @@ impl MfMlp {
         let loss = (loss_sum / m as f64) as f32;
 
         let mut probe: Option<ProbeRaw> = None;
-        if lr.is_some() || want_probe {
+        let mut grads: Vec<LayerGrads> = Vec::with_capacity(nl);
+        if want_grads || want_probe {
             // dZ = (p - onehot) / m; the batch scale is an exponent add
             // when m is a power of two (our configs), an FP32 multiply
             // (counted as loss-layer overhead) otherwise
@@ -382,13 +466,6 @@ impl MfMlp {
                 }
                 census.overhead_fp32_muls += (m * classes) as u64;
             }
-
-            // lr snapped to the nearest power of two -> exponent-add SGD
-            let lr_e = lr.map(|l| {
-                let (e, zero) = round_log2_abs(l);
-                assert!(!zero, "lr quantizes to zero");
-                e
-            });
 
             // ---- backward (reverse layer order) ------------------------
             for l in (0..nl).rev() {
@@ -448,45 +525,26 @@ impl MfMlp {
                         g: dw.clone(),
                     });
                 }
-                if let Some(lr_e) = lr_e {
-                    let lr = lr.unwrap();
-                    let layer = &mut self.layers[l];
-                    match scheme {
-                        Scheme::Mf => {
-                            // straight-through PRC gamma gradient: clipped
-                            // elements contribute sign(a) * amax * dX
-                            let amax = caches[l].amax;
-                            let t = layer.gamma * amax;
-                            census.overhead_fp32_muls += 1;
-                            let mut dgamma = 0f64;
-                            for (&av, &d) in a.iter().zip(&dx) {
-                                if av.abs() > t {
-                                    let signed = if av > 0.0 { d } else { -d };
-                                    dgamma += signed as f64;
-                                }
-                            }
-                            dgamma *= amax as f64;
-                            census.overhead_fp32_muls += 2; // amax fold + lr*dgamma
-                            // multiplication-free weight update: exponent add
-                            for (wv, &g) in layer.w.iter_mut().zip(&dw) {
-                                *wv -= scale_pow2(g, lr_e);
-                            }
-                            for (bv, &g) in layer.b.iter_mut().zip(&db) {
-                                *bv -= scale_pow2(g, lr_e);
-                            }
-                            layer.gamma =
-                                (layer.gamma - lr * dgamma as f32).clamp(GAMMA_MIN, 1.0);
-                        }
-                        Scheme::Fp32 => {
-                            census.overhead_fp32_muls += (layer.w.len() + layer.b.len()) as u64;
-                            for (wv, &g) in layer.w.iter_mut().zip(&dw) {
-                                *wv -= lr * g;
-                            }
-                            for (bv, &g) in layer.b.iter_mut().zip(&db) {
-                                *bv -= lr * g;
+                if want_grads {
+                    // straight-through PRC gamma gradient: clipped
+                    // elements contribute sign(a) * amax * dX
+                    let mut dgamma = 0f32;
+                    if scheme == Scheme::Mf {
+                        let amax = caches[l].amax;
+                        let t = self.layers[l].gamma * amax;
+                        census.overhead_fp32_muls += 1;
+                        let mut dg = 0f64;
+                        for (&av, &d) in a.iter().zip(&dx) {
+                            if av.abs() > t {
+                                let signed = if av > 0.0 { d } else { -d };
+                                dg += signed as f64;
                             }
                         }
+                        dg *= amax as f64;
+                        census.overhead_fp32_muls += 1; // amax fold
+                        dgamma = dg as f32;
                     }
+                    grads.push(LayerGrads { dw, db, dgamma });
                 }
                 // propagate through the previous ReLU (mask = select, no
                 // multiply); the PRC clip is straight-through
@@ -498,6 +556,7 @@ impl MfMlp {
                         .collect();
                 }
             }
+            grads.reverse(); // pushed in reverse layer order
         }
 
         if scheme == Scheme::Mf {
@@ -507,11 +566,125 @@ impl MfMlp {
                 "FP32 multiplies leaked into a linear layer"
             );
         }
-        if lr.is_some() {
-            self.steps += 1;
-            self.last_loss = loss;
+        StepResult {
+            loss,
+            loss_sum,
+            n_correct,
+            census,
+            probe,
+            grads: want_grads.then_some(grads),
         }
-        StepResult { loss, loss_sum, n_correct, census, probe }
+    }
+
+    /// Apply per-layer gradients to the model — the optimizer step.
+    /// Under [`Scheme::Mf`] the whole update is multiplication-free:
+    /// learning rate, momentum decay (1 - mu) and weight decay are all
+    /// snapped to powers of two and applied with [`scale_pow2`] (an
+    /// integer add on the f32 exponent field). The FP32 baseline uses the
+    /// raw coefficients with real multiplies, counted as overhead.
+    pub fn apply_grads(&mut self, grads: &[LayerGrads], lr: f32, census: &mut StepCensus) {
+        assert_eq!(grads.len(), self.layers.len(), "gradient count != layer count");
+        match self.cfg.scheme {
+            Scheme::Mf => {
+                let (lr_e, zero) = round_log2_abs(lr);
+                assert!(!zero, "lr quantizes to zero");
+                let mom_e = if self.cfg.momentum > 0.0 {
+                    let (e, z) = round_log2_abs(1.0 - self.cfg.momentum);
+                    assert!(!z, "momentum decay quantizes to zero");
+                    Some(e)
+                } else {
+                    None
+                };
+                let wd_e = if self.cfg.weight_decay > 0.0 {
+                    let (e, z) = round_log2_abs(self.cfg.weight_decay);
+                    assert!(!z, "weight decay quantizes to zero");
+                    Some(e)
+                } else {
+                    None
+                };
+                for l in 0..self.layers.len() {
+                    let g = &grads[l];
+                    let layer = &mut self.layers[l];
+                    match mom_e {
+                        Some(me) => {
+                            // v <- mu_snap*v + g_eff = v - 2^me*v + g_eff
+                            let (vw, vb) = &mut self.vel[l];
+                            for ((wv, v), &gr) in
+                                layer.w.iter_mut().zip(vw.iter_mut()).zip(&g.dw)
+                            {
+                                let geff =
+                                    gr + wd_e.map_or(0.0, |we| scale_pow2(*wv, we));
+                                *v = *v - scale_pow2(*v, me) + geff;
+                                *wv -= scale_pow2(*v, lr_e);
+                            }
+                            for ((bv, v), &gr) in
+                                layer.b.iter_mut().zip(vb.iter_mut()).zip(&g.db)
+                            {
+                                *v = *v - scale_pow2(*v, me) + gr;
+                                *bv -= scale_pow2(*v, lr_e);
+                            }
+                        }
+                        None => {
+                            match wd_e {
+                                Some(we) => {
+                                    for (wv, &gr) in layer.w.iter_mut().zip(&g.dw) {
+                                        let geff = gr + scale_pow2(*wv, we);
+                                        *wv -= scale_pow2(geff, lr_e);
+                                    }
+                                }
+                                None => {
+                                    for (wv, &gr) in layer.w.iter_mut().zip(&g.dw) {
+                                        *wv -= scale_pow2(gr, lr_e);
+                                    }
+                                }
+                            }
+                            for (bv, &gr) in layer.b.iter_mut().zip(&g.db) {
+                                *bv -= scale_pow2(gr, lr_e);
+                            }
+                        }
+                    }
+                    census.overhead_fp32_muls += 1; // lr * dgamma
+                    layer.gamma = (layer.gamma - lr * g.dgamma).clamp(GAMMA_MIN, 1.0);
+                }
+            }
+            Scheme::Fp32 => {
+                let (mu, wd) = (self.cfg.momentum, self.cfg.weight_decay);
+                for l in 0..self.layers.len() {
+                    let g = &grads[l];
+                    let layer = &mut self.layers[l];
+                    census.overhead_fp32_muls += (layer.w.len() + layer.b.len()) as u64;
+                    if wd > 0.0 {
+                        census.overhead_fp32_muls += layer.w.len() as u64; // wd * w
+                    }
+                    if mu > 0.0 {
+                        census.overhead_fp32_muls +=
+                            (layer.w.len() + layer.b.len()) as u64;
+                        let (vw, vb) = &mut self.vel[l];
+                        for ((wv, v), &gr) in
+                            layer.w.iter_mut().zip(vw.iter_mut()).zip(&g.dw)
+                        {
+                            let geff = if wd > 0.0 { gr + wd * *wv } else { gr };
+                            *v = mu * *v + geff;
+                            *wv -= lr * *v;
+                        }
+                        for ((bv, v), &gr) in
+                            layer.b.iter_mut().zip(vb.iter_mut()).zip(&g.db)
+                        {
+                            *v = mu * *v + gr;
+                            *bv -= lr * *v;
+                        }
+                    } else {
+                        for (wv, &gr) in layer.w.iter_mut().zip(&g.dw) {
+                            let geff = if wd > 0.0 { gr + wd * *wv } else { gr };
+                            *wv -= lr * geff;
+                        }
+                        for (bv, &gr) in layer.b.iter_mut().zip(&g.db) {
+                            *bv -= lr * gr;
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Pack all trainable state + [loss, step] into one f32 vector (the
@@ -528,7 +701,8 @@ impl MfMlp {
         v
     }
 
-    /// Restore from a packed state vector (checkpoint resume).
+    /// Restore from a packed state vector (checkpoint resume). Momentum
+    /// velocities are not in the vector; they restart at zero.
     pub fn state_from_vec(&mut self, v: &[f32]) -> Result<(), String> {
         if v.len() != self.state_len() {
             return Err(format!(
@@ -545,6 +719,10 @@ impl MfMlp {
             off += l.b.len();
             l.gamma = v[off];
             off += 1;
+        }
+        for (vw, vb) in self.vel.iter_mut() {
+            vw.iter_mut().for_each(|x| *x = 0.0);
+            vb.iter_mut().for_each(|x| *x = 0.0);
         }
         self.last_loss = v[off];
         self.steps = v[off + 1] as u64;
@@ -737,6 +915,100 @@ mod tests {
         assert_eq!(probe.g.len(), 12 * 16);
         assert!(probe.g.iter().any(|&v| v != 0.0), "G must be non-trivial");
         assert_eq!(model.state_to_vec(), before, "probe must not update");
+    }
+
+    #[test]
+    fn momentum_and_weight_decay_train() {
+        let mut cfg = NnConfig::mf(&[12, 16, 4]);
+        cfg.momentum = 0.9; // decay 0.1 snaps to 2^-3 -> mu_snap = 0.875
+        cfg.weight_decay = 5e-4;
+        let mut model = MfMlp::init(cfg, 1);
+        let eng = BlockedEngine::default();
+        let (x, y) = toy_batch(7, 16, 12, 4);
+        let first = model.train_step(&x, &y, &eng, 0.05).loss;
+        for _ in 0..60 {
+            model.train_step(&x, &y, &eng, 0.05);
+        }
+        assert!(model.last_loss.is_finite());
+        assert!(model.last_loss < first * 0.7, "loss {first} -> {}", model.last_loss);
+        // every step stayed multiplication-free in linear layers
+        let res = model.train_step(&x, &y, &eng, 0.05);
+        assert_eq!(res.census.linear_fp32_muls, 0);
+    }
+
+    #[test]
+    fn mf_momentum_update_matches_explicit_reference() {
+        // one apply_grads against the same update computed with explicit
+        // *2^e multiplies: bit-identical whenever intermediates are normal
+        let mut cfg = NnConfig::mf(&[3, 2]);
+        cfg.momentum = 0.9;
+        cfg.weight_decay = 0.125; // already a PoT
+        let mut model = MfMlp::init(cfg, 4);
+        let w0 = model.layers[0].w.clone();
+        let b0 = model.layers[0].b.clone();
+        let g = LayerGrads {
+            dw: vec![0.25, -0.5, 0.125, 1.0, -0.75, 0.375],
+            db: vec![0.5, -0.25],
+            dgamma: 0.0,
+        };
+        let mut census = StepCensus::default();
+        model.apply_grads(std::slice::from_ref(&g), 0.25, &mut census);
+        // reference: lr = 2^-2, decay = 2^-3 (0.1 -> 0.125), wd = 2^-3
+        let (lr, dec, wd) = (0.25f32, 0.125f32, 0.125f32);
+        for i in 0..w0.len() {
+            let geff = g.dw[i] + wd * w0[i];
+            let v = 0.0 - dec * 0.0 + geff; // velocity starts at zero
+            let want = w0[i] - lr * v;
+            assert_eq!(model.layers[0].w[i].to_bits(), want.to_bits(), "w[{i}]");
+        }
+        for i in 0..b0.len() {
+            let want = b0[i] - lr * g.db[i];
+            assert_eq!(model.layers[0].b[i].to_bits(), want.to_bits(), "b[{i}]");
+        }
+    }
+
+    #[test]
+    fn plain_sgd_update_is_unchanged_by_refactor() {
+        // momentum = wd = 0 must reproduce the original exponent-add SGD:
+        // w -= scale_pow2(g, lr_e), bit for bit
+        let mut model = MfMlp::init(NnConfig::mf(&[4, 3]), 9);
+        let w0 = model.layers[0].w.clone();
+        let g = LayerGrads {
+            dw: (0..12).map(|i| (i as f32 - 6.0) * 0.03).collect(),
+            db: vec![0.1, -0.2, 0.3],
+            dgamma: 0.0,
+        };
+        let mut census = StepCensus::default();
+        model.apply_grads(std::slice::from_ref(&g), 0.1, &mut census);
+        let (lr_e, _) = crate::potq::round_log2_abs(0.1);
+        for i in 0..w0.len() {
+            let want = w0[i] - scale_pow2(g.dw[i], lr_e);
+            assert_eq!(model.layers[0].w[i].to_bits(), want.to_bits(), "w[{i}]");
+        }
+    }
+
+    #[test]
+    fn forward_backward_is_pure_and_feeds_train_step() {
+        let (x, y) = toy_batch(5, 8, 12, 4);
+        let eng = ScalarEngine;
+        let model = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 2);
+        let before = model.state_to_vec();
+        let fb = model.forward_backward(&x, &y, &eng, true, false);
+        assert_eq!(model.state_to_vec(), before, "fb must not mutate");
+        let grads = fb.grads.expect("grads requested");
+        assert_eq!(grads.len(), model.layers.len());
+        for (g, l) in grads.iter().zip(&model.layers) {
+            assert_eq!(g.dw.len(), l.w.len());
+            assert_eq!(g.db.len(), l.b.len());
+        }
+        // fb + apply == train_step, bit for bit
+        let mut a = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 2);
+        let mut b = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 2);
+        a.train_step(&x, &y, &eng, 0.1);
+        let mut fb = b.forward_backward(&x, &y, &eng, true, false);
+        let grads = fb.grads.take().unwrap();
+        b.apply_grads(&grads, 0.1, &mut fb.census);
+        assert_eq!(a.state_to_vec(), b.state_to_vec());
     }
 
     #[test]

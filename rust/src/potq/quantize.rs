@@ -119,11 +119,55 @@ pub fn scale_pow2(v: f32, k: i32) -> f32 {
 /// Layer-wise scale exponent beta = round(log2(max|F| / 2^emax)) (eq. 7+10).
 pub fn compute_beta(f: &[f32], b: u32) -> i32 {
     let amax = f.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    beta_from_amax(amax, b)
+}
+
+/// The same eq. 7+10 scale from a precomputed block max (tile planes
+/// compute one amax per slab and share this rounding path).
+pub fn beta_from_amax(amax: f32, b: u32) -> i32 {
     let (e, is_zero) = round_log2_abs(amax);
     if is_zero {
         0
     } else {
         e - pot_emax(b)
+    }
+}
+
+/// Lowest per-tile beta delta the engines accept, relative to the base
+/// beta (which is the max over tiles, so deltas are `<= 0`). The bound
+/// keeps the engines' shifted integer *sums* exact, not just single
+/// terms: a product term is at most 2^(4*emax) = 2^60 accumulator LSBs
+/// and two operands' tile deltas add at most 2 * 16 = 32 to the shift,
+/// so the k-term accumulator is bounded by k * 2^92 — within i128 for
+/// any k < 2^34, i.e. every representable GEMM. A tile whose local
+/// scale sits more than 16 exponent steps below the base would have
+/// quantized to all-zero codes under per-tensor ALS anyway (emax <= 15),
+/// so the clamp never loses information the untiled format had.
+pub const TILE_DELTA_MIN: i32 = -16;
+
+/// Per-tile scale plane of a [`PotTensor`]: one beta delta per `tile`
+/// coordinates along `axis`, letting sharded / tensor-parallel producers
+/// quantize each k-tile of an operand with a local adaptive scale while
+/// the engines keep one packed tensor. Deltas are relative to the
+/// tensor's base `beta` (the max over tiles, so every delta is in
+/// `[TILE_DELTA_MIN, 0]`); the effective scale of tile t is
+/// `beta + deltas[t]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileScales {
+    /// axis the tiles run along (0 = rows, 1 = cols of a 2-D tensor)
+    pub axis: usize,
+    /// coordinates per tile along `axis` (a power of two; the last tile
+    /// may be partial)
+    pub tile: usize,
+    /// per-tile beta deltas relative to the base `beta`
+    pub deltas: Vec<i32>,
+}
+
+impl TileScales {
+    /// Delta of the tile holding coordinate `c` along the tile axis.
+    #[inline]
+    pub fn delta_at(&self, c: usize) -> i32 {
+        self.deltas[c / self.tile]
     }
 }
 
@@ -139,6 +183,8 @@ pub struct PotTensor {
     shape: Vec<usize>,
     /// row-major element strides matching `shape`
     strides: Vec<usize>,
+    /// optional per-tile beta plane (None = one beta for the whole block)
+    tiles: Option<TileScales>,
     pub beta: i32,
     pub bits: u32,
 }
@@ -171,6 +217,7 @@ impl PotTensor {
             codes,
             shape: vec![f.len()],
             strides: vec![1],
+            tiles: None,
             beta,
             bits: b,
         }
@@ -188,8 +235,78 @@ impl PotTensor {
         PotTensor::quantize(f, b, beta).with_shape(&[rows, cols])
     }
 
+    /// ALS-PoTQ of a row-major (rows, cols) matrix with a per-tile beta
+    /// plane: each `tile`-wide slab along `axis` is quantized with its own
+    /// adaptive scale (the slab's local beta), stored as a delta against
+    /// the base beta (the max over slabs, clamped at [`TILE_DELTA_MIN`]).
+    /// This is how sharded / tensor-parallel producers quantize their
+    /// slice locally while every [`crate::potq::MacEngine`] consumes one
+    /// packed operand and folds the deltas into its code-sum path.
+    /// All-zero slabs get delta 0 (their codes are the zero code anyway)
+    /// so they never distort the base or the engines' shift range.
+    pub fn quantize_2d_tiled(
+        f: &[f32],
+        rows: usize,
+        cols: usize,
+        b: u32,
+        axis: usize,
+        tile: usize,
+    ) -> PotTensor {
+        assert_eq!(f.len(), rows * cols, "data length != rows*cols");
+        assert!((3..=6).contains(&b), "packed PoT codes support 3..=6 bits, got {b}");
+        assert!(axis < 2, "tile axis must be 0 or 1 for a 2-D tensor");
+        assert!(tile > 0 && tile.is_power_of_two(), "tile size must be a power of two");
+        let n_axis = if axis == 0 { rows } else { cols };
+        let n_tiles = n_axis.div_ceil(tile).max(1);
+        // per-slab amax -> local beta (None for all-zero slabs)
+        let mut amax = vec![0f32; n_tiles];
+        for (idx, &x) in f.iter().enumerate() {
+            let c = if axis == 0 { idx / cols } else { idx % cols };
+            let a = &mut amax[c / tile];
+            *a = a.max(x.abs());
+        }
+        let slab_betas: Vec<Option<i32>> = amax
+            .iter()
+            .map(|&a| {
+                let (_, is_zero) = round_log2_abs(a);
+                if is_zero {
+                    None
+                } else {
+                    Some(beta_from_amax(a, b))
+                }
+            })
+            .collect();
+        let base = slab_betas.iter().flatten().copied().max().unwrap_or(0);
+        let deltas: Vec<i32> = slab_betas
+            .iter()
+            .map(|sb| sb.map_or(0, |bt| (bt - base).max(TILE_DELTA_MIN)))
+            .collect();
+        let emax = pot_emax(b);
+        let codes: Vec<u8> = f
+            .iter()
+            .enumerate()
+            .map(|(idx, &x)| {
+                let c = if axis == 0 { idx / cols } else { idx % cols };
+                let (e, s) = pot_quantize_one(x, b, base + deltas[c / tile]);
+                pack_code(e, s, emax)
+            })
+            .collect();
+        PotTensor {
+            codes,
+            shape: vec![rows, cols],
+            strides: vec![cols, 1],
+            tiles: Some(TileScales { axis, tile, deltas }),
+            beta: base,
+            bits: b,
+        }
+    }
+
     /// Reinterpret with a new shape (same element count, row-major).
     pub fn with_shape(mut self, shape: &[usize]) -> PotTensor {
+        assert!(
+            self.tiles.is_none(),
+            "cannot reshape a tensor carrying a tile-scale plane"
+        );
         assert_eq!(
             shape.iter().product::<usize>(),
             self.codes.len(),
@@ -205,7 +322,44 @@ impl PotTensor {
     pub fn from_codes(codes: Vec<u8>, shape: &[usize], beta: i32, bits: u32) -> PotTensor {
         assert_eq!(shape.iter().product::<usize>(), codes.len());
         let strides = row_major_strides(shape);
-        PotTensor { codes, shape: shape.to_vec(), strides, beta, bits }
+        PotTensor { codes, shape: shape.to_vec(), strides, tiles: None, beta, bits }
+    }
+
+    /// Attach a tile-scale plane to codes that were quantized with the
+    /// matching per-tile betas (test / shard plumbing). Deltas must obey
+    /// the engine contract: in `[TILE_DELTA_MIN, 0]` relative to `beta`.
+    pub fn with_tile_scales(mut self, ts: TileScales) -> PotTensor {
+        assert!(ts.axis < self.shape.len(), "tile axis {} out of rank", ts.axis);
+        assert!(ts.tile > 0 && ts.tile.is_power_of_two(), "tile size must be a power of two");
+        assert_eq!(
+            ts.deltas.len(),
+            self.shape[ts.axis].div_ceil(ts.tile).max(1),
+            "tile delta plane does not cover axis {}",
+            ts.axis
+        );
+        assert!(
+            ts.deltas.iter().all(|d| (TILE_DELTA_MIN..=0).contains(d)),
+            "tile deltas must be in [{TILE_DELTA_MIN}, 0]"
+        );
+        self.tiles = Some(ts);
+        self
+    }
+
+    /// The per-tile beta plane, if this tensor carries one.
+    pub fn tile_scales(&self) -> Option<&TileScales> {
+        self.tiles.as_ref()
+    }
+
+    /// Tile-plane beta delta of the element at flat index i (0 untiled).
+    #[inline]
+    pub fn tile_delta_flat(&self, i: usize) -> i32 {
+        match &self.tiles {
+            None => 0,
+            Some(ts) => {
+                let c = (i / self.strides[ts.axis]) % self.shape[ts.axis];
+                ts.delta_at(c)
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -269,8 +423,9 @@ impl PotTensor {
 
     /// Transpose of a 2-D tensor: pure code movement (no arithmetic), so
     /// the result shares beta/bits and stays bit-compatible with every
-    /// engine. The backward GEMMs (dX = dY.Wt, dW = Xt.dY) reuse the
-    /// forward operands' codes through this.
+    /// engine. A tile-scale plane rides along with its axis flipped. The
+    /// backward GEMMs (dX = dY.Wt, dW = Xt.dY) reuse the forward
+    /// operands' codes through this.
     pub fn transpose2d(&self) -> PotTensor {
         assert_eq!(self.shape.len(), 2, "transpose2d needs a 2-D tensor");
         let (r, c) = (self.shape[0], self.shape[1]);
@@ -280,16 +435,23 @@ impl PotTensor {
                 codes[j * r + i] = self.codes[i * c + j];
             }
         }
-        PotTensor::from_codes(codes, &[c, r], self.beta, self.bits)
+        let mut t = PotTensor::from_codes(codes, &[c, r], self.beta, self.bits);
+        t.tiles = self.tiles.as_ref().map(|ts| TileScales {
+            axis: 1 - ts.axis,
+            tile: ts.tile,
+            deltas: ts.deltas.clone(),
+        });
+        t
     }
 
     pub fn dequantize(&self) -> Vec<f32> {
         let emax = self.emax();
         self.codes
             .iter()
-            .map(|&c| {
+            .enumerate()
+            .map(|(i, &c)| {
                 let (e, s) = unpack_code(c, emax);
-                pot_dequantize(e, s, self.beta)
+                pot_dequantize(e, s, self.beta + self.tile_delta_flat(i))
             })
             .collect()
     }
@@ -560,6 +722,113 @@ mod tests {
         let back = tt.transpose2d();
         assert_eq!(back.codes(), t.codes());
         assert_eq!(back.shape(), t.shape());
+    }
+
+    #[test]
+    fn tiled_quantize_matches_per_slab_als() {
+        // a k-tiled tensor must quantize each slab exactly as a
+        // standalone ALS block would (same betas, same values)
+        let mut r = Pcg32::new(21);
+        let (rows, cols, tile) = (6, 16, 4);
+        let mut x = vec![0f32; rows * cols];
+        r.fill_normal(&mut x, 0.0, 0.2);
+        // give slabs visibly different scales
+        for (j, v) in x.iter_mut().enumerate() {
+            if (j % cols) >= 8 {
+                *v *= 1.0 / 64.0;
+            }
+        }
+        let t = PotTensor::quantize_2d_tiled(&x, rows, cols, 5, 1, tile);
+        let ts = t.tile_scales().unwrap();
+        assert_eq!(ts.axis, 1);
+        assert_eq!(ts.deltas.len(), 4);
+        assert!(ts.deltas.iter().all(|&d| (TILE_DELTA_MIN..=0).contains(&d)));
+        assert!(ts.deltas.iter().any(|&d| d < 0), "slabs should have distinct scales");
+        let deq = t.dequantize();
+        for s in 0..cols / tile {
+            // standalone quantization of the slab
+            let slab: Vec<f32> = (0..rows)
+                .flat_map(|i| (s * tile..(s + 1) * tile).map(move |j| (i, j)))
+                .map(|(i, j)| x[i * cols + j])
+                .collect();
+            let solo = pot_quantize(&slab, 5, None);
+            assert_eq!(solo.beta, t.beta + ts.deltas[s], "slab {s} beta");
+            let solo_deq = solo.dequantize();
+            for (slab_idx, (i, j)) in (0..rows)
+                .flat_map(|i| (s * tile..(s + 1) * tile).map(move |j| (i, j)))
+                .enumerate()
+            {
+                assert_eq!(
+                    deq[i * cols + j].to_bits(),
+                    solo_deq[slab_idx].to_bits(),
+                    "slab {s} elem ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_axis0_and_partial_last_tile() {
+        let mut r = Pcg32::new(22);
+        let (rows, cols, tile) = (7, 5, 4); // 2 tiles, last partial (3 rows)
+        let mut x = vec![0f32; rows * cols];
+        r.fill_normal(&mut x, 0.0, 1.0);
+        let t = PotTensor::quantize_2d_tiled(&x, rows, cols, 5, 0, tile);
+        let ts = t.tile_scales().unwrap();
+        assert_eq!((ts.axis, ts.tile, ts.deltas.len()), (0, 4, 2));
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(t.tile_delta_flat(i * cols + j), ts.deltas[i / tile]);
+            }
+        }
+        // all-zero input: no spurious deltas, everything zero
+        let z = PotTensor::quantize_2d_tiled(&[0.0; 12], 4, 3, 5, 0, 2);
+        assert_eq!(z.tile_scales().unwrap().deltas, vec![0, 0]);
+        assert!(z.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tiled_transpose_flips_axis_and_keeps_values() {
+        let mut r = Pcg32::new(23);
+        let (rows, cols) = (5, 8);
+        let mut x = vec![0f32; rows * cols];
+        r.fill_normal(&mut x, 0.0, 0.5);
+        for (j, v) in x.iter_mut().enumerate() {
+            if (j % cols) < 4 {
+                *v *= 1.0 / 16.0;
+            }
+        }
+        let t = PotTensor::quantize_2d_tiled(&x, rows, cols, 5, 1, 4);
+        let tt = t.transpose2d();
+        let ts = tt.tile_scales().unwrap();
+        assert_eq!(ts.axis, 0);
+        assert_eq!(ts.deltas, t.tile_scales().unwrap().deltas);
+        let d = t.dequantize();
+        let dt = tt.dequantize();
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(d[i * cols + j].to_bits(), dt[j * rows + i].to_bits());
+            }
+        }
+        // involution restores the original plane
+        let back = tt.transpose2d();
+        assert_eq!(back.tile_scales(), t.tile_scales());
+        assert_eq!(back.codes(), t.codes());
+    }
+
+    #[test]
+    fn tiled_clamp_keeps_deltas_in_engine_range() {
+        // one slab ~2^0, one ~2^-120: the raw beta gap is far below
+        // TILE_DELTA_MIN and must clamp (the tiny slab underflows to
+        // zero codes, which per-tensor ALS would have done too)
+        let x = vec![1.0f32, 1.0, 1e-36, 1e-36];
+        let t = PotTensor::quantize_2d_tiled(&x, 1, 4, 5, 1, 2);
+        let ts = t.tile_scales().unwrap();
+        assert_eq!(ts.deltas[0], 0);
+        assert_eq!(ts.deltas[1], TILE_DELTA_MIN);
+        let deq = t.dequantize();
+        assert!(deq[2] == 0.0 && deq[3] == 0.0, "clamped slab underflows");
+        assert!(deq[0] != 0.0);
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! Sharded data-parallel multiplication-free training.
+//!
+//! [`ShardPlan`] splits one global batch into fixed-size *microbatch
+//! tiles*; [`ShardedMlp`] distributes the tiles over worker threads, each
+//! of which runs [`MfMlp::forward_backward`] on its slice with its own
+//! [`crate::potq::MacEngine`] and quantizes locally — per-tile ALS betas,
+//! the training-loop counterpart of the engine-level per-k-tile
+//! [`crate::potq::TileScales`] plane. The per-tile gradients are then
+//! combined multiplication-free: summed in fixed tile order (FP32 adds
+//! only) and averaged with a PoT-snapped 1/n_tiles coefficient applied by
+//! [`scale_pow2`] — an integer exponent-field add — so the per-step
+//! [`StepCensus`] keeps `linear_fp32_muls == 0` across the whole sharded
+//! step, combine included.
+//!
+//! Determinism contract: the tile granularity is a property of the
+//! *plan*, not of the worker count, and the combine walks tiles in index
+//! order. Workers only change which thread computes which tile, and every
+//! engine is bit-exact, so a seeded run is bit-identical for any
+//! `--workers N` — the property the sharded train_smoke pins (W=4 == W=1
+//! on all three engines).
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use super::engine::engine_by_name;
+use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult};
+use super::quantize::scale_pow2;
+
+/// Data-parallel split of a global batch into `n_tiles` microbatch tiles
+/// of `tile` rows, executed by up to `workers` threads. `n_tiles` must be
+/// a power of two so the gradient average 1/n_tiles is exactly a PoT
+/// coefficient (exponent add, no FP32 multiply).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub batch: usize,
+    /// rows per microbatch tile (a power of two dividing `batch`)
+    pub tile: usize,
+    pub n_tiles: usize,
+    /// requested worker threads (>= 1; clamped to `n_tiles` at runtime)
+    pub workers: usize,
+}
+
+impl ShardPlan {
+    pub fn new(batch: usize, tile: usize, workers: usize) -> Result<ShardPlan> {
+        if batch == 0 {
+            bail!("shard plan needs a non-empty batch");
+        }
+        if workers == 0 {
+            bail!("workers must be >= 1 (got 0)");
+        }
+        if tile == 0 || !tile.is_power_of_two() {
+            bail!("shard tile must be a power of two, got {tile}");
+        }
+        if tile > batch || batch % tile != 0 {
+            bail!("shard tile {tile} must divide the batch size {batch}");
+        }
+        let n_tiles = batch / tile;
+        if !n_tiles.is_power_of_two() {
+            bail!(
+                "batch {batch} / tile {tile} gives {n_tiles} tiles; the \
+                 multiplication-free 1/n_tiles combine needs a power of two"
+            );
+        }
+        Ok(ShardPlan { batch, tile, n_tiles, workers })
+    }
+
+    /// Default microbatch tile for a batch: four tiles when the batch
+    /// allows it (so `--workers` up to 4 parallelize out of the box),
+    /// independent of the worker count — that independence is what keeps
+    /// seeded runs bit-identical across `--workers` values.
+    pub fn auto_tile(batch: usize) -> usize {
+        (batch / 4).max(1)
+    }
+
+    /// Row range of tile `t`.
+    pub fn tile_range(&self, t: usize) -> Range<usize> {
+        debug_assert!(t < self.n_tiles);
+        t * self.tile..(t + 1) * self.tile
+    }
+
+    /// Worker threads actually spawned (never more than there are tiles).
+    pub fn effective_workers(&self) -> usize {
+        self.workers.clamp(1, self.n_tiles)
+    }
+}
+
+/// The sharded trainer: a master [`MfMlp`] plus a [`ShardPlan`] and an
+/// engine spec. Each step shares the master weights with all workers by
+/// reference (forward/backward is `&self`), runs one
+/// `forward_backward` per tile — every tile quantizes its slice locally —
+/// and applies the combined gradients as a single optimizer step on the
+/// master.
+pub struct ShardedMlp {
+    pub model: MfMlp,
+    pub plan: ShardPlan,
+    engine: String,
+    threads: usize,
+}
+
+impl ShardedMlp {
+    /// `engine`/`threads` name the per-worker [`crate::potq::MacEngine`]
+    /// (each worker constructs its own instance; results are bit-exact
+    /// across engines, so this only affects throughput).
+    pub fn new(model: MfMlp, plan: ShardPlan, engine: &str, threads: usize) -> Result<ShardedMlp> {
+        if engine_by_name(engine, threads).is_none() {
+            bail!(
+                "unknown engine '{engine}' (available: {})",
+                super::engine::ENGINE_NAMES.join("|")
+            );
+        }
+        Ok(ShardedMlp { model, plan, engine: engine.to_string(), threads })
+    }
+
+    pub fn engine_name(&self) -> &str {
+        &self.engine
+    }
+
+    /// One data-parallel SGD step over the global batch.
+    pub fn train_step(&mut self, x: &[f32], y: &[i32], lr: f32) -> StepResult {
+        let tiles = self.run_tiles(x, y, true, false);
+        let (mut census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
+        let grads = self.combine_grads(&tiles, &mut census);
+        let loss = (loss_sum / self.plan.batch as f64) as f32;
+        self.model.apply_grads(&grads, lr, &mut census);
+        self.model.steps += 1;
+        self.model.last_loss = loss;
+        if self.model.cfg.scheme == Scheme::Mf {
+            // the combine is adds + exponent adds only; prove it per step
+            assert_eq!(
+                census.linear_fp32_muls, 0,
+                "FP32 multiplies leaked into the sharded step"
+            );
+        }
+        StepResult { loss, loss_sum, n_correct, census, probe: None, grads: Some(grads) }
+    }
+
+    /// Loss/accuracy over the global batch (tiles evaluated in parallel,
+    /// reduced in fixed tile order — deterministic for any worker count).
+    pub fn eval_batch(&mut self, x: &[f32], y: &[i32]) -> StepResult {
+        let tiles = self.run_tiles(x, y, false, false);
+        let (census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
+        let loss = (loss_sum / self.plan.batch as f64) as f32;
+        StepResult { loss, loss_sum, n_correct, census, probe: None, grads: None }
+    }
+
+    /// Forward + backward without an update, capturing [W | A | G] of the
+    /// first layer: A reassembled from the tiles in order, G the combined
+    /// (averaged) weight gradient — what the optimizer would have seen.
+    pub fn probe_step(&mut self, x: &[f32], y: &[i32]) -> StepResult {
+        let tiles = self.run_tiles(x, y, true, true);
+        let (mut census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
+        let grads = self.combine_grads(&tiles, &mut census);
+        let loss = (loss_sum / self.plan.batch as f64) as f32;
+        let mut a = Vec::with_capacity(self.plan.batch * self.model.cfg.dims[1]);
+        for t in &tiles {
+            a.extend_from_slice(&t.probe.as_ref().expect("tile probe captured").a);
+        }
+        let probe = ProbeRaw {
+            w: self.model.layers[0].w.clone(),
+            a,
+            g: grads[0].dw.clone(),
+        };
+        StepResult { loss, loss_sum, n_correct, census, probe: Some(probe), grads: Some(grads) }
+    }
+
+    /// Run one forward(/backward) pass per tile, distributed round-robin
+    /// over the plan's workers; returns per-tile results indexed by tile.
+    fn run_tiles(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        want_grads: bool,
+        want_probe: bool,
+    ) -> Vec<StepResult> {
+        let plan = self.plan;
+        let d_in = self.model.cfg.dims[0];
+        assert_eq!(y.len(), plan.batch, "batch size does not match the shard plan");
+        assert_eq!(x.len(), plan.batch * d_in, "x does not match (batch, d_in)");
+        let model = &self.model;
+        let engine_name = self.engine.as_str();
+        let threads = self.threads;
+        let workers = plan.effective_workers();
+        let mut out: Vec<Option<StepResult>> = (0..plan.n_tiles).map(|_| None).collect();
+        if workers <= 1 {
+            // in-thread path: same tiles, same order-independent math
+            let eng = engine_by_name(engine_name, threads).expect("engine validated");
+            for (t, slot) in out.iter_mut().enumerate() {
+                let r = plan.tile_range(t);
+                *slot = Some(model.forward_backward(
+                    &x[r.start * d_in..r.end * d_in],
+                    &y[r],
+                    eng.as_ref(),
+                    want_grads,
+                    want_probe,
+                ));
+            }
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|wid| {
+                        s.spawn(move || {
+                            // each worker owns its engine instance
+                            let eng = engine_by_name(engine_name, threads)
+                                .expect("engine validated");
+                            let mut mine = Vec::new();
+                            let mut t = wid;
+                            while t < plan.n_tiles {
+                                let r = plan.tile_range(t);
+                                let (lo, hi) = (r.start, r.end);
+                                mine.push((
+                                    t,
+                                    model.forward_backward(
+                                        &x[lo * d_in..hi * d_in],
+                                        &y[lo..hi],
+                                        eng.as_ref(),
+                                        want_grads,
+                                        want_probe,
+                                    ),
+                                ));
+                                t += workers;
+                            }
+                            mine
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    for (t, res) in h.join().expect("shard worker panicked") {
+                        out[t] = Some(res);
+                    }
+                }
+            });
+        }
+        out.into_iter().map(|o| o.expect("every tile computed")).collect()
+    }
+
+    /// Merge per-tile scalar results and censuses in fixed tile order.
+    fn reduce_scalars(tiles: &[StepResult]) -> (StepCensus, f64, usize) {
+        let mut census = StepCensus::default();
+        let mut loss_sum = 0f64;
+        let mut n_correct = 0usize;
+        for t in tiles {
+            census.merge(&t.census);
+            loss_sum += t.loss_sum;
+            n_correct += t.n_correct;
+        }
+        (census, loss_sum, n_correct)
+    }
+
+    /// The multiplication-free gradient combine: sum per-tile gradients
+    /// elementwise in tile order (FP32 adds), then average with the
+    /// PoT-snapped 1/n_tiles coefficient by exponent add. Each tile's
+    /// backward already carries the 1/tile loss scale, so the result is
+    /// the exact 1/batch-scaled global gradient.
+    fn combine_grads(&self, tiles: &[StepResult], census: &mut StepCensus) -> Vec<LayerGrads> {
+        let avg_e = -(self.plan.n_tiles.trailing_zeros() as i32);
+        let mut combined: Vec<LayerGrads> = self
+            .model
+            .layers
+            .iter()
+            .map(|l| LayerGrads {
+                dw: vec![0f32; l.w.len()],
+                db: vec![0f32; l.b.len()],
+                dgamma: 0.0,
+            })
+            .collect();
+        for t in tiles {
+            let grads = t.grads.as_ref().expect("tile gradients requested");
+            for (acc, g) in combined.iter_mut().zip(grads) {
+                for (a, &v) in acc.dw.iter_mut().zip(&g.dw) {
+                    *a += v;
+                }
+                for (a, &v) in acc.db.iter_mut().zip(&g.db) {
+                    *a += v;
+                }
+                acc.dgamma += g.dgamma;
+            }
+        }
+        for acc in combined.iter_mut() {
+            for v in acc.dw.iter_mut() {
+                *v = scale_pow2(*v, avg_e);
+            }
+            for v in acc.db.iter_mut() {
+                *v = scale_pow2(*v, avg_e);
+            }
+            acc.dgamma = scale_pow2(acc.dgamma, avg_e);
+            census.combine_exp_adds += (acc.dw.len() + acc.db.len() + 1) as u64;
+        }
+        combined
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potq::nn::NnConfig;
+    use crate::util::prng::Pcg32;
+
+    fn toy_batch(seed: u64, m: usize, d: usize, classes: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut r = Pcg32::new(seed);
+        let mut x = vec![0f32; m * d];
+        let mut y = vec![0i32; m];
+        for i in 0..m {
+            let c = r.below(classes as u32) as i32;
+            y[i] = c;
+            for j in 0..d {
+                let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+                let centre = (c as f32 - classes as f32 / 2.0) * 0.5 * sign;
+                x[i * d + j] = centre + 0.3 * r.normal();
+            }
+        }
+        (x, y)
+    }
+
+    fn sharded(seed: u64, workers: usize, engine: &str) -> ShardedMlp {
+        let plan = ShardPlan::new(16, 4, workers).unwrap();
+        let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), seed);
+        ShardedMlp::new(model, plan, engine, 2).unwrap()
+    }
+
+    #[test]
+    fn plan_validation() {
+        assert!(ShardPlan::new(16, 4, 1).is_ok());
+        let e = format!("{:#}", ShardPlan::new(16, 4, 0).unwrap_err());
+        assert!(e.contains("workers must be >= 1"), "{e}");
+        assert!(ShardPlan::new(16, 3, 1).is_err(), "non-PoT tile");
+        assert!(ShardPlan::new(16, 32, 1).is_err(), "tile > batch");
+        assert!(ShardPlan::new(0, 1, 1).is_err(), "empty batch");
+        let p = ShardPlan::new(16, 2, 64).unwrap();
+        assert_eq!(p.n_tiles, 8);
+        assert_eq!(p.effective_workers(), 8, "workers clamp to tiles");
+        assert_eq!(p.tile_range(3), 6..8);
+        assert_eq!(ShardPlan::auto_tile(16), 4);
+        assert_eq!(ShardPlan::auto_tile(2), 1);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_run() {
+        // the tentpole invariant at module level: same seed, same plan,
+        // any worker count (including a non-divisor of n_tiles) ->
+        // bit-identical states and losses
+        let (x, y) = toy_batch(3, 16, 12, 4);
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        let mut losses: Vec<u32> = Vec::new();
+        for workers in [1usize, 3, 4] {
+            let mut t = sharded(7, workers, "blocked");
+            for _ in 0..6 {
+                t.train_step(&x, &y, 0.1);
+            }
+            states.push(t.model.state_to_vec());
+            losses.push(t.model.last_loss.to_bits());
+        }
+        assert_eq!(losses[0], losses[1], "W=1 vs W=3 loss");
+        assert_eq!(losses[0], losses[2], "W=1 vs W=4 loss");
+        assert_eq!(states[0], states[1], "W=1 vs W=3 state");
+        assert_eq!(states[0], states[2], "W=1 vs W=4 state");
+    }
+
+    #[test]
+    fn engines_agree_on_sharded_runs() {
+        let (x, y) = toy_batch(5, 16, 12, 4);
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for engine in crate::potq::ENGINE_NAMES {
+            let mut t = sharded(9, 4, engine);
+            for _ in 0..4 {
+                t.train_step(&x, &y, 0.1);
+            }
+            states.push(t.model.state_to_vec());
+        }
+        assert_eq!(states[0], states[1], "scalar vs blocked");
+        assert_eq!(states[0], states[2], "scalar vs threaded");
+    }
+
+    #[test]
+    fn sharded_training_learns_and_stays_multiplication_free() {
+        let (x, y) = toy_batch(11, 16, 12, 4);
+        let mut t = sharded(1, 4, "blocked");
+        let first = t.train_step(&x, &y, 0.1);
+        assert_eq!(first.census.linear_fp32_muls, 0);
+        // one merged row per logical GEMM (3 per layer), not per tile
+        assert_eq!(first.census.gemms.len(), 3 * t.model.layers.len());
+        // the combine applied one exponent add per parameter
+        assert_eq!(first.census.combine_exp_adds, t.model.n_params() as u64);
+        let dense: u64 = 3 * (16 * 12 * 16 + 16 * 16 * 4) as u64;
+        assert_eq!(first.census.total_macs(), dense, "tiles cover the dense MACs");
+        for _ in 0..60 {
+            t.train_step(&x, &y, 0.1);
+        }
+        assert!(t.model.last_loss.is_finite());
+        assert!(
+            t.model.last_loss < first.loss * 0.7,
+            "sharded loss {} -> {}",
+            first.loss,
+            t.model.last_loss
+        );
+        assert_eq!(t.model.steps, 61);
+    }
+
+    #[test]
+    fn sharded_eval_and_probe_are_consistent() {
+        let (x, y) = toy_batch(2, 16, 12, 4);
+        let mut t = sharded(4, 4, "scalar");
+        let before = t.model.state_to_vec();
+        let e1 = t.eval_batch(&x, &y);
+        let e2 = t.eval_batch(&x, &y);
+        assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
+        assert_eq!(e1.n_correct, e2.n_correct);
+        assert!(e1.n_correct <= 16);
+        let p = t.probe_step(&x, &y);
+        let probe = p.probe.expect("probe capture");
+        assert_eq!(probe.w.len(), 12 * 16);
+        assert_eq!(probe.a.len(), 16 * 16, "A reassembled over all tiles");
+        assert_eq!(probe.g.len(), 12 * 16);
+        assert!(probe.g.iter().any(|&v| v != 0.0));
+        assert_eq!(t.model.state_to_vec(), before, "eval/probe must not update");
+    }
+}

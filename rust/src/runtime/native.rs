@@ -1,12 +1,16 @@
 //! The native execution backend: a [`SessionBackend`] that runs the
-//! multiplication-free training loop entirely in rust on a
-//! [`MacEngine`] — no PJRT, no artifacts, no python AOT step.
+//! multiplication-free training loop entirely in rust — no PJRT, no
+//! artifacts, no python AOT step.
 //!
 //! Built from a [`crate::models::NativeSpec`] (an MLP over the flat
-//! PatternTask), it drives [`crate::potq::nn::MfMlp`]: every linear-layer
-//! GEMM (fw, dX, dW) executes on quantized packed operands, and each
+//! PatternTask), it drives [`crate::potq::shard::ShardedMlp`]: the batch
+//! is split into worker-independent microbatch tiles, each tile's
+//! fw/dX/dW GEMMs execute on quantized packed operands on a per-worker
+//! `MacEngine`, and the gradient combine is multiplication-free. Each
 //! train step's [`StepCensus`] is retained so callers can audit the
-//! zero-FP32-multiply invariant (`last_census()`).
+//! zero-FP32-multiply invariant (`last_census()`). `--workers 1` runs
+//! the same tiled algorithm in-thread, which is why seeded runs are
+//! bit-identical across worker counts.
 
 use anyhow::{bail, Context, Result};
 
@@ -14,7 +18,7 @@ use crate::config::TrainConfig;
 use crate::data::Batch;
 use crate::models::{self, NativeSpec};
 use crate::potq::nn::{MfMlp, NnConfig, Scheme, StepCensus};
-use crate::potq::MacEngine;
+use crate::potq::shard::{ShardPlan, ShardedMlp};
 
 use super::artifact::ProbeSection;
 use super::session::{SessionBackend, SessionInfo};
@@ -23,15 +27,17 @@ pub struct NativeSession {
     info: SessionInfo,
     spec: NativeSpec,
     cfg: NnConfig,
-    engine: Box<dyn MacEngine + Send>,
-    model: Option<MfMlp>,
+    engine_name: String,
+    threads: usize,
+    plan: ShardPlan,
+    model: Option<ShardedMlp>,
     last_census: Option<StepCensus>,
 }
 
 impl NativeSession {
     /// Build the session a [`TrainConfig`] describes: variant resolved
     /// through the native-spec registry, engine through the MacEngine
-    /// registry.
+    /// registry, shard plan from `--workers` / `--shard-tile`.
     pub fn from_config(cfg: &TrainConfig) -> Result<NativeSession> {
         let spec = models::native_spec(&cfg.variant).with_context(|| {
             format!(
@@ -40,7 +46,7 @@ impl NativeSession {
                 models::NATIVE_VARIANTS.join(", ")
             )
         })?;
-        let engine = crate::potq::engine_by_name(&cfg.engine, cfg.threads)
+        crate::potq::engine_by_name(&cfg.engine, cfg.threads)
             .with_context(|| format!("unknown engine '{}'", cfg.engine))?;
         let scheme = Scheme::parse(spec.scheme).context("bad scheme in native spec")?;
         let nn_cfg = NnConfig {
@@ -49,15 +55,25 @@ impl NativeSession {
             scheme,
             gamma_init: cfg.gamma,
             grad_gamma: cfg.grad_gamma,
+            momentum: cfg.momentum,
+            weight_decay: cfg.weight_decay,
         };
-        Ok(NativeSession::new(spec, nn_cfg, engine))
+        let tile = if cfg.shard_tile > 0 {
+            cfg.shard_tile
+        } else {
+            ShardPlan::auto_tile(spec.batch)
+        };
+        let plan = ShardPlan::new(spec.batch, tile, cfg.workers)?;
+        NativeSession::new(spec, nn_cfg, &cfg.engine, cfg.threads, plan)
     }
 
     pub fn new(
         spec: NativeSpec,
         cfg: NnConfig,
-        engine: Box<dyn MacEngine + Send>,
-    ) -> NativeSession {
+        engine_name: &str,
+        threads: usize,
+        plan: ShardPlan,
+    ) -> Result<NativeSession> {
         // probe layout mirrors the PJRT manifests: [W | A | G] of the
         // canonical (first) layer, A being its post-ReLU batch output
         let (w_len, a_len) = (cfg.dims[0] * cfg.dims[1], spec.batch * cfg.dims[1]);
@@ -79,7 +95,24 @@ impl NativeSession {
             eval_denom: spec.batch,
             probe_sections,
         };
-        NativeSession { info, spec, cfg, engine, model: None, last_census: None }
+        crate::potq::engine_by_name(engine_name, threads)
+            .with_context(|| format!("unknown engine '{engine_name}'"))?;
+        anyhow::ensure!(
+            plan.batch == spec.batch,
+            "shard plan batch {} does not match the variant batch {}",
+            plan.batch,
+            spec.batch
+        );
+        Ok(NativeSession {
+            info,
+            spec,
+            cfg,
+            engine_name: engine_name.to_string(),
+            threads,
+            plan,
+            model: None,
+            last_census: None,
+        })
     }
 
     /// Census of the most recent train/probe step.
@@ -87,11 +120,21 @@ impl NativeSession {
         self.last_census.as_ref()
     }
 
-    pub fn engine_name(&self) -> &'static str {
-        self.engine.name()
+    pub fn engine_name(&self) -> &str {
+        &self.engine_name
     }
 
-    fn model_mut(&mut self) -> Result<&mut MfMlp> {
+    /// The microbatch/worker plan this session runs under.
+    pub fn plan(&self) -> ShardPlan {
+        self.plan
+    }
+
+    fn sharded(cfg: &NnConfig, plan: ShardPlan, engine: &str, threads: usize, seed: u64)
+        -> Result<ShardedMlp> {
+        ShardedMlp::new(MfMlp::init(cfg.clone(), seed), plan, engine, threads)
+    }
+
+    fn model_mut(&mut self) -> Result<&mut ShardedMlp> {
         self.model.as_mut().context("call init() first")
     }
 
@@ -113,55 +156,59 @@ impl SessionBackend for NativeSession {
     }
 
     fn init(&mut self, seed: i32) -> Result<()> {
-        self.model = Some(MfMlp::init(self.cfg.clone(), seed as u32 as u64));
+        self.model = Some(Self::sharded(
+            &self.cfg,
+            self.plan,
+            &self.engine_name,
+            self.threads,
+            seed as u32 as u64,
+        )?);
         self.last_census = None;
         Ok(())
     }
 
     fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<()> {
         let (x, y) = self.batch_xy(batch)?;
-        let engine = &*self.engine;
         let model = self.model.as_mut().context("call init() first")?;
-        // the zero-FP32-multiply invariant is asserted inside MfMlp::run
-        // on every MF step; the census is retained here for callers
-        let res = model.train_step(x, y, engine, lr);
+        // the zero-FP32-multiply invariant is asserted inside the sharded
+        // step (combine included); the census is retained for callers
+        let res = model.train_step(x, y, lr);
         self.last_census = Some(res.census);
         Ok(())
     }
 
     fn metrics(&self) -> Result<(f32, u64)> {
         let model = self.model.as_ref().context("call init() first")?;
-        Ok((model.last_loss, model.steps))
+        Ok((model.model.last_loss, model.model.steps))
     }
 
     fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)> {
         let (x, y) = self.batch_xy(batch)?;
-        let engine = &*self.engine;
         let model = self.model.as_mut().context("call init() first")?;
-        let res = model.eval_batch(x, y, engine);
+        let res = model.eval_batch(x, y);
         Ok((res.loss_sum, res.n_correct as f64))
     }
 
     fn probe(&mut self, batch: &Batch) -> Result<Vec<f32>> {
         let (x, y) = self.batch_xy(batch)?;
-        let engine = &*self.engine;
         let model = self.model.as_mut().context("call init() first")?;
-        let res = model.probe_step(x, y, engine);
+        let res = model.probe_step(x, y);
         self.last_census = Some(res.census);
         Ok(res.probe.context("probe produced no capture")?.concat())
     }
 
     fn state_to_host(&self) -> Result<Vec<f32>> {
         let model = self.model.as_ref().context("call init() first")?;
-        Ok(model.state_to_vec())
+        Ok(model.model.state_to_vec())
     }
 
     fn state_from_host(&mut self, v: &[f32]) -> Result<()> {
         if self.model.is_none() {
             // checkpoint restore without init(): weights are overwritten
-            self.model = Some(MfMlp::init(self.cfg.clone(), 0));
+            self.model =
+                Some(Self::sharded(&self.cfg, self.plan, &self.engine_name, self.threads, 0)?);
         }
-        self.model_mut()?.state_from_vec(v).map_err(anyhow::Error::msg)
+        self.model_mut()?.model.state_from_vec(v).map_err(anyhow::Error::msg)
     }
 }
 
@@ -241,5 +288,40 @@ mod tests {
         let err = format!("{:#}", NativeSession::from_config(&cfg).unwrap_err());
         assert!(err.contains("no native spec"), "{err}");
         assert!(err.contains("tiny_mlp_mf"), "error should list variants: {err}");
+    }
+
+    #[test]
+    fn worker_count_is_invariant_at_session_level() {
+        // the sharded tentpole at the SessionBackend layer: same seed,
+        // different --workers -> bit-identical states and censuses
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for workers in [1usize, 4] {
+            let cfg = TrainConfig {
+                variant: "tiny_mlp_mf".into(),
+                workers,
+                ..TrainConfig::default()
+            };
+            let mut s = NativeSession::from_config(&cfg).unwrap();
+            assert_eq!(s.plan().n_tiles, 4, "auto tile: 4 tiles for batch 16");
+            s.init(11).unwrap();
+            let b = batch_for(&s, 11);
+            for _ in 0..3 {
+                s.train_step(&b, 0.05).unwrap();
+            }
+            assert_eq!(s.last_census().unwrap().linear_fp32_muls, 0);
+            states.push(s.state_to_host().unwrap());
+        }
+        assert_eq!(states[0], states[1], "W=1 vs W=4 session state");
+    }
+
+    #[test]
+    fn shard_flags_are_validated_through_config() {
+        let cfg = TrainConfig {
+            variant: "tiny_mlp_mf".into(),
+            shard_tile: 32, // > batch 16
+            ..TrainConfig::default()
+        };
+        let err = format!("{:#}", NativeSession::from_config(&cfg).unwrap_err());
+        assert!(err.contains("divide the batch"), "{err}");
     }
 }

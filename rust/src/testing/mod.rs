@@ -95,6 +95,41 @@ impl Gen {
         };
         crate::potq::PotTensor::quantize_2d(&data, rows, cols, bits, None)
     }
+
+    /// Random operand carrying a per-k-tile beta plane along `axis`:
+    /// each slab gets its own random scale offset (within the engine's
+    /// exact-shift envelope), so deltas are live and varied. Includes
+    /// occasional all-zero slabs.
+    pub fn pot_tensor_tiled(
+        &mut self,
+        rows: usize,
+        cols: usize,
+        axis: usize,
+        tile: usize,
+        bits: u32,
+    ) -> crate::potq::PotTensor {
+        let n_axis = if axis == 0 { rows } else { cols };
+        let n_tiles = n_axis.div_ceil(tile).max(1);
+        let offsets: Vec<Option<i32>> = (0..n_tiles)
+            .map(|_| {
+                if self.usize_in(0, 8) == 0 {
+                    None // all-zero slab
+                } else {
+                    Some(self.i32_in(-12, 1))
+                }
+            })
+            .collect();
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|idx| {
+                let c = if axis == 0 { idx / cols } else { idx % cols };
+                match offsets[c / tile] {
+                    None => 0.0,
+                    Some(off) => self.f32_logscale(-8, 6) * (2f32).powi(off),
+                }
+            })
+            .collect();
+        crate::potq::PotTensor::quantize_2d_tiled(&data, rows, cols, bits, axis, tile)
+    }
 }
 
 /// Run `cases` random cases of `prop`; panic with the failing seed if any

@@ -73,6 +73,75 @@ fn native_train_works_without_artifacts() {
 }
 
 #[test]
+fn native_sharded_train_and_eval_honor_workers_and_threads() {
+    // train with 4 shard workers, then eval the checkpoint through the
+    // threaded engine with explicit --threads and --workers — the full
+    // plumbing the eval path must honor (not just --engine)
+    let ckpt = std::env::temp_dir().join("mft_cli_shard.ckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--workers", "4",
+            "--momentum", "0.9", "--weight-decay", "0.0005", "--steps", "6", "--lr",
+            "0.05", "--seed", "2", "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("4 workers"), "{s}");
+    assert!(ckpt.exists());
+
+    let out = mft()
+        .args([
+            "eval", "--variant", "tiny_mlp_mf", "--engine", "threaded", "--threads", "2",
+            "--workers", "2", "--batches", "2", "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("accuracy"));
+}
+
+#[test]
+fn workers_zero_is_a_clean_cli_error() {
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--workers", "0",
+            "--steps", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("workers must be >= 1"), "{e}");
+}
+
+#[test]
+fn census_subcommand_measures_a_real_step() {
+    let json = std::env::temp_dir().join("mft_cli_census.json");
+    std::fs::remove_file(&json).ok();
+    let out = mft()
+        .args([
+            "census", "--variant", "tiny_mlp_mf", "--workers", "2", "--seed", "3",
+            "--json",
+        ])
+        .arg(&json)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("measured MF-MAC census"), "{s}");
+    assert!(s.contains("fw0"), "per-GEMM rows expected: {s}");
+    assert!(s.contains("linear-layer FP32 multiplies: 0"), "{s}");
+    let j = std::fs::read_to_string(&json).unwrap();
+    assert!(j.contains("\"live_macs\""), "{j}");
+    assert!(j.contains("\"combine_exp_adds\""), "{j}");
+}
+
+#[test]
 fn native_train_rejects_unknown_engine_and_variant() {
     let out = mft()
         .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine", "gpu"])

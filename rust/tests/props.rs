@@ -233,6 +233,158 @@ fn prop_scale_pow2_matches_fp32_multiply() {
 }
 
 #[test]
+fn prop_tiled_quantize_matches_per_slab_als() {
+    // a per-k-tile beta plane must quantize every slab exactly as a
+    // standalone ALS block would: same local beta (base + delta), same
+    // dequantized values, bit for bit
+    property("tiled quantize == per-slab ALS", 60, |g: &mut Gen| {
+        let rows = g.usize_in(1, 8);
+        let cols = g.usize_in(1, 16);
+        let axis = g.usize_in(0, 2);
+        let tile = [1usize, 2, 4][g.usize_in(0, 3)];
+        let b = [4u32, 5][g.usize_in(0, 2)];
+        // bounded exponent spread so the TILE_DELTA_MIN clamp stays idle
+        let data: Vec<f32> = (0..rows * cols).map(|_| g.f32_logscale(-8, 6)).collect();
+        let t = potq::PotTensor::quantize_2d_tiled(&data, rows, cols, b, axis, tile);
+        let ts = t.tile_scales().expect("tiled quantize carries a plane").clone();
+        let deq = t.dequantize();
+        let n_axis = if axis == 0 { rows } else { cols };
+        (0..n_axis.div_ceil(tile)).all(|s| {
+            let slab_coords: Vec<(usize, usize)> = (0..rows)
+                .flat_map(|i| (0..cols).map(move |j| (i, j)))
+                .filter(|&(i, j)| {
+                    let c = if axis == 0 { i } else { j };
+                    c / tile == s
+                })
+                .collect();
+            let slab: Vec<f32> =
+                slab_coords.iter().map(|&(i, j)| data[i * cols + j]).collect();
+            let solo = potq::pot_quantize(&slab, b, None);
+            if solo.beta < t.beta + potq::TILE_DELTA_MIN {
+                // slab hit the engine-envelope clamp (covered by a
+                // dedicated unit test); per-slab equality doesn't apply
+                return true;
+            }
+            let solo_deq = solo.dequantize();
+            // all-zero slabs carry delta 0 by convention; their beta is
+            // immaterial (every code is the zero code)
+            (solo.count_nonzero() == 0 || solo.beta == t.beta + ts.deltas[s])
+                && slab_coords.iter().zip(&solo_deq).all(|(&(i, j), &v)| {
+                    deq[i * cols + j].to_bits() == v.to_bits()
+                })
+        })
+    });
+}
+
+#[test]
+fn prop_engines_bit_exact_on_tiled_operands() {
+    // the PR-1 cross-engine pins extended to tile-scaled operands: x
+    // tiled, w tiled, or both — every engine, both accumulate models
+    property("tiled engine cross-equivalence is bit-exact", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 8);
+        let k = g.usize_in(1, 20);
+        let n = g.usize_in(1, 8);
+        let tile = [1usize, 2, 4, 8][g.usize_in(0, 4)];
+        let b = [4u32, 5][g.usize_in(0, 2)];
+        let which = g.usize_in(0, 3); // 0: x tiled, 1: w tiled, 2: both
+        let x = if which != 1 {
+            g.pot_tensor_tiled(m, k, 1, tile, b)
+        } else {
+            g.pot_tensor(m, k, b)
+        };
+        let w = if which != 0 {
+            g.pot_tensor_tiled(k, n, 0, tile, b)
+        } else {
+            g.pot_tensor(k, n, b)
+        };
+        let blocked = BlockedEngine::with_tiles(
+            g.usize_in(1, 8),
+            g.usize_in(1, 16),
+            g.usize_in(1, 8),
+        );
+        let threaded = ThreadedEngine::new(g.usize_in(1, 5));
+        let ys = ScalarEngine.matmul(&x, &w);
+        let yb = blocked.matmul(&x, &w);
+        let yt = threaded.matmul(&x, &w);
+        let exact = ys.len() == m * n
+            && ys.iter().zip(&yb).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ys.iter().zip(&yt).all(|(a, c)| a.to_bits() == c.to_bits());
+        let (ss, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
+        let (sb, rb) = blocked.matmul_i32_saturating(&x, &w);
+        let (st, rt) = threaded.matmul_i32_saturating(&x, &w);
+        exact
+            && ss.iter().zip(&sb).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ss.iter().zip(&st).all(|(a, c)| a.to_bits() == c.to_bits())
+            && rs.saturated_lanes == rb.saturated_lanes
+            && rs.saturated_lanes == rt.saturated_lanes
+            && rs.peak_magnitude == rt.peak_magnitude
+    });
+}
+
+#[test]
+fn prop_mf_optimizer_matches_fp32_reference() {
+    // the multiplication-free momentum + weight-decay update (exponent
+    // adds on PoT-snapped coefficients) against an FP32 reference doing
+    // real multiplies by the same snapped powers of two: bit-identical
+    // whenever the intermediates are normal floats
+    property("MF optimizer == FP32 reference on snapped coeffs", 120, |g: &mut Gen| {
+        let w = g.f32_logscale(-6, 4);
+        let grad = g.f32_logscale(-8, 2);
+        let v = g.f32_logscale(-8, 2);
+        let lr_e = g.i32_in(-8, -1);
+        let dec_e = g.i32_in(-6, -1); // momentum decay 2^dec_e
+        let wd_e = g.i32_in(-12, -4);
+        // MF path: exponent adds only
+        let geff_mf = grad + potq::scale_pow2(w, wd_e);
+        let v_mf = v - potq::scale_pow2(v, dec_e) + geff_mf;
+        let w_mf = w - potq::scale_pow2(v_mf, lr_e);
+        // FP32 reference: real multiplies by the same PoT coefficients
+        let geff_ref = grad + w * (2f32).powi(wd_e);
+        let v_ref = v - v * (2f32).powi(dec_e) + geff_ref;
+        let w_ref = w - v_ref * (2f32).powi(lr_e);
+        let all_normal = [
+            w * (2f32).powi(wd_e),
+            v * (2f32).powi(dec_e),
+            geff_ref,
+            v_ref,
+            v_ref * (2f32).powi(lr_e),
+            w_ref,
+        ]
+        .iter()
+        .all(|x| x.is_normal() || *x == 0.0);
+        !all_normal || (w_mf.to_bits() == w_ref.to_bits() && v_mf.to_bits() == v_ref.to_bits())
+    });
+}
+
+#[test]
+fn prop_sharded_step_is_worker_invariant() {
+    // the shard subsystem's determinism law, property-tested over random
+    // plans: any worker count produces the bit-identical step
+    property("sharded step invariant in workers", 12, |g: &mut Gen| {
+        use mftrain::potq::nn::{MfMlp, NnConfig};
+        use mftrain::potq::{ShardPlan, ShardedMlp};
+        let batch = [8usize, 16][g.usize_in(0, 2)];
+        let tile = [2usize, 4][g.usize_in(0, 2)];
+        let d = g.usize_in(4, 10);
+        let classes = 4;
+        let x = g.normal_vec(batch * d, 0.0, 1.0);
+        let y: Vec<i32> = (0..batch).map(|_| g.usize_in(0, classes) as i32).collect();
+        let seed = g.usize_in(0, 1000) as u64;
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for workers in [1usize, g.usize_in(2, 6)] {
+            let plan = ShardPlan::new(batch, tile, workers).unwrap();
+            let model = MfMlp::init(NnConfig::mf(&[d, 8, classes]), seed);
+            let mut t = ShardedMlp::new(model, plan, "blocked", 1).unwrap();
+            for _ in 0..2 {
+                t.train_step(&x, &y, 0.1);
+            }
+            states.push(t.model.state_to_vec());
+        }
+        states[0] == states[1]
+    });
+}
+
+#[test]
 fn prop_matmul_batch_matches_singles() {
     // the batched entry point (LUT amortized across GEMMs) is bit-exact
     // with per-call matmul on every engine

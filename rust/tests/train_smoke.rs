@@ -131,13 +131,7 @@ fn native_census_zero_fp32_muls_in_linear_layers() {
 
     // contrast: the FP32 baseline's census counts a multiply per MAC
     let mut fp = MfMlp::init(
-        NnConfig {
-            dims: spec.dims.clone(),
-            bits: 5,
-            scheme: Scheme::Fp32,
-            gamma_init: 0.9,
-            grad_gamma: 1.0,
-        },
+        NnConfig { scheme: Scheme::Fp32, ..NnConfig::mf(&spec.dims) },
         5,
     );
     let eng = engine_by_name("scalar", 0).unwrap();
@@ -216,6 +210,110 @@ fn native_probe_betas_are_plausible() {
         assert!((-40..=10).contains(&s.beta), "{name} beta {} out of envelope", s.beta);
         assert!(s.pot_live_fraction > 0.0, "{name} quantized to all-zero");
     }
+}
+
+// ---------------------------------------------------------------------------
+// sharded native backend (unconditional)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_sharded_run_bit_identical_across_workers_all_engines() {
+    // the tentpole pin: a seeded `--workers 4` run is bit-identical to
+    // `--workers 1` — loss curves and checkpoint digests — on all three
+    // engines (the microbatch tiling is a property of the plan, not of
+    // the worker count)
+    for engine in ENGINE_NAMES {
+        let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
+        let mut digests: Vec<u64> = Vec::new();
+        for workers in [1usize, 4] {
+            let ckpt = std::env::temp_dir()
+                .join(format!("mft_native_shard_{engine}_{workers}.ckpt"));
+            std::fs::remove_file(&ckpt).ok();
+            let mut cfg = native_cfg("tiny_mlp_mf", 12, 21);
+            cfg.engine = engine.into();
+            cfg.threads = 2;
+            cfg.workers = workers;
+            cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+            let mut t = Trainer::native(cfg).unwrap().quiet();
+            let rec = t.run().unwrap();
+            assert_eq!(rec.workers, workers);
+            curves.push(rec.loss_curve.iter().map(|&(s, l)| (s, l.to_bits())).collect());
+            let ck = Checkpoint::load(&ckpt).unwrap();
+            assert_eq!(ck.step, 12);
+            digests.push(ck.digest());
+        }
+        assert_eq!(curves[0], curves[1], "{engine}: W=1 vs W=4 loss curves");
+        assert_eq!(digests[0], digests[1], "{engine}: W=1 vs W=4 checkpoints");
+    }
+}
+
+#[test]
+fn native_sharded_census_zero_fp32_muls_including_combine() {
+    // a W=4 sharded step keeps the paper's invariant across the whole
+    // step: zero FP32 multiplies in linear layers, the gradient combine
+    // doing only FP32 adds + exponent adds (counted)
+    let spec = models::native_spec("tiny_mlp_mf").unwrap();
+    let cfg = TrainConfig {
+        variant: "tiny_mlp_mf".into(),
+        workers: 4,
+        ..TrainConfig::default()
+    };
+    let mut s = NativeSession::from_config(&cfg).unwrap();
+    s.init(5).unwrap();
+    let info = s.info().clone();
+    let mut ds =
+        mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, 5);
+    let b = ds.next_batch();
+    s.train_step(&b, 0.05).unwrap();
+    let census = s.last_census().expect("census recorded");
+    assert_eq!(census.linear_fp32_muls, 0, "FP32 muls leaked into the sharded step");
+    // merged per logical GEMM: 3 per layer even though 4 tiles ran
+    assert_eq!(census.gemms.len(), 3 * (spec.dims.len() - 1));
+    let dense: u64 = 3 * spec
+        .dims
+        .windows(2)
+        .map(|d| (spec.batch * d[0] * d[1]) as u64)
+        .sum::<u64>();
+    assert_eq!(census.total_macs(), dense, "tiles cover the dense MAC count");
+    assert!(census.live_macs() > 0);
+    // one exponent add per parameter in the combine
+    assert_eq!(census.combine_exp_adds, info.n_params as u64);
+}
+
+#[test]
+fn native_sharded_momentum_weight_decay_trains() {
+    // satellite: PoT-snapped momentum + weight decay stay
+    // multiplication-free and still learn under sharding
+    let mut cfg = native_cfg("tiny_mlp_mf", 50, 13);
+    cfg.workers = 2;
+    cfg.momentum = 0.9;
+    cfg.weight_decay = 5e-4;
+    let mut t = Trainer::native(cfg).unwrap().quiet();
+    let rec = t.run().unwrap();
+    let window = |r: std::ops::Range<usize>| -> f32 {
+        let s: f32 = rec.loss_curve[r.clone()].iter().map(|&(_, l)| l).sum();
+        s / r.len() as f32
+    };
+    let (head, tail) = (window(0..10), window(40..50));
+    assert!(tail.is_finite());
+    assert!(tail < head, "momentum run should learn: {head} -> {tail}");
+}
+
+#[test]
+fn native_sharded_probe_and_eval_flow_through_coordinator() {
+    let mut cfg = native_cfg("tiny_mlp_mf", 8, 6);
+    cfg.workers = 4;
+    cfg.probe_every = 4;
+    let mut t = Trainer::native(cfg).unwrap().quiet();
+    let rec = t.run().unwrap();
+    assert_eq!(rec.probes.len(), 2);
+    for p in &rec.probes {
+        assert!(p.w.std > 0.0);
+        assert!(p.g.abs_max > 0.0, "combined G must be non-trivial");
+        assert_eq!(p.w.packed_bytes, 48 * 32);
+    }
+    assert!(!rec.eval_curve.is_empty());
+    assert!(rec.eval_curve.iter().all(|&(_, l, a)| l.is_finite() && (0.0..=1.0).contains(&a)));
 }
 
 // ---------------------------------------------------------------------------
