@@ -14,7 +14,9 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use mftrain::data::{self, Dataset};
-use mftrain::potq::{self, BlockedEngine, MacEngine, PotTensor, ScalarEngine, ThreadedEngine};
+use mftrain::potq::{
+    self, BlockedEngine, MacEngine, PotTensor, ScalarEngine, SimdEngine, ThreadedEngine,
+};
 use mftrain::runtime::{Runtime, Session};
 use mftrain::util::json::Json;
 use mftrain::util::prng::Pcg32;
@@ -30,16 +32,22 @@ const PACKED_BYTES_PER_ELEM: f64 = 1.0;
 /// Sweep the three engines over paper-relevant shapes; returns the table
 /// rows and writes BENCH_kernels.json for trajectory tracking.
 fn engine_sweep() -> anyhow::Result<()> {
-    let shapes: [(usize, usize, usize, usize); 2] =
-        [(64, 512, 512, 5), (256, 1024, 1024, 2)];
-    let engines: [(&str, Box<dyn MacEngine>); 3] = [
+    // (64, 256, 256) is the k=256 forward shape the SimdEngine
+    // acceptance tracks (single thread, simd vs blocked)
+    let shapes: [(usize, usize, usize, usize); 3] =
+        [(64, 256, 256, 8), (64, 512, 512, 5), (256, 1024, 1024, 2)];
+    let simd = SimdEngine::new();
+    let vector_path = simd.vector_path().unwrap_or("none");
+    let engines: [(&str, Box<dyn MacEngine>); 4] = [
         ("scalar", Box::new(ScalarEngine)),
         ("blocked", Box::new(BlockedEngine::default())),
         ("threaded", Box::new(ThreadedEngine::default())),
+        ("simd", Box::new(simd)),
     ];
     let mut t = Table::new(
         "MacEngine sweep (packed PoT operands, 5-bit codes)",
-        &["shape", "engine", "mean", "GMAC/s", "GFLOP-equiv/s", "speedup vs scalar"],
+        &["shape", "engine", "mean", "GMAC/s", "GFLOP-equiv/s", "speedup vs scalar",
+          "vs blocked"],
     );
     let mut results = Vec::new();
     let mut rng = Pcg32::new(42);
@@ -53,6 +61,7 @@ fn engine_sweep() -> anyhow::Result<()> {
         let macs = (m * k * n) as u64;
         let reference = ScalarEngine.matmul(&xq, &wq);
         let mut scalar_mean = 0f64;
+        let mut blocked_mean = 0f64;
         for (name, engine) in &engines {
             if *name != "scalar" {
                 let y = engine.matmul(&xq, &wq);
@@ -68,7 +77,18 @@ fn engine_sweep() -> anyhow::Result<()> {
             if *name == "scalar" {
                 scalar_mean = mean;
             }
+            if *name == "blocked" {
+                blocked_mean = mean;
+            }
             let speedup = if mean > 0.0 { scalar_mean / mean } else { 0.0 };
+            // blocked runs after scalar, so the scalar row has no
+            // blocked baseline yet: print "-" and omit the json key
+            // rather than a bogus 0.00x ratio
+            let vs_blocked = if mean > 0.0 && blocked_mean > 0.0 {
+                Some(blocked_mean / mean)
+            } else {
+                None
+            };
             t.row(&[
                 format!("{m}x{k}x{n}"),
                 name.to_string(),
@@ -76,6 +96,7 @@ fn engine_sweep() -> anyhow::Result<()> {
                 format!("{:.2}", timing.throughput(macs) / 1e9),
                 format!("{:.2}", timing.throughput(2 * macs) / 1e9),
                 format!("{speedup:.2}x"),
+                vs_blocked.map_or("-".to_string(), |v| format!("{v:.2}x")),
             ]);
             let mut o = BTreeMap::new();
             o.insert("shape".into(), Json::Str(format!("{m}x{k}x{n}")));
@@ -83,6 +104,9 @@ fn engine_sweep() -> anyhow::Result<()> {
             o.insert("k".into(), Json::Num(k as f64));
             o.insert("n".into(), Json::Num(n as f64));
             o.insert("engine".into(), Json::Str(name.to_string()));
+            if *name == "simd" {
+                o.insert("vector_path".into(), Json::Str(vector_path.to_string()));
+            }
             o.insert("mean_secs".into(), Json::Num(mean));
             o.insert("gmacs_per_s".into(), Json::Num(timing.throughput(macs) / 1e9));
             o.insert(
@@ -90,12 +114,17 @@ fn engine_sweep() -> anyhow::Result<()> {
                 Json::Num(timing.throughput(2 * macs) / 1e9),
             );
             o.insert("speedup_vs_scalar".into(), Json::Num(speedup));
+            if let Some(v) = vs_blocked {
+                o.insert("speedup_vs_blocked".into(), Json::Num(v));
+            }
             results.push(Json::Obj(o));
         }
     }
-    t.note("all engines verified bit-exact against scalar before timing; \
-            operands are 1 byte/elem packed codes (9 byte/elem before the \
-            PotTensor refactor)");
+    t.note(&format!(
+        "all engines verified bit-exact against scalar before timing; operands \
+         are 1 byte/elem packed codes (9 byte/elem before the PotTensor \
+         refactor); simd vector path: {vector_path}"
+    ));
     t.print();
 
     // ---- batched entry point: N GEMMs per call (LUT/thread-scope

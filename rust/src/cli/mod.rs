@@ -71,15 +71,16 @@ impl Args {
             .with_context(|| format!("missing required flag --{key}"))
     }
 
-    /// `--engine scalar|blocked|threaded` (+ `--threads N`) resolved to a
-    /// MacEngine. Unknown names list the registry instead of guessing.
+    /// `--engine scalar|blocked|threaded|simd|auto` (+ `--threads N`)
+    /// resolved to a MacEngine ("auto" = best vectorized path on this
+    /// host). Unknown names list the registry instead of guessing.
     pub fn engine_flag(&self, default: &str) -> Result<Box<dyn crate::potq::MacEngine + Send>> {
         let name = self.str_flag("engine").unwrap_or(default);
         let threads = self.u64_flag("threads", 0)? as usize;
         crate::potq::engine_by_name(name, threads).with_context(|| {
             format!(
                 "unknown engine '{name}' (available: {})",
-                crate::potq::ENGINE_NAMES.join("|")
+                crate::potq::ENGINE_CHOICES.join("|")
             )
         })
     }
@@ -112,7 +113,8 @@ mft — multiplication-free training coordinator (ALS-PoTQ + MF-MAC)
 USAGE:
   mft train --config <file.toml> | --variant <name> [--steps N] [--lr F]
             [--seed N] [--noise F] [--checkpoint path] [--artifacts DIR]
-            [--backend auto|pjrt|native] [--engine scalar|blocked|threaded]
+            [--backend auto|pjrt|native]
+            [--engine scalar|blocked|threaded|simd|auto]
             [--threads N] [--bits 3..6] [--workers N] [--shard-tile P]
             [--momentum F] [--weight-decay F]
             # native backend: the in-process multiplication-free trainer
@@ -130,9 +132,11 @@ USAGE:
              [--workers N] [--seed N] [--lr F] [--json out.json]
              # measured per-GEMM live-MAC energy from one real native
              # training step (the measured counterpart of `mft energy`)
-  mft kernels [--engine scalar|blocked|threaded] [--threads N]
+  mft kernels [--engine scalar|blocked|threaded|simd|auto] [--threads N]
               [--shape MxKxN] [--bits 5] [--seed N] [--check]
               [--json out.json]
+              # simd/auto runtime-dispatch the vector path (swar/avx2)
+              # and print which one was chosen
   mft macs [--model resnet50]
   mft distributions --variant <name> [--steps N] [--every N]
   mft ablation [--steps N] [--seeds N]
@@ -194,17 +198,22 @@ mod tests {
 
     #[test]
     fn engine_flag_resolves_registry_names() {
-        for name in ["scalar", "blocked", "threaded"] {
+        for name in ["scalar", "blocked", "threaded", "simd"] {
             let a = args(&format!("kernels --engine {name} --threads 2"));
             assert_eq!(a.engine_flag("scalar").unwrap().name(), name);
         }
+        // "auto" resolves to the runtime-dispatched simd engine
+        let a = args("kernels --engine auto");
+        let eng = a.engine_flag("scalar").unwrap();
+        assert_eq!(eng.name(), "simd");
+        assert!(eng.vector_path().is_some());
         // default when the flag is absent
         let a = args("kernels");
         assert_eq!(a.engine_flag("blocked").unwrap().name(), "blocked");
         // unknown engines are a clean error listing the registry
         let a = args("kernels --engine gpu");
         let err = format!("{:#}", a.engine_flag("scalar").unwrap_err());
-        assert!(err.contains("scalar|blocked|threaded"), "{err}");
+        assert!(err.contains("scalar|blocked|threaded|simd|auto"), "{err}");
     }
 
     #[test]

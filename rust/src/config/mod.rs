@@ -57,7 +57,8 @@ pub struct TrainConfig {
     /// execution backend: "auto" (PJRT when artifacts exist, else native),
     /// "pjrt", or "native"
     pub backend: String,
-    /// MacEngine for the native backend: scalar | blocked | threaded
+    /// MacEngine for the native backend: scalar | blocked | threaded |
+    /// simd | auto ("auto" = best vectorized path on this host)
     pub engine: String,
     /// worker count for the threaded engine (0 = one per core)
     pub threads: usize,
@@ -189,10 +190,10 @@ impl TrainConfig {
         if !matches!(self.backend.as_str(), "auto" | "pjrt" | "native") {
             bail!("backend must be auto|pjrt|native, got '{}'", self.backend);
         }
-        if !crate::potq::ENGINE_NAMES.contains(&self.engine.as_str()) {
+        if !crate::potq::ENGINE_CHOICES.contains(&self.engine.as_str()) {
             bail!(
                 "native.engine must be one of {}, got '{}'",
-                crate::potq::ENGINE_NAMES.join("|"),
+                crate::potq::ENGINE_CHOICES.join("|"),
                 self.engine
             );
         }
@@ -301,6 +302,13 @@ grad_gamma = 0.95
         assert_eq!(cfg.bits, 4);
         assert!((cfg.gamma - 0.8).abs() < 1e-6);
         assert!((cfg.grad_gamma - 0.95).abs() < 1e-6);
+        // the vectorized engine and the auto dispatcher are valid config
+        for eng in ["simd", "auto"] {
+            let doc =
+                toml::Doc::parse(&format!("[native]\nengine = \"{eng}\"\n")).unwrap();
+            let cfg = TrainConfig::from_doc(&doc).unwrap();
+            assert_eq!(cfg.engine, eng);
+        }
         // defaults
         let d = TrainConfig::default();
         assert_eq!(d.backend, "auto");

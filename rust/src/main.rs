@@ -9,6 +9,7 @@ use mftrain::config::TrainConfig;
 use mftrain::coordinator::{Checkpoint, Trainer};
 use mftrain::energy;
 use mftrain::models;
+use mftrain::potq::MacEngine as _;
 use mftrain::runtime::{Index, NativeSession, Runtime, Session, SessionBackend};
 use mftrain::util::table::{fnum, Table};
 
@@ -105,8 +106,12 @@ fn resolve_backend(cfg: &TrainConfig) -> &'static str {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     if resolve_backend(&cfg) == "native" {
+        // simd/auto engines append which vector path dispatch chose
+        let path = mftrain::potq::engine_by_name(&cfg.engine, cfg.threads)
+            .and_then(|e| e.vector_path().map(|p| format!(", {p} path")))
+            .unwrap_or_default();
         println!(
-            "[mft] backend: native ({} engine, {} worker{})",
+            "[mft] backend: native ({} engine{path}, {} worker{})",
             cfg.engine,
             cfg.workers,
             if cfg.workers == 1 { "" } else { "s" }
@@ -334,6 +339,12 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     use mftrain::util::timer::{bench, fmt_duration};
 
     let engine = args.engine_flag("blocked")?;
+    if let Some(path) = engine.vector_path() {
+        // which vector path runtime dispatch chose (swar / avx2 /
+        // scalar-fallback) — the part of `--engine simd|auto` that
+        // depends on the host CPU
+        println!("[mft] engine '{}': vector path {path}", engine.name());
+    }
     let (m, k, n) = args.shape_flag("shape", (64, 512, 512))?;
     let bits = args.u64_flag("bits", 5)? as u32;
     anyhow::ensure!((3..=6).contains(&bits), "--bits must be in 3..=6");
@@ -363,22 +374,30 @@ fn cmd_kernels(args: &Args) -> Result<()> {
         std::hint::black_box(engine.matmul(&xq, &wq));
     });
     let macs = (m * k * n) as u64;
+    // effective packed-code traffic: every MAC consumes one x code byte
+    // and one w code byte (2 bytes/MAC incl. cache reuse) — the stream
+    // the vectorized inner loops are designed to saturate
+    let code_bytes = 2 * macs;
     let census = mftrain::energy::mfmac_census(&xq, &wq);
     let (_, sat) = engine.matmul_i32_saturating(&xq, &wq);
 
     let mut tb = Table::new(
         &format!("MF-MAC kernel — engine '{}' ({bits}-bit codes)", engine.name()),
-        &["shape", "mean", "GMAC/s", "GFLOP-equiv/s", "live MACs", "sat lanes", "bytes/elem"],
+        &["shape", "mean", "GMAC/s", "code GB/s", "GFLOP-equiv/s", "live MACs", "sat lanes",
+          "bytes/elem"],
     );
     tb.row(&[
         format!("{m}x{k}x{n}"),
         fmt_duration(t.mean()),
         format!("{:.2}", t.throughput(macs) / 1e9),
+        format!("{:.2}", t.throughput(code_bytes) / 1e9),
         format!("{:.2}", t.throughput(2 * macs) / 1e9),
         format!("{:.1}%", census.live_fraction() * 100.0),
         format!("{:.2}%", sat.saturation_rate() * 100.0),
         "1 (packed PoT)".to_string(),
     ]);
+    tb.note("code GB/s = effective packed-code traffic (2 code bytes per MAC, \
+             cache reuse included)");
     tb.print();
 
     if let Some(path) = args.str_flag("json") {
@@ -386,10 +405,14 @@ fn cmd_kernels(args: &Args) -> Result<()> {
         use std::collections::BTreeMap;
         let mut o = BTreeMap::new();
         o.insert("engine".to_string(), Json::Str(engine.name().to_string()));
+        if let Some(vp) = engine.vector_path() {
+            o.insert("vector_path".to_string(), Json::Str(vp.to_string()));
+        }
         o.insert("shape".to_string(), Json::Str(format!("{m}x{k}x{n}")));
         o.insert("bits".to_string(), Json::Num(bits as f64));
         o.insert("mean_secs".to_string(), Json::Num(t.mean().as_secs_f64()));
         o.insert("gmacs_per_s".to_string(), Json::Num(t.throughput(macs) / 1e9));
+        o.insert("code_gb_per_s".to_string(), Json::Num(t.throughput(code_bytes) / 1e9));
         o.insert("live_mac_fraction".to_string(), Json::Num(census.live_fraction()));
         o.insert("saturation_rate".to_string(), Json::Num(sat.saturation_rate()));
         o.insert("bytes_per_elem".to_string(), Json::Num(1.0));

@@ -1,12 +1,14 @@
 //! Pluggable MF-MAC kernel engines over packed [`PotTensor`] operands.
 //!
-//! One abstraction, three implementations:
+//! One abstraction, four implementations:
 //!  * [`ScalarEngine`] — the seed's naive i-j-p loops, kept as the
 //!    bit-exact reference.
 //!  * [`BlockedEngine`] — cache-tiled over m/n/k with a 256-entry pow2
 //!    LUT indexed by the packed code sum and wide tile accumulators.
 //!  * [`ThreadedEngine`] — row-band parallelism (`std::thread::scope`)
 //!    on top of the blocked kernel.
+//!  * [`super::simd::SimdEngine`] — the vectorized inner k-loop (SWAR /
+//!    AVX2) over the k-panel packed layout, runtime-dispatched.
 //!
 //! All engines accumulate each output lane as an *exact* integer sum of
 //! signed power-of-two terms (fixed point at 2^(beta_x + beta_w - 2*emax))
@@ -58,18 +60,25 @@ pub trait MacEngine: Sync {
     fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport);
 
     /// Batched entry point: run several independent GEMMs in one call so
-    /// implementations can amortize per-call setup (the 256-entry code-sum
-    /// LUT, thread-scope spawn) across a whole layer's GEMMs — e.g. the
+    /// implementations can amortize per-call setup (e.g. the threaded
+    /// engine's thread-scope spawn) across a whole layer's GEMMs — the
     /// backward pass's dX and dW share one call. Results must be
     /// bit-identical to calling [`MacEngine::matmul`] per pair; the
     /// default implementation does exactly that.
     fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
         pairs.iter().map(|(x, w)| self.matmul(x, w)).collect()
     }
+
+    /// The vector path runtime dispatch chose, for engines that have one
+    /// ("avx2" / "swar" / "scalar-fallback"); `None` for scalar-schedule
+    /// engines. `mft kernels` surfaces this.
+    fn vector_path(&self) -> Option<&'static str> {
+        None
+    }
 }
 
 /// Validate operand shapes/bit widths and return (m, k, n).
-fn dims2(x: &PotTensor, w: &PotTensor) -> (usize, usize, usize) {
+pub(crate) fn dims2(x: &PotTensor, w: &PotTensor) -> (usize, usize, usize) {
     assert_eq!(x.shape().len(), 2, "x must be 2-D, got shape {:?}", x.shape());
     assert_eq!(w.shape().len(), 2, "w must be 2-D, got shape {:?}", w.shape());
     assert_eq!(x.bits, w.bits, "operand bit widths differ");
@@ -87,7 +96,7 @@ fn pow2_f64(e: i32) -> f64 {
 /// The one shared integer-accumulator -> f32 rounding path. Every engine
 /// must go through this so results stay bit-identical across schedules.
 #[inline]
-fn finish(acc: i128, scale: f64) -> f32 {
+pub(crate) fn finish(acc: i128, scale: f64) -> f32 {
     (acc as f64 * scale) as f32
 }
 
@@ -142,23 +151,76 @@ pub(crate) fn tile_args(x: &PotTensor, w: &PotTensor, k: usize) -> (Option<Vec<u
     }
 }
 
+/// Coalesce per-k shifts into contiguous runs `(p0, p1, shift)` of
+/// constant combined tile shift — the pair-level k-panel plan. Untiled
+/// pairs get the single run `(0, k, 0)`; run boundaries only ever sit on
+/// the union of the two operands' k-tile grids. Kernels that hoist the
+/// per-k shift out of their inner loop (blocked / threaded / simd)
+/// iterate runs; the order-sensitive saturating model keeps the per-p
+/// lookup.
+pub(crate) fn k_shift_runs(kshifts: Option<&[u32]>, k: usize) -> Vec<(usize, usize, u32)> {
+    match kshifts {
+        None => {
+            if k == 0 {
+                Vec::new()
+            } else {
+                vec![(0, k, 0)]
+            }
+        }
+        Some(s) => {
+            let mut runs: Vec<(usize, usize, u32)> = Vec::new();
+            for (p, &sh) in s.iter().enumerate() {
+                let extends = matches!(runs.last(), Some(&(_, p1, s0)) if s0 == sh && p1 == p);
+                if extends {
+                    runs.last_mut().expect("non-empty").1 = p + 1;
+                } else {
+                    runs.push((p, p + 1, sh));
+                }
+            }
+            runs
+        }
+    }
+}
+
+/// [`tile_args`] resolved into shift runs + output scale: the per-pair
+/// inputs of the run-hoisting kernels.
+pub(crate) fn run_args(x: &PotTensor, w: &PotTensor, k: usize) -> (Vec<(usize, usize, u32)>, f64) {
+    let (kshifts, scale) = tile_args(x, w, k);
+    (k_shift_runs(kshifts.as_deref(), k), scale)
+}
+
 /// 256-entry signed pow2 LUT indexed by the packed code sum (see module
 /// docs). Entries are term values in accumulator LSBs: +/- 2^(magsum-64)
-/// for live magnitude sums, 0 for any sum involving a zero code.
-fn pow2_lut() -> [i64; 256] {
+/// for live magnitude sums, 0 for any sum involving a zero code. Built at
+/// compile time so the single-call `matmul` / `matmul_i32_saturating`
+/// paths stop rebuilding it per call; `matmul_batch` keeps threading the
+/// same `&'static` table through explicitly.
+static POW2_LUT: [i64; 256] = build_pow2_lut();
+
+const fn build_pow2_lut() -> [i64; 256] {
     let mut lut = [0i64; 256];
-    for magsum in 64..128usize {
+    let mut magsum = 64usize;
+    while magsum < 128 {
         let shift = (magsum - 64) as u32;
         if shift <= 62 {
             lut[magsum] = 1i64 << shift;
             lut[128 + magsum] = -(1i64 << shift);
         }
+        magsum += 1;
     }
     lut
 }
 
+fn pow2_lut() -> &'static [i64; 256] {
+    &POW2_LUT
+}
+
+/// Packed code-sum index of a product term: sign XOR in bit 7 (the two
+/// magnitude fields are disjoint from it, so `+` never carries into the
+/// sign), magnitude sum in bits 0-6. Shared with `potq::simd`'s
+/// byte-wise paths so the mapping lives in exactly one place.
 #[inline]
-fn lut_index(cx: u8, cw: u8) -> usize {
+pub(crate) fn lut_index(cx: u8, cw: u8) -> usize {
     (((cx ^ cw) & SIGN_BIT) as usize) + ((cx & MAG_MASK) as usize) + ((cw & MAG_MASK) as usize)
 }
 
@@ -209,11 +271,12 @@ pub(crate) fn matmul_scalar_impl(
 /// Cache-tiled kernel over a row band [i0, i1) of x, writing into
 /// `out_band` (length (i1-i0)*n). i-p-j inner order: the w row and the
 /// accumulator row stream contiguously; k/n tiling keeps both panels hot.
-/// The LUT is passed in so batched callers build it once per call, not
-/// once per GEMM/band. `kshifts`/`scale` come from [`tile_args`]: when a
-/// tile-scale plane is present the LUT term is shifted by the per-k delta
-/// (exact — integer accumulation is still associative), so every cache
-/// schedule stays bit-identical.
+/// The LUT is passed in so batched callers thread one table through the
+/// whole batch. `runs`/`scale` come from [`run_args`]: the per-k tile
+/// shift is hoisted to k-panel granularity (constant per run), so the
+/// zero-shift fast loop carries no per-element shift or plane lookup at
+/// all — and shifted panels stay exact, because integer accumulation is
+/// associative. Every cache schedule stays bit-identical.
 #[allow(clippy::too_many_arguments)]
 fn matmul_blocked_band(
     x: &PotTensor,
@@ -224,7 +287,7 @@ fn matmul_blocked_band(
     i1: usize,
     tiles: (usize, usize, usize),
     lut: &[i64; 256],
-    kshifts: Option<&[u32]>,
+    runs: &[(usize, usize, u32)],
     scale: f64,
     out_band: &mut [f32],
 ) {
@@ -245,20 +308,22 @@ fn matmul_blocked_band(
                 for i in ic..ie {
                     let xrow = &xc[i * k..i * k + k];
                     let arow = &mut acc[(i - i0) * n + jc..(i - i0) * n + je];
-                    for p in pc..pe {
-                        let cx = xrow[p];
-                        if cx & MAG_MASK == 0 {
-                            continue; // zero x code: whole row of terms is 0
+                    for &(r0, r1, sh) in runs {
+                        let (lo, hi) = (r0.max(pc), r1.min(pe));
+                        if lo >= hi {
+                            continue;
                         }
-                        let wrow = &wc[p * n + jc..p * n + je];
-                        match kshifts {
-                            None => {
+                        for p in lo..hi {
+                            let cx = xrow[p];
+                            if cx & MAG_MASK == 0 {
+                                continue; // zero x code: whole row of terms is 0
+                            }
+                            let wrow = &wc[p * n + jc..p * n + je];
+                            if sh == 0 {
                                 for (a, &cw) in arow.iter_mut().zip(wrow) {
                                     *a += lut[lut_index(cx, cw)] as i128;
                                 }
-                            }
-                            Some(s) => {
-                                let sh = s[p];
+                            } else {
                                 for (a, &cw) in arow.iter_mut().zip(wrow) {
                                     *a += (lut[lut_index(cx, cw)] as i128) << sh;
                                 }
@@ -389,12 +454,12 @@ impl MacEngine for BlockedEngine {
     fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
         let (m, k, n) = dims2(x, w);
         let lut = pow2_lut();
-        let (kshifts, scale) = tile_args(x, w, k);
+        let (runs, scale) = run_args(x, w, k);
         let mut out = vec![0f32; m * n];
         matmul_blocked_band(
             x, w, k, n, 0, m,
             (self.mc, self.kc, self.nc),
-            &lut, kshifts.as_deref(), scale,
+            lut, &runs, scale,
             &mut out,
         );
         out
@@ -408,19 +473,19 @@ impl MacEngine for BlockedEngine {
         (out, rep)
     }
 
-    /// One LUT build for the whole batch; otherwise identical per-GEMM.
+    /// One LUT reference for the whole batch; otherwise identical per-GEMM.
     fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
         let lut = pow2_lut();
         pairs
             .iter()
             .map(|(x, w)| {
                 let (m, k, n) = dims2(x, w);
-                let (kshifts, scale) = tile_args(x, w, k);
+                let (runs, scale) = run_args(x, w, k);
                 let mut out = vec![0f32; m * n];
                 matmul_blocked_band(
                     x, w, k, n, 0, m,
                     (self.mc, self.kc, self.nc),
-                    &lut, kshifts.as_deref(), scale,
+                    lut, &runs, scale,
                     &mut out,
                 );
                 out
@@ -491,15 +556,15 @@ impl MacEngine for ThreadedEngine {
         let (m, k, n) = dims2(x, w);
         let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
         let lut = pow2_lut();
-        let (kshifts, scale) = tile_args(x, w, k);
+        let (runs, scale) = run_args(x, w, k);
         let mut out = vec![0f32; m * n];
         self.run_bands(m, n, &mut out, |i0, i1, chunk| {
-            matmul_blocked_band(x, w, k, n, i0, i1, tiles, &lut, kshifts.as_deref(), scale, chunk);
+            matmul_blocked_band(x, w, k, n, i0, i1, tiles, lut, &runs, scale, chunk);
         });
         out
     }
 
-    /// One LUT build and one thread scope for the whole batch: every
+    /// One thread scope for the whole batch: every
     /// (GEMM, row-band) work item is spawned into a single scope, so
     /// small backward-pass GEMMs overlap instead of paying a spawn/join
     /// barrier each. The configured worker budget is split across the
@@ -511,10 +576,10 @@ impl MacEngine for ThreadedEngine {
         let lut = pow2_lut();
         let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
         let dims: Vec<(usize, usize, usize)> = pairs.iter().map(|(x, w)| dims2(x, w)).collect();
-        let extras: Vec<(Option<Vec<u32>>, f64)> = pairs
+        let extras: Vec<(Vec<(usize, usize, u32)>, f64)> = pairs
             .iter()
             .zip(&dims)
-            .map(|((x, w), &(_, k, _))| tile_args(x, w, k))
+            .map(|((x, w), &(_, k, _))| run_args(x, w, k))
             .collect();
         let mut outs: Vec<Vec<f32>> =
             dims.iter().map(|&(m, _, n)| vec![0f32; m * n]).collect();
@@ -529,13 +594,12 @@ impl MacEngine for ThreadedEngine {
                 let workers = budget.min(m.max(1));
                 let band = ((m + workers - 1) / workers.max(1)).max(1);
                 for (b, chunk) in out.chunks_mut(band * n).enumerate() {
-                    let lut = &lut;
-                    let (kshifts, scale) = (&extras[idx].0, extras[idx].1);
+                    let (runs, scale) = (&extras[idx].0, extras[idx].1);
                     s.spawn(move || {
                         let i0 = b * band;
                         let i1 = (i0 + band).min(m);
                         matmul_blocked_band(
-                            x, w, k, n, i0, i1, tiles, lut, kshifts.as_deref(), scale, chunk,
+                            x, w, k, n, i0, i1, tiles, lut, runs, scale, chunk,
                         );
                     });
                 }
@@ -584,8 +648,15 @@ impl MacEngine for ThreadedEngine {
     }
 }
 
-/// Engine registry for the CLI / benches.
-pub const ENGINE_NAMES: [&str; 3] = ["scalar", "blocked", "threaded"];
+/// Engine registry for the CLI / benches: every concrete engine, by its
+/// own name (tests sweep these four for cross-engine bit-equality).
+pub const ENGINE_NAMES: [&str; 4] = ["scalar", "blocked", "threaded", "simd"];
+
+/// Everything `--engine` accepts: the named engines plus "auto", which
+/// runtime-dispatches to the fastest vectorized path available on this
+/// host (today that is always the simd engine; the name is the
+/// forward-compatible spelling of "pick for me").
+pub const ENGINE_CHOICES: [&str; 5] = ["scalar", "blocked", "threaded", "simd", "auto"];
 
 /// Look up an engine by name. `threads` only affects "threaded" (0 = one
 /// worker per core).
@@ -594,6 +665,10 @@ pub fn engine_by_name(name: &str, threads: usize) -> Option<Box<dyn MacEngine + 
         "scalar" => Some(Box::new(ScalarEngine)),
         "blocked" => Some(Box::new(BlockedEngine::default())),
         "threaded" => Some(Box::new(ThreadedEngine::new(threads))),
+        // "simd" and "auto" both runtime-dispatch SWAR vs AVX2 inside
+        // SimdEngine; "auto" is the spelling that always means "fastest
+        // vector path available here"
+        "simd" | "auto" => Some(Box::new(super::simd::SimdEngine::new())),
         _ => None,
     }
 }
@@ -883,7 +958,32 @@ mod tests {
         for name in ENGINE_NAMES {
             assert_eq!(engine_by_name(name, 2).unwrap().name(), name);
         }
+        // "auto" resolves to the runtime-dispatched simd engine
+        let auto = engine_by_name("auto", 1).unwrap();
+        assert_eq!(auto.name(), "simd");
+        assert!(auto.vector_path().is_some(), "auto must report its vector path");
         assert!(engine_by_name("gpu", 1).is_none());
+        for name in ENGINE_CHOICES {
+            assert!(engine_by_name(name, 1).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn k_shift_runs_coalesce_and_cover() {
+        // untiled: one run; k = 0: none
+        assert_eq!(k_shift_runs(None, 7), vec![(0, 7, 0)]);
+        assert!(k_shift_runs(None, 0).is_empty());
+        // tiled: equal neighbours coalesce, boundaries preserved
+        let shifts = [2u32, 2, 2, 0, 0, 3, 3, 3];
+        let runs = k_shift_runs(Some(&shifts), 8);
+        assert_eq!(runs, vec![(0, 3, 2), (3, 5, 0), (5, 8, 3)]);
+        // runs tile [0, k) exactly
+        let mut covered = 0;
+        for &(p0, p1, _) in &runs {
+            assert_eq!(p0, covered);
+            covered = p1;
+        }
+        assert_eq!(covered, 8);
     }
 
     #[test]

@@ -9,33 +9,47 @@
 //!
 //! Layout: [`quantize`] owns the packed [`PotTensor`] format (one code
 //! byte per element, plus the optional per-k-tile [`TileScales`] beta
-//! plane), [`engine`] owns the pluggable [`MacEngine`] kernels (scalar
-//! reference / cache-blocked / threaded, all of which fold tile-scale
-//! deltas into their code-sum path bit-exactly), [`mfmac`] keeps the
-//! stable convenience entry points on top, [`nn`] builds the native
+//! plane and the [`KPanels`] k-panel packed layout), [`engine`] owns the
+//! pluggable [`MacEngine`] kernels (scalar reference / cache-blocked /
+//! threaded, all of which fold tile-scale deltas into their code-sum
+//! path bit-exactly), [`simd`] adds the vectorized inner k-loop (SWAR /
+//! AVX2, runtime-dispatched) on top of the panel layout, [`mfmac`] keeps
+//! the stable convenience entry points, [`nn`] builds the native
 //! multiplication-free training loop (forward/backward MLP whose every
 //! linear-layer GEMM runs on a MacEngine) from those pieces, and
 //! [`shard`] scales that loop out to data-parallel worker threads with a
 //! multiplication-free gradient combine.
+//!
+//! K-panel layout invariants (shared by blocked/threaded/simd): a pair's
+//! per-k tile shifts are hoisted into contiguous constant-shift runs
+//! whose boundaries sit only on the union of the two operands' k-tile
+//! grids ([`engine`]'s run plan); [`PotTensor::pack_k_panels`] re-lays a
+//! (k, n) operand so each panel's columns are contiguous k-major byte
+//! runs with the slab's beta delta pre-folded into the panel header.
+//! Packing is pure code movement and the shift is applied once per panel
+//! on an exact integer partial, so every schedule — tiled or untiled,
+//! any engine, any worker count — produces bit-identical results.
 
 pub mod engine;
 mod mfmac;
 pub mod nn;
 mod quantize;
 pub mod shard;
+pub mod simd;
 
 pub use engine::{
     engine_by_name, BlockedEngine, MacEngine, SaturationReport, ScalarEngine, ThreadedEngine,
-    ENGINE_NAMES,
+    ENGINE_CHOICES, ENGINE_NAMES,
 };
 pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized};
 pub use quantize::{
     beta_from_amax, compute_beta, pack_code, pot_dequantize, pot_emax, pot_quantize,
     pot_quantize_one, pot_value, pow2i, pow2i_saturating, round_log2_abs, scale_pow2,
-    unpack_code, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT, SQRT2_F32,
-    TILE_DELTA_MIN, ZERO_CODE,
+    unpack_code, KPanelHeader, KPanels, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT,
+    SQRT2_F32, TILE_DELTA_MIN, ZERO_CODE,
 };
 pub use shard::{ShardPlan, ShardedMlp};
+pub use simd::{SimdEngine, SimdPath};
 
 /// Weight Bias Correction (paper eq. 11): subtract the mean.
 pub fn weight_bias_correction(w: &[f32]) -> Vec<f32> {

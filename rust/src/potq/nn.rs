@@ -844,10 +844,11 @@ mod tests {
     #[test]
     fn engines_produce_bit_identical_steps() {
         let (x, y) = toy_batch(11, 8, 12, 4);
-        let engines: [Box<dyn MacEngine>; 3] = [
+        let engines: [Box<dyn MacEngine>; 4] = [
             Box::new(ScalarEngine),
             Box::new(BlockedEngine::with_tiles(3, 5, 2)),
             Box::new(ThreadedEngine::new(3)),
+            Box::new(crate::potq::SimdEngine::new()),
         ];
         let mut states: Vec<Vec<f32>> = Vec::new();
         let mut losses: Vec<u32> = Vec::new();
@@ -859,10 +860,10 @@ mod tests {
             states.push(model.state_to_vec());
             losses.push(model.last_loss.to_bits());
         }
-        assert_eq!(losses[0], losses[1], "scalar vs blocked loss");
-        assert_eq!(losses[0], losses[2], "scalar vs threaded loss");
-        assert_eq!(states[0], states[1], "scalar vs blocked state");
-        assert_eq!(states[0], states[2], "scalar vs threaded state");
+        for (i, eng) in engines.iter().enumerate().skip(1) {
+            assert_eq!(losses[0], losses[i], "scalar vs {} loss", eng.name());
+            assert_eq!(states[0], states[i], "scalar vs {} state", eng.name());
+        }
     }
 
     #[test]

@@ -171,6 +171,61 @@ impl TileScales {
     }
 }
 
+/// Header of one panel in a [`KPanels`] layout: k-rows `[p0, p1)` of the
+/// source (k, n) operand, with the source's per-k-tile beta `delta` for
+/// the slab pre-folded in (0 when the source carries no tile plane).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KPanelHeader {
+    pub p0: usize,
+    pub p1: usize,
+    /// this *source tensor's own* tile-plane beta delta for the slab,
+    /// relative to its base beta — for single-operand consumers (panel
+    /// dequantize, a k-sharded worker shipping its local slab). It is
+    /// NOT the pair kernel shift: engines combine *both* operands'
+    /// deltas (normalized by the pair minimum) through the engine-side
+    /// shift-run plan, and only rely on the panel grid refining this
+    /// tensor's tile grid so that any such per-panel value is constant.
+    pub delta: i32,
+    /// byte offset of this panel's codes inside [`KPanels::codes`]
+    pub offset: usize,
+}
+
+/// K-panel packed layout of a (k, n) operand: the codes of each panel's
+/// k-slab stored *k-major* (column j of the slab is one contiguous byte
+/// run), which is what lets the vectorized kernels stream both operands
+/// of a dot product with unit stride.
+///
+/// Invariants (what `potq::simd` and any future consumer may rely on):
+///  * panels tile `[0, k)` exactly, in ascending order, none empty;
+///  * panel boundaries refine the source tensor's reduction-axis tile
+///    grid, so the header `delta` is constant across its whole slab;
+///  * `col(panel, j)` is the contiguous codes of rows `[p0, p1)` at
+///    column j, identical bytes to the row-major source — the packing is
+///    pure code movement, no arithmetic, exactly like `transpose2d`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KPanels {
+    pub k: usize,
+    pub n: usize,
+    pub panels: Vec<KPanelHeader>,
+    codes: Vec<u8>,
+}
+
+impl KPanels {
+    /// Contiguous codes of column `j` within `panel` (rows p0..p1).
+    #[inline]
+    pub fn col(&self, panel: usize, j: usize) -> &[u8] {
+        let h = &self.panels[panel];
+        let len = h.p1 - h.p0;
+        let base = h.offset + j * len;
+        &self.codes[base..base + len]
+    }
+
+    /// The full packed code buffer (panel-major, then column-major).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+}
+
 /// A packed quantized tensor: one code byte per element plus shape/stride
 /// metadata, the shared block scale exponent beta, and the bit width.
 ///
@@ -454,6 +509,52 @@ impl PotTensor {
                 pot_dequantize(e, s, self.beta + self.tile_delta_flat(i))
             })
             .collect()
+    }
+
+    /// Repack a 2-D (k, n) operand into the [`KPanels`] k-major layout.
+    ///
+    /// Panel boundaries are this tensor's own reduction-axis tile grid
+    /// (one panel for an untiled tensor) refined by `cuts` — extra split
+    /// points a kernel needs, typically the *other* operand's k-tile
+    /// grid, so that the pair's combined shift is constant per panel.
+    /// Each header carries the slab's pre-folded beta delta. Pure code
+    /// movement: the packed bytes are the source bytes reordered, so any
+    /// kernel consuming panels stays bit-compatible with the row-major
+    /// kernels.
+    pub fn pack_k_panels(&self, cuts: &[usize]) -> KPanels {
+        assert_eq!(self.shape.len(), 2, "k-panel packing needs a 2-D (k, n) tensor");
+        let (k, n) = (self.shape[0], self.shape[1]);
+        if let Some(ts) = &self.tiles {
+            assert_eq!(
+                ts.axis, 0,
+                "k-panel packing needs the tile plane on the reduction axis (rows)"
+            );
+        }
+        let mut bounds: Vec<usize> = vec![0, k];
+        if let Some(ts) = &self.tiles {
+            let mut b = ts.tile;
+            while b < k {
+                bounds.push(b);
+                b += ts.tile;
+            }
+        }
+        bounds.extend(cuts.iter().copied().filter(|&c| c > 0 && c < k));
+        bounds.sort_unstable();
+        bounds.dedup();
+        let mut panels = Vec::with_capacity(bounds.len().saturating_sub(1));
+        let mut codes = Vec::with_capacity(k * n);
+        for pair in bounds.windows(2) {
+            let (p0, p1) = (pair[0], pair[1]);
+            let delta = self.tiles.as_ref().map_or(0, |ts| ts.delta_at(p0));
+            let offset = codes.len();
+            for j in 0..n {
+                for p in p0..p1 {
+                    codes.push(self.codes[p * n + j]);
+                }
+            }
+            panels.push(KPanelHeader { p0, p1, delta, offset });
+        }
+        KPanels { k, n, panels, codes }
     }
 }
 
@@ -840,5 +941,84 @@ mod tests {
         for v in blk.dequantize() {
             assert!(v.is_finite());
         }
+    }
+
+    #[test]
+    fn k_panels_pack_is_pure_code_movement() {
+        let mut r = Pcg32::new(31);
+        let (k, n) = (11, 5);
+        let mut x = vec![0f32; k * n];
+        r.fill_normal(&mut x, 0.0, 0.4);
+        let t = PotTensor::quantize_2d(&x, k, n, 5, None);
+        // untiled, no cuts: one panel covering all of k
+        let kp = t.pack_k_panels(&[]);
+        assert_eq!((kp.k, kp.n), (k, n));
+        assert_eq!(kp.panels.len(), 1);
+        assert_eq!(kp.panels[0], KPanelHeader { p0: 0, p1: k, delta: 0, offset: 0 });
+        for j in 0..n {
+            let col = kp.col(0, j);
+            assert_eq!(col.len(), k);
+            for (p, &c) in col.iter().enumerate() {
+                assert_eq!(c, t.code(p * n + j), "col {j} row {p}");
+            }
+        }
+        // extra cuts split panels without changing the bytes
+        let kp = t.pack_k_panels(&[4, 8, 4, 0, k, k + 3]);
+        assert_eq!(
+            kp.panels.iter().map(|h| (h.p0, h.p1)).collect::<Vec<_>>(),
+            vec![(0, 4), (4, 8), (8, 11)]
+        );
+        for (pi, h) in kp.panels.iter().enumerate() {
+            for j in 0..n {
+                let col = kp.col(pi, j);
+                for (off, &c) in col.iter().enumerate() {
+                    assert_eq!(c, t.code((h.p0 + off) * n + j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_panels_fold_tile_deltas_into_headers() {
+        // two k-slabs at visibly different scales -> live deltas; the
+        // panel grid must refine the tile grid and pre-fold the deltas
+        let (k, n, tile) = (10, 3, 4); // tiles [0,4) [4,8) [8,10)
+        let mut x = vec![0f32; k * n];
+        let mut r = Pcg32::new(32);
+        r.fill_normal(&mut x, 0.0, 0.5);
+        for (idx, v) in x.iter_mut().enumerate() {
+            if (idx / n) >= 4 && (idx / n) < 8 {
+                *v *= 1.0 / 32.0;
+            }
+        }
+        let t = PotTensor::quantize_2d_tiled(&x, k, n, 5, 0, tile);
+        let ts = t.tile_scales().unwrap().clone();
+        assert!(ts.deltas.iter().any(|&d| d < 0), "deltas must be live");
+        let kp = t.pack_k_panels(&[6]);
+        assert_eq!(
+            kp.panels.iter().map(|h| (h.p0, h.p1)).collect::<Vec<_>>(),
+            vec![(0, 4), (4, 6), (6, 8), (8, 10)]
+        );
+        for h in &kp.panels {
+            assert_eq!(h.delta, ts.delta_at(h.p0), "header delta pre-folded");
+            // delta constant across the slab (grid refinement invariant)
+            for p in h.p0..h.p1 {
+                assert_eq!(ts.delta_at(p), h.delta);
+            }
+        }
+    }
+
+    #[test]
+    fn k_panels_degenerate_shapes() {
+        // k = 0: no panels at all
+        let t = PotTensor::quantize_2d(&[], 0, 4, 5, None);
+        let kp = t.pack_k_panels(&[]);
+        assert!(kp.panels.is_empty());
+        assert!(kp.codes().is_empty());
+        // n = 0: panels exist, columns are empty
+        let t = PotTensor::quantize_2d(&[], 3, 0, 5, None);
+        let kp = t.pack_k_panels(&[1]);
+        assert_eq!(kp.panels.len(), 2);
+        assert!(kp.codes().is_empty());
     }
 }

@@ -17,7 +17,8 @@
 //! order. Workers only change which thread computes which tile, and every
 //! engine is bit-exact, so a seeded run is bit-identical for any
 //! `--workers N` — the property the sharded train_smoke pins (W=4 == W=1
-//! on all three engines).
+//! on every engine, and `--engine simd --workers 4` == `--engine scalar
+//! --workers 1` across engines).
 
 use std::ops::Range;
 
@@ -106,7 +107,7 @@ impl ShardedMlp {
         if engine_by_name(engine, threads).is_none() {
             bail!(
                 "unknown engine '{engine}' (available: {})",
-                super::engine::ENGINE_NAMES.join("|")
+                super::engine::ENGINE_CHOICES.join("|")
             );
         }
         Ok(ShardedMlp { model, plan, engine: engine.to_string(), threads })
@@ -358,6 +359,7 @@ mod tests {
 
     #[test]
     fn engines_agree_on_sharded_runs() {
+        // all four engines (simd included): bit-identical sharded runs
         let (x, y) = toy_batch(5, 16, 12, 4);
         let mut states: Vec<Vec<f32>> = Vec::new();
         for engine in crate::potq::ENGINE_NAMES {
@@ -367,8 +369,9 @@ mod tests {
             }
             states.push(t.model.state_to_vec());
         }
-        assert_eq!(states[0], states[1], "scalar vs blocked");
-        assert_eq!(states[0], states[2], "scalar vs threaded");
+        for (i, engine) in crate::potq::ENGINE_NAMES.iter().enumerate().skip(1) {
+            assert_eq!(states[0], states[i], "scalar vs {engine}");
+        }
     }
 
     #[test]

@@ -1,0 +1,611 @@
+//! `potq::simd` — vectorized MF-MAC kernels behind [`MacEngine`].
+//!
+//! The scalar engines resolve each code-sum through per-byte work; this
+//! module batches the remaining integer adds per cycle (the whole point
+//! of multiplication-free training once the FP32 multiplies are gone —
+//! cf. "Addition is All You Need", arXiv 2410.00907). Two inner-loop
+//! strategies run over the k-panel packed layout
+//! ([`crate::potq::KPanels`]), picked by runtime dispatch:
+//!
+//!  * **SWAR** (portable, stable rust): 8 packed codes per `u64` word.
+//!    The per-byte LUT index `sign<<7 | magx + magw` is computed for all
+//!    8 lanes in three word ops (the magnitude fields are <= 62, so the
+//!    byte sums never carry across lanes), and each term
+//!    `±2^(magsum-64)` is resolved by branchless bit-twiddling — bit 6
+//!    of the sum is the both-operands-live flag, bits 0-5 are the shift
+//!    — instead of a per-byte LUT hit. Partials accumulate in an i64
+//!    register and spill to the exact i128 total at an overflow-safe
+//!    cadence derived from the bit width.
+//!  * **AVX2** (x86_64, detected via `is_x86_feature_detected!`): 32
+//!    codes per iteration. `_mm256_shuffle_epi8` acts as a 16-lane
+//!    parallel LUT gather resolving `2^(e & 7)` for every lane at once;
+//!    lanes are binned by `e >> 3` (their byte weight `256^(e>>3)`) and
+//!    signs, and reduced with `_mm256_sad_epu8` into exact u64 partial
+//!    sums — no floating point and no inexact step anywhere.
+//!
+//! Both paths compute the same exact integer sum as [`ScalarEngine`]'s
+//! reference loop (integer addition is associative), go through the one
+//! shared `finish` rounding, and are therefore bit-identical to every
+//! other engine on every input — tiled or untiled. [`ScalarEngine`] is
+//! the bit-exactness oracle the tests pin against.
+//!
+//! [`ScalarEngine`]: super::engine::ScalarEngine
+
+use super::engine::{
+    dims2, finish, k_shift_runs, lut_index, saturating_band, tile_args, MacEngine,
+    SaturationReport,
+};
+use super::quantize::{pot_emax, PotTensor};
+
+/// Inner-loop strategy of a [`SimdEngine`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// `_mm256_shuffle_epi8` LUT gather + `_mm256_sad_epu8` reduction
+    Avx2,
+    /// portable u64 SWAR: 8 code lanes per word, branchless term build
+    Swar,
+    /// plain scalar loop over the packed panels (debug / oracle path)
+    Scalar,
+}
+
+impl SimdPath {
+    /// The label `mft kernels` prints for the dispatched path.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Swar => "swar",
+            SimdPath::Scalar => "scalar-fallback",
+        }
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Runtime-dispatched vectorized MF-MAC engine (`--engine simd|auto`).
+/// Single-threaded like [`super::engine::BlockedEngine`]; the shard layer
+/// composes it with worker parallelism.
+#[derive(Clone, Copy, Debug)]
+pub struct SimdEngine {
+    path: SimdPath,
+}
+
+impl Default for SimdEngine {
+    fn default() -> Self {
+        SimdEngine::new()
+    }
+}
+
+impl SimdEngine {
+    /// Dispatch the best vector path available on this host: AVX2 when
+    /// the CPU has it, the portable SWAR path otherwise.
+    pub fn new() -> SimdEngine {
+        let path = if avx2_available() { SimdPath::Avx2 } else { SimdPath::Swar };
+        SimdEngine { path }
+    }
+
+    /// Force a specific path (tests / debugging). A request for a
+    /// hardware path the host lacks falls back to SWAR instead of
+    /// executing illegal instructions.
+    pub fn with_path(path: SimdPath) -> SimdEngine {
+        let path = match path {
+            SimdPath::Avx2 if !avx2_available() => SimdPath::Swar,
+            p => p,
+        };
+        SimdEngine { path }
+    }
+
+    /// The path runtime dispatch chose.
+    pub fn path(&self) -> SimdPath {
+        self.path
+    }
+}
+
+impl MacEngine for SimdEngine {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn vector_path(&self) -> Option<&'static str> {
+        Some(self.path.label())
+    }
+
+    fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
+        matmul_impl(self.path, x, w)
+    }
+
+    /// The saturating model is order-sensitive (one canonical ascending-p
+    /// schedule per lane), so vectorizing it could not change anything
+    /// observable: it shares the reference band kernel, exactly like
+    /// [`super::engine::BlockedEngine`] does.
+    fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
+        let (m, k, n) = dims2(x, w);
+        let (kshifts, scale) = tile_args(x, w, k);
+        let mut out = vec![0f32; m * n];
+        let rep = saturating_band(x, w, k, n, 0, m, kshifts.as_deref(), scale, &mut out);
+        (out, rep)
+    }
+}
+
+/// Groups of 8 SWAR lanes an i64 partial accumulator can absorb before it
+/// must spill to the i128 total: `8 * groups * 2^(4*emax) <= 2^62`. Zero
+/// means "accumulate every term straight into the i128" (only the 6-bit
+/// width, whose single terms reach 2^60, needs that).
+fn swar_spill_groups(emax: i32) -> usize {
+    let t = 4 * emax; // max unshifted term exponent, <= 60
+    if t + 3 >= 63 {
+        0
+    } else {
+        1usize << ((59 - t) as u32).min(24)
+    }
+}
+
+/// Decode one packed code-sum byte into its signed term
+/// `±2^(magsum - 64)` (0 when either operand was the zero code), without
+/// a LUT: bit 7 is the product sign, bit 6 the both-live flag, bits 0-5
+/// the shift.
+#[inline]
+fn swar_term(b: u32) -> i64 {
+    let live = ((b >> 6) & 1) as i64;
+    let t = live << (b & 63);
+    let s = -(((b >> 7) & 1) as i64); // 0 or -1
+    (t ^ s) - s
+}
+
+/// Exact `Σ ±2^(magx + magw - 64)` over paired code slices (unshifted
+/// terms, as an i128) — the portable SWAR inner loop.
+fn dot_codes_swar(xs: &[u8], ws: &[u8], spill_groups: usize) -> i128 {
+    debug_assert_eq!(xs.len(), ws.len());
+    const SIGN64: u64 = 0x8080_8080_8080_8080;
+    const MAG64: u64 = 0x7F7F_7F7F_7F7F_7F7F;
+    let mut total: i128 = 0;
+    let mut acc: i64 = 0;
+    let mut groups = 0usize;
+    let xw = xs.chunks_exact(8);
+    let ww = ws.chunks_exact(8);
+    let (xr, wr) = (xw.remainder(), ww.remainder());
+    for (cx8, cw8) in xw.zip(ww) {
+        let vx = u64::from_le_bytes(cx8.try_into().unwrap());
+        let vw = u64::from_le_bytes(cw8.try_into().unwrap());
+        // all 8 lane indices in three word ops: sign XOR into bit 7,
+        // magnitude add into bits 0-6 (sums <= 124 never cross lanes)
+        let mut idx = ((vx ^ vw) & SIGN64) | ((vx & MAG64) + (vw & MAG64));
+        if spill_groups == 0 {
+            for _ in 0..8 {
+                total += swar_term((idx & 0xFF) as u32) as i128;
+                idx >>= 8;
+            }
+        } else {
+            for _ in 0..8 {
+                acc += swar_term((idx & 0xFF) as u32);
+                idx >>= 8;
+            }
+            groups += 1;
+            if groups >= spill_groups {
+                total += acc as i128;
+                acc = 0;
+                groups = 0;
+            }
+        }
+    }
+    for (&cx, &cw) in xr.iter().zip(wr) {
+        total += swar_term(lut_index(cx, cw) as u32) as i128;
+    }
+    total + acc as i128
+}
+
+/// Scalar-fallback inner loop over the packed panels (same per-byte term
+/// decode as SWAR, one byte at a time, exact i128 accumulation).
+fn dot_codes_scalar(xs: &[u8], ws: &[u8]) -> i128 {
+    let mut total = 0i128;
+    for (&cx, &cw) in xs.iter().zip(ws) {
+        total += swar_term(lut_index(cx, cw) as u32) as i128;
+    }
+    total
+}
+
+/// AVX2 inner loop: 32 code pairs per iteration. Indices are computed
+/// lane-parallel; `_mm256_shuffle_epi8` gathers `2^(e & 7)` for all
+/// lanes from a 16-entry table; lanes are binned by byte weight
+/// (`e >> 3`) and sign, and `_mm256_sad_epu8` horizontally sums each
+/// bin's bytes into u64 partials. The final combine re-weights each bin
+/// by `<< 8t` in i128 — exact, like every other schedule.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_codes_avx2(xs: &[u8], ws: &[u8], n_groups: usize, spill_groups: usize) -> i128 {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(xs.len(), ws.len());
+    debug_assert!(n_groups <= 8);
+    let len = xs.len();
+    let vec_len = len - len % 32;
+    // 2^(e & 7) per byte: indices 0..=7 within each 128-bit half
+    let pow_tbl = _mm256_setr_epi8(
+        1, 2, 4, 8, 16, 32, 64, -128, 0, 0, 0, 0, 0, 0, 0, 0, //
+        1, 2, 4, 8, 16, 32, 64, -128, 0, 0, 0, 0, 0, 0, 0, 0,
+    );
+    let m7f = _mm256_set1_epi8(0x7F);
+    let m80 = _mm256_set1_epi8(-128);
+    let m40 = _mm256_set1_epi8(0x40);
+    let m07 = _mm256_set1_epi8(0x07);
+    let m38 = _mm256_set1_epi8(0x38);
+    let zero = _mm256_setzero_si256();
+    let group_ids: [__m256i; 8] = [
+        _mm256_set1_epi8(0),
+        _mm256_set1_epi8(8),
+        _mm256_set1_epi8(16),
+        _mm256_set1_epi8(24),
+        _mm256_set1_epi8(32),
+        _mm256_set1_epi8(40),
+        _mm256_set1_epi8(48),
+        _mm256_set1_epi8(56),
+    ];
+    // per-bin exact partial sums, positive and negative lanes apart (the
+    // sad reduction is unsigned); each u64 lane grows by <= 2040 per
+    // iteration, so these never overflow in any representable GEMM
+    let mut pos = [zero; 8];
+    let mut neg = [zero; 8];
+    let mut off = 0usize;
+    while off < vec_len {
+        let vx = _mm256_loadu_si256(xs.as_ptr().add(off) as *const __m256i);
+        let vw = _mm256_loadu_si256(ws.as_ptr().add(off) as *const __m256i);
+        let sign = _mm256_and_si256(_mm256_xor_si256(vx, vw), m80);
+        let mag = _mm256_add_epi8(_mm256_and_si256(vx, m7f), _mm256_and_si256(vw, m7f));
+        // both-live: bit 6 of the magnitude sum (e = mag - 64 keeps bits
+        // 0-5 of mag, so e&7 == mag&7 and 8*(e>>3) == mag&0x38)
+        let live = _mm256_cmpeq_epi8(_mm256_and_si256(mag, m40), m40);
+        let pw = _mm256_shuffle_epi8(pow_tbl, _mm256_and_si256(mag, m07));
+        let pw = _mm256_and_si256(pw, live);
+        let hi = _mm256_and_si256(mag, m38);
+        let posm = _mm256_cmpeq_epi8(sign, zero);
+        for (t, (pa, na)) in pos.iter_mut().zip(neg.iter_mut()).take(n_groups).enumerate() {
+            let gm = _mm256_cmpeq_epi8(hi, group_ids[t]);
+            let gp = _mm256_and_si256(pw, gm);
+            let p = _mm256_and_si256(gp, posm);
+            let ng = _mm256_andnot_si256(posm, gp);
+            *pa = _mm256_add_epi64(*pa, _mm256_sad_epu8(p, zero));
+            *na = _mm256_add_epi64(*na, _mm256_sad_epu8(ng, zero));
+        }
+        off += 32;
+    }
+    let mut total: i128 = 0;
+    for (t, (pa, na)) in pos.iter().zip(neg.iter()).take(n_groups).enumerate() {
+        let ps = hsum_epi64(*pa);
+        let ns = hsum_epi64(*na);
+        total += ((ps as i128) - (ns as i128)) << (8 * t);
+    }
+    // tail lanes (< 32) through the SWAR path — same exact integer sum
+    total + dot_codes_swar(&xs[vec_len..], &ws[vec_len..], spill_groups)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi64(v: std::arch::x86_64::__m256i) -> i64 {
+    use std::arch::x86_64::*;
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let s = _mm_add_epi64(lo, hi);
+    let s2 = _mm_add_epi64(s, _mm_unpackhi_epi64(s, s));
+    _mm_cvtsi128_si64(s2)
+}
+
+/// The shared outer kernel: pack `w` into k-major panels aligned with the
+/// pair's constant-shift runs, then stream each (x row, w panel column)
+/// pair through the selected vector inner loop. Per-panel tile shifts are
+/// applied once at panel spill (`<< shift` on the exact partial), so the
+/// result is the identical integer sum every other engine computes.
+fn matmul_impl(path: SimdPath, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
+    let (m, k, n) = dims2(x, w);
+    let (kshifts, scale) = tile_args(x, w, k);
+    let mut out = vec![0f32; m * n];
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let runs = k_shift_runs(kshifts.as_deref(), k);
+    // panel boundaries = w's own k-tile grid refined by the pair's
+    // shift-change points, so the combined shift is constant per panel
+    let cuts: Vec<usize> = runs.iter().map(|r| r.0).collect();
+    let wp = w.pack_k_panels(&cuts);
+    // per-panel kernel shift: the PAIR-combined, dmin-normalized value
+    // from tile_args — not the header's w-only delta (that one serves
+    // single-operand consumers). Constant per panel because the panel
+    // grid refines both operands' tile grids.
+    let shifts: Vec<u32> = wp
+        .panels
+        .iter()
+        .map(|h| kshifts.as_ref().map_or(0, |s| s[h.p0]))
+        .collect();
+    let emax = pot_emax(x.bits);
+    let n_groups = ((4 * emax) as usize >> 3) + 1; // AVX2 byte-weight bins
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = n_groups;
+    let spill = swar_spill_groups(emax);
+    let xc = x.codes();
+    // j-outer: the w panel column (k bytes) stays register/L1-hot while x
+    // streams; x itself is small enough to stay cached across columns
+    for j in 0..n {
+        for i in 0..m {
+            let xrow = &xc[i * k..(i + 1) * k];
+            let mut acc: i128 = 0;
+            for (pi, h) in wp.panels.iter().enumerate() {
+                let xs = &xrow[h.p0..h.p1];
+                let ws = wp.col(pi, j);
+                let part = match path {
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx2 => unsafe { dot_codes_avx2(xs, ws, n_groups, spill) },
+                    #[cfg(not(target_arch = "x86_64"))]
+                    SimdPath::Avx2 => dot_codes_swar(xs, ws, spill),
+                    SimdPath::Swar => dot_codes_swar(xs, ws, spill),
+                    SimdPath::Scalar => dot_codes_scalar(xs, ws),
+                };
+                acc += part << shifts[pi];
+            }
+            out[i * n + j] = finish(acc, scale);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potq::engine::{BlockedEngine, ScalarEngine, ThreadedEngine};
+    use crate::potq::PotTensor;
+    use crate::util::prng::Pcg32;
+
+    fn rand_tensor(seed: u64, rows: usize, cols: usize, std: f32, b: u32) -> PotTensor {
+        let mut r = Pcg32::new(seed);
+        let mut v = vec![0f32; rows * cols];
+        r.fill_normal(&mut v, 0.0, std);
+        PotTensor::quantize_2d(&v, rows, cols, b, None)
+    }
+
+    /// Random 2-D tensor carrying a per-k-tile beta plane along `axis`.
+    fn rand_tiled(seed: u64, rows: usize, cols: usize, axis: usize, tile: usize) -> PotTensor {
+        let mut r = Pcg32::new(seed);
+        let mut v = vec![0f32; rows * cols];
+        r.fill_normal(&mut v, 0.0, 0.5);
+        for (idx, x) in v.iter_mut().enumerate() {
+            let c = if axis == 0 { idx / cols } else { idx % cols };
+            if (c / tile) % 2 == 1 {
+                *x *= 1.0 / 16.0;
+            }
+        }
+        PotTensor::quantize_2d_tiled(&v, rows, cols, 5, axis, tile)
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], label: &str) {
+        assert_eq!(a.len(), b.len(), "{label}: length");
+        for (i, (p, q)) in a.iter().zip(b).enumerate() {
+            assert_eq!(p.to_bits(), q.to_bits(), "{label}[{i}]: {p} vs {q}");
+        }
+    }
+
+    /// Every path the host can run, plus the dispatched default.
+    fn paths_under_test() -> Vec<SimdEngine> {
+        vec![
+            SimdEngine::new(),
+            SimdEngine::with_path(SimdPath::Swar),
+            SimdEngine::with_path(SimdPath::Scalar),
+            SimdEngine::with_path(SimdPath::Avx2), // falls back off-x86
+        ]
+    }
+
+    #[test]
+    fn swar_term_decodes_every_code_pair() {
+        use crate::potq::{pack_code, pot_emax, ZERO_CODE};
+        for b in [3u32, 4, 5, 6] {
+            let emax = pot_emax(b);
+            for ex in -emax..=emax {
+                for ew in -emax..=emax {
+                    for (sx, sw) in [(0u8, 0u8), (0, 1), (1, 0), (1, 1)] {
+                        let cx = pack_code(ex, sx, emax);
+                        let cw = pack_code(ew, sw, emax);
+                        let idx = lut_index(cx, cw) as u32;
+                        let want = {
+                            let v = 1i64 << (ex + ew + 2 * emax) as u32;
+                            if (sx ^ sw) == 1 {
+                                -v
+                            } else {
+                                v
+                            }
+                        };
+                        assert_eq!(swar_term(idx), want, "b={b} ex={ex} ew={ew}");
+                    }
+                }
+            }
+            // zero code against everything decodes to 0
+            let zero = pack_code(ZERO_CODE, 0, emax);
+            for e in -emax..=emax {
+                for s in [0u8, 1] {
+                    let c = pack_code(e, s, emax);
+                    for (a, bb) in [(zero, c), (c, zero), (zero, zero)] {
+                        assert_eq!(swar_term(lut_index(a, bb) as u32), 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swar_spill_cadence_is_exact_at_any_groups() {
+        // the periodic i64 -> i128 spill is pure bookkeeping: forcing
+        // tiny cadences (spilling every 1/2/3 groups of 8 lanes) must
+        // reproduce the scalar per-byte decode bit for bit — the branch
+        // the production cadence (2^24 groups) never reaches in-test
+        let x = rand_tensor(77, 1, 131, 0.8, 5);
+        let w = rand_tensor(78, 131, 1, 0.8, 5);
+        let (xs, ws) = (x.codes(), w.codes()); // w is (k, 1): one column
+        let want = dot_codes_scalar(xs, ws);
+        for groups in [1usize, 2, 3] {
+            assert_eq!(dot_codes_swar(xs, ws, groups), want, "spill every {groups}");
+        }
+        // the production cadences for the i64 widths and the b=6
+        // per-term mode agree too
+        for emax in [1, 3, 7] {
+            assert_eq!(dot_codes_swar(xs, ws, swar_spill_groups(emax)), want);
+        }
+        assert_eq!(dot_codes_swar(xs, ws, 0), want, "per-term i128 mode");
+    }
+
+    #[test]
+    fn dispatch_reports_a_vector_path() {
+        let eng = SimdEngine::new();
+        assert_eq!(eng.name(), "simd");
+        let label = eng.vector_path().expect("simd engine reports its path");
+        assert!(["avx2", "swar"].contains(&label), "dispatched {label}");
+        assert_eq!(
+            SimdEngine::with_path(SimdPath::Scalar).vector_path(),
+            Some("scalar-fallback")
+        );
+        // forcing AVX2 never produces an engine the host cannot run
+        let forced = SimdEngine::with_path(SimdPath::Avx2);
+        assert!(matches!(forced.path(), SimdPath::Avx2 | SimdPath::Swar));
+    }
+
+    #[test]
+    fn simd_bit_exact_with_scalar_on_random_shapes() {
+        // every path, all bit widths, shapes straddling the 8/32-lane
+        // chunk boundaries (tails included)
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (4, 32, 4),
+            (5, 33, 3),
+            (8, 64, 8),
+            (9, 100, 7),
+            (33, 40, 31),
+        ];
+        for (idx, &(m, k, n)) in shapes.iter().enumerate() {
+            for b in [3u32, 4, 5, 6] {
+                let x = rand_tensor(900 + idx as u64, m, k, 0.5, b);
+                let w = rand_tensor(1900 + idx as u64, k, n, 0.02, b);
+                let want = ScalarEngine.matmul(&x, &w);
+                for eng in paths_under_test() {
+                    let got = eng.matmul(&x, &w);
+                    assert_bits_eq(
+                        &want,
+                        &got,
+                        &format!("b={b} {m}x{k}x{n} path {}", eng.path().label()),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_bit_exact_on_max_magnitude_codes() {
+        // the i64 spill hazard: 6-bit codes at max magnitude make single
+        // terms of 2^60 — eight of them overflow an i64, so the spill
+        // cadence must degrade to per-term. ±1 alternation exercises the
+        // signed combine too.
+        for b in [5u32, 6] {
+            let (m, k, n) = (2, 67, 3);
+            let ones: Vec<f32> = (0..m * k)
+                .map(|i| if i % 3 == 0 { -1.0 } else { 1.0 })
+                .collect();
+            let wons: Vec<f32> = (0..k * n)
+                .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+                .collect();
+            let x = PotTensor::quantize_2d(&ones, m, k, b, None);
+            let w = PotTensor::quantize_2d(&wons, k, n, b, None);
+            let want = ScalarEngine.matmul(&x, &w);
+            for eng in paths_under_test() {
+                let got = eng.matmul(&x, &w);
+                assert_bits_eq(&want, &got, &format!("b={b} path {}", eng.path().label()));
+            }
+        }
+    }
+
+    #[test]
+    fn simd_bit_exact_on_tiled_operands() {
+        // tile planes on x only, w only, both; partial last k-tiles
+        let cases: [(usize, usize, usize, usize, bool, bool); 4] = [
+            (4, 16, 5, 4, true, true),
+            (3, 12, 6, 4, true, false),
+            (6, 42, 4, 8, false, true), // k=42: partial last tile + tails
+            (1, 8, 1, 2, true, true),
+        ];
+        for (idx, &(m, k, n, tile, tile_x, tile_w)) in cases.iter().enumerate() {
+            let x = if tile_x {
+                rand_tiled(2700 + idx as u64, m, k, 1, tile)
+            } else {
+                rand_tensor(2700 + idx as u64, m, k, 0.5, 5)
+            };
+            let w = if tile_w {
+                rand_tiled(2800 + idx as u64, k, n, 0, tile)
+            } else {
+                rand_tensor(2800 + idx as u64, k, n, 0.04, 5)
+            };
+            let want = ScalarEngine.matmul(&x, &w);
+            for eng in paths_under_test() {
+                let got = eng.matmul(&x, &w);
+                assert_bits_eq(
+                    &want,
+                    &got,
+                    &format!("tiled[{idx}] path {}", eng.path().label()),
+                );
+            }
+            // batched entry point rides the default implementation
+            let pairs = [(&x, &w), (&x, &w)];
+            for out in SimdEngine::new().matmul_batch(&pairs) {
+                assert_bits_eq(&want, &out, &format!("tiled[{idx}] batch"));
+            }
+        }
+    }
+
+    #[test]
+    fn simd_degenerate_shapes() {
+        let eng = SimdEngine::new();
+        // k = 0: empty reduction, all-zero output
+        let x = PotTensor::quantize_2d(&[], 4, 0, 5, None);
+        let w = PotTensor::quantize_2d(&[], 0, 6, 5, None);
+        let y = eng.matmul(&x, &w);
+        assert_eq!(y.len(), 24);
+        assert!(y.iter().all(|&v| v == 0.0));
+        // m = 0 / n = 0: empty outputs, no panic
+        let x0 = PotTensor::quantize_2d(&[], 0, 5, 5, None);
+        let w5 = rand_tensor(1, 5, 3, 0.2, 5);
+        assert!(eng.matmul(&x0, &w5).is_empty());
+        let x5 = rand_tensor(2, 3, 5, 0.2, 5);
+        let w0 = PotTensor::quantize_2d(&[], 5, 0, 5, None); // (k=5, n=0)
+        assert!(eng.matmul(&x5, &w0).is_empty());
+    }
+
+    #[test]
+    fn simd_saturating_model_matches_reference() {
+        let (m, k, n) = (9, 48, 7);
+        let ones_x = vec![1.0f32; m * k];
+        let ones_w = vec![1.0f32; k * n];
+        let x = PotTensor::quantize_2d(&ones_x, m, k, 5, None);
+        let w = PotTensor::quantize_2d(&ones_w, k, n, 5, None);
+        let (ys, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
+        let (yd, rd) = SimdEngine::new().matmul_i32_saturating(&x, &w);
+        assert!(rs.saturated_lanes > 0, "expected saturation");
+        assert_bits_eq(&ys, &yd, "sat scalar vs simd");
+        assert_eq!(rs.saturated_lanes, rd.saturated_lanes);
+        assert_eq!(rs.total_lanes, rd.total_lanes);
+        assert_eq!(rs.peak_magnitude, rd.peak_magnitude);
+    }
+
+    #[test]
+    fn simd_agrees_with_every_other_engine() {
+        let (m, k, n) = (12, 80, 9);
+        let x = rand_tiled(41, m, k, 1, 16);
+        let w = rand_tiled(42, k, n, 0, 16);
+        let ys = ScalarEngine.matmul(&x, &w);
+        let yb = BlockedEngine::with_tiles(5, 13, 4).matmul(&x, &w);
+        let yt = ThreadedEngine::new(3).matmul(&x, &w);
+        let yd = SimdEngine::new().matmul(&x, &w);
+        assert_bits_eq(&ys, &yb, "scalar vs blocked");
+        assert_bits_eq(&ys, &yt, "scalar vs threaded");
+        assert_bits_eq(&ys, &yd, "scalar vs simd");
+    }
+}

@@ -324,4 +324,41 @@ mod tests {
         let err = format!("{:#}", NativeSession::from_config(&cfg).unwrap_err());
         assert!(err.contains("divide the batch"), "{err}");
     }
+
+    #[test]
+    fn simd_session_matches_scalar_state_and_census() {
+        // the census counts ops from the packed codes, not from the
+        // schedule: a simd-engine session must report the identical
+        // censuses (and states) as a scalar one — `mft census --engine
+        // simd` rides this invariant
+        let mut results: Vec<(Vec<f32>, u64, u64, u64)> = Vec::new();
+        for engine in ["scalar", "simd", "auto"] {
+            let cfg = TrainConfig {
+                variant: "tiny_mlp_mf".into(),
+                engine: engine.into(),
+                workers: 2,
+                ..TrainConfig::default()
+            };
+            let mut s = NativeSession::from_config(&cfg).unwrap();
+            s.init(17).unwrap();
+            let b = batch_for(&s, 17);
+            for _ in 0..2 {
+                s.train_step(&b, 0.05).unwrap();
+            }
+            let census = s.last_census().unwrap();
+            assert_eq!(census.linear_fp32_muls, 0, "{engine}: FP32 muls leaked");
+            results.push((
+                s.state_to_host().unwrap(),
+                census.live_macs(),
+                census.total_macs(),
+                census.combine_exp_adds,
+            ));
+        }
+        for r in &results[1..] {
+            assert_eq!(results[0].0, r.0, "state diverged across engines");
+            assert_eq!(results[0].1, r.1, "live-MAC count changed with the schedule");
+            assert_eq!(results[0].2, r.2);
+            assert_eq!(results[0].3, r.3);
+        }
+    }
 }

@@ -142,6 +142,34 @@ fn census_subcommand_measures_a_real_step() {
 }
 
 #[test]
+fn census_with_simd_engine_keeps_zero_fp32_muls() {
+    // the census counts ops from the packed codes, not the schedule:
+    // running the real step on the vectorized engine must keep the
+    // zero-FP32-mul line and the same per-GEMM op counts as scalar
+    let mut jsons: Vec<String> = Vec::new();
+    for engine in ["scalar", "simd"] {
+        let json = std::env::temp_dir().join(format!("mft_cli_census_{engine}.json"));
+        std::fs::remove_file(&json).ok();
+        let out = mft()
+            .args([
+                "census", "--variant", "tiny_mlp_mf", "--engine", engine, "--seed", "5",
+                "--json",
+            ])
+            .arg(&json)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let s = String::from_utf8_lossy(&out.stdout);
+        assert!(s.contains("linear-layer FP32 multiplies: 0"), "{engine}: {s}");
+        // strip the engine-name field so the remaining json (op counts,
+        // energies) must match bit for bit across engines
+        let j = std::fs::read_to_string(&json).unwrap();
+        jsons.push(j.replace(&format!("\"{engine}\""), "\"<engine>\""));
+    }
+    assert_eq!(jsons[0], jsons[1], "census op counts diverged between engines");
+}
+
+#[test]
 fn native_train_rejects_unknown_engine_and_variant() {
     let out = mft()
         .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine", "gpu"])

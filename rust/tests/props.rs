@@ -5,7 +5,8 @@
 use mftrain::energy::{methods, training_energy_joules};
 use mftrain::models;
 use mftrain::potq::{
-    self, BlockedEngine, MacEngine, ScalarEngine, ThreadedEngine, ZERO_CODE,
+    self, BlockedEngine, MacEngine, ScalarEngine, SimdEngine, SimdPath, ThreadedEngine,
+    ZERO_CODE,
 };
 use mftrain::testing::{property, property_shrink, Gen};
 
@@ -60,8 +61,9 @@ fn prop_pack_unpack_roundtrip() {
 
 #[test]
 fn prop_engines_bit_exact() {
-    // scalar vs blocked vs threaded on random shapes, including k=0,
-    // all-zero blocks, and emax-saturating inputs (the Gen mixture)
+    // scalar vs blocked vs threaded vs simd (dispatched + forced SWAR)
+    // on random shapes, including k=0, all-zero blocks, and
+    // emax-saturating inputs (the Gen mixture)
     property("engine cross-equivalence is bit-exact", 60, |g: &mut Gen| {
         let m = g.usize_in(1, 10);
         let k = g.usize_in(0, 24); // k = 0 is a legal empty reduction
@@ -75,22 +77,32 @@ fn prop_engines_bit_exact() {
             g.usize_in(1, 8),
         );
         let threaded = ThreadedEngine::new(g.usize_in(1, 5));
+        let simd = SimdEngine::new();
+        let swar = SimdEngine::with_path(SimdPath::Swar);
         let ys = ScalarEngine.matmul(&x, &w);
         let yb = blocked.matmul(&x, &w);
         let yt = threaded.matmul(&x, &w);
+        let yd = simd.matmul(&x, &w);
+        let yw = swar.matmul(&x, &w);
         let exact = ys.len() == m * n
             && ys.iter().zip(&yb).all(|(a, c)| a.to_bits() == c.to_bits())
-            && ys.iter().zip(&yt).all(|(a, c)| a.to_bits() == c.to_bits());
+            && ys.iter().zip(&yt).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ys.iter().zip(&yd).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ys.iter().zip(&yw).all(|(a, c)| a.to_bits() == c.to_bits());
         // the saturating path must agree too (same reference order)
         let (ss, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
         let (sb, rb) = blocked.matmul_i32_saturating(&x, &w);
         let (st, rt) = threaded.matmul_i32_saturating(&x, &w);
+        let (sd, rd) = simd.matmul_i32_saturating(&x, &w);
         exact
             && ss.iter().zip(&sb).all(|(a, c)| a.to_bits() == c.to_bits())
             && ss.iter().zip(&st).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ss.iter().zip(&sd).all(|(a, c)| a.to_bits() == c.to_bits())
             && rs.saturated_lanes == rb.saturated_lanes
             && rs.saturated_lanes == rt.saturated_lanes
+            && rs.saturated_lanes == rd.saturated_lanes
             && rs.peak_magnitude == rt.peak_magnitude
+            && rs.peak_magnitude == rd.peak_magnitude
     });
 }
 
@@ -279,7 +291,9 @@ fn prop_tiled_quantize_matches_per_slab_als() {
 #[test]
 fn prop_engines_bit_exact_on_tiled_operands() {
     // the PR-1 cross-engine pins extended to tile-scaled operands: x
-    // tiled, w tiled, or both — every engine, both accumulate models
+    // tiled, w tiled, or both — every engine (simd included, with
+    // partial last k-tiles arising from the random k), both accumulate
+    // models
     property("tiled engine cross-equivalence is bit-exact", 40, |g: &mut Gen| {
         let m = g.usize_in(1, 8);
         let k = g.usize_in(1, 20);
@@ -303,21 +317,31 @@ fn prop_engines_bit_exact_on_tiled_operands() {
             g.usize_in(1, 8),
         );
         let threaded = ThreadedEngine::new(g.usize_in(1, 5));
+        let simd = SimdEngine::new();
+        let swar = SimdEngine::with_path(SimdPath::Swar);
         let ys = ScalarEngine.matmul(&x, &w);
         let yb = blocked.matmul(&x, &w);
         let yt = threaded.matmul(&x, &w);
+        let yd = simd.matmul(&x, &w);
+        let yw = swar.matmul(&x, &w);
         let exact = ys.len() == m * n
             && ys.iter().zip(&yb).all(|(a, c)| a.to_bits() == c.to_bits())
-            && ys.iter().zip(&yt).all(|(a, c)| a.to_bits() == c.to_bits());
+            && ys.iter().zip(&yt).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ys.iter().zip(&yd).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ys.iter().zip(&yw).all(|(a, c)| a.to_bits() == c.to_bits());
         let (ss, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
         let (sb, rb) = blocked.matmul_i32_saturating(&x, &w);
         let (st, rt) = threaded.matmul_i32_saturating(&x, &w);
+        let (sd, rd) = simd.matmul_i32_saturating(&x, &w);
         exact
             && ss.iter().zip(&sb).all(|(a, c)| a.to_bits() == c.to_bits())
             && ss.iter().zip(&st).all(|(a, c)| a.to_bits() == c.to_bits())
+            && ss.iter().zip(&sd).all(|(a, c)| a.to_bits() == c.to_bits())
             && rs.saturated_lanes == rb.saturated_lanes
             && rs.saturated_lanes == rt.saturated_lanes
+            && rs.saturated_lanes == rd.saturated_lanes
             && rs.peak_magnitude == rt.peak_magnitude
+            && rs.peak_magnitude == rd.peak_magnitude
     });
 }
 
@@ -400,7 +424,7 @@ fn prop_matmul_batch_matches_singles() {
             .collect();
         let pairs: Vec<(&potq::PotTensor, &potq::PotTensor)> =
             tensors.iter().map(|(x, w)| (x, w)).collect();
-        let engines: [Box<dyn MacEngine>; 3] = [
+        let engines: [Box<dyn MacEngine>; 4] = [
             Box::new(ScalarEngine),
             Box::new(BlockedEngine::with_tiles(
                 g.usize_in(1, 6),
@@ -408,6 +432,7 @@ fn prop_matmul_batch_matches_singles() {
                 g.usize_in(1, 6),
             )),
             Box::new(ThreadedEngine::new(g.usize_in(1, 4))),
+            Box::new(SimdEngine::new()),
         ];
         engines.iter().all(|eng| {
             let batched = eng.matmul_batch(&pairs);

@@ -79,7 +79,8 @@ fn native_fp32_baseline_trains_too() {
 #[test]
 fn native_cross_engine_training_bit_identical() {
     // extends the PR 1 single-GEMM equivalence pins to whole runs: same
-    // seed, three engines -> bit-identical loss curves and checkpoints
+    // seed, all four engines (simd included) -> bit-identical loss
+    // curves and checkpoints
     let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
     let mut digests: Vec<u64> = Vec::new();
     for engine in ENGINE_NAMES {
@@ -96,10 +97,10 @@ fn native_cross_engine_training_bit_identical() {
         assert_eq!(ck.step, 30);
         digests.push(ck.digest());
     }
-    assert_eq!(curves[0], curves[1], "scalar vs blocked loss curves");
-    assert_eq!(curves[0], curves[2], "scalar vs threaded loss curves");
-    assert_eq!(digests[0], digests[1], "scalar vs blocked checkpoint");
-    assert_eq!(digests[0], digests[2], "scalar vs threaded checkpoint");
+    for (i, engine) in ENGINE_NAMES.iter().enumerate().skip(1) {
+        assert_eq!(curves[0], curves[i], "scalar vs {engine} loss curves");
+        assert_eq!(digests[0], digests[i], "scalar vs {engine} checkpoint");
+    }
 }
 
 #[test]
@@ -218,10 +219,13 @@ fn native_probe_betas_are_plausible() {
 
 #[test]
 fn native_sharded_run_bit_identical_across_workers_all_engines() {
-    // the tentpole pin: a seeded `--workers 4` run is bit-identical to
-    // `--workers 1` — loss curves and checkpoint digests — on all three
-    // engines (the microbatch tiling is a property of the plan, not of
-    // the worker count)
+    // the tentpole pin, now across engines too: a seeded `--workers 4`
+    // run is bit-identical to `--workers 1` — loss curves and checkpoint
+    // digests — on all four engines, AND the digests agree *between*
+    // engines, so `--engine simd --workers 4` reproduces
+    // `--engine scalar --workers 1` exactly (the microbatch tiling is a
+    // property of the plan; the kernels are bit-exact)
+    let mut engine_digests: Vec<u64> = Vec::new();
     for engine in ENGINE_NAMES {
         let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
         let mut digests: Vec<u64> = Vec::new();
@@ -244,6 +248,13 @@ fn native_sharded_run_bit_identical_across_workers_all_engines() {
         }
         assert_eq!(curves[0], curves[1], "{engine}: W=1 vs W=4 loss curves");
         assert_eq!(digests[0], digests[1], "{engine}: W=1 vs W=4 checkpoints");
+        engine_digests.push(digests[0]);
+    }
+    for (i, engine) in ENGINE_NAMES.iter().enumerate().skip(1) {
+        assert_eq!(
+            engine_digests[0], engine_digests[i],
+            "cross-engine digest: scalar vs {engine}"
+        );
     }
 }
 
