@@ -1,7 +1,11 @@
 //! Perf bench (deliverable e): the L3 hot path. Measures
-//!   * rust-native potq / mfmac kernel throughput,
-//!   * the MacEngine sweep (scalar / blocked / threaded) across
-//!     paper-relevant matmul shapes -> BENCH_kernels.json,
+//!   * rust-native potq / mfmac kernel throughput (incl. the SWAR
+//!     quantizer GB/s row),
+//!   * the MacEngine sweep (scalar / blocked / threaded / simd) across
+//!     paper-relevant matmul shapes -> BENCH_kernels.json, plus the
+//!     cached-operand (shared-weight batch) path,
+//!   * tensor-parallel k-sharding: the wide-k GEMM and the
+//!     workers x kshard training grid -> BENCH_kshard.json,
 //!   * data-generator throughput,
 //!   * end-to-end train-step latency per variant (upload + execute +
 //!     state feedback) and its breakdown,
@@ -15,7 +19,8 @@ use std::time::Instant;
 
 use mftrain::data::{self, Dataset};
 use mftrain::potq::{
-    self, BlockedEngine, MacEngine, PotTensor, ScalarEngine, SimdEngine, ThreadedEngine,
+    self, BlockedEngine, KShardEngine, MacEngine, PotTensor, ScalarEngine, SimdEngine,
+    ThreadedEngine,
 };
 use mftrain::runtime::{Runtime, Session};
 use mftrain::util::json::Json;
@@ -185,6 +190,89 @@ fn engine_sweep() -> anyhow::Result<()> {
     tb.note("batched results are asserted bit-exact against per-call matmul");
     tb.print();
 
+    // ---- the cached-operand path: a batch whose GEMMs all share ONE
+    // weight operand — the trainer's repeated-weight shape (every
+    // microbatch tile consumes the same step-cached weights). The simd
+    // engine's matmul_batch packs the shared operand's k-panels once;
+    // per-call matmul repacks every time, so the gap measures the repack
+    // amortization. Scalar/blocked/threaded have no pack step and pin
+    // the no-regression baseline.
+    let (sm, sk, sn, sgroup) = (1usize, 2048usize, 2048usize, 8usize);
+    let mut swf = vec![0f32; sk * sn];
+    rng.fill_normal(&mut swf, 0.0, 0.02);
+    let swq = PotTensor::quantize_2d(&swf, sk, sn, 5, None);
+    let sxs: Vec<PotTensor> = (0..sgroup)
+        .map(|_| {
+            let mut sx = vec![0f32; sm * sk];
+            rng.fill_normal(&mut sx, 0.0, 0.5);
+            PotTensor::quantize_2d(&sx, sm, sk, 5, None)
+        })
+        .collect();
+    let spairs: Vec<(&PotTensor, &PotTensor)> = sxs.iter().map(|x| (x, &swq)).collect();
+    let mut ts = Table::new(
+        &format!("cached-operand path — {sgroup} GEMMs of {sm}x{sk}x{sn} sharing one weight"),
+        &["engine", "singles mean", "shared-w batch mean", "speedup"],
+    );
+    for (name, engine) in &engines {
+        let batched = engine.matmul_batch(&spairs);
+        for ((x, w), got) in spairs.iter().zip(&batched) {
+            let want = engine.matmul(x, w);
+            assert!(
+                want.iter().zip(got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "engine '{name}' shared-w batch diverges from singles"
+            );
+        }
+        let t_single = bench(1, 3, || {
+            for (x, w) in &spairs {
+                std::hint::black_box(engine.matmul(x, w));
+            }
+        });
+        let t_batch = bench(1, 3, || {
+            std::hint::black_box(engine.matmul_batch(&spairs));
+        });
+        let speedup = t_single.mean().as_secs_f64() / t_batch.mean().as_secs_f64().max(1e-12);
+        ts.row(&[
+            name.to_string(),
+            fmt_duration(t_single.mean()),
+            fmt_duration(t_batch.mean()),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("shape".into(), Json::Str(format!("{sgroup}x({sm}x{sk}x{sn})")));
+        o.insert("engine".into(), Json::Str(name.to_string()));
+        o.insert("mode".into(), Json::Str("batch_shared_w".into()));
+        o.insert("mean_secs".into(), Json::Num(t_batch.mean().as_secs_f64()));
+        o.insert("singles_mean_secs".into(), Json::Num(t_single.mean().as_secs_f64()));
+        o.insert("batch_speedup".into(), Json::Num(speedup));
+        results.push(Json::Obj(o));
+    }
+    ts.note("one weight operand shared by the whole batch: the simd engine packs its \
+             k-panels once per call instead of once per GEMM (repack-hole fix)");
+    ts.print();
+
+    // ---- quantizer throughput: the SWAR f32 -> packed-code transform --
+    let qn = 1usize << 22;
+    let mut qx = vec![0f32; qn];
+    rng.fill_normal(&mut qx, 0.0, 0.05);
+    let tq = bench(1, 5, || {
+        std::hint::black_box(PotTensor::quantize(&qx, 5, None).beta);
+    });
+    let q_gbps = tq.throughput(4 * qn as u64) / 1e9;
+    println!(
+        "quantizer (SWAR): {qn} f32 in {} -> {q_gbps:.2} GB/s in, {:.1} Melem/s",
+        fmt_duration(tq.mean()),
+        tq.throughput(qn as u64) / 1e6
+    );
+    {
+        let mut o = BTreeMap::new();
+        o.insert("kernel".into(), Json::Str("quantize_swar".into()));
+        o.insert("elems".into(), Json::Num(qn as f64));
+        o.insert("mean_secs".into(), Json::Num(tq.mean().as_secs_f64()));
+        o.insert("gb_per_s_in".into(), Json::Num(q_gbps));
+        o.insert("melem_per_s".into(), Json::Num(tq.throughput(qn as u64) / 1e6));
+        results.push(Json::Obj(o));
+    }
+
     let mut root = BTreeMap::new();
     root.insert("bench".into(), Json::Str("mfmac_kernels".into()));
     root.insert("bits".into(), Json::Num(5.0));
@@ -280,6 +368,147 @@ fn shard_sweep() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Tensor-parallel k-shard sweep -> BENCH_kshard.json:
+///  (a) GEMM-level throughput of [`KShardEngine`] over the wide-k shape
+///      (64, 4096, 256) vs `kshard`, asserted bit-identical to the
+///      unsharded engine before timing;
+///  (b) sharded training-step throughput over the `workers x kshard`
+///      grid at a fixed total thread budget, digest-pinned across the
+///      grid (every cell is the same seeded run).
+fn kshard_sweep() -> anyhow::Result<()> {
+    use mftrain::coordinator::state_digest;
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::{engine_by_name, ShardPlan, ShardedMlp};
+
+    let mut results = Vec::new();
+    let mut rng = Pcg32::new(29);
+
+    // ---- (a) one wide-k GEMM split over k-slab threads ------------------
+    let (m, k, n) = (64usize, 4096usize, 256usize);
+    let mut x = vec![0f32; m * k];
+    let mut w = vec![0f32; k * n];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    rng.fill_normal(&mut w, 0.0, 0.02);
+    let xq = PotTensor::quantize_2d(&x, m, k, 5, None);
+    let wq = PotTensor::quantize_2d(&w, k, n, 5, None);
+    let macs = (m * k * n) as u64;
+    let reference = BlockedEngine::default().matmul(&xq, &wq);
+    let mut t = Table::new(
+        &format!("tensor-parallel k-sharding — one {m}x{k}x{n} GEMM, simd inner engine"),
+        &["kshard", "mean", "GMAC/s", "speedup vs kshard=1"],
+    );
+    let mut base_mean = 0f64;
+    for kshard in [1usize, 2, 4, 8] {
+        let eng = KShardEngine::new(engine_by_name("simd", 0).expect("registry"), kshard);
+        let y = eng.matmul(&xq, &wq);
+        assert!(
+            y.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "kshard={kshard} is not bit-exact with the unsharded engine"
+        );
+        let timing = bench(1, 5, || {
+            std::hint::black_box(eng.matmul(&xq, &wq));
+        });
+        let mean = timing.mean().as_secs_f64();
+        if kshard == 1 {
+            base_mean = mean;
+        }
+        let speedup = if mean > 0.0 { base_mean / mean } else { 0.0 };
+        t.row(&[
+            kshard.to_string(),
+            fmt_duration(timing.mean()),
+            format!("{:.2}", timing.throughput(macs) / 1e9),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("section".into(), Json::Str("gemm".into()));
+        o.insert("shape".into(), Json::Str(format!("{m}x{k}x{n}")));
+        o.insert("engine".into(), Json::Str("simd".into()));
+        o.insert("kshard".into(), Json::Num(kshard as f64));
+        o.insert("mean_secs".into(), Json::Num(mean));
+        o.insert("gmacs_per_s".into(), Json::Num(timing.throughput(macs) / 1e9));
+        o.insert("speedup_vs_kshard1".into(), Json::Num(speedup));
+        results.push(Json::Obj(o));
+    }
+    t.note("every row asserted bit-identical to the unsharded engine before timing; \
+            partial accumulators combine by exponent-aligned integer add");
+    t.print();
+
+    // ---- (b) training steps over the workers x kshard grid --------------
+    let dims = [512usize, 1024, 10];
+    let (batch, tile, classes) = (32usize, 8usize, 10usize);
+    let steps: usize = std::env::var("MFT_BENCH_KSHARD_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let mut x = vec![0f32; batch * dims[0]];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(classes as u32) as i32).collect();
+    let mut t = Table::new(
+        &format!(
+            "sharded MF training over the workers x kshard grid — batch {batch}, \
+             {} tiles of {tile}, {steps} timed steps, 4 total threads",
+            batch / tile
+        ),
+        &["workers", "kshard", "step mean", "steps/s", "speedup vs 1x1"],
+    );
+    let mut base_mean = 0f64;
+    let mut digest0 = None;
+    for (workers, kshard) in [(1usize, 1usize), (4, 1), (2, 2), (1, 4)] {
+        let plan = ShardPlan::new(batch, tile, workers)?.with_kshard(kshard)?;
+        let model = MfMlp::init(NnConfig::mf(&dims), 7);
+        let mut sharded = ShardedMlp::new(model, plan, "simd", 0)?;
+        sharded.train_step(&x, &y, 0.05); // warmup
+        let timing = bench(0, steps, || {
+            std::hint::black_box(sharded.train_step(&x, &y, 0.05).loss);
+        });
+        // every grid cell is the same seeded run: pin before reporting
+        let digest = state_digest(&sharded.model.state_to_vec());
+        match digest0 {
+            None => digest0 = Some(digest),
+            Some(d) => assert_eq!(d, digest, "W={workers} K={kshard} diverged from 1x1"),
+        }
+        let mean = timing.mean().as_secs_f64();
+        if workers == 1 && kshard == 1 {
+            base_mean = mean;
+        }
+        let speedup = if mean > 0.0 { base_mean / mean } else { 0.0 };
+        t.row(&[
+            workers.to_string(),
+            kshard.to_string(),
+            fmt_duration(timing.mean()),
+            format!("{:.1}", 1.0 / mean.max(1e-12)),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("section".into(), Json::Str("train_step".into()));
+        o.insert("workers".into(), Json::Num(workers as f64));
+        o.insert("kshard".into(), Json::Num(kshard as f64));
+        o.insert("mean_secs".into(), Json::Num(mean));
+        o.insert("steps_per_s".into(), Json::Num(1.0 / mean.max(1e-12)));
+        o.insert("speedup_vs_1x1".into(), Json::Num(speedup));
+        o.insert("state_digest".into(), Json::Str(format!("{digest:#x}")));
+        results.push(Json::Obj(o));
+    }
+    t.note("all grid cells verified bit-identical (same state digest) before timing is \
+            reported; the step runs the persistent worker pool + step-cached operands");
+    t.print();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("kshard_throughput".into()));
+    root.insert("gemm_shape".into(), Json::Str(format!("{m}x{k}x{n}")));
+    root.insert("batch".into(), Json::Num(batch as f64));
+    root.insert("tile".into(), Json::Num(tile as f64));
+    root.insert(
+        "dims".into(),
+        Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    root.insert("steps".into(), Json::Num(steps as f64));
+    root.insert("results".into(), Json::Arr(results));
+    std::fs::write("BENCH_kshard.json", Json::Obj(root).to_string())?;
+    println!("kshard sweep -> BENCH_kshard.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::var("MFT_BENCH_STEPS")
         .ok()
@@ -354,6 +583,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- sharded training throughput -> BENCH_shard.json ------------------
     shard_sweep()?;
+
+    // ---- tensor-parallel k-sharding -> BENCH_kshard.json ------------------
+    kshard_sweep()?;
 
     // ---- end-to-end step latency per variant ------------------------------
     let rt = match Runtime::cpu() {

@@ -116,20 +116,24 @@ USAGE:
             [--backend auto|pjrt|native]
             [--engine scalar|blocked|threaded|simd|auto]
             [--threads N] [--bits 3..6] [--workers N] [--shard-tile P]
-            [--momentum F] [--weight-decay F]
+            [--kshard K] [--momentum F] [--weight-decay F]
             # native backend: the in-process multiplication-free trainer
             # (no artifacts needed); variants: mlp_mf, mlp_fp32,
             # tiny_mlp_mf, tiny_mlp_fp32. --workers N shards the batch
-            # over N data-parallel threads (seeded runs are bit-identical
-            # for any N); momentum/weight-decay are PoT-snapped so the
+            # over N data-parallel threads and --kshard K additionally
+            # splits every GEMM's reduction dim over K slab threads (the
+            # workers x kshard grid; seeded runs are bit-identical for
+            # any N and K); momentum/weight-decay are PoT-snapped so the
             # update stays multiplication-free
   mft eval --variant <name> --checkpoint <path> [--batches N]
            [--engine ...] [--threads N] [--bits N] [--workers N]
+           [--kshard K]
            # native checkpoints; --threads sizes the threaded engine,
-           # --workers parallelizes eval over shard tiles
+           # --workers parallelizes eval over shard tiles, --kshard over
+           # k-slabs
   mft energy [--model resnet50] [--batch 256] [--overhead]
   mft census [--variant mlp_mf] [--engine ...] [--threads N] [--bits N]
-             [--workers N] [--seed N] [--lr F] [--json out.json]
+             [--workers N] [--kshard K] [--seed N] [--lr F] [--json out.json]
              # measured per-GEMM live-MAC energy from one real native
              # training step (the measured counterpart of `mft energy`)
   mft kernels [--engine scalar|blocked|threaded|simd|auto] [--threads N]

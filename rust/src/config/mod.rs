@@ -81,6 +81,12 @@ pub struct TrainConfig {
     /// rows per shard microbatch tile (power of two dividing the batch);
     /// 0 = auto (four tiles per batch)
     pub shard_tile: usize,
+    /// tensor-parallel k-shard factor (`mft train --kshard K`): every
+    /// linear-layer GEMM's reduction dimension is split into K slabs
+    /// whose exact integer partials combine by exponent-aligned add.
+    /// Must be >= 1; bit-identical for any value (a throughput knob,
+    /// composing with `workers` into a workers x kshard grid).
+    pub kshard: usize,
 }
 
 impl Default for TrainConfig {
@@ -114,6 +120,7 @@ impl Default for TrainConfig {
             weight_decay: 0.0,
             workers: 1,
             shard_tile: 0,
+            kshard: 1,
         }
     }
 }
@@ -169,6 +176,7 @@ impl TrainConfig {
             weight_decay: doc.f64_or("native.weight_decay", d.weight_decay as f64) as f32,
             workers: doc.i64_or("shard.workers", d.workers as i64) as usize,
             shard_tile: doc.i64_or("shard.tile", d.shard_tile as i64) as usize,
+            kshard: doc.i64_or("shard.kshard", d.kshard as i64) as usize,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -217,6 +225,9 @@ impl TrainConfig {
         }
         if self.shard_tile != 0 && !self.shard_tile.is_power_of_two() {
             bail!("shard.tile must be a power of two (or 0 for auto), got {}", self.shard_tile);
+        }
+        if self.kshard == 0 {
+            bail!("kshard must be >= 1 (got 0); use 1 for no k-sharding");
         }
         Ok(())
     }
@@ -338,24 +349,30 @@ weight_decay = 0.0005
 [shard]
 workers = 4
 tile = 4
+kshard = 2
 "#,
         )
         .unwrap();
         let cfg = TrainConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.shard_tile, 4);
+        assert_eq!(cfg.kshard, 2);
         assert!((cfg.momentum - 0.9).abs() < 1e-6);
         assert!((cfg.weight_decay - 5e-4).abs() < 1e-9);
         // defaults
         let d = TrainConfig::default();
         assert_eq!(d.workers, 1);
         assert_eq!(d.shard_tile, 0, "0 = auto tile");
+        assert_eq!(d.kshard, 1, "k-sharding defaults off");
         assert_eq!(d.momentum, 0.0);
         assert_eq!(d.weight_decay, 0.0);
         // bad values are rejected with clear messages
         let doc = toml::Doc::parse("[shard]\nworkers = 0\n").unwrap();
         let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
         assert!(err.contains("workers must be >= 1"), "{err}");
+        let doc = toml::Doc::parse("[shard]\nkshard = 0\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("kshard must be >= 1"), "{err}");
         for bad in [
             "[shard]\ntile = 3\n",
             "[native]\nmomentum = 1.0\n",

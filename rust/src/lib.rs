@@ -22,12 +22,18 @@
 //!   gamma, straight-through grad), and a PoT-snapped multiplication-free
 //!   optimizer (lr, momentum decay and weight decay all applied by
 //!   exponent add), with a per-step op census proving zero FP32
-//!   multiplies in linear layers. `potq::shard` scales the loop out:
-//!   `ShardPlan` splits the batch into worker-independent microbatch
-//!   tiles, `ShardedMlp` runs them on data-parallel worker threads (one
-//!   MacEngine each) and combines gradients multiplication-free (FP32
-//!   adds + a PoT-snapped 1/n_tiles exponent add), so a seeded run is
-//!   bit-identical for any `--workers N`.
+//!   multiplies in linear layers. `potq::shard` scales the loop out on
+//!   two axes: `ShardPlan` splits the batch into worker-independent
+//!   microbatch tiles executed by a persistent worker pool (one
+//!   MacEngine each, built once), and its `kshard` factor
+//!   tensor-parallelizes every GEMM's reduction dimension
+//!   (`KShardEngine`: exact integer k-slab partials combined by
+//!   exponent-aligned add). A step-persistent operand cache
+//!   (`StepWeights` of `PackedOperand`s) quantizes and k-panel-packs the
+//!   weights once per step for every tile/worker/slab; gradients combine
+//!   multiplication-free (FP32 adds + a PoT-snapped 1/n_tiles exponent
+//!   add), so a seeded run is bit-identical for any
+//!   `--workers N --kshard K`.
 //! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1), including
 //!   the dynamic MAC census derived from packed codes (`mfmac_census`).
 //! * [`runtime`] — execution backends behind the `SessionBackend`

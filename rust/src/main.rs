@@ -51,6 +51,7 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.bits = args.u64_flag("bits", cfg.bits as u64)? as u32;
     cfg.workers = args.u64_flag("workers", cfg.workers as u64)? as usize;
     cfg.shard_tile = args.u64_flag("shard-tile", cfg.shard_tile as u64)? as usize;
+    cfg.kshard = args.u64_flag("kshard", cfg.kshard as u64)? as usize;
     if args.flags.contains_key("momentum") {
         cfg.momentum = args.f64_flag("momentum", cfg.momentum as f64)? as f32;
     }
@@ -111,10 +112,11 @@ fn cmd_train(args: &Args) -> Result<()> {
             .and_then(|e| e.vector_path().map(|p| format!(", {p} path")))
             .unwrap_or_default();
         println!(
-            "[mft] backend: native ({} engine{path}, {} worker{})",
+            "[mft] backend: native ({} engine{path}, {} worker{} x {} kshard)",
             cfg.engine,
             cfg.workers,
-            if cfg.workers == 1 { "" } else { "s" }
+            if cfg.workers == 1 { "" } else { "s" },
+            cfg.kshard
         );
         let mut trainer = Trainer::native(cfg)?;
         run_and_report(&mut trainer)
@@ -170,6 +172,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.bits = args.u64_flag("bits", cfg.bits as u64)? as u32;
         cfg.workers = args.u64_flag("workers", cfg.workers as u64)? as usize;
         cfg.shard_tile = args.u64_flag("shard-tile", cfg.shard_tile as u64)? as usize;
+        cfg.kshard = args.u64_flag("kshard", cfg.kshard as u64)? as usize;
         cfg.validate()?;
         let mut session = NativeSession::from_config(&cfg)?;
         session.state_from_host(&ckpt.state)?;
@@ -257,10 +260,11 @@ fn cmd_census(args: &Args) -> Result<()> {
     let plan = s.plan();
     let mut t = Table::new(
         &format!(
-            "measured MF-MAC census — {variant}, one train step ({} engine, {} workers, \
-             {} tiles of {})",
+            "measured MF-MAC census — {variant}, one train step ({} engine, {} workers x \
+             {} kshard, {} tiles of {})",
             s.engine_name(),
             plan.effective_workers(),
+            plan.kshard,
             plan.n_tiles,
             plan.tile
         ),
@@ -319,6 +323,7 @@ fn cmd_census(args: &Args) -> Result<()> {
         o.insert("variant".to_string(), Json::Str(variant.to_string()));
         o.insert("engine".to_string(), Json::Str(s.engine_name().to_string()));
         o.insert("workers".to_string(), Json::Num(plan.effective_workers() as f64));
+        o.insert("kshard".to_string(), Json::Num(plan.kshard as f64));
         o.insert("n_tiles".to_string(), Json::Num(plan.n_tiles as f64));
         o.insert("linear_fp32_muls".to_string(), Json::Num(census.linear_fp32_muls as f64));
         o.insert("overhead_fp32_muls".to_string(), Json::Num(census.overhead_fp32_muls as f64));

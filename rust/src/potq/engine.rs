@@ -23,7 +23,9 @@
 //! [64, 124] iff both operands are nonzero, so entries below 64 are zero
 //! and zero operands cost nothing — no branch in the inner loop.
 
-use super::quantize::{pot_emax, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT};
+use super::quantize::{
+    pot_emax, PackedOperand, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT,
+};
 
 /// Saturation behaviour of the hardware INT32 accumulator.
 #[derive(Clone, Debug, Default)]
@@ -74,6 +76,53 @@ pub trait MacEngine: Sync {
     /// engines. `mft kernels` surfaces this.
     fn vector_path(&self) -> Option<&'static str> {
         None
+    }
+
+    /// Exact integer partial accumulators of the k-slab `[k0, k1)`:
+    /// `out[i*n + j]` in the pair's **full-k** fixed point (tile shifts
+    /// normalized by the dmin computed over all of k, see
+    /// [`k_tile_shifts`]), so the partials of any disjoint slab cover of
+    /// `[0, k)` combine by plain integer add — the tensor-parallel
+    /// k-shard contract. [`finish_kslabs`] applies the one shared
+    /// rounding. The default is the reference scalar schedule; engines
+    /// with a faster kernel override it (results are bit-identical either
+    /// way because integer addition is associative).
+    fn matmul_kslab(&self, x: &PotTensor, w: &PotTensor, k0: usize, k1: usize) -> Vec<i128> {
+        kslab_acc_reference(x, w, k0, k1)
+    }
+
+    /// [`MacEngine::matmul`] against a step-persistent [`PackedOperand`]
+    /// `w`. The default ignores the cached panel layout; panel-consuming
+    /// engines override to skip their per-call repack. Must be
+    /// bit-identical to `matmul(x, w.tensor())`.
+    fn matmul_packed(&self, x: &PotTensor, w: &PackedOperand) -> Vec<f32> {
+        self.matmul(x, w.tensor())
+    }
+
+    /// [`MacEngine::matmul_kslab`] against a step-persistent
+    /// [`PackedOperand`] whose cut grid includes the slab boundaries.
+    fn matmul_kslab_packed(
+        &self,
+        x: &PotTensor,
+        w: &PackedOperand,
+        k0: usize,
+        k1: usize,
+    ) -> Vec<i128> {
+        self.matmul_kslab(x, w.tensor(), k0, k1)
+    }
+
+    /// The backward pass's (dX, dW) GEMM pair in one call: dX against the
+    /// step-cached weight transpose, dW against plain per-tile operands.
+    /// Exists so engines with internal parallelism can overlap the two
+    /// GEMMs (the cached counterpart of issuing them through
+    /// [`MacEngine::matmul_batch`]); the default runs them sequentially.
+    /// Must be bit-identical to the two separate calls.
+    fn matmul_backward_pair(
+        &self,
+        dx: (&PotTensor, &PackedOperand),
+        dw: (&PotTensor, &PotTensor),
+    ) -> (Vec<f32>, Vec<f32>) {
+        (self.matmul_packed(dx.0, dx.1), self.matmul(dw.0, dw.1))
     }
 }
 
@@ -189,6 +238,88 @@ pub(crate) fn run_args(x: &PotTensor, w: &PotTensor, k: usize) -> (Vec<(usize, u
     (k_shift_runs(kshifts.as_deref(), k), scale)
 }
 
+/// Split `[0, k)` into at most `kshard` contiguous slabs of equal ceil
+/// width (the last may be short; `kshard > k` degrades to one-column
+/// slabs). Empty for `k == 0`.
+pub fn kslab_bounds(k: usize, kshard: usize) -> Vec<(usize, usize)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let width = k.div_ceil(kshard.clamp(1, k));
+    (0..k)
+        .step_by(width)
+        .map(|k0| (k0, (k0 + width).min(k)))
+        .collect()
+}
+
+/// Interior cut points of [`kslab_bounds`] — the extra splits a
+/// step-persistent [`PackedOperand`] needs so k-shard workers can serve
+/// their slabs straight from the cached panel layout.
+pub fn kshard_cuts(k: usize, kshard: usize) -> Vec<usize> {
+    kslab_bounds(k, kshard).iter().skip(1).map(|&(k0, _)| k0).collect()
+}
+
+/// Validate a k-slab request against an operand pair: the one shared
+/// bounds check every `matmul_kslab` implementation goes through, so the
+/// slab contract lives in exactly one place. Returns (m, k, n).
+pub(crate) fn check_kslab(x: &PotTensor, w: &PotTensor, k0: usize, k1: usize)
+    -> (usize, usize, usize) {
+    let (m, k, n) = dims2(x, w);
+    assert!(k0 <= k1 && k1 <= k, "k-slab [{k0}, {k1}) out of [0, {k}]");
+    (m, k, n)
+}
+
+/// Reference (scalar-schedule) k-slab partial accumulators — the default
+/// every [`MacEngine::matmul_kslab`] override must match bit for bit.
+/// Shifts use the pair's full-k plan so disjoint slabs share one fixed
+/// point.
+pub(crate) fn kslab_acc_reference(
+    x: &PotTensor,
+    w: &PotTensor,
+    k0: usize,
+    k1: usize,
+) -> Vec<i128> {
+    let (m, k, n) = check_kslab(x, w, k0, k1);
+    let (kshifts, _) = tile_args(x, w, k);
+    let (xc, wc) = (x.codes(), w.codes());
+    let mut acc = vec![0i128; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let a = &mut acc[i * n + j];
+            for p in k0..k1 {
+                let cx = xc[i * k + p];
+                let cw = wc[p * n + j];
+                let (mx, mw) = ((cx & MAG_MASK) as i32, (cw & MAG_MASK) as i32);
+                if mx == 0 || mw == 0 {
+                    continue;
+                }
+                let extra = kshifts.as_ref().map_or(0, |s| s[p]);
+                let term = 1i128 << ((mx + mw - 2 * MAG_OFFSET) as u32 + extra);
+                *a += if (cx ^ cw) & SIGN_BIT != 0 { -term } else { term };
+            }
+        }
+    }
+    acc
+}
+
+/// The k-shard combine: sum per-slab partial accumulators by plain
+/// integer add (exact, order-free — the "exponent-aligned" alignment is
+/// the shared full-k fixed point every [`MacEngine::matmul_kslab`] call
+/// emits) and apply the single shared [`finish`] rounding. Bit-identical
+/// to the unsharded matmul for any disjoint slab cover of `[0, k)`.
+pub fn finish_kslabs(x: &PotTensor, w: &PotTensor, partials: &[Vec<i128>]) -> Vec<f32> {
+    let (m, k, n) = dims2(x, w);
+    let (_, scale) = tile_args(x, w, k);
+    let mut acc = vec![0i128; m * n];
+    for part in partials {
+        assert_eq!(part.len(), m * n, "slab partial has the wrong lane count");
+        for (a, &p) in acc.iter_mut().zip(part) {
+            *a += p;
+        }
+    }
+    acc.iter().map(|&a| finish(a, scale)).collect()
+}
+
 /// 256-entry signed pow2 LUT indexed by the packed code sum (see module
 /// docs). Entries are term values in accumulator LSBs: +/- 2^(magsum-64)
 /// for live magnitude sums, 0 for any sum involving a zero code. Built at
@@ -291,18 +422,49 @@ fn matmul_blocked_band(
     scale: f64,
     out_band: &mut [f32],
 ) {
-    let (mc, kc, nc) = tiles;
     let band = i1 - i0;
     debug_assert_eq!(out_band.len(), band * n);
     if band == 0 || n == 0 {
         return;
     }
-    let (xc, wc) = (x.codes(), w.codes());
     let mut acc = vec![0i128; band * n];
+    blocked_band_acc(x, w, k, n, i0, i1, (0, k), tiles, lut, runs, &mut acc);
+    for (o, &a) in out_band.iter_mut().zip(acc.iter()) {
+        *o = finish(a, scale);
+    }
+}
+
+/// The cache-tiled accumulator core: adds the k-window `[kwin.0, kwin.1)`
+/// of the reduction into `acc` (length `(i1-i0)*n`, pair-LSB fixed
+/// point). [`matmul_blocked_band`] runs it over the full window; the
+/// k-shard entry points run one slab each — integer accumulation is
+/// associative, so every window split produces the identical total.
+#[allow(clippy::too_many_arguments)]
+fn blocked_band_acc(
+    x: &PotTensor,
+    w: &PotTensor,
+    k: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+    kwin: (usize, usize),
+    tiles: (usize, usize, usize),
+    lut: &[i64; 256],
+    runs: &[(usize, usize, u32)],
+    acc: &mut [i128],
+) {
+    let (mc, kc, nc) = tiles;
+    let band = i1 - i0;
+    debug_assert_eq!(acc.len(), band * n);
+    if band == 0 || n == 0 || kwin.1 <= kwin.0 {
+        return;
+    }
+    let (xc, wc) = (x.codes(), w.codes());
     for jc in (0..n).step_by(nc.max(1)) {
         let je = (jc + nc).min(n);
-        for pc in (0..k).step_by(kc.max(1)) {
-            let pe = (pc + kc).min(k);
+        let mut pc = kwin.0;
+        while pc < kwin.1 {
+            let pe = (pc + kc.max(1)).min(kwin.1);
             for ic in (i0..i1).step_by(mc.max(1)) {
                 let ie = (ic + mc).min(i1);
                 for i in ic..ie {
@@ -332,10 +494,8 @@ fn matmul_blocked_band(
                     }
                 }
             }
+            pc = pe;
         }
-    }
-    for (o, &a) in out_band.iter_mut().zip(acc.iter()) {
-        *o = finish(a, scale);
     }
 }
 
@@ -492,6 +652,20 @@ impl MacEngine for BlockedEngine {
             })
             .collect()
     }
+
+    /// Cache-tiled k-slab partials (the blocked core over one k-window).
+    fn matmul_kslab(&self, x: &PotTensor, w: &PotTensor, k0: usize, k1: usize) -> Vec<i128> {
+        let (m, k, n) = check_kslab(x, w, k0, k1);
+        let (runs, _) = run_args(x, w, k);
+        let mut acc = vec![0i128; m * n];
+        blocked_band_acc(
+            x, w, k, n, 0, m,
+            (k0, k1),
+            (self.mc, self.kc, self.nc),
+            pow2_lut(), &runs, &mut acc,
+        );
+        acc
+    }
 }
 
 /// Row-band parallelism over the blocked kernel (`--threads N`).
@@ -608,6 +782,33 @@ impl MacEngine for ThreadedEngine {
         outs
     }
 
+    /// Row-band-parallel k-slab partials (each band runs the blocked core
+    /// over the slab window; bands write disjoint accumulator chunks).
+    fn matmul_kslab(&self, x: &PotTensor, w: &PotTensor, k0: usize, k1: usize) -> Vec<i128> {
+        let (m, k, n) = check_kslab(x, w, k0, k1);
+        let tiles = (self.inner.mc, self.inner.kc, self.inner.nc);
+        let lut = pow2_lut();
+        let (runs, _) = run_args(x, w, k);
+        let mut acc = vec![0i128; m * n];
+        let workers = self.worker_count(m);
+        let band = ((m + workers - 1) / workers.max(1)).max(1);
+        if workers <= 1 || m == 0 || n == 0 {
+            blocked_band_acc(x, w, k, n, 0, m, (k0, k1), tiles, lut, &runs, &mut acc);
+            return acc;
+        }
+        std::thread::scope(|s| {
+            for (b, chunk) in acc.chunks_mut(band * n).enumerate() {
+                let runs = &runs;
+                s.spawn(move || {
+                    let i0 = b * band;
+                    let i1 = (i0 + band).min(m);
+                    blocked_band_acc(x, w, k, n, i0, i1, (k0, k1), tiles, lut, runs, chunk);
+                });
+            }
+        });
+        acc
+    }
+
     fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
         // mirrors run_bands, but joins handles to collect per-band reports;
         // keep the band math here and in run_bands in lockstep
@@ -645,6 +846,176 @@ impl MacEngine for ThreadedEngine {
             rep.peak_magnitude = rep.peak_magnitude.max(r.peak_magnitude);
         }
         (out, rep)
+    }
+}
+
+/// Tensor-parallel k-sharding over any inner engine: one GEMM's reduction
+/// dimension is split into `kshard` contiguous slabs ([`kslab_bounds`]),
+/// each computed as an exact integer partial accumulator on its own
+/// scoped worker thread ([`MacEngine::matmul_kslab`]), and the partials
+/// combine by exponent-aligned integer add before the single dequantize
+/// ([`finish_kslabs`]). Integer addition is associative and every slab
+/// shares the pair's full-k fixed point, so the result is bit-identical
+/// to the inner engine's unsharded matmul for **any** `kshard` — the
+/// determinism law the k-shard props and checkpoint digests pin. The
+/// INT32-saturating model is order-sensitive by design (one canonical
+/// ascending-p schedule per lane), so it always delegates unsharded.
+pub struct KShardEngine {
+    inner: Box<dyn MacEngine + Send>,
+    pub kshard: usize,
+}
+
+impl KShardEngine {
+    pub fn new(inner: Box<dyn MacEngine + Send>, kshard: usize) -> KShardEngine {
+        assert!(kshard >= 1, "kshard must be >= 1");
+        KShardEngine { inner, kshard }
+    }
+
+    /// Compute all slab partials of one pair on scoped worker threads,
+    /// returned in slab order. `packed` routes slabs through the cached
+    /// panel layout when the caller holds one.
+    fn slab_accs(
+        &self,
+        x: &PotTensor,
+        w: &PotTensor,
+        k: usize,
+        packed: Option<&PackedOperand>,
+    ) -> Vec<Vec<i128>> {
+        let bounds = kslab_bounds(k, self.kshard);
+        let inner = &self.inner;
+        let mut parts: Vec<Option<Vec<i128>>> = (0..bounds.len()).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = bounds
+                .iter()
+                .map(|&(k0, k1)| {
+                    s.spawn(move || match packed {
+                        Some(p) => inner.matmul_kslab_packed(x, p, k0, k1),
+                        None => inner.matmul_kslab(x, w, k0, k1),
+                    })
+                })
+                .collect();
+            for (slot, h) in parts.iter_mut().zip(handles) {
+                *slot = Some(h.join().expect("k-shard slab worker panicked"));
+            }
+        });
+        parts.into_iter().map(|p| p.expect("every slab computed")).collect()
+    }
+}
+
+impl MacEngine for KShardEngine {
+    /// Transparent: reports the inner engine (k-sharding is a schedule,
+    /// not a numeric variant).
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn vector_path(&self) -> Option<&'static str> {
+        self.inner.vector_path()
+    }
+
+    fn matmul(&self, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
+        let (_, k, _) = dims2(x, w);
+        if self.kshard <= 1 || k <= 1 {
+            return self.inner.matmul(x, w);
+        }
+        let parts = self.slab_accs(x, w, k, None);
+        finish_kslabs(x, w, &parts)
+    }
+
+    fn matmul_packed(&self, x: &PotTensor, w: &PackedOperand) -> Vec<f32> {
+        let (_, k, _) = dims2(x, w.tensor());
+        if self.kshard <= 1 || k <= 1 {
+            return self.inner.matmul_packed(x, w);
+        }
+        let parts = self.slab_accs(x, w.tensor(), k, Some(w));
+        finish_kslabs(x, w.tensor(), &parts)
+    }
+
+    /// One thread scope over the whole (pair × slab) grid, so the small
+    /// backward-pass GEMMs overlap across pairs as well as slabs.
+    fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
+        if self.kshard <= 1 {
+            return self.inner.matmul_batch(pairs);
+        }
+        let dims: Vec<(usize, usize, usize)> = pairs.iter().map(|(x, w)| dims2(x, w)).collect();
+        let inner = &self.inner;
+        let mut parts: Vec<Vec<Vec<i128>>> = (0..pairs.len()).map(|_| Vec::new()).collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (idx, &(_, k, _)) in dims.iter().enumerate() {
+                let (x, w) = pairs[idx];
+                for (k0, k1) in kslab_bounds(k, self.kshard) {
+                    handles.push((idx, s.spawn(move || inner.matmul_kslab(x, w, k0, k1))));
+                }
+            }
+            for (idx, h) in handles {
+                parts[idx].push(h.join().expect("k-shard slab worker panicked"));
+            }
+        });
+        pairs
+            .iter()
+            .zip(&parts)
+            .map(|((x, w), p)| finish_kslabs(x, w, p))
+            .collect()
+    }
+
+    /// Both backward GEMMs' (pair × slab) grids under one thread scope,
+    /// so dW's slabs never idle-wait behind dX's — the overlap the
+    /// uncached path gets from `matmul_batch`.
+    fn matmul_backward_pair(
+        &self,
+        dx: (&PotTensor, &PackedOperand),
+        dw: (&PotTensor, &PotTensor),
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (gq, pwt) = dx;
+        let (aqt, gw) = dw;
+        let (_, kx, _) = dims2(gq, pwt.tensor());
+        let (_, kw, _) = dims2(aqt, gw);
+        if self.kshard <= 1 || (kx <= 1 && kw <= 1) {
+            return self.inner.matmul_backward_pair(dx, dw);
+        }
+        let bx = kslab_bounds(kx, self.kshard);
+        let bw = kslab_bounds(kw, self.kshard);
+        let inner = &self.inner;
+        let mut px: Vec<Option<Vec<i128>>> = (0..bx.len()).map(|_| None).collect();
+        let mut pw: Vec<Option<Vec<i128>>> = (0..bw.len()).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let hx: Vec<_> = bx
+                .iter()
+                .map(|&(k0, k1)| s.spawn(move || inner.matmul_kslab_packed(gq, pwt, k0, k1)))
+                .collect();
+            let hw: Vec<_> = bw
+                .iter()
+                .map(|&(k0, k1)| s.spawn(move || inner.matmul_kslab(aqt, gw, k0, k1)))
+                .collect();
+            for (slot, h) in px.iter_mut().zip(hx) {
+                *slot = Some(h.join().expect("k-shard slab worker panicked"));
+            }
+            for (slot, h) in pw.iter_mut().zip(hw) {
+                *slot = Some(h.join().expect("k-shard slab worker panicked"));
+            }
+        });
+        let px: Vec<Vec<i128>> = px.into_iter().map(|p| p.expect("slab computed")).collect();
+        let pw: Vec<Vec<i128>> = pw.into_iter().map(|p| p.expect("slab computed")).collect();
+        (finish_kslabs(gq, pwt.tensor(), &px), finish_kslabs(aqt, gw, &pw))
+    }
+
+    fn matmul_i32_saturating(&self, x: &PotTensor, w: &PotTensor) -> (Vec<f32>, SaturationReport) {
+        self.inner.matmul_i32_saturating(x, w)
+    }
+
+    fn matmul_kslab(&self, x: &PotTensor, w: &PotTensor, k0: usize, k1: usize) -> Vec<i128> {
+        self.inner.matmul_kslab(x, w, k0, k1)
+    }
+
+    fn matmul_kslab_packed(
+        &self,
+        x: &PotTensor,
+        w: &PackedOperand,
+        k0: usize,
+        k1: usize,
+    ) -> Vec<i128> {
+        self.inner.matmul_kslab_packed(x, w, k0, k1)
     }
 }
 
@@ -984,6 +1355,116 @@ mod tests {
             covered = p1;
         }
         assert_eq!(covered, 8);
+    }
+
+    #[test]
+    fn kslab_bounds_cover_and_clamp() {
+        assert_eq!(kslab_bounds(8, 2), vec![(0, 4), (4, 8)]);
+        assert_eq!(kslab_bounds(7, 3), vec![(0, 3), (3, 6), (6, 7)]);
+        assert_eq!(kslab_bounds(3, 8), vec![(0, 1), (1, 2), (2, 3)], "kshard > k");
+        assert_eq!(kslab_bounds(5, 1), vec![(0, 5)]);
+        assert!(kslab_bounds(0, 4).is_empty());
+        // slabs tile [0, k) exactly
+        for (k, s) in [(17usize, 4usize), (64, 8), (9, 2)] {
+            let b = kslab_bounds(k, s);
+            assert!(b.len() <= s);
+            let mut covered = 0;
+            for &(k0, k1) in &b {
+                assert_eq!(k0, covered);
+                assert!(k1 > k0);
+                covered = k1;
+            }
+            assert_eq!(covered, k);
+        }
+        assert_eq!(kshard_cuts(8, 2), vec![4]);
+        assert_eq!(kshard_cuts(8, 1), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn kslab_partials_sum_to_the_full_matmul() {
+        // irregular slab covers on every engine: partials combined by
+        // integer add reproduce matmul bit for bit, tiled or untiled
+        let (m, k, n) = (5, 23, 4);
+        let x = rand_tiled(1000, m, k, 1, 8);
+        let w = rand_tiled(1001, k, n, 0, 8);
+        let xu = rand_tensor(1002, m, k, 0.5, 5);
+        let engines: [Box<dyn MacEngine>; 3] = [
+            Box::new(ScalarEngine),
+            Box::new(BlockedEngine::with_tiles(3, 5, 2)),
+            Box::new(ThreadedEngine::new(3)),
+        ];
+        for (xo, wo) in [(&x, &w), (&xu, &w)] {
+            let want = ScalarEngine.matmul(xo, wo);
+            for cuts in [vec![0usize, 23], vec![0, 1, 22, 23], vec![0, 7, 9, 16, 23]] {
+                for eng in &engines {
+                    let parts: Vec<Vec<i128>> = cuts
+                        .windows(2)
+                        .map(|p| eng.matmul_kslab(xo, wo, p[0], p[1]))
+                        .collect();
+                    let got = finish_kslabs(xo, wo, &parts);
+                    assert_bits_eq(&want, &got, &format!("{} cuts {cuts:?}", eng.name()));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kshard_engine_bit_exact_and_transparent() {
+        let (m, k, n) = (7, 29, 5);
+        let x = rand_tiled(1100, m, k, 1, 4);
+        let w = rand_tiled(1101, k, n, 0, 4);
+        let want = ScalarEngine.matmul(&x, &w);
+        for name in ENGINE_NAMES {
+            for kshard in [1usize, 2, 3, 4, 64] {
+                let eng = KShardEngine::new(engine_by_name(name, 2).unwrap(), kshard);
+                assert_eq!(eng.name(), name, "k-sharding must be transparent");
+                let got = eng.matmul(&x, &w);
+                assert_bits_eq(&want, &got, &format!("{name} kshard={kshard}"));
+                // batched entry point too
+                let pairs = [(&x, &w), (&x, &w)];
+                for out in eng.matmul_batch(&pairs) {
+                    assert_bits_eq(&want, &out, &format!("{name} kshard={kshard} batch"));
+                }
+                // saturating model delegates to the canonical schedule
+                let (ys, rs) = ScalarEngine.matmul_i32_saturating(&x, &w);
+                let (yk, rk) = eng.matmul_i32_saturating(&x, &w);
+                assert_bits_eq(&ys, &yk, &format!("{name} kshard={kshard} sat"));
+                assert_eq!(rs.saturated_lanes, rk.saturated_lanes);
+            }
+        }
+        // k = 0 stays a legal empty reduction
+        let x0 = PotTensor::quantize_2d(&[], 4, 0, 5, None);
+        let w0 = PotTensor::quantize_2d(&[], 0, 6, 5, None);
+        let eng = KShardEngine::new(engine_by_name("blocked", 1).unwrap(), 4);
+        let y = eng.matmul(&x0, &w0);
+        assert_eq!(y.len(), 24);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn matmul_packed_matches_plain_on_every_engine() {
+        use crate::potq::quantize::PackedOperand;
+        let (m, k, n) = (6, 24, 5);
+        let x = rand_tensor(1200, m, k, 0.5, 5);
+        let w = rand_tiled(1201, k, n, 0, 8);
+        let want = ScalarEngine.matmul(&x, &w);
+        let packed = PackedOperand::new(w.clone(), &kshard_cuts(k, 3));
+        for name in ENGINE_NAMES {
+            let eng = engine_by_name(name, 2).unwrap();
+            let got = eng.matmul_packed(&x, &packed);
+            assert_bits_eq(&want, &got, &format!("{name} packed"));
+            // k-sharded against the cache too
+            let keng = KShardEngine::new(engine_by_name(name, 2).unwrap(), 3);
+            let got = keng.matmul_packed(&x, &packed);
+            assert_bits_eq(&want, &got, &format!("{name} kshard packed"));
+            // the overlapped backward pair matches the separate calls
+            let (dx, dw) = eng.matmul_backward_pair((&x, &packed), (&x, &w));
+            assert_bits_eq(&want, &dx, &format!("{name} backward dx"));
+            assert_bits_eq(&want, &dw, &format!("{name} backward dw"));
+            let (dx, dw) = keng.matmul_backward_pair((&x, &packed), (&x, &w));
+            assert_bits_eq(&want, &dx, &format!("{name} kshard backward dx"));
+            assert_bits_eq(&want, &dw, &format!("{name} kshard backward dw"));
+        }
     }
 
     #[test]

@@ -40,8 +40,8 @@
 use crate::energy::{mfmac_census, MacCensus};
 use crate::util::prng::Pcg32;
 
-use super::engine::MacEngine;
-use super::quantize::{round_log2_abs, scale_pow2, PotTensor};
+use super::engine::{kshard_cuts, MacEngine};
+use super::quantize::{round_log2_abs, scale_pow2, PackedOperand, PotTensor};
 use super::{ratio_clip, weight_bias_correction};
 
 /// Lower clamp for the learnable PRC gamma (an all-clipping layer would
@@ -247,7 +247,35 @@ pub struct StepResult {
 struct FwCache {
     amax: f32,
     aq: Option<PotTensor>,
+    /// per-tile weight quantization — `None` when a [`StepWeights`] cache
+    /// supplies the operand instead
     wq: Option<PotTensor>,
+}
+
+/// The step-persistent weight-operand cache: per layer, the WBC'd +
+/// ALS-quantized weight and its code transpose, k-panel-packed **once**
+/// per optimizer step and shared across the forward and dX GEMMs of every
+/// microbatch tile and every shard worker. Weights only change in
+/// [`MfMlp::apply_grads`], and quantization is deterministic, so the
+/// cached codes are the identical bytes each tile would have recomputed —
+/// cached and uncached runs are bit-identical (pinned in tests). The dW
+/// GEMM's weight-side operand is the per-tile gradient, which is why it
+/// stays outside the cache.
+pub struct StepWeights {
+    /// per layer: (wq on (fan_in, fan_out), wq_t on (fan_out, fan_in))
+    layers: Vec<(PackedOperand, PackedOperand)>,
+}
+
+impl StepWeights {
+    /// The cached forward operand of layer `l`.
+    pub fn fw(&self, l: usize) -> &PackedOperand {
+        &self.layers[l].0
+    }
+
+    /// The cached dX operand (the code transpose) of layer `l`.
+    pub fn dx(&self, l: usize) -> &PackedOperand {
+        &self.layers[l].1
+    }
 }
 
 /// The native multiplication-free MLP.
@@ -346,6 +374,31 @@ impl MfMlp {
         self.forward_backward(x, y, engine, false, true)
     }
 
+    /// Build the step's weight-operand cache (see [`StepWeights`]).
+    /// `kshard` adds the tensor-parallel slab boundaries to the packed
+    /// cut grids so k-sharded engines serve their slabs straight from the
+    /// cached panels. FP32-scheme models carry no quantized operands, so
+    /// their cache is empty (and ignored by the pass).
+    pub fn prepare_step_weights(&self, kshard: usize) -> StepWeights {
+        if self.cfg.scheme != Scheme::Mf {
+            return StepWeights { layers: Vec::new() };
+        }
+        let bits = self.cfg.bits;
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let wc = weight_bias_correction(&l.w);
+                let wq = PotTensor::quantize_2d(&wc, l.fan_in, l.fan_out, bits, None);
+                let wq_t = wq.transpose2d();
+                let fw = PackedOperand::new(wq, &kshard_cuts(l.fan_in, kshard));
+                let dx = PackedOperand::new(wq_t, &kshard_cuts(l.fan_out, kshard));
+                (fw, dx)
+            })
+            .collect();
+        StepWeights { layers }
+    }
+
     /// Forward pass (+ backward when gradients or a probe are wanted)
     /// without touching any model state — `&self`, so sharded workers can
     /// run concurrent passes against one shared weight snapshot. The
@@ -358,6 +411,24 @@ impl MfMlp {
         engine: &dyn MacEngine,
         want_grads: bool,
         want_probe: bool,
+    ) -> StepResult {
+        self.forward_backward_with(x, y, engine, want_grads, want_probe, None)
+    }
+
+    /// [`MfMlp::forward_backward`] with an optional step-persistent
+    /// weight-operand cache: when `weights` is supplied, the forward and
+    /// dX GEMMs consume the cached quantized/packed operands instead of
+    /// re-quantizing (WBC + ALS + transpose + k-panel pack) per tile.
+    /// Bit-identical either way — the cache holds the exact codes this
+    /// pass would have computed.
+    pub fn forward_backward_with(
+        &self,
+        x: &[f32],
+        y: &[i32],
+        engine: &dyn MacEngine,
+        want_grads: bool,
+        want_probe: bool,
+        weights: Option<&StepWeights>,
     ) -> StepResult {
         let m = y.len();
         let nl = self.layers.len();
@@ -386,15 +457,30 @@ impl MfMlp {
                     let a_clip: Vec<f32> = a.iter().map(|&v| v.clamp(-t, t)).collect();
                     census.overhead_fp32_muls += 1; // t = gamma * amax
                     let aq = PotTensor::quantize_2d(&a_clip, m, k, bits, None);
-                    let wc = weight_bias_correction(&layer.w);
-                    let wq = PotTensor::quantize_2d(&wc, k, n, bits, None);
-                    census.gemms.push(GemmCensus {
-                        label: format!("fw{l}"),
-                        census: mfmac_census(&aq, &wq),
-                    });
-                    let z = engine.matmul(&aq, &wq);
+                    let z = match weights {
+                        Some(sw) => {
+                            // operand cache hit: the step's packed weight
+                            // (identical codes to the per-tile path)
+                            let pw = sw.fw(l);
+                            census.gemms.push(GemmCensus {
+                                label: format!("fw{l}"),
+                                census: mfmac_census(&aq, pw.tensor()),
+                            });
+                            engine.matmul_packed(&aq, pw)
+                        }
+                        None => {
+                            let wc = weight_bias_correction(&layer.w);
+                            let wq = PotTensor::quantize_2d(&wc, k, n, bits, None);
+                            census.gemms.push(GemmCensus {
+                                label: format!("fw{l}"),
+                                census: mfmac_census(&aq, &wq),
+                            });
+                            let z = engine.matmul(&aq, &wq);
+                            cache.wq = Some(wq);
+                            z
+                        }
+                    };
                     cache.aq = Some(aq);
-                    cache.wq = Some(wq);
                     z
                 }
                 Scheme::Fp32 => {
@@ -484,23 +570,45 @@ impl MfMlp {
                 let (dx, dw) = match scheme {
                     Scheme::Mf => {
                         let aq = caches[l].aq.as_ref().unwrap();
-                        let wq = caches[l].wq.as_ref().unwrap();
                         let gq = PotTensor::quantize_2d(g_clip, m, n, bits, None);
-                        let wq_t = wq.transpose2d();
                         let aq_t = aq.transpose2d();
-                        census.gemms.push(GemmCensus {
-                            label: format!("dx{l}"),
-                            census: mfmac_census(&gq, &wq_t),
-                        });
-                        census.gemms.push(GemmCensus {
-                            label: format!("dw{l}"),
-                            census: mfmac_census(&aq_t, &gq),
-                        });
-                        // one batched call: LUT/thread-scope amortized
-                        let mut outs = engine.matmul_batch(&[(&gq, &wq_t), (&aq_t, &gq)]);
-                        let dw = outs.pop().unwrap();
-                        let dx = outs.pop().unwrap();
-                        (dx, dw)
+                        match weights {
+                            Some(sw) => {
+                                // dX consumes the cached code transpose;
+                                // dW's weight-side operand is the per-tile
+                                // gradient, so it stays uncached
+                                let pwt = sw.dx(l);
+                                census.gemms.push(GemmCensus {
+                                    label: format!("dx{l}"),
+                                    census: mfmac_census(&gq, pwt.tensor()),
+                                });
+                                census.gemms.push(GemmCensus {
+                                    label: format!("dw{l}"),
+                                    census: mfmac_census(&aq_t, &gq),
+                                });
+                                // one call so k-sharded engines overlap
+                                // the two GEMMs' slab grids
+                                engine.matmul_backward_pair((&gq, pwt), (&aq_t, &gq))
+                            }
+                            None => {
+                                let wq = caches[l].wq.as_ref().unwrap();
+                                let wq_t = wq.transpose2d();
+                                census.gemms.push(GemmCensus {
+                                    label: format!("dx{l}"),
+                                    census: mfmac_census(&gq, &wq_t),
+                                });
+                                census.gemms.push(GemmCensus {
+                                    label: format!("dw{l}"),
+                                    census: mfmac_census(&aq_t, &gq),
+                                });
+                                // one batched call: LUT/thread-scope amortized
+                                let mut outs =
+                                    engine.matmul_batch(&[(&gq, &wq_t), (&aq_t, &gq)]);
+                                let dw = outs.pop().unwrap();
+                                let dx = outs.pop().unwrap();
+                                (dx, dw)
+                            }
+                        }
                     }
                     Scheme::Fp32 => {
                         census.linear_fp32_muls += 2 * (m * k * n) as u64;
@@ -1010,6 +1118,56 @@ mod tests {
         let grads = fb.grads.take().unwrap();
         b.apply_grads(&grads, 0.1, &mut fb.census);
         assert_eq!(a.state_to_vec(), b.state_to_vec());
+    }
+
+    #[test]
+    fn step_weight_cache_is_bit_identical_to_per_tile_quantization() {
+        // the operand-cache law: a pass fed by prepare_step_weights must
+        // produce the identical loss, census and gradients as the
+        // per-tile quantization path, on every engine and kshard grid
+        let (x, y) = toy_batch(9, 8, 12, 4);
+        let model = MfMlp::init(NnConfig::mf(&[12, 10, 4]), 6);
+        let engines: [Box<dyn MacEngine>; 4] = [
+            Box::new(ScalarEngine),
+            Box::new(BlockedEngine::with_tiles(3, 5, 2)),
+            Box::new(ThreadedEngine::new(2)),
+            Box::new(crate::potq::SimdEngine::new()),
+        ];
+        for eng in &engines {
+            let plain = model.forward_backward(&x, &y, eng.as_ref(), true, true);
+            for kshard in [1usize, 2, 4] {
+                let sw = model.prepare_step_weights(kshard);
+                let cached =
+                    model.forward_backward_with(&x, &y, eng.as_ref(), true, true, Some(&sw));
+                let tag = format!("{} kshard={kshard}", eng.name());
+                assert_eq!(plain.loss.to_bits(), cached.loss.to_bits(), "{tag} loss");
+                assert_eq!(plain.n_correct, cached.n_correct, "{tag} correct");
+                assert_eq!(
+                    plain.census.linear_fp32_muls, cached.census.linear_fp32_muls,
+                    "{tag} muls"
+                );
+                assert_eq!(plain.census.live_macs(), cached.census.live_macs(), "{tag} macs");
+                let (pg, cg) = (plain.grads.as_ref().unwrap(), cached.grads.as_ref().unwrap());
+                for (l, (a, b)) in pg.iter().zip(cg).enumerate() {
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(&a.dw), bits(&b.dw), "{tag} dw[{l}]");
+                    assert_eq!(bits(&a.db), bits(&b.db), "{tag} db[{l}]");
+                    assert_eq!(a.dgamma.to_bits(), b.dgamma.to_bits(), "{tag} dgamma[{l}]");
+                }
+                let (pp, cp) = (plain.probe.as_ref().unwrap(), cached.probe.as_ref().unwrap());
+                assert_eq!(
+                    pp.concat().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    cp.concat().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{tag} probe"
+                );
+            }
+        }
+        // the FP32 scheme ignores the (empty) cache
+        let fp = MfMlp::init(NnConfig::fp32(&[12, 10, 4]), 6);
+        let sw = fp.prepare_step_weights(2);
+        let plain = fp.forward_backward(&x, &y, &ScalarEngine, true, false);
+        let cached = fp.forward_backward_with(&x, &y, &ScalarEngine, true, false, Some(&sw));
+        assert_eq!(plain.loss.to_bits(), cached.loss.to_bits());
     }
 
     #[test]

@@ -54,18 +54,100 @@ pub fn unpack_code(c: u8, emax: i32) -> (i32, u8) {
     ((c & MAG_MASK) as i32 - MAG_OFFSET - emax, (c >> 7) & 1)
 }
 
+/// Mantissa field of [`SQRT2_F32`]: the log-domain rounding boundary as
+/// a raw 23-bit compare target. `1.m > sqrt(2)` iff `m > SQRT2_MANT`,
+/// which is what lets the quantizer round without any float arithmetic.
+const SQRT2_MANT: u32 = 0x3504F3;
+
+/// Per-lane add constant that raises bit 23 of a 23-bit mantissa field
+/// iff it exceeds [`SQRT2_MANT`]: `m + ROUND_ADD >= 2^23` iff
+/// `m >= SQRT2_MANT + 1`. Lane sums stay below 2^24, so two mantissa
+/// lanes packed in one u64 never carry into each other — the SWAR
+/// quantizer's rounding step.
+const ROUND_ADD: u32 = 0x80_0000 - SQRT2_MANT - 1;
+
 /// `(round(log2 |x|), is_zero)` — exact bit-level contract.
 /// Subnormals flush to zero; the exponent for zero entries is ZERO_CODE.
+/// Pure bit-field arithmetic (exponent field + a mantissa-vs-SQRT2_MANT
+/// compare); the SWAR batch quantizer applies the identical transform to
+/// two packed f32 bit patterns per word.
 pub fn round_log2_abs(x: f32) -> (i32, bool) {
     let bits = x.to_bits();
     let biased = ((bits >> 23) & 0xFF) as i32;
     if biased == 0 {
         return (ZERO_CODE, true);
     }
-    let m23 = bits & 0x7F_FFFF;
-    // m in [1,2), exactly representable in f32
-    let m = 1.0f32 + m23 as f32 * (2.0f32).powi(-23);
-    (biased - 127 + (m > SQRT2_F32) as i32, false)
+    let up = (((bits & 0x7F_FFFF) + ROUND_ADD) >> 23) as i32 & 1;
+    (biased - 127 + up, false)
+}
+
+/// Assemble one packed code from the SWAR-extracted bit fields of an f32
+/// (`e_biased` = raw exponent field, `up` = the sqrt(2) rounding bit,
+/// `sign` = bit 31). Bit-identical to
+/// `pack_code(pot_quantize_one(x, b, beta))` by construction: subnormals
+/// flush, ALS underflow hits the zero code, the top clamps to emax.
+#[inline]
+fn finish_code(e_biased: i32, up: i32, sign: u8, beta: i32, emax: i32) -> u8 {
+    if e_biased == 0 {
+        return 0; // zero / subnormal flush
+    }
+    let e = e_biased - 127 + up - beta;
+    if e < -emax {
+        return 0; // below the representable range: ALS underflow
+    }
+    ((sign & 1) << 7) | (MAG_OFFSET + e.min(emax) + emax) as u8
+}
+
+/// SWAR batch quantizer: pack the codes of a flat block quantized at a
+/// fixed `beta` into `out`. Two f32 bit patterns ride in one u64 word;
+/// the exponent fields, the `mantissa > SQRT2_MANT` rounding bits and the
+/// signs of both lanes are extracted with three masked word ops each (the
+/// rounding add cannot carry across the 32-bit lanes — see [`ROUND_ADD`]),
+/// then each lane's code is assembled by [`finish_code`]. Bit-identical
+/// to the scalar `pot_quantize_one` + `pack_code` path on every input,
+/// including the sqrt(2)/2 boundary, subnormal flush and inf/NaN bits —
+/// the property the quantizer props pin.
+pub(crate) fn quantize_codes_into(f: &[f32], b: u32, beta: i32, out: &mut [u8]) {
+    assert_eq!(f.len(), out.len(), "quantizer output buffer mismatch");
+    let emax = pot_emax(b);
+    const EXP2: u64 = 0x0000_00FF_0000_00FF;
+    const MANT2: u64 = 0x007F_FFFF_007F_FFFF;
+    const ROUND2: u64 = ((ROUND_ADD as u64) << 32) | ROUND_ADD as u64;
+    let pairs = f.chunks_exact(2);
+    let tail = pairs.remainder();
+    for (pair, codes) in pairs.zip(out.chunks_exact_mut(2)) {
+        let w = ((pair[1].to_bits() as u64) << 32) | pair[0].to_bits() as u64;
+        let exps = (w >> 23) & EXP2;
+        let ups = ((w & MANT2) + ROUND2) >> 23; // lane rounding bits at 0 / 32
+        let signs = (w >> 31) & 0x0000_0001_0000_0001;
+        codes[0] = finish_code(
+            (exps & 0xFF) as i32,
+            (ups & 1) as i32,
+            (signs & 1) as u8,
+            beta,
+            emax,
+        );
+        codes[1] = finish_code(
+            ((exps >> 32) & 0xFF) as i32,
+            ((ups >> 32) & 1) as i32,
+            ((signs >> 32) & 1) as u8,
+            beta,
+            emax,
+        );
+    }
+    if let (Some(&x), Some(last)) = (tail.first(), out.last_mut()) {
+        let bits = x.to_bits();
+        let e = ((bits >> 23) & 0xFF) as i32;
+        let up = (((bits & 0x7F_FFFF) + ROUND_ADD) >> 23) as i32 & 1;
+        *last = finish_code(e, up, (bits >> 31) as u8, beta, emax);
+    }
+}
+
+/// [`quantize_codes_into`] into a fresh buffer.
+pub(crate) fn quantize_codes(f: &[f32], b: u32, beta: i32) -> Vec<u8> {
+    let mut out = vec![0u8; f.len()];
+    quantize_codes_into(f, b, beta, &mut out);
+    out
 }
 
 /// Exact 2^e for integer e in [-126, 127], built from bits.
@@ -224,6 +306,70 @@ impl KPanels {
     pub fn codes(&self) -> &[u8] {
         &self.codes
     }
+
+    /// True when `c` sits on a panel boundary of this layout (a panel
+    /// start, a panel end, or the trivial 0 — consumers that hoist one
+    /// shift per panel need every shift-change point to be a boundary).
+    pub fn has_boundary(&self, c: usize) -> bool {
+        c == 0
+            || self.panels.binary_search_by(|h| h.p0.cmp(&c)).is_ok()
+            || self.panels.last().map_or(false, |h| h.p1 == c)
+    }
+
+    /// Indices of the panels covering the k-rows `[lo, hi)`. Both bounds
+    /// must be panel boundaries (check [`KPanels::has_boundary`] first);
+    /// the returned range is contiguous because panels tile their span in
+    /// ascending order.
+    pub fn panel_range(&self, lo: usize, hi: usize) -> std::ops::Range<usize> {
+        let start = self.panels.partition_point(|h| h.p1 <= lo);
+        let end = self.panels.partition_point(|h| h.p0 < hi);
+        debug_assert!(
+            self.panels[start..end].first().map_or(true, |h| h.p0 == lo)
+                && self.panels[start..end].last().map_or(true, |h| h.p1 == hi),
+            "[{lo}, {hi}) does not sit on panel boundaries"
+        );
+        start..end
+    }
+}
+
+/// A step-persistent packed operand: one quantized (k, n) tensor together
+/// with its [`KPanels`] layout, packed **once** for a fixed cut grid and
+/// reused across every GEMM that consumes the operand — the forward and
+/// dX passes of all microbatch tiles, all shard workers, and all k-shard
+/// slabs of a step. Panel-consuming engines serve any pair whose
+/// constant-shift grid the cached boundaries refine ([`KPanels`]
+/// invariant: extra splits never change the exact integer sum); pairs
+/// with a finer grid fall back to an ad-hoc repack.
+#[derive(Clone, Debug)]
+pub struct PackedOperand {
+    tensor: PotTensor,
+    panels: KPanels,
+}
+
+impl PackedOperand {
+    /// Quantized tensor + the interior cut points the panel grid must
+    /// include on top of the tensor's own k-tile grid (typically the
+    /// k-shard slab boundaries).
+    pub fn new(tensor: PotTensor, cuts: &[usize]) -> PackedOperand {
+        let panels = tensor.pack_k_panels(cuts);
+        PackedOperand { tensor, panels }
+    }
+
+    pub fn tensor(&self) -> &PotTensor {
+        &self.tensor
+    }
+
+    pub fn panels(&self) -> &KPanels {
+        &self.panels
+    }
+
+    /// True when every point in `bounds` is a panel boundary, i.e. the
+    /// cached layout refines the caller's constant-shift grid.
+    pub fn covers(&self, bounds: &[usize]) -> bool {
+        bounds
+            .iter()
+            .all(|&c| c == self.panels.k || self.panels.has_boundary(c))
+    }
 }
 
 /// A packed quantized tensor: one code byte per element plus shape/stride
@@ -260,14 +406,9 @@ impl PotTensor {
         // the packed magnitude field [32, 62] only holds emax <= 15
         assert!((3..=6).contains(&b), "packed PoT codes support 3..=6 bits, got {b}");
         let beta = beta.unwrap_or_else(|| compute_beta(f, b));
-        let emax = pot_emax(b);
-        let codes = f
-            .iter()
-            .map(|&x| {
-                let (e, s) = pot_quantize_one(x, b, beta);
-                pack_code(e, s, emax)
-            })
-            .collect();
+        // SWAR code packer: two f32 bit patterns per word, bit-identical
+        // to the scalar pot_quantize_one + pack_code path
+        let codes = quantize_codes(f, b, beta);
         PotTensor {
             codes,
             shape: vec![f.len()],
@@ -336,16 +477,28 @@ impl PotTensor {
             .iter()
             .map(|sb| sb.map_or(0, |bt| (bt - base).max(TILE_DELTA_MIN)))
             .collect();
-        let emax = pot_emax(b);
-        let codes: Vec<u8> = f
-            .iter()
-            .enumerate()
-            .map(|(idx, &x)| {
-                let c = if axis == 0 { idx / cols } else { idx % cols };
-                let (e, s) = pot_quantize_one(x, b, base + deltas[c / tile]);
-                pack_code(e, s, emax)
-            })
-            .collect();
+        // each slab is a set of contiguous runs at one local beta, so the
+        // SWAR packer streams whole segments: full row blocks for axis 0,
+        // per-row column segments for axis 1
+        let mut codes = vec![0u8; rows * cols];
+        if axis == 0 {
+            for (s, &d) in deltas.iter().enumerate() {
+                let (r0, r1) = (s * tile, ((s + 1) * tile).min(rows));
+                quantize_codes_into(
+                    &f[r0 * cols..r1 * cols],
+                    b,
+                    base + d,
+                    &mut codes[r0 * cols..r1 * cols],
+                );
+            }
+        } else {
+            for i in 0..rows {
+                for (s, &d) in deltas.iter().enumerate() {
+                    let (c0, c1) = (i * cols + s * tile, i * cols + ((s + 1) * tile).min(cols));
+                    quantize_codes_into(&f[c0..c1], b, base + d, &mut codes[c0..c1]);
+                }
+            }
+        }
         PotTensor {
             codes,
             shape: vec![rows, cols],
@@ -522,27 +675,43 @@ impl PotTensor {
     /// kernel consuming panels stays bit-compatible with the row-major
     /// kernels.
     pub fn pack_k_panels(&self, cuts: &[usize]) -> KPanels {
+        let k = {
+            assert_eq!(self.shape.len(), 2, "k-panel packing needs a 2-D (k, n) tensor");
+            self.shape[0]
+        };
+        self.pack_k_panels_range(cuts, 0, k)
+    }
+
+    /// [`PotTensor::pack_k_panels`] restricted to the k-rows `[lo, hi)`:
+    /// only the slab's panels are laid out (the header `p0`/`p1` stay
+    /// absolute source rows), which is what lets a k-shard worker pack
+    /// just its own slab instead of the whole operand. `lo = 0, hi = k`
+    /// is the full packing.
+    pub fn pack_k_panels_range(&self, cuts: &[usize], lo: usize, hi: usize) -> KPanels {
         assert_eq!(self.shape.len(), 2, "k-panel packing needs a 2-D (k, n) tensor");
         let (k, n) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= k, "k-panel range [{lo}, {hi}) out of [0, {k}]");
         if let Some(ts) = &self.tiles {
             assert_eq!(
                 ts.axis, 0,
                 "k-panel packing needs the tile plane on the reduction axis (rows)"
             );
         }
-        let mut bounds: Vec<usize> = vec![0, k];
+        let mut bounds: Vec<usize> = if lo < hi { vec![lo, hi] } else { Vec::new() };
         if let Some(ts) = &self.tiles {
             let mut b = ts.tile;
             while b < k {
-                bounds.push(b);
+                if b > lo && b < hi {
+                    bounds.push(b);
+                }
                 b += ts.tile;
             }
         }
-        bounds.extend(cuts.iter().copied().filter(|&c| c > 0 && c < k));
+        bounds.extend(cuts.iter().copied().filter(|&c| c > lo && c < hi));
         bounds.sort_unstable();
         bounds.dedup();
         let mut panels = Vec::with_capacity(bounds.len().saturating_sub(1));
-        let mut codes = Vec::with_capacity(k * n);
+        let mut codes = Vec::with_capacity((hi - lo) * n);
         for pair in bounds.windows(2) {
             let (p0, p1) = (pair[0], pair[1]);
             let delta = self.tiles.as_ref().map_or(0, |ts| ts.delta_at(p0));
@@ -1006,6 +1175,98 @@ mod tests {
                 assert_eq!(ts.delta_at(p), h.delta);
             }
         }
+    }
+
+    #[test]
+    fn swar_quantizer_matches_scalar_on_adversarial_bits() {
+        // the SWAR packer vs the scalar pot_quantize_one + pack_code path
+        // on every bit pattern class: the sqrt(2)/2 rounding boundary on
+        // both sides, subnormals, +/-0, near-overflow exponents, inf/NaN
+        let specials = [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            SQRT2_F32,
+            f32::from_bits(SQRT2_F32.to_bits() - 1),
+            f32::from_bits(SQRT2_F32.to_bits() + 1),
+            SQRT2_F32 / 2.0,
+            -SQRT2_F32 / 2.0,
+            0.75,
+            1e-42,   // subnormal
+            -1e-42,
+            f32::MIN_POSITIVE,
+            f32::MAX,
+            -f32::MAX,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ];
+        let mut r = Pcg32::new(41);
+        for b in [3u32, 4, 5, 6] {
+            let emax = pot_emax(b);
+            for beta in [-20i32, -3, 0, 5] {
+                // odd length exercises the SWAR tail lane
+                let mut data: Vec<f32> = specials.to_vec();
+                for _ in 0..257 {
+                    data.push(r.normal() * (2f32).powi((r.below(60) as i32) - 30));
+                }
+                let got = quantize_codes(&data, b, beta);
+                for (i, &x) in data.iter().enumerate() {
+                    let (e, s) = pot_quantize_one(x, b, beta);
+                    assert_eq!(
+                        got[i],
+                        pack_code(e, s, emax),
+                        "b={b} beta={beta} x={x} (bits {:#010x})",
+                        x.to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_panels_range_packs_only_the_slab() {
+        let mut r = Pcg32::new(33);
+        let (k, n) = (12, 4);
+        let mut x = vec![0f32; k * n];
+        r.fill_normal(&mut x, 0.0, 0.5);
+        let t = PotTensor::quantize_2d(&x, k, n, 5, None);
+        let full = t.pack_k_panels(&[3, 7]);
+        let slab = t.pack_k_panels_range(&[3, 7], 3, 12);
+        assert_eq!(
+            slab.panels.iter().map(|h| (h.p0, h.p1)).collect::<Vec<_>>(),
+            vec![(3, 7), (7, 12)]
+        );
+        // slab panel bytes identical to the same panels of the full pack
+        for (si, fi) in [(0usize, 1usize), (1, 2)] {
+            for j in 0..n {
+                assert_eq!(slab.col(si, j), full.col(fi, j), "panel {si} col {j}");
+            }
+        }
+        // empty range: no panels
+        let empty = t.pack_k_panels_range(&[], 5, 5);
+        assert!(empty.panels.is_empty());
+        assert!(empty.codes().is_empty());
+    }
+
+    #[test]
+    fn packed_operand_boundaries_and_covers() {
+        let mut r = Pcg32::new(34);
+        let (k, n) = (16, 3);
+        let mut x = vec![0f32; k * n];
+        r.fill_normal(&mut x, 0.0, 0.5);
+        let t = PotTensor::quantize_2d(&x, k, n, 5, None);
+        let p = PackedOperand::new(t, &[4, 8, 12]);
+        assert_eq!(p.panels().panels.len(), 4);
+        assert!(p.covers(&[0, 4, 8, 12, 16]));
+        assert!(!p.covers(&[5]), "5 is not a cached boundary");
+        assert_eq!(p.panels().panel_range(4, 12), 1..3);
+        assert_eq!(p.panels().panel_range(0, 16), 0..4);
+        for c in [0usize, 4, 8, 12, 16] {
+            assert!(p.panels().has_boundary(c), "{c}");
+        }
+        assert!(!p.panels().has_boundary(3));
     }
 
     #[test]

@@ -1,35 +1,51 @@
-//! Sharded data-parallel multiplication-free training.
+//! Sharded multi-worker multiplication-free training: batch-tile data
+//! parallelism × tensor-parallel k-sharding, fed by a step-persistent
+//! operand cache.
 //!
 //! [`ShardPlan`] splits one global batch into fixed-size *microbatch
-//! tiles*; [`ShardedMlp`] distributes the tiles over worker threads, each
-//! of which runs [`MfMlp::forward_backward`] on its slice with its own
-//! [`crate::potq::MacEngine`] and quantizes locally — per-tile ALS betas,
-//! the training-loop counterpart of the engine-level per-k-tile
-//! [`crate::potq::TileScales`] plane. The per-tile gradients are then
-//! combined multiplication-free: summed in fixed tile order (FP32 adds
-//! only) and averaged with a PoT-snapped 1/n_tiles coefficient applied by
-//! [`scale_pow2`] — an integer exponent-field add — so the per-step
-//! [`StepCensus`] keeps `linear_fp32_muls == 0` across the whole sharded
-//! step, combine included.
+//! tiles* and carries the tensor-parallel factor `kshard`; [`ShardedMlp`]
+//! distributes the tiles over a **persistent pool** of worker threads
+//! (spawned once at construction, each owning its
+//! [`crate::potq::MacEngine`] — wrapped in a
+//! [`crate::potq::KShardEngine`] when `kshard > 1`, so every GEMM's
+//! reduction dimension is further split over k-slab threads: the
+//! `workers × kshard` grid). Each tile runs
+//! [`MfMlp::forward_backward_with`] against a shared weight snapshot and
+//! the step's [`StepWeights`] operand cache — weights are WBC'd,
+//! ALS-quantized, transposed and k-panel-packed **once per step** and
+//! reused by the forward/dX GEMMs of every tile and worker. The per-tile
+//! gradients are combined multiplication-free: summed in fixed tile order
+//! (FP32 adds only) and averaged with a PoT-snapped 1/n_tiles coefficient
+//! applied by [`scale_pow2`] — an integer exponent-field add — so the
+//! per-step [`StepCensus`] keeps `linear_fp32_muls == 0` across the whole
+//! sharded step, batch combine and k-slab combine included (the k-combine
+//! is integer adds on exact accumulators *before* the single dequantize).
 //!
 //! Determinism contract: the tile granularity is a property of the
-//! *plan*, not of the worker count, and the combine walks tiles in index
-//! order. Workers only change which thread computes which tile, and every
-//! engine is bit-exact, so a seeded run is bit-identical for any
-//! `--workers N` — the property the sharded train_smoke pins (W=4 == W=1
-//! on every engine, and `--engine simd --workers 4` == `--engine scalar
-//! --workers 1` across engines).
+//! *plan*, not of the worker count; the combine walks tiles in index
+//! order; k-slab partials are exact integers whose sum is
+//! schedule-invariant; and the operand cache holds the identical codes
+//! per-tile quantization would produce. Workers and kshard only change
+//! which thread computes what, so a seeded run is bit-identical for any
+//! `--workers N --kshard K` — the property the sharded train_smoke pins
+//! (`--engine simd --workers 2 --kshard 2` == `--engine scalar
+//! --workers 1 --kshard 1`, digest-level).
 
 use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use super::engine::engine_by_name;
-use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult};
+use super::engine::{engine_by_name, KShardEngine, MacEngine};
+use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights};
 use super::quantize::scale_pow2;
 
 /// Data-parallel split of a global batch into `n_tiles` microbatch tiles
-/// of `tile` rows, executed by up to `workers` threads. `n_tiles` must be
+/// of `tile` rows, executed by up to `workers` threads, each of whose
+/// GEMMs is tensor-parallel over `kshard` k-slabs. `n_tiles` must be
 /// a power of two so the gradient average 1/n_tiles is exactly a PoT
 /// coefficient (exponent add, no FP32 multiply).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -40,6 +56,11 @@ pub struct ShardPlan {
     pub n_tiles: usize,
     /// requested worker threads (>= 1; clamped to `n_tiles` at runtime)
     pub workers: usize,
+    /// tensor-parallel k-shard factor (>= 1): every GEMM's reduction
+    /// dimension is split into this many slabs whose exact integer
+    /// partials combine by exponent-aligned add — bit-identical for any
+    /// value, so it is purely a throughput knob like `workers`
+    pub kshard: usize,
 }
 
 impl ShardPlan {
@@ -63,7 +84,16 @@ impl ShardPlan {
                  multiplication-free 1/n_tiles combine needs a power of two"
             );
         }
-        Ok(ShardPlan { batch, tile, n_tiles, workers })
+        Ok(ShardPlan { batch, tile, n_tiles, workers, kshard: 1 })
+    }
+
+    /// Grow the plan's tensor-parallel k-axis (`--kshard K`).
+    pub fn with_kshard(mut self, kshard: usize) -> Result<ShardPlan> {
+        if kshard == 0 {
+            bail!("kshard must be >= 1 (got 0); use 1 for no k-sharding");
+        }
+        self.kshard = kshard;
+        Ok(self)
     }
 
     /// Default microbatch tile for a batch: four tiles when the batch
@@ -86,23 +116,167 @@ impl ShardPlan {
     }
 }
 
-/// The sharded trainer: a master [`MfMlp`] plus a [`ShardPlan`] and an
-/// engine spec. Each step shares the master weights with all workers by
-/// reference (forward/backward is `&self`), runs one
-/// `forward_backward` per tile — every tile quantizes its slice locally —
-/// and applies the combined gradients as a single optimizer step on the
-/// master.
+/// Build one worker's engine: the named [`MacEngine`], wrapped for
+/// tensor-parallel k-sharding when the plan asks for it. Built **once**
+/// per worker at pool construction — not per step, not per tile.
+fn build_engine(name: &str, threads: usize, kshard: usize) -> Box<dyn MacEngine + Send> {
+    let inner = engine_by_name(name, threads).expect("engine validated at construction");
+    if kshard > 1 {
+        Box::new(KShardEngine::new(inner, kshard))
+    } else {
+        inner
+    }
+}
+
+/// One step's shared inputs, handed to every pool worker behind an `Arc`.
+/// Workers drop their reference *before* reporting results, so the master
+/// thread regains unique access to the model for the optimizer step.
+struct StepJob {
+    model: Arc<MfMlp>,
+    /// the step-persistent operand cache, shared by all tiles and workers
+    weights: Arc<StepWeights>,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    plan: ShardPlan,
+    want_grads: bool,
+    want_probe: bool,
+}
+
+enum Job {
+    Step(Arc<StepJob>),
+    Quit,
+}
+
+/// The persistent worker pool: one long-lived thread per shard worker,
+/// each owning its [`MacEngine`] built once at construction — replacing
+/// the per-step `std::thread::scope` spawn and per-tile `engine_by_name`
+/// rebuild. Tile assignment is the same `wid, wid + W, ...` round-robin
+/// as the scoped implementation, and every engine is bit-exact, so runs
+/// are digest-identical to it.
+struct WorkerPool {
+    txs: Vec<Sender<Job>>,
+    rx: Receiver<Vec<(usize, StepResult)>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize, engine: &str, threads: usize, kshard: usize) -> WorkerPool {
+        let (res_tx, rx) = channel();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let (tx, job_rx) = channel::<Job>();
+            let res_tx = res_tx.clone();
+            let engine = engine.to_string();
+            handles.push(std::thread::spawn(move || {
+                let eng = build_engine(&engine, threads, kshard);
+                while let Ok(Job::Step(job)) = job_rx.recv() {
+                    let d_in = job.model.cfg.dims[0];
+                    let stride = job.plan.effective_workers();
+                    let mut mine = Vec::new();
+                    let mut t = wid;
+                    while t < job.plan.n_tiles {
+                        let r = job.plan.tile_range(t);
+                        let (lo, hi) = (r.start, r.end);
+                        mine.push((
+                            t,
+                            job.model.forward_backward_with(
+                                &job.x[lo * d_in..hi * d_in],
+                                &job.y[lo..hi],
+                                eng.as_ref(),
+                                job.want_grads,
+                                job.want_probe,
+                                Some(&*job.weights),
+                            ),
+                        ));
+                        t += stride;
+                    }
+                    // release the model/weights before reporting, so the
+                    // master's Arc::get_mut succeeds right after collect
+                    drop(job);
+                    if res_tx.send(mine).is_err() {
+                        break;
+                    }
+                }
+            }));
+            txs.push(tx);
+        }
+        WorkerPool { txs, rx, handles }
+    }
+
+    /// Dispatch one step to every worker and collect all tiles, indexed
+    /// by tile (deterministic regardless of completion order). A worker
+    /// that panics mid-step can never report, and its siblings keep the
+    /// result channel open — so collection polls worker liveness instead
+    /// of blocking forever, propagating the death like the scoped
+    /// implementation's `join().expect` did.
+    fn run(&self, job: Arc<StepJob>) -> Vec<StepResult> {
+        let n_tiles = job.plan.n_tiles;
+        for tx in &self.txs {
+            tx.send(Job::Step(job.clone())).expect("pool worker alive");
+        }
+        drop(job);
+        let mut out: Vec<Option<StepResult>> = (0..n_tiles).map(|_| None).collect();
+        let mut pending = self.txs.len();
+        while pending > 0 {
+            match self.rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(batch) => {
+                    for (t, res) in batch {
+                        out[t] = Some(res);
+                    }
+                    pending -= 1;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    assert!(
+                        !self.handles.iter().any(|h| h.is_finished()),
+                        "shard pool worker died mid-step (panicked)"
+                    );
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("shard pool workers disconnected mid-step");
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("every tile computed")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Job::Quit);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The sharded trainer: a master [`MfMlp`] plus a [`ShardPlan`], an
+/// engine spec and the persistent [`WorkerPool`]. Each step builds the
+/// [`StepWeights`] operand cache once, shares the master weights with all
+/// workers behind an `Arc` (forward/backward is `&self`), runs one
+/// `forward_backward_with` per tile, and applies the combined gradients
+/// as a single optimizer step on the master.
 pub struct ShardedMlp {
-    pub model: MfMlp,
+    /// master model. Shared with pool workers only transiently inside a
+    /// step (the pool drops its references before reporting); cloning
+    /// this `Arc` and holding it across a `train_step` call will panic
+    /// the optimizer's exclusive-access assertion.
+    pub model: Arc<MfMlp>,
     pub plan: ShardPlan,
     engine: String,
-    threads: usize,
+    /// long-lived worker pool; `None` when one worker runs in-thread
+    pool: Option<WorkerPool>,
+    /// the in-thread engine (single-worker path), built once
+    solo: Box<dyn MacEngine + Send>,
 }
 
 impl ShardedMlp {
     /// `engine`/`threads` name the per-worker [`crate::potq::MacEngine`]
-    /// (each worker constructs its own instance; results are bit-exact
-    /// across engines, so this only affects throughput).
+    /// (each worker constructs its own instance once, at pool spawn;
+    /// results are bit-exact across engines, so this only affects
+    /// throughput).
     pub fn new(model: MfMlp, plan: ShardPlan, engine: &str, threads: usize) -> Result<ShardedMlp> {
         if engine_by_name(engine, threads).is_none() {
             bail!(
@@ -110,11 +284,34 @@ impl ShardedMlp {
                 super::engine::ENGINE_CHOICES.join("|")
             );
         }
-        Ok(ShardedMlp { model, plan, engine: engine.to_string(), threads })
+        let workers = plan.effective_workers();
+        let pool =
+            (workers > 1).then(|| WorkerPool::new(workers, engine, threads, plan.kshard));
+        let solo = build_engine(engine, threads, plan.kshard);
+        Ok(ShardedMlp {
+            model: Arc::new(model),
+            plan,
+            engine: engine.to_string(),
+            pool,
+            solo,
+        })
     }
 
     pub fn engine_name(&self) -> &str {
         &self.engine
+    }
+
+    /// Restore the master model from a packed state vector (checkpoint
+    /// resume) — the mutable counterpart of `self.model.state_to_vec()`
+    /// now that the master lives behind the pool-shared `Arc`.
+    pub fn state_from_vec(&mut self, v: &[f32]) -> std::result::Result<(), String> {
+        Arc::get_mut(&mut self.model)
+            .expect("workers hold no model references between steps")
+            .state_from_vec(v)
+    }
+
+    fn model_mut(&mut self) -> &mut MfMlp {
+        Arc::get_mut(&mut self.model).expect("workers hold no model references between steps")
     }
 
     /// One data-parallel SGD step over the global batch.
@@ -123,10 +320,12 @@ impl ShardedMlp {
         let (mut census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
         let grads = self.combine_grads(&tiles, &mut census);
         let loss = (loss_sum / self.plan.batch as f64) as f32;
-        self.model.apply_grads(&grads, lr, &mut census);
-        self.model.steps += 1;
-        self.model.last_loss = loss;
-        if self.model.cfg.scheme == Scheme::Mf {
+        let scheme = self.model.cfg.scheme;
+        let model = self.model_mut();
+        model.apply_grads(&grads, lr, &mut census);
+        model.steps += 1;
+        model.last_loss = loss;
+        if scheme == Scheme::Mf {
             // the combine is adds + exponent adds only; prove it per step
             assert_eq!(
                 census.linear_fp32_muls, 0,
@@ -166,7 +365,9 @@ impl ShardedMlp {
     }
 
     /// Run one forward(/backward) pass per tile, distributed round-robin
-    /// over the plan's workers; returns per-tile results indexed by tile.
+    /// over the persistent pool; returns per-tile results indexed by
+    /// tile. Builds the step's operand cache exactly once, whichever path
+    /// executes the tiles.
     fn run_tiles(
         &self,
         x: &[f32],
@@ -178,61 +379,36 @@ impl ShardedMlp {
         let d_in = self.model.cfg.dims[0];
         assert_eq!(y.len(), plan.batch, "batch size does not match the shard plan");
         assert_eq!(x.len(), plan.batch * d_in, "x does not match (batch, d_in)");
-        let model = &self.model;
-        let engine_name = self.engine.as_str();
-        let threads = self.threads;
-        let workers = plan.effective_workers();
-        let mut out: Vec<Option<StepResult>> = (0..plan.n_tiles).map(|_| None).collect();
-        if workers <= 1 {
-            // in-thread path: same tiles, same order-independent math
-            let eng = engine_by_name(engine_name, threads).expect("engine validated");
-            for (t, slot) in out.iter_mut().enumerate() {
-                let r = plan.tile_range(t);
-                *slot = Some(model.forward_backward(
-                    &x[r.start * d_in..r.end * d_in],
-                    &y[r],
-                    eng.as_ref(),
-                    want_grads,
-                    want_probe,
-                ));
-            }
-        } else {
-            std::thread::scope(|s| {
-                let handles: Vec<_> = (0..workers)
-                    .map(|wid| {
-                        s.spawn(move || {
-                            // each worker owns its engine instance
-                            let eng = engine_by_name(engine_name, threads)
-                                .expect("engine validated");
-                            let mut mine = Vec::new();
-                            let mut t = wid;
-                            while t < plan.n_tiles {
-                                let r = plan.tile_range(t);
-                                let (lo, hi) = (r.start, r.end);
-                                mine.push((
-                                    t,
-                                    model.forward_backward(
-                                        &x[lo * d_in..hi * d_in],
-                                        &y[lo..hi],
-                                        eng.as_ref(),
-                                        want_grads,
-                                        want_probe,
-                                    ),
-                                ));
-                                t += workers;
-                            }
-                            mine
-                        })
-                    })
-                    .collect();
-                for h in handles {
-                    for (t, res) in h.join().expect("shard worker panicked") {
-                        out[t] = Some(res);
-                    }
+        // the step-persistent operand cache: weights quantized + k-panel
+        // packed once, consumed by every tile on every worker
+        let weights = Arc::new(self.model.prepare_step_weights(plan.kshard));
+        match &self.pool {
+            None => {
+                // in-thread path: same tiles, same order-independent math
+                let mut out = Vec::with_capacity(plan.n_tiles);
+                for t in 0..plan.n_tiles {
+                    let r = plan.tile_range(t);
+                    out.push(self.model.forward_backward_with(
+                        &x[r.start * d_in..r.end * d_in],
+                        &y[r],
+                        self.solo.as_ref(),
+                        want_grads,
+                        want_probe,
+                        Some(&*weights),
+                    ));
                 }
-            });
+                out
+            }
+            Some(pool) => pool.run(Arc::new(StepJob {
+                model: self.model.clone(),
+                weights,
+                x: x.to_vec(),
+                y: y.to_vec(),
+                plan,
+                want_grads,
+                want_probe,
+            })),
         }
-        out.into_iter().map(|o| o.expect("every tile computed")).collect()
     }
 
     /// Merge per-tile scalar results and censuses in fixed tile order.
@@ -333,6 +509,86 @@ mod tests {
         assert_eq!(p.tile_range(3), 6..8);
         assert_eq!(ShardPlan::auto_tile(16), 4);
         assert_eq!(ShardPlan::auto_tile(2), 1);
+        // the tensor-parallel k-axis
+        assert_eq!(p.kshard, 1, "k-sharding defaults off");
+        assert_eq!(p.with_kshard(4).unwrap().kshard, 4);
+        let e = format!("{:#}", ShardPlan::new(16, 4, 2).unwrap().with_kshard(0).unwrap_err());
+        assert!(e.contains("kshard must be >= 1"), "{e}");
+    }
+
+    #[test]
+    fn kshard_does_not_change_the_run() {
+        // the tensor-parallel determinism law at module level: the
+        // workers x kshard grid is pure schedule — same seed, any grid,
+        // bit-identical states (k-slab partials are exact integers)
+        let (x, y) = toy_batch(13, 16, 12, 4);
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for (workers, kshard) in [(1usize, 1usize), (1, 4), (2, 2), (4, 3)] {
+            let plan = ShardPlan::new(16, 4, workers)
+                .unwrap()
+                .with_kshard(kshard)
+                .unwrap();
+            let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 17);
+            let mut t = ShardedMlp::new(model, plan, "blocked", 1).unwrap();
+            for _ in 0..5 {
+                t.train_step(&x, &y, 0.1);
+            }
+            states.push(t.model.state_to_vec());
+        }
+        for (i, s) in states.iter().enumerate().skip(1) {
+            assert_eq!(&states[0], s, "grid {i} diverged from W=1 K=1");
+        }
+    }
+
+    #[test]
+    fn kshard_engines_agree_with_unsharded_scalar() {
+        // simd W=2 K=2 == scalar W=1 K=1, and every other engine too —
+        // the acceptance digest pin at module level
+        let (x, y) = toy_batch(19, 16, 12, 4);
+        let baseline = {
+            let plan = ShardPlan::new(16, 4, 1).unwrap();
+            let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 23);
+            let mut t = ShardedMlp::new(model, plan, "scalar", 1).unwrap();
+            for _ in 0..4 {
+                t.train_step(&x, &y, 0.1);
+            }
+            t.model.state_to_vec()
+        };
+        for engine in crate::potq::ENGINE_NAMES {
+            let plan = ShardPlan::new(16, 4, 2).unwrap().with_kshard(2).unwrap();
+            let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 23);
+            let mut t = ShardedMlp::new(model, plan, engine, 1).unwrap();
+            for _ in 0..4 {
+                t.train_step(&x, &y, 0.1);
+            }
+            assert_eq!(baseline, t.model.state_to_vec(), "{engine} W=2 K=2");
+        }
+    }
+
+    #[test]
+    fn pool_survives_resume_and_many_steps() {
+        // the persistent pool's Arc discipline: state restore between
+        // steps, then further pooled steps, match a fresh run bit for bit
+        let (x, y) = toy_batch(29, 16, 12, 4);
+        let mk = |workers: usize| {
+            let plan = ShardPlan::new(16, 4, workers).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 31), plan, "blocked", 1)
+                .unwrap()
+        };
+        let mut a = mk(4);
+        for _ in 0..3 {
+            a.train_step(&x, &y, 0.1);
+        }
+        let snap = a.model.state_to_vec();
+        // restore into a pool of a different size mid-life
+        let mut b = mk(2);
+        b.state_from_vec(&snap).unwrap();
+        for _ in 0..3 {
+            a.train_step(&x, &y, 0.1);
+            b.train_step(&x, &y, 0.1);
+        }
+        assert_eq!(a.model.state_to_vec(), b.model.state_to_vec());
+        assert_eq!(a.model.steps, 6);
     }
 
     #[test]

@@ -32,10 +32,10 @@
 //! [`ScalarEngine`]: super::engine::ScalarEngine
 
 use super::engine::{
-    dims2, finish, k_shift_runs, lut_index, saturating_band, tile_args, MacEngine,
+    check_kslab, dims2, finish, k_shift_runs, lut_index, saturating_band, tile_args, MacEngine,
     SaturationReport,
 };
-use super::quantize::{pot_emax, PotTensor};
+use super::quantize::{pot_emax, KPanels, PackedOperand, PotTensor};
 
 /// Inner-loop strategy of a [`SimdEngine`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,6 +132,151 @@ impl MacEngine for SimdEngine {
         let mut out = vec![0f32; m * n];
         let rep = saturating_band(x, w, k, n, 0, m, kshifts.as_deref(), scale, &mut out);
         (out, rep)
+    }
+
+    /// Batched entry point with the per-call repack hole closed: each
+    /// *distinct* weight operand (by address) is k-panel-packed **once**,
+    /// with the union of its pairs' constant-shift grids, and the packed
+    /// layout is shared across all of that operand's GEMMs in the batch.
+    /// The union refines every pair's grid, finer panels never change the
+    /// exact integer sum, and the per-panel shift is still each pair's
+    /// own — so results stay bit-identical to per-call [`Self::matmul`].
+    fn matmul_batch(&self, pairs: &[(&PotTensor, &PotTensor)]) -> Vec<Vec<f32>> {
+        let dims: Vec<(usize, usize, usize)> = pairs.iter().map(|(x, w)| dims2(x, w)).collect();
+        let plans: Vec<(Option<Vec<u32>>, f64)> = pairs
+            .iter()
+            .zip(&dims)
+            .map(|((x, w), &(_, k, _))| tile_args(x, w, k))
+            .collect();
+        // group pairs by weight-operand address; union the cut grids
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new(); // (first pair idx, cuts)
+        let mut group_of: Vec<usize> = Vec::with_capacity(pairs.len());
+        for (i, &(_, k, _)) in dims.iter().enumerate() {
+            let cuts: Vec<usize> = k_shift_runs(plans[i].0.as_deref(), k)
+                .iter()
+                .map(|r| r.0)
+                .collect();
+            let gi = groups
+                .iter()
+                .position(|&(j, _)| std::ptr::eq(pairs[j].1, pairs[i].1));
+            match gi {
+                Some(g) => {
+                    groups[g].1.extend(cuts);
+                    group_of.push(g);
+                }
+                None => {
+                    group_of.push(groups.len());
+                    groups.push((i, cuts));
+                }
+            }
+        }
+        let panels: Vec<KPanels> = groups
+            .iter()
+            .map(|(j, cuts)| {
+                let mut c = cuts.clone();
+                c.sort_unstable();
+                c.dedup();
+                pairs[*j].1.pack_k_panels(&c)
+            })
+            .collect();
+        pairs
+            .iter()
+            .enumerate()
+            .map(|(i, (x, _))| {
+                let (m, k, n) = dims[i];
+                let (kshifts, scale) = (&plans[i].0, plans[i].1);
+                let mut out = vec![0f32; m * n];
+                if m == 0 || n == 0 {
+                    return out;
+                }
+                let wp = &panels[group_of[i]];
+                let shifts = pair_panel_shifts(wp, kshifts.as_deref());
+                let mut acc = vec![0i128; m * n];
+                acc_panels(self.path, x, wp, 0..wp.panels.len(), &shifts, m, k, n, &mut acc);
+                for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                    *o = finish(a, scale);
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// K-slab partials over the panel layout: only the slab's panels are
+    /// packed ([`PotTensor::pack_k_panels_range`]), so a k-shard worker
+    /// touches 1/kshard of the operand bytes.
+    fn matmul_kslab(&self, x: &PotTensor, w: &PotTensor, k0: usize, k1: usize) -> Vec<i128> {
+        let (m, k, n) = check_kslab(x, w, k0, k1);
+        let (kshifts, _) = tile_args(x, w, k);
+        let mut acc = vec![0i128; m * n];
+        if m == 0 || n == 0 || k0 == k1 {
+            return acc;
+        }
+        let runs = k_shift_runs(kshifts.as_deref(), k);
+        let cuts: Vec<usize> = runs.iter().map(|r| r.0).collect();
+        let wp = w.pack_k_panels_range(&cuts, k0, k1);
+        let shifts = pair_panel_shifts(&wp, kshifts.as_deref());
+        acc_panels(self.path, x, &wp, 0..wp.panels.len(), &shifts, m, k, n, &mut acc);
+        acc
+    }
+
+    /// The step-persistent cache hit: serve the GEMM straight from the
+    /// operand's cached panel layout, skipping the per-call repack
+    /// entirely. Falls back to [`Self::matmul`] when the pair's
+    /// constant-shift grid is finer than the cached boundaries (then a
+    /// per-panel shift would not be constant).
+    fn matmul_packed(&self, x: &PotTensor, w: &PackedOperand) -> Vec<f32> {
+        let wt = w.tensor();
+        let (m, k, n) = dims2(x, wt);
+        let (kshifts, scale) = tile_args(x, wt, k);
+        let runs = k_shift_runs(kshifts.as_deref(), k);
+        let bounds: Vec<usize> = runs.iter().map(|r| r.0).collect();
+        if !w.covers(&bounds) {
+            return self.matmul(x, wt);
+        }
+        let mut out = vec![0f32; m * n];
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let wp = w.panels();
+        let shifts = pair_panel_shifts(wp, kshifts.as_deref());
+        let mut acc = vec![0i128; m * n];
+        acc_panels(self.path, x, wp, 0..wp.panels.len(), &shifts, m, k, n, &mut acc);
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = finish(a, scale);
+        }
+        out
+    }
+
+    /// K-slab partials from the cached panels (cache + tensor-parallel
+    /// composed): the slab boundaries must sit on cached panel
+    /// boundaries, which the step cache guarantees by packing with the
+    /// plan's k-shard cut grid.
+    fn matmul_kslab_packed(
+        &self,
+        x: &PotTensor,
+        w: &PackedOperand,
+        k0: usize,
+        k1: usize,
+    ) -> Vec<i128> {
+        let wt = w.tensor();
+        let (m, k, n) = check_kslab(x, wt, k0, k1);
+        let (kshifts, _) = tile_args(x, wt, k);
+        let runs = k_shift_runs(kshifts.as_deref(), k);
+        let mut bounds: Vec<usize> = runs.iter().map(|r| r.0).collect();
+        bounds.push(k0);
+        bounds.push(k1);
+        if !w.covers(&bounds) {
+            return self.matmul_kslab(x, wt, k0, k1);
+        }
+        let mut acc = vec![0i128; m * n];
+        if m == 0 || n == 0 || k0 == k1 {
+            return acc;
+        }
+        let wp = w.panels();
+        let prange = wp.panel_range(k0, k1);
+        let shifts = pair_panel_shifts(wp, kshifts.as_deref());
+        acc_panels(self.path, x, wp, prange, &shifts, m, k, n, &mut acc);
+        acc
     }
 }
 
@@ -296,11 +441,74 @@ unsafe fn hsum_epi64(v: std::arch::x86_64::__m256i) -> i64 {
     _mm_cvtsi128_si64(s2)
 }
 
-/// The shared outer kernel: pack `w` into k-major panels aligned with the
-/// pair's constant-shift runs, then stream each (x row, w panel column)
-/// pair through the selected vector inner loop. Per-panel tile shifts are
-/// applied once at panel spill (`<< shift` on the exact partial), so the
-/// result is the identical integer sum every other engine computes.
+/// The per-panel kernel shifts of one pair: the PAIR-combined,
+/// dmin-normalized value from `tile_args` — not the header's w-only delta
+/// (that one serves single-operand consumers). Constant per panel because
+/// every consumer's panel grid refines both operands' tile grids.
+fn pair_panel_shifts(wp: &KPanels, kshifts: Option<&[u32]>) -> Vec<u32> {
+    wp.panels
+        .iter()
+        .map(|h| kshifts.map_or(0, |s| s[h.p0]))
+        .collect()
+}
+
+/// The shared inner driver of every simd entry point: stream each
+/// (x row, w panel column) pair of `wp.panels[prange]` through the
+/// selected vector inner loop, adding each panel's exact partial —
+/// shifted once at panel spill (`<< shift`) — into `acc` (length `m*n`,
+/// pair-LSB fixed point, indices are *absolute* panel indices of `wp`).
+/// No rounding happens here, which is what lets matmul, the cached-panel
+/// path and the k-slab partials all share one kernel and stay
+/// bit-identical: integer accumulation is associative.
+#[allow(clippy::too_many_arguments)]
+fn acc_panels(
+    path: SimdPath,
+    x: &PotTensor,
+    wp: &KPanels,
+    prange: std::ops::Range<usize>,
+    shifts: &[u32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: &mut [i128],
+) {
+    debug_assert_eq!(acc.len(), m * n);
+    let emax = pot_emax(x.bits);
+    let n_groups = ((4 * emax) as usize >> 3) + 1; // AVX2 byte-weight bins
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = n_groups;
+    let spill = swar_spill_groups(emax);
+    let xc = x.codes();
+    // j-outer: the w panel column (k bytes) stays register/L1-hot while x
+    // streams; x itself is small enough to stay cached across columns
+    for j in 0..n {
+        for i in 0..m {
+            let xrow = &xc[i * k..(i + 1) * k];
+            let mut av: i128 = 0;
+            for pi in prange.clone() {
+                let h = &wp.panels[pi];
+                let xs = &xrow[h.p0..h.p1];
+                let ws = wp.col(pi, j);
+                let part = match path {
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx2 => unsafe { dot_codes_avx2(xs, ws, n_groups, spill) },
+                    #[cfg(not(target_arch = "x86_64"))]
+                    SimdPath::Avx2 => dot_codes_swar(xs, ws, spill),
+                    SimdPath::Swar => dot_codes_swar(xs, ws, spill),
+                    SimdPath::Scalar => dot_codes_scalar(xs, ws),
+                };
+                av += part << shifts[pi];
+            }
+            acc[i * n + j] += av;
+        }
+    }
+}
+
+/// The single-call kernel: pack `w` into k-major panels aligned with the
+/// pair's constant-shift runs, then run [`acc_panels`] over all of them.
+/// Per-panel tile shifts are applied once at panel spill (`<< shift` on
+/// the exact partial), so the result is the identical integer sum every
+/// other engine computes.
 fn matmul_impl(path: SimdPath, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
     let (m, k, n) = dims2(x, w);
     let (kshifts, scale) = tile_args(x, w, k);
@@ -313,42 +521,11 @@ fn matmul_impl(path: SimdPath, x: &PotTensor, w: &PotTensor) -> Vec<f32> {
     // shift-change points, so the combined shift is constant per panel
     let cuts: Vec<usize> = runs.iter().map(|r| r.0).collect();
     let wp = w.pack_k_panels(&cuts);
-    // per-panel kernel shift: the PAIR-combined, dmin-normalized value
-    // from tile_args — not the header's w-only delta (that one serves
-    // single-operand consumers). Constant per panel because the panel
-    // grid refines both operands' tile grids.
-    let shifts: Vec<u32> = wp
-        .panels
-        .iter()
-        .map(|h| kshifts.as_ref().map_or(0, |s| s[h.p0]))
-        .collect();
-    let emax = pot_emax(x.bits);
-    let n_groups = ((4 * emax) as usize >> 3) + 1; // AVX2 byte-weight bins
-    #[cfg(not(target_arch = "x86_64"))]
-    let _ = n_groups;
-    let spill = swar_spill_groups(emax);
-    let xc = x.codes();
-    // j-outer: the w panel column (k bytes) stays register/L1-hot while x
-    // streams; x itself is small enough to stay cached across columns
-    for j in 0..n {
-        for i in 0..m {
-            let xrow = &xc[i * k..(i + 1) * k];
-            let mut acc: i128 = 0;
-            for (pi, h) in wp.panels.iter().enumerate() {
-                let xs = &xrow[h.p0..h.p1];
-                let ws = wp.col(pi, j);
-                let part = match path {
-                    #[cfg(target_arch = "x86_64")]
-                    SimdPath::Avx2 => unsafe { dot_codes_avx2(xs, ws, n_groups, spill) },
-                    #[cfg(not(target_arch = "x86_64"))]
-                    SimdPath::Avx2 => dot_codes_swar(xs, ws, spill),
-                    SimdPath::Swar => dot_codes_swar(xs, ws, spill),
-                    SimdPath::Scalar => dot_codes_scalar(xs, ws),
-                };
-                acc += part << shifts[pi];
-            }
-            out[i * n + j] = finish(acc, scale);
-        }
+    let shifts = pair_panel_shifts(&wp, kshifts.as_deref());
+    let mut acc = vec![0i128; m * n];
+    acc_panels(path, x, &wp, 0..wp.panels.len(), &shifts, m, k, n, &mut acc);
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = finish(a, scale);
     }
     out
 }
@@ -593,6 +770,90 @@ mod tests {
         assert_eq!(rs.saturated_lanes, rd.saturated_lanes);
         assert_eq!(rs.total_lanes, rd.total_lanes);
         assert_eq!(rs.peak_magnitude, rd.peak_magnitude);
+    }
+
+    #[test]
+    fn simd_kslab_partials_match_reference() {
+        use crate::potq::engine::{finish_kslabs, kslab_bounds};
+        let (m, k, n) = (4, 37, 3);
+        let x = rand_tiled(3100, m, k, 1, 8);
+        let w = rand_tiled(3101, k, n, 0, 8);
+        let want = ScalarEngine.matmul(&x, &w);
+        for eng in paths_under_test() {
+            for kshard in [1usize, 2, 5, 37] {
+                let parts: Vec<Vec<i128>> = kslab_bounds(k, kshard)
+                    .into_iter()
+                    .map(|(k0, k1)| eng.matmul_kslab(&x, &w, k0, k1))
+                    .collect();
+                let got = finish_kslabs(&x, &w, &parts);
+                assert_bits_eq(
+                    &want,
+                    &got,
+                    &format!("kshard={kshard} path {}", eng.path().label()),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_packed_paths_hit_the_cache_and_stay_bit_exact() {
+        use crate::potq::engine::{finish_kslabs, kshard_cuts, kslab_bounds};
+        use crate::potq::PackedOperand;
+        let (m, k, n) = (5, 48, 4);
+        let x = rand_tensor(3200, m, k, 0.5, 5);
+        let w = rand_tiled(3201, k, n, 0, 16);
+        let want = ScalarEngine.matmul(&x, &w);
+        let packed = PackedOperand::new(w.clone(), &kshard_cuts(k, 4));
+        for eng in paths_under_test() {
+            let label = eng.path().label();
+            assert_bits_eq(&want, &eng.matmul_packed(&x, &packed), &format!("packed {label}"));
+            // cache + k-shard composed: slabs served from the cached panels
+            let parts: Vec<Vec<i128>> = kslab_bounds(k, 4)
+                .into_iter()
+                .map(|(k0, k1)| eng.matmul_kslab_packed(&x, &packed, k0, k1))
+                .collect();
+            let got = finish_kslabs(&x, &w, &parts);
+            assert_bits_eq(&want, &got, &format!("packed kslab {label}"));
+            // a slab grid the cache does not cover falls back (bit-exact)
+            let odd = eng.matmul_kslab_packed(&x, &packed, 5, 29);
+            assert_eq!(odd, eng.matmul_kslab(&x, &w, 5, 29), "fallback {label}");
+        }
+        // an x tile grid finer than the cache falls back through matmul
+        let xt = rand_tiled(3202, m, k, 1, 8); // 8-grid not in the 12-cut cache
+        let want_t = ScalarEngine.matmul(&xt, &w);
+        for eng in paths_under_test() {
+            assert_bits_eq(
+                &want_t,
+                &eng.matmul_packed(&xt, &packed),
+                &format!("tiled-x fallback {}", eng.path().label()),
+            );
+        }
+    }
+
+    #[test]
+    fn simd_batch_shares_one_pack_per_distinct_weight() {
+        // the repack-hole fix: a batch whose pairs share one weight
+        // operand (by address) must stay bit-identical to per-call
+        // matmul — mixed with pairs carrying their own operands
+        let w_shared = rand_tiled(3300, 24, 5, 0, 8);
+        let xs: Vec<PotTensor> = (0..3).map(|i| rand_tensor(3310 + i, 4, 24, 0.5, 5)).collect();
+        let w_other = rand_tensor(3320, 16, 3, 0.04, 5);
+        let x_other = rand_tensor(3321, 2, 16, 0.5, 5);
+        let mut pairs: Vec<(&PotTensor, &PotTensor)> =
+            xs.iter().map(|x| (x, &w_shared)).collect();
+        pairs.push((&x_other, &w_other));
+        for eng in paths_under_test() {
+            let batched = eng.matmul_batch(&pairs);
+            assert_eq!(batched.len(), pairs.len());
+            for (i, (x, w)) in pairs.iter().enumerate() {
+                let want = eng.matmul(x, w);
+                assert_bits_eq(
+                    &want,
+                    &batched[i],
+                    &format!("batch[{i}] path {}", eng.path().label()),
+                );
+            }
+        }
     }
 
     #[test]

@@ -63,7 +63,7 @@ impl NativeSession {
         } else {
             ShardPlan::auto_tile(spec.batch)
         };
-        let plan = ShardPlan::new(spec.batch, tile, cfg.workers)?;
+        let plan = ShardPlan::new(spec.batch, tile, cfg.workers)?.with_kshard(cfg.kshard)?;
         NativeSession::new(spec, nn_cfg, &cfg.engine, cfg.threads, plan)
     }
 
@@ -208,7 +208,7 @@ impl SessionBackend for NativeSession {
             self.model =
                 Some(Self::sharded(&self.cfg, self.plan, &self.engine_name, self.threads, 0)?);
         }
-        self.model_mut()?.model.state_from_vec(v).map_err(anyhow::Error::msg)
+        self.model_mut()?.state_from_vec(v).map_err(anyhow::Error::msg)
     }
 }
 
@@ -312,6 +312,34 @@ mod tests {
             states.push(s.state_to_host().unwrap());
         }
         assert_eq!(states[0], states[1], "W=1 vs W=4 session state");
+    }
+
+    #[test]
+    fn kshard_is_invariant_at_session_level() {
+        // the tensor-parallel tentpole at the SessionBackend layer: the
+        // workers x kshard grid is pure schedule — same seed, any grid,
+        // bit-identical states and censuses
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for (workers, kshard) in [(1usize, 1usize), (2, 2), (1, 4)] {
+            let cfg = TrainConfig {
+                variant: "tiny_mlp_mf".into(),
+                workers,
+                kshard,
+                ..TrainConfig::default()
+            };
+            let mut s = NativeSession::from_config(&cfg).unwrap();
+            assert_eq!(s.plan().kshard, kshard);
+            s.init(13).unwrap();
+            let b = batch_for(&s, 13);
+            for _ in 0..2 {
+                s.train_step(&b, 0.05).unwrap();
+            }
+            assert_eq!(s.last_census().unwrap().linear_fp32_muls, 0);
+            states.push(s.state_to_host().unwrap());
+        }
+        for s in &states[1..] {
+            assert_eq!(&states[0], s, "workers x kshard grid changed the session state");
+        }
     }
 
     #[test]

@@ -106,6 +106,93 @@ fn native_sharded_train_and_eval_honor_workers_and_threads() {
 }
 
 #[test]
+fn native_kshard_train_matches_unsharded_checkpoint() {
+    // the binary-level acceptance pin: --engine simd --workers 2
+    // --kshard 2 writes the byte-identical checkpoint of --engine scalar
+    // --workers 1 --kshard 1, and eval honors --kshard
+    let ck_a = std::env::temp_dir().join("mft_cli_kshard_a.ckpt");
+    let ck_b = std::env::temp_dir().join("mft_cli_kshard_b.ckpt");
+    std::fs::remove_file(&ck_a).ok();
+    std::fs::remove_file(&ck_b).ok();
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine", "simd",
+            "--workers", "2", "--kshard", "2", "--steps", "6", "--lr", "0.05", "--seed",
+            "4", "--checkpoint",
+        ])
+        .arg(&ck_a)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("2 workers x 2 kshard"), "{s}");
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine",
+            "scalar", "--workers", "1", "--kshard", "1", "--steps", "6", "--lr", "0.05",
+            "--seed", "4", "--checkpoint",
+        ])
+        .arg(&ck_b)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let (a, b) = (std::fs::read(&ck_a).unwrap(), std::fs::read(&ck_b).unwrap());
+    assert_eq!(a, b, "k-sharded checkpoint bytes diverged from unsharded");
+
+    let out = mft()
+        .args([
+            "eval", "--variant", "tiny_mlp_mf", "--engine", "simd", "--workers", "2",
+            "--kshard", "2", "--batches", "2", "--checkpoint",
+        ])
+        .arg(&ck_a)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("accuracy"));
+}
+
+#[test]
+fn kshard_zero_is_a_clean_cli_error() {
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--kshard", "0",
+            "--steps", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("kshard must be >= 1"), "{e}");
+}
+
+#[test]
+fn census_is_invariant_in_kshard() {
+    // `mft census --kshard K` must report the identical op counts and
+    // zero FP32 muls for any K: the k-combine is integer adds on exact
+    // accumulators, invisible to the census
+    let mut jsons: Vec<String> = Vec::new();
+    for kshard in ["1", "4"] {
+        let json = std::env::temp_dir().join(format!("mft_cli_census_k{kshard}.json"));
+        std::fs::remove_file(&json).ok();
+        let out = mft()
+            .args([
+                "census", "--variant", "tiny_mlp_mf", "--engine", "simd", "--workers",
+                "2", "--kshard", kshard, "--seed", "8", "--json",
+            ])
+            .arg(&json)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let s = String::from_utf8_lossy(&out.stdout);
+        assert!(s.contains("linear-layer FP32 multiplies: 0"), "K={kshard}: {s}");
+        // strip the kshard field itself; everything else must match
+        let j = std::fs::read_to_string(&json).unwrap();
+        jsons.push(j.replace(&format!("\"kshard\":{kshard}"), "\"kshard\":<k>"));
+    }
+    assert_eq!(jsons[0], jsons[1], "census op counts diverged across kshard");
+}
+
+#[test]
 fn workers_zero_is_a_clean_cli_error() {
     let out = mft()
         .args([

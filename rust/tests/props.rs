@@ -5,8 +5,8 @@
 use mftrain::energy::{methods, training_energy_joules};
 use mftrain::models;
 use mftrain::potq::{
-    self, BlockedEngine, MacEngine, ScalarEngine, SimdEngine, SimdPath, ThreadedEngine,
-    ZERO_CODE,
+    self, engine_by_name, finish_kslabs, BlockedEngine, KShardEngine, MacEngine, PackedOperand,
+    ScalarEngine, SimdEngine, SimdPath, ThreadedEngine, ZERO_CODE,
 };
 use mftrain::testing::{property, property_shrink, Gen};
 
@@ -342,6 +342,113 @@ fn prop_engines_bit_exact_on_tiled_operands() {
             && rs.saturated_lanes == rd.saturated_lanes
             && rs.peak_magnitude == rt.peak_magnitude
             && rs.peak_magnitude == rd.peak_magnitude
+    });
+}
+
+#[test]
+fn prop_kshard_matmul_bit_exact() {
+    // the tensor-parallel law: k-sharded matmul / matmul_batch is
+    // bit-identical to unsharded on all 4 engines x irregular k-cut
+    // grids x tiled/untiled operands x partial last slabs — both via
+    // KShardEngine (balanced slabs on worker threads) and via explicit
+    // irregular slab covers summed with finish_kslabs
+    property("k-sharded matmul == unsharded, all engines", 25, |g: &mut Gen| {
+        let m = g.usize_in(1, 7);
+        let k = g.usize_in(0, 26); // k = 0 stays a legal empty reduction
+        let n = g.usize_in(1, 7);
+        let tile = [1usize, 2, 4, 8][g.usize_in(0, 4)];
+        let which = g.usize_in(0, 3); // 0: x tiled, 1: w tiled, 2: both
+        let x = if which != 1 && k > 0 {
+            g.pot_tensor_tiled(m, k, 1, tile, 5)
+        } else {
+            g.pot_tensor(m, k, 5)
+        };
+        let w = if which != 0 && k > 0 {
+            g.pot_tensor_tiled(k, n, 0, tile, 5)
+        } else {
+            g.pot_tensor(k, n, 5)
+        };
+        let want = ScalarEngine.matmul(&x, &w);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let kshard = g.usize_in(1, 7); // often > n_slabs -> partial/short last slab
+        let mut ok = true;
+        for name in potq::ENGINE_NAMES {
+            let eng = KShardEngine::new(engine_by_name(name, 2).unwrap(), kshard);
+            ok &= bits(&want) == bits(&eng.matmul(&x, &w));
+            let pairs = [(&x, &w), (&x, &w)];
+            ok &= eng
+                .matmul_batch(&pairs)
+                .iter()
+                .all(|out| bits(&want) == bits(out));
+            // an irregular cut grid through the raw k-slab API
+            if k > 0 {
+                let mut cuts = vec![0usize, k];
+                for _ in 0..g.usize_in(0, 3) {
+                    cuts.push(g.usize_in(0, k + 1));
+                }
+                cuts.sort_unstable();
+                cuts.dedup();
+                let inner = engine_by_name(name, 2).unwrap();
+                let parts: Vec<Vec<i128>> = cuts
+                    .windows(2)
+                    .map(|p| inner.matmul_kslab(&x, &w, p[0], p[1]))
+                    .collect();
+                ok &= bits(&want) == bits(&finish_kslabs(&x, &w, &parts));
+            }
+        }
+        ok
+    });
+}
+
+#[test]
+fn prop_packed_operand_matches_plain() {
+    // the step-persistent operand cache: matmul_packed against a cached
+    // panel layout (with k-shard cuts folded in) is bit-identical to the
+    // plain tensor path on every engine, k-sharded or not
+    property("matmul_packed == matmul, all engines", 25, |g: &mut Gen| {
+        let m = g.usize_in(1, 6);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 6);
+        let w = if g.bool() {
+            g.pot_tensor_tiled(k, n, 0, [2usize, 4][g.usize_in(0, 2)], 5)
+        } else {
+            g.pot_tensor(k, n, 5)
+        };
+        let x = g.pot_tensor(m, k, 5);
+        let kshard = g.usize_in(1, 5);
+        let packed = PackedOperand::new(w.clone(), &potq::kshard_cuts(k, kshard));
+        let want = ScalarEngine.matmul(&x, &w);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        potq::ENGINE_NAMES.iter().all(|name| {
+            let eng = engine_by_name(name, 2).unwrap();
+            let keng = KShardEngine::new(engine_by_name(name, 2).unwrap(), kshard);
+            bits(&want) == bits(&eng.matmul_packed(&x, &packed))
+                && bits(&want) == bits(&keng.matmul_packed(&x, &packed))
+        })
+    });
+}
+
+#[test]
+fn prop_swar_quantizer_bit_identical_to_scalar() {
+    // the vectorized quantizer: PotTensor::quantize's SWAR code packer
+    // vs the scalar pot_quantize_one + pack_code path, element-exact,
+    // including the sqrt(2)/2 rounding boundary and the subnormal flush
+    property("SWAR quantizer == scalar reference", 120, |g: &mut Gen| {
+        let b = [3u32, 4, 5, 6][g.usize_in(0, 4)];
+        let emax = potq::pot_emax(b);
+        let mut x = g.vec_f32_logscale(1..200, -40, 20);
+        // salt with exact boundary values and flush candidates
+        x.push(potq::SQRT2_F32);
+        x.push(-potq::SQRT2_F32 / 2.0);
+        x.push(f32::from_bits(potq::SQRT2_F32.to_bits() - 1));
+        x.push(0.0);
+        x.push(-0.0);
+        x.push(1e-42);
+        let blk = potq::pot_quantize(&x, b, None);
+        x.iter().enumerate().all(|(i, &v)| {
+            let (e, s) = potq::pot_quantize_one(v, b, blk.beta);
+            blk.code(i) == potq::pack_code(e, s, emax)
+        })
     });
 }
 

@@ -259,6 +259,81 @@ fn native_sharded_run_bit_identical_across_workers_all_engines() {
 }
 
 #[test]
+fn native_kshard_checkpoints_digest_identical() {
+    // the tensor-parallel acceptance pin: `mft train --backend native
+    // --kshard K` checkpoints are digest-identical for K in {1, 2, 4}
+    // (k-slab partials are exact integers; the combine is an
+    // exponent-aligned integer add), and the simd W=2 K=2 grid
+    // reproduces scalar W=1 K=1 exactly
+    let mut digests: Vec<u64> = Vec::new();
+    let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
+    let cells: [(&str, usize, usize); 4] =
+        [("scalar", 1, 1), ("blocked", 1, 2), ("threaded", 2, 4), ("simd", 2, 2)];
+    for (engine, workers, kshard) in cells {
+        let ckpt = std::env::temp_dir()
+            .join(format!("mft_native_kshard_{engine}_{workers}_{kshard}.ckpt"));
+        std::fs::remove_file(&ckpt).ok();
+        let mut cfg = native_cfg("tiny_mlp_mf", 10, 37);
+        cfg.engine = engine.into();
+        cfg.workers = workers;
+        cfg.kshard = kshard;
+        cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+        let mut t = Trainer::native(cfg).unwrap().quiet();
+        let rec = t.run().unwrap();
+        curves.push(rec.loss_curve.iter().map(|&(s, l)| (s, l.to_bits())).collect());
+        let ck = Checkpoint::load(&ckpt).unwrap();
+        assert_eq!(ck.step, 10);
+        digests.push(ck.digest());
+    }
+    for (i, (engine, workers, kshard)) in cells.iter().enumerate().skip(1) {
+        assert_eq!(
+            digests[0], digests[i],
+            "{engine} W={workers} K={kshard} checkpoint diverged from scalar 1x1"
+        );
+        assert_eq!(curves[0], curves[i], "{engine} W={workers} K={kshard} loss curve");
+    }
+}
+
+#[test]
+fn native_kshard_census_is_schedule_invariant() {
+    // census invariance across the workers x kshard grid: identical
+    // per-GEMM op counts and zero FP32 muls including the k-combine
+    // (the combine is integer adds on exact accumulators before the one
+    // dequantize — no new multiplies anywhere)
+    let mut results: Vec<(u64, u64, u64, u64)> = Vec::new();
+    for (workers, kshard) in [(1usize, 1usize), (2, 2), (1, 4)] {
+        let cfg = TrainConfig {
+            variant: "tiny_mlp_mf".into(),
+            workers,
+            kshard,
+            engine: "simd".into(),
+            ..TrainConfig::default()
+        };
+        let mut s = NativeSession::from_config(&cfg).unwrap();
+        s.init(9).unwrap();
+        let info = s.info().clone();
+        let mut ds =
+            mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, 9);
+        let b = ds.next_batch();
+        s.train_step(&b, 0.05).unwrap();
+        let census = s.last_census().expect("census recorded");
+        assert_eq!(
+            census.linear_fp32_muls, 0,
+            "W={workers} K={kshard}: FP32 muls leaked (k-combine included)"
+        );
+        results.push((
+            census.linear_fp32_muls,
+            census.live_macs(),
+            census.total_macs(),
+            census.combine_exp_adds,
+        ));
+    }
+    for r in &results[1..] {
+        assert_eq!(&results[0], r, "census changed with the workers x kshard schedule");
+    }
+}
+
+#[test]
 fn native_sharded_census_zero_fp32_muls_including_combine() {
     // a W=4 sharded step keeps the paper's invariant across the whole
     // step: zero FP32 multiplies in linear layers, the gradient combine
