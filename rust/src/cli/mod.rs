@@ -117,6 +117,7 @@ USAGE:
             [--engine scalar|blocked|threaded|simd|auto]
             [--threads N] [--bits 3..6] [--workers N] [--shard-tile P]
             [--kshard K] [--momentum F] [--weight-decay F]
+            [--pack auto|byte|nibble]
             # native backend: the in-process multiplication-free trainer
             # (no artifacts needed); variants: mlp_mf, mlp_fp32,
             # tiny_mlp_mf, tiny_mlp_fp32. --workers N shards the batch
@@ -124,10 +125,13 @@ USAGE:
             # splits every GEMM's reduction dim over K slab threads (the
             # workers x kshard grid; seeded runs are bit-identical for
             # any N and K); momentum/weight-decay are PoT-snapped so the
-            # update stays multiplication-free
+            # update stays multiplication-free. --pack picks the operand
+            # cache's physical code layout (nibble = 4-bit magnitudes +
+            # sign bitplane; auto = nibble whenever --bits <= 5) — pure
+            # storage, digest-identical across values
   mft eval --variant <name> --checkpoint <path> [--batches N]
            [--engine ...] [--threads N] [--bits N] [--workers N]
-           [--kshard K]
+           [--kshard K] [--pack auto|byte|nibble]
            # native checkpoints; --threads sizes the threaded engine,
            # --workers parallelizes eval over shard tiles, --kshard over
            # k-slabs
@@ -138,9 +142,10 @@ USAGE:
              # training step (the measured counterpart of `mft energy`)
   mft kernels [--engine scalar|blocked|threaded|simd|auto] [--threads N]
               [--shape MxKxN] [--bits 5] [--seed N] [--check]
-              [--json out.json]
+              [--pack auto|byte|nibble] [--json out.json]
               # simd/auto runtime-dispatch the vector path (swar/avx2)
-              # and print which one was chosen
+              # and print which one was chosen; --pack benches the w
+              # operand in its byte or nibble physical layout
   mft macs [--model resnet50]
   mft distributions --variant <name> [--steps N] [--every N]
   mft ablation [--steps N] [--seeds N]

@@ -87,6 +87,12 @@ pub struct TrainConfig {
     /// Must be >= 1; bit-identical for any value (a throughput knob,
     /// composing with `workers` into a workers x kshard grid).
     pub kshard: usize,
+    /// physical layout of the step operand cache's code planes
+    /// (`mft train --pack auto|byte|nibble`): "nibble" stores 4-bit
+    /// magnitudes + a sign bitplane, "byte" one code byte per element,
+    /// "auto" picks nibble whenever the bit width fits (bits <= 5).
+    /// Pure storage — runs are digest-identical across pack modes.
+    pub pack: String,
 }
 
 impl Default for TrainConfig {
@@ -121,6 +127,7 @@ impl Default for TrainConfig {
             workers: 1,
             shard_tile: 0,
             kshard: 1,
+            pack: "auto".into(),
         }
     }
 }
@@ -177,6 +184,7 @@ impl TrainConfig {
             workers: doc.i64_or("shard.workers", d.workers as i64) as usize,
             shard_tile: doc.i64_or("shard.tile", d.shard_tile as i64) as usize,
             kshard: doc.i64_or("shard.kshard", d.kshard as i64) as usize,
+            pack: doc.str_or("native.pack", &d.pack).to_string(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -228,6 +236,15 @@ impl TrainConfig {
         }
         if self.kshard == 0 {
             bail!("kshard must be >= 1 (got 0); use 1 for no k-sharding");
+        }
+        match crate::potq::PackMode::parse(&self.pack) {
+            None => bail!("native.pack must be auto|byte|nibble, got '{}'", self.pack),
+            Some(crate::potq::PackMode::Nibble) if self.bits > 5 => bail!(
+                "native.pack = \"nibble\" needs a 4-bit magnitude (bits <= 5); \
+                 bits = {} — use auto or byte",
+                self.bits
+            ),
+            Some(_) => {}
         }
         Ok(())
     }
@@ -382,5 +399,25 @@ kshard = 2
             let doc = toml::Doc::parse(bad).unwrap();
             assert!(TrainConfig::from_doc(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn pack_field_parses_and_validates() {
+        assert_eq!(TrainConfig::default().pack, "auto");
+        for good in ["auto", "byte", "nibble"] {
+            let doc = toml::Doc::parse(&format!("[native]\npack = \"{good}\"\n")).unwrap();
+            assert_eq!(TrainConfig::from_doc(&doc).unwrap().pack, good);
+        }
+        // an unknown layout is rejected
+        let doc = toml::Doc::parse("[native]\npack = \"bitplane\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("auto|byte|nibble"), "{err}");
+        // forcing nibble storage onto 6-bit codes is a config error ...
+        let doc = toml::Doc::parse("[native]\npack = \"nibble\"\nbits = 6\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("bits <= 5"), "{err}");
+        // ... but auto quietly stays on the byte layout
+        let doc = toml::Doc::parse("[native]\nbits = 6\n").unwrap();
+        assert_eq!(TrainConfig::from_doc(&doc).unwrap().pack, "auto");
     }
 }

@@ -1,13 +1,24 @@
 //! Checkpointing: the packed state vector + integrity metadata, in a
-//! simple length-prefixed binary format (magic, version, variant-name,
-//! step, state data, xor checksum).
+//! length-prefixed binary format (magic, version, variant-name, step,
+//! RLE-compressed state data, FNV-1a digest).
+//!
+//! v2 runs the shared byte-RLE codec ([`crate::util::rle`]) over the
+//! little-endian f32 state bytes before writing. The compression is
+//! lossless — the digest is computed over the *raw* state, so a
+//! round-trip is bit-identical to the uncompressed vector — and pays
+//! off on the long zero/constant runs of freshly-initialized or sparse
+//! state; trained dense f32 state is mantissa-noise and stays near 1x.
+//! v1 (uncompressed) streams are rejected with a version-mismatch
+//! error, not a panic.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-const MAGIC: &[u8; 8] = b"MFTCKPT\x01";
+use crate::util::rle;
+
+const MAGIC: &[u8; 8] = b"MFTCKPT\x02";
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
@@ -29,6 +40,22 @@ pub fn state_digest(state: &[f32]) -> u64 {
     h
 }
 
+/// Length-checked cursor advance over an in-memory checkpoint image.
+fn take<'a>(data: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    match pos.checked_add(n) {
+        Some(end) if end <= data.len() => {
+            let s = &data[*pos..end];
+            *pos = end;
+            Ok(s)
+        }
+        _ => bail!("truncated checkpoint ({n} bytes past end at offset {pos})"),
+    }
+}
+
+fn take_u64(data: &[u8], pos: &mut usize) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(data, pos, 8)?.try_into().expect("8 bytes")))
+}
+
 impl Checkpoint {
     /// Digest of the stored state vector (bit-level identity proxy).
     pub fn digest(&self) -> u64 {
@@ -47,13 +74,15 @@ impl Checkpoint {
             f.write_all(&(name.len() as u32).to_le_bytes())?;
             f.write_all(name)?;
             f.write_all(&self.step.to_le_bytes())?;
-            f.write_all(&(self.state.len() as u64).to_le_bytes())?;
-            // SAFETY-free raw serialize: little-endian f32s
+            // SAFETY-free raw serialize: little-endian f32s, RLE'd
             let mut bytes = Vec::with_capacity(self.state.len() * 4);
             for v in &self.state {
                 bytes.extend_from_slice(&v.to_le_bytes());
             }
-            f.write_all(&bytes)?;
+            let comp = rle::compress(&bytes);
+            f.write_all(&(self.state.len() as u64).to_le_bytes())?;
+            f.write_all(&(comp.len() as u64).to_le_bytes())?;
+            f.write_all(&comp)?;
             f.write_all(&state_digest(&self.state).to_le_bytes())?;
         }
         std::fs::rename(&tmp, path).context("atomic checkpoint rename")?;
@@ -61,34 +90,40 @@ impl Checkpoint {
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
+        let data = std::fs::read(path)
             .with_context(|| format!("opening checkpoint {}", path.display()))?;
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        if data.len() < 8 || data[..7] != MAGIC[..7] {
             bail!("{} is not an mftrain checkpoint", path.display());
         }
-        let mut u32b = [0u8; 4];
-        f.read_exact(&mut u32b)?;
-        let name_len = u32::from_le_bytes(u32b) as usize;
+        if data[7] != MAGIC[7] {
+            bail!(
+                "checkpoint version mismatch: {} is v{}, this build reads v{}",
+                path.display(),
+                data[7],
+                MAGIC[7]
+            );
+        }
+        let mut pos = 8usize;
+        let name_len =
+            u32::from_le_bytes(take(&data, &mut pos, 4)?.try_into().expect("4 bytes")) as usize;
         if name_len > 4096 {
             bail!("implausible variant-name length {name_len}");
         }
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        let mut u64b = [0u8; 8];
-        f.read_exact(&mut u64b)?;
-        let step = u64::from_le_bytes(u64b);
-        f.read_exact(&mut u64b)?;
-        let n = u64::from_le_bytes(u64b) as usize;
-        let mut bytes = vec![0u8; n * 4];
-        f.read_exact(&mut bytes)?;
+        let name = take(&data, &mut pos, name_len)?.to_vec();
+        let step = take_u64(&data, &mut pos)?;
+        let n = take_u64(&data, &mut pos)? as usize;
+        let raw_len = n.checked_mul(4).context("implausible state length")?;
+        let comp_len = take_u64(&data, &mut pos)? as usize;
+        let comp = take(&data, &mut pos, comp_len)?;
+        let bytes = rle::decompress(comp, raw_len).context("checkpoint state stream")?;
         let state: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
-        f.read_exact(&mut u64b)?;
-        let want = u64::from_le_bytes(u64b);
+        let want = take_u64(&data, &mut pos)?;
+        if pos != data.len() {
+            bail!("trailing bytes after checkpoint digest");
+        }
         let got = state_digest(&state);
         if want != got {
             bail!("checkpoint checksum mismatch ({want:#x} != {got:#x})");
@@ -116,6 +151,25 @@ mod tests {
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
+        // the compressed round-trip preserves the raw-state digest
+        assert_eq!(ck.digest(), back.digest());
+    }
+
+    #[test]
+    fn compresses_runs_losslessly() {
+        // mostly-zero state (fresh momentum buffers, sparse grads): the
+        // on-disk file must be well under the raw 4 bytes/element
+        let mut state = vec![0f32; 4096];
+        for i in (0..state.len()).step_by(97) {
+            state[i] = i as f32;
+        }
+        let ck = Checkpoint { variant: "sparse".into(), step: 7, state };
+        let path = std::env::temp_dir().join("mft_ckpt_sparse.bin");
+        ck.save(&path).unwrap();
+        let on_disk = std::fs::metadata(&path).unwrap().len() as usize;
+        assert!(on_disk * 2 < ck.state.len() * 4, "{} bytes on disk", on_disk);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
     }
 
     #[test]
@@ -128,6 +182,42 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&path, bytes).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let ck = Checkpoint {
+            variant: "probe".into(),
+            step: 9,
+            state: (0..257).map(|i| (i % 5) as f32).collect(),
+        };
+        let path = std::env::temp_dir().join("mft_ckpt_probe.bin");
+        ck.save(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let bad_path = std::env::temp_dir().join("mft_ckpt_probe_bad.bin");
+        // truncation at every prefix length
+        for cut in 0..good.len() {
+            std::fs::write(&bad_path, &good[..cut]).unwrap();
+            assert!(Checkpoint::load(&bad_path).is_err(), "cut={cut}");
+        }
+        // bad digest stamp (last 8 bytes)
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        std::fs::write(&bad_path, &bad).unwrap();
+        let err = Checkpoint::load(&bad_path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // version-mismatch header (a v1 stream) is its own error
+        let mut bad = good.clone();
+        bad[7] = 1;
+        std::fs::write(&bad_path, &bad).unwrap();
+        let err = Checkpoint::load(&bad_path).unwrap_err().to_string();
+        assert!(err.contains("version mismatch"), "{err}");
+        // trailing garbage after the digest
+        let mut bad = good.clone();
+        bad.push(0);
+        std::fs::write(&bad_path, &bad).unwrap();
+        assert!(Checkpoint::load(&bad_path).is_err());
     }
 
     #[test]

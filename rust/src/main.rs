@@ -52,6 +52,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.workers = args.u64_flag("workers", cfg.workers as u64)? as usize;
     cfg.shard_tile = args.u64_flag("shard-tile", cfg.shard_tile as u64)? as usize;
     cfg.kshard = args.u64_flag("kshard", cfg.kshard as u64)? as usize;
+    if let Some(v) = args.str_flag("pack") {
+        cfg.pack = v.to_string();
+    }
     if args.flags.contains_key("momentum") {
         cfg.momentum = args.f64_flag("momentum", cfg.momentum as f64)? as f32;
     }
@@ -173,6 +176,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.workers = args.u64_flag("workers", cfg.workers as u64)? as usize;
         cfg.shard_tile = args.u64_flag("shard-tile", cfg.shard_tile as u64)? as usize;
         cfg.kshard = args.u64_flag("kshard", cfg.kshard as u64)? as usize;
+        if let Some(v) = args.str_flag("pack") {
+            cfg.pack = v.to_string();
+        }
         cfg.validate()?;
         let mut session = NativeSession::from_config(&cfg)?;
         session.state_from_host(&ckpt.state)?;
@@ -339,7 +345,7 @@ fn cmd_census(args: &Args) -> Result<()> {
 }
 
 fn cmd_kernels(args: &Args) -> Result<()> {
-    use mftrain::potq::{MacEngine, PotTensor, ScalarEngine};
+    use mftrain::potq::{MacEngine, PackMode, PackedOperand, PotTensor, ScalarEngine};
     use mftrain::util::prng::Pcg32;
     use mftrain::util::timer::{bench, fmt_duration};
 
@@ -353,6 +359,9 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     let (m, k, n) = args.shape_flag("shape", (64, 512, 512))?;
     let bits = args.u64_flag("bits", 5)? as u32;
     anyhow::ensure!((3..=6).contains(&bits), "--bits must be in 3..=6");
+    let pack = args.str_flag("pack").unwrap_or("auto");
+    let pack = PackMode::parse(pack)
+        .ok_or_else(|| anyhow::anyhow!("--pack must be auto|byte|nibble, got '{pack}'"))?;
 
     let mut rng = Pcg32::new(args.u64_flag("seed", 0)?);
     let mut x = vec![0f32; m * k];
@@ -361,28 +370,39 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     rng.fill_normal(&mut w, 0.0, 0.02);
     let xq = PotTensor::quantize_2d(&x, m, k, bits, None);
     let wq = PotTensor::quantize_2d(&w, k, n, bits, None);
+    // the weight operand in its physical layout (--pack): byte codes or
+    // sign-planed magnitude nibbles — what the train loop's step cache
+    // feeds the engines
+    let wp = PackedOperand::new_packed(wq.clone(), &[], pack)?;
+    let layout = wp.layout();
+    // physical bytes per stored w code: 1 for bytes, 4-bit magnitude +
+    // 1-bit sign for nibbles
+    let w_bpe = if layout == "nibble" { 0.625 } else { 1.0 };
 
     if args.bool_flag("check") {
         let reference = ScalarEngine.matmul(&xq, &wq);
-        let got = engine.matmul(&xq, &wq);
+        let got = engine.matmul_packed(&xq, &wp);
         for (i, (a, b)) in got.iter().zip(&reference).enumerate() {
             anyhow::ensure!(
                 a.to_bits() == b.to_bits(),
-                "engine '{}' diverges from scalar at [{i}]: {a} vs {b}",
+                "engine '{}' ({layout} layout) diverges from scalar at [{i}]: {a} vs {b}",
                 engine.name()
             );
         }
-        println!("[mft] check: '{}' is bit-exact with scalar on {m}x{k}x{n}", engine.name());
+        println!(
+            "[mft] check: '{}' ({layout} layout) is bit-exact with scalar on {m}x{k}x{n}",
+            engine.name()
+        );
     }
 
     let t = bench(1, 5, || {
-        std::hint::black_box(engine.matmul(&xq, &wq));
+        std::hint::black_box(engine.matmul_packed(&xq, &wp));
     });
     let macs = (m * k * n) as u64;
     // effective packed-code traffic: every MAC consumes one x code byte
-    // and one w code byte (2 bytes/MAC incl. cache reuse) — the stream
-    // the vectorized inner loops are designed to saturate
-    let code_bytes = 2 * macs;
+    // plus the w code at its physical width (cache reuse included) — the
+    // stream the vectorized inner loops are designed to saturate
+    let code_bytes = (macs as f64 * (1.0 + w_bpe)) as u64;
     let census = mftrain::energy::mfmac_census(&xq, &wq);
     let (_, sat) = engine.matmul_i32_saturating(&xq, &wq);
 
@@ -399,10 +419,12 @@ fn cmd_kernels(args: &Args) -> Result<()> {
         format!("{:.2}", t.throughput(2 * macs) / 1e9),
         format!("{:.1}%", census.live_fraction() * 100.0),
         format!("{:.2}%", sat.saturation_rate() * 100.0),
-        "1 (packed PoT)".to_string(),
+        format!("{w_bpe} ({layout})"),
     ]);
-    tb.note("code GB/s = effective packed-code traffic (2 code bytes per MAC, \
-             cache reuse included)");
+    tb.note(
+        "code GB/s = effective packed-code traffic (1 x byte + the w code's \
+         physical bytes per MAC, cache reuse included)",
+    );
     tb.print();
 
     if let Some(path) = args.str_flag("json") {
@@ -415,12 +437,14 @@ fn cmd_kernels(args: &Args) -> Result<()> {
         }
         o.insert("shape".to_string(), Json::Str(format!("{m}x{k}x{n}")));
         o.insert("bits".to_string(), Json::Num(bits as f64));
+        o.insert("pack".to_string(), Json::Str(pack.as_str().to_string()));
+        o.insert("layout".to_string(), Json::Str(layout.to_string()));
         o.insert("mean_secs".to_string(), Json::Num(t.mean().as_secs_f64()));
         o.insert("gmacs_per_s".to_string(), Json::Num(t.throughput(macs) / 1e9));
         o.insert("code_gb_per_s".to_string(), Json::Num(t.throughput(code_bytes) / 1e9));
         o.insert("live_mac_fraction".to_string(), Json::Num(census.live_fraction()));
         o.insert("saturation_rate".to_string(), Json::Num(sat.saturation_rate()));
-        o.insert("bytes_per_elem".to_string(), Json::Num(1.0));
+        o.insert("bytes_per_elem".to_string(), Json::Num(w_bpe));
         std::fs::write(path, Json::Obj(o).to_string())?;
         println!("json -> {path}");
     }

@@ -24,7 +24,8 @@
 //! and zero operands cost nothing — no branch in the inner loop.
 
 use super::quantize::{
-    pot_emax, PackedOperand, PotTensor, TileScales, MAG_MASK, MAG_OFFSET, SIGN_BIT,
+    decode_nibbles_into, pot_emax, KPanels, PackedOperand, PotTensor, TileScales, MAG_MASK,
+    MAG_OFFSET, SIGN_BIT,
 };
 
 /// Saturation behaviour of the hardware INT32 accumulator.
@@ -92,15 +93,21 @@ pub trait MacEngine: Sync {
     }
 
     /// [`MacEngine::matmul`] against a step-persistent [`PackedOperand`]
-    /// `w`. The default ignores the cached panel layout; panel-consuming
-    /// engines override to skip their per-call repack. Must be
-    /// bit-identical to `matmul(x, w.tensor())`.
+    /// `w`. Nibble-layout operands are consumed through the shared unpack
+    /// path ([`nibble_matmul_packed`]) so every engine reads half the
+    /// code bytes; byte-layout operands fall back to the plain tensor
+    /// (panel-consuming engines override to skip their per-call repack).
+    /// Must be bit-identical to `matmul(x, w.tensor())`.
     fn matmul_packed(&self, x: &PotTensor, w: &PackedOperand) -> Vec<f32> {
+        if let Some(out) = nibble_matmul_packed(x, w) {
+            return out;
+        }
         self.matmul(x, w.tensor())
     }
 
     /// [`MacEngine::matmul_kslab`] against a step-persistent
     /// [`PackedOperand`] whose cut grid includes the slab boundaries.
+    /// Same nibble-first routing as [`MacEngine::matmul_packed`].
     fn matmul_kslab_packed(
         &self,
         x: &PotTensor,
@@ -108,6 +115,9 @@ pub trait MacEngine: Sync {
         k0: usize,
         k1: usize,
     ) -> Vec<i128> {
+        if let Some(acc) = nibble_matmul_kslab_packed(x, w, k0, k1) {
+            return acc;
+        }
         self.matmul_kslab(x, w.tensor(), k0, k1)
     }
 
@@ -353,6 +363,130 @@ fn pow2_lut() -> &'static [i64; 256] {
 #[inline]
 pub(crate) fn lut_index(cx: u8, cw: u8) -> usize {
     (((cx ^ cw) & SIGN_BIT) as usize) + ((cx & MAG_MASK) as usize) + ((cw & MAG_MASK) as usize)
+}
+
+// ---------------------------------------------------------------------------
+// nibble-layout consumption (shared by the trait defaults and potq::simd)
+// ---------------------------------------------------------------------------
+
+/// Per-panel hoisted tile shift of a cached operand. Panels never
+/// straddle a constant-shift run boundary (callers check
+/// [`PackedOperand::covers`] against the run grid first), so sampling
+/// the per-k shift at each panel's first row is exact for the whole
+/// panel.
+pub(crate) fn pair_panel_shifts(wp: &KPanels, kshifts: Option<&[u32]>) -> Vec<u32> {
+    wp.panels.iter().map(|h| kshifts.map_or(0, |s| s[h.p0])).collect()
+}
+
+/// Accumulate the panels `prange` of a **nibble-layout** [`KPanels`]
+/// into `acc` (length `m * n`, pair-LSB fixed point). Each packed panel
+/// column is decoded once per j through the shared unpack iterator
+/// (`decode_nibbles_into`) and reused across all m rows; the per-panel
+/// tile shift is applied once to the exact integer panel partial, with a
+/// zero-shift fast loop — integer accumulation is associative, so this
+/// schedule is bit-identical to the byte-layout kernels.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn nibble_acc_panels(
+    x: &PotTensor,
+    wp: &KPanels,
+    prange: std::ops::Range<usize>,
+    shifts: &[u32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: &mut [i128],
+) {
+    debug_assert!(wp.is_nibble(), "nibble_acc_panels on a byte-layout KPanels");
+    debug_assert_eq!(acc.len(), m * n);
+    let lut = pow2_lut();
+    let xc = x.codes();
+    let mut stage: Vec<u8> = Vec::new();
+    for pi in prange {
+        let h = &wp.panels[pi];
+        let len = h.p1 - h.p0;
+        let sh = shifts[pi];
+        for j in 0..n {
+            let (mags, signs) = wp.nibble_col(pi, j);
+            stage.resize(len, 0);
+            decode_nibbles_into(mags, signs, len, &mut stage);
+            for i in 0..m {
+                let xs = &xc[i * k + h.p0..i * k + h.p1];
+                let mut s: i128 = 0;
+                for (&cx, &cw) in xs.iter().zip(stage.iter()) {
+                    s += lut[lut_index(cx, cw)] as i128;
+                }
+                let a = &mut acc[i * n + j];
+                if sh == 0 {
+                    *a += s;
+                } else {
+                    *a += s << sh;
+                }
+            }
+        }
+    }
+}
+
+/// The full matmul against a nibble-layout cached operand, or `None`
+/// when `w` is byte-layout / its panel grid does not refine the pair's
+/// constant-shift runs (callers then fall back to the row-major byte
+/// tensor, which every operand keeps).
+pub(crate) fn nibble_matmul_packed(x: &PotTensor, w: &PackedOperand) -> Option<Vec<f32>> {
+    let wp = w.panels();
+    if !wp.is_nibble() {
+        return None;
+    }
+    let wt = w.tensor();
+    let (m, k, n) = dims2(x, wt);
+    let (kshifts, scale) = tile_args(x, wt, k);
+    let runs = k_shift_runs(kshifts.as_deref(), k);
+    let bounds: Vec<usize> = runs.iter().map(|r| r.0).collect();
+    if !w.covers(&bounds) {
+        return None;
+    }
+    let mut out = vec![0f32; m * n];
+    if m == 0 || n == 0 {
+        return Some(out);
+    }
+    let shifts = pair_panel_shifts(wp, kshifts.as_deref());
+    let mut acc = vec![0i128; m * n];
+    nibble_acc_panels(x, wp, 0..wp.panels.len(), &shifts, m, k, n, &mut acc);
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = finish(a, scale);
+    }
+    Some(out)
+}
+
+/// K-slab partial accumulators against a nibble-layout cached operand
+/// (full-k fixed point, the k-shard contract), or `None` under the same
+/// conditions as [`nibble_matmul_packed`] — additionally when the slab
+/// bounds themselves are not panel boundaries.
+pub(crate) fn nibble_matmul_kslab_packed(
+    x: &PotTensor,
+    w: &PackedOperand,
+    k0: usize,
+    k1: usize,
+) -> Option<Vec<i128>> {
+    let wp = w.panels();
+    if !wp.is_nibble() {
+        return None;
+    }
+    let wt = w.tensor();
+    let (m, k, n) = check_kslab(x, wt, k0, k1);
+    let (kshifts, _) = tile_args(x, wt, k);
+    let runs = k_shift_runs(kshifts.as_deref(), k);
+    let mut bounds: Vec<usize> = runs.iter().map(|r| r.0).collect();
+    bounds.push(k0);
+    bounds.push(k1);
+    if !w.covers(&bounds) {
+        return None;
+    }
+    let mut acc = vec![0i128; m * n];
+    if m == 0 || n == 0 {
+        return Some(acc);
+    }
+    let shifts = pair_panel_shifts(wp, kshifts.as_deref());
+    nibble_acc_panels(x, wp, wp.panel_range(k0, k1), &shifts, m, k, n, &mut acc);
+    Some(acc)
 }
 
 // ---------------------------------------------------------------------------
@@ -1464,6 +1598,47 @@ mod tests {
             let (dx, dw) = keng.matmul_backward_pair((&x, &packed), (&x, &w));
             assert_bits_eq(&want, &dx, &format!("{name} kshard backward dx"));
             assert_bits_eq(&want, &dw, &format!("{name} kshard backward dw"));
+        }
+    }
+
+    #[test]
+    fn nibble_packed_matches_byte_on_every_engine() {
+        use crate::potq::quantize::{PackMode, PackedOperand};
+        let (m, k, n) = (6, 24, 5);
+        let x = rand_tensor(1300, m, k, 0.5, 5);
+        let w = rand_tiled(1301, k, n, 0, 8); // live tile shifts
+        let want = ScalarEngine.matmul(&x, &w);
+        let cuts = kshard_cuts(k, 3);
+        let byte = PackedOperand::new_packed(w.clone(), &cuts, PackMode::Byte).unwrap();
+        let nib = PackedOperand::new_packed(w.clone(), &cuts, PackMode::Nibble).unwrap();
+        assert_eq!(byte.layout(), "byte");
+        assert_eq!(nib.layout(), "nibble");
+        for name in ENGINE_NAMES {
+            let eng = engine_by_name(name, 2).unwrap();
+            let got = eng.matmul_packed(&x, &nib);
+            assert_bits_eq(&want, &got, &format!("{name} nibble packed"));
+            let got = eng.matmul_packed(&x, &byte);
+            assert_bits_eq(&want, &got, &format!("{name} byte packed"));
+            // k-sharded against the nibble cache too
+            let keng = KShardEngine::new(engine_by_name(name, 2).unwrap(), 3);
+            let got = keng.matmul_packed(&x, &nib);
+            assert_bits_eq(&want, &got, &format!("{name} kshard nibble packed"));
+            // the overlapped backward pair over the nibble cache
+            let (dx, dw) = keng.matmul_backward_pair((&x, &nib), (&x, &w));
+            assert_bits_eq(&want, &dx, &format!("{name} kshard nibble backward dx"));
+            assert_bits_eq(&want, &dw, &format!("{name} kshard nibble backward dw"));
+        }
+        // narrower bit widths (emax 1 and 3) through the same path
+        for b in [3u32, 4] {
+            let x = rand_tensor(1310 + b as u64, 5, 17, 0.6, b);
+            let w = rand_tensor(1320 + b as u64, 17, 4, 0.05, b);
+            let want = ScalarEngine.matmul(&x, &w);
+            let nib =
+                PackedOperand::new_packed(w.clone(), &[5, 9], PackMode::Nibble).unwrap();
+            for name in ENGINE_NAMES {
+                let got = engine_by_name(name, 2).unwrap().matmul_packed(&x, &nib);
+                assert_bits_eq(&want, &got, &format!("{name} b={b} nibble"));
+            }
         }
     }
 

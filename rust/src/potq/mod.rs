@@ -45,8 +45,9 @@ pub use mfmac::{mfmac_accumulate_i64, mfmac_matmul, mfmac_matmul_quantized};
 pub use quantize::{
     beta_from_amax, compute_beta, pack_code, pot_dequantize, pot_emax, pot_quantize,
     pot_quantize_one, pot_value, pow2i, pow2i_saturating, round_log2_abs, scale_pow2,
-    unpack_code, KPanelHeader, KPanels, PackedOperand, PotTensor, TileScales, MAG_MASK,
-    MAG_OFFSET, SIGN_BIT, SQRT2_F32, TILE_DELTA_MIN, ZERO_CODE,
+    unpack_code, KPanelHeader, KPanels, NibbleIter, PackMode, PackedOperand, PackedPlane,
+    PotTensor, TileScales, MAG_MASK, MAG_OFFSET, NIBBLE_EMAX_MAX, SIGN_BIT, SQRT2_F32,
+    TILE_DELTA_MIN, ZERO_CODE,
 };
 pub use shard::{ShardPlan, ShardedMlp};
 pub use simd::{SimdEngine, SimdPath};

@@ -40,8 +40,10 @@
 use crate::energy::{mfmac_census, MacCensus};
 use crate::util::prng::Pcg32;
 
+use anyhow::Result;
+
 use super::engine::{kshard_cuts, MacEngine};
-use super::quantize::{round_log2_abs, scale_pow2, PackedOperand, PotTensor};
+use super::quantize::{round_log2_abs, scale_pow2, PackMode, PackedOperand, PotTensor};
 use super::{ratio_clip, weight_bias_correction};
 
 /// Lower clamp for the learnable PRC gamma (an all-clipping layer would
@@ -380,8 +382,22 @@ impl MfMlp {
     /// cached panels. FP32-scheme models carry no quantized operands, so
     /// their cache is empty (and ignored by the pass).
     pub fn prepare_step_weights(&self, kshard: usize) -> StepWeights {
+        self.prepare_step_weights_packed(kshard, PackMode::Byte)
+            .expect("byte layout is infallible")
+    }
+
+    /// [`MfMlp::prepare_step_weights`] with an explicit physical layout
+    /// for the cached code planes (`--pack`): nibble-selecting modes
+    /// halve the hot-path bytes, bit-identically — the decode reproduces
+    /// the exact byte codes, so every engine computes the same integer
+    /// sums. Errors only when `pack` forces nibbles onto a 6-bit model.
+    pub fn prepare_step_weights_packed(
+        &self,
+        kshard: usize,
+        pack: PackMode,
+    ) -> Result<StepWeights> {
         if self.cfg.scheme != Scheme::Mf {
-            return StepWeights { layers: Vec::new() };
+            return Ok(StepWeights { layers: Vec::new() });
         }
         let bits = self.cfg.bits;
         let layers = self
@@ -391,12 +407,12 @@ impl MfMlp {
                 let wc = weight_bias_correction(&l.w);
                 let wq = PotTensor::quantize_2d(&wc, l.fan_in, l.fan_out, bits, None);
                 let wq_t = wq.transpose2d();
-                let fw = PackedOperand::new(wq, &kshard_cuts(l.fan_in, kshard));
-                let dx = PackedOperand::new(wq_t, &kshard_cuts(l.fan_out, kshard));
-                (fw, dx)
+                let fw = PackedOperand::new_packed(wq, &kshard_cuts(l.fan_in, kshard), pack)?;
+                let dx = PackedOperand::new_packed(wq_t, &kshard_cuts(l.fan_out, kshard), pack)?;
+                Ok((fw, dx))
             })
-            .collect();
-        StepWeights { layers }
+            .collect::<Result<Vec<_>>>()?;
+        Ok(StepWeights { layers })
     }
 
     /// Forward pass (+ backward when gradients or a probe are wanted)

@@ -6,6 +6,9 @@
 //! sign planes (9 bytes/elem). The packing is what makes the MF-MAC
 //! kernels bandwidth- and cache-friendly; see `potq::engine`.
 
+use crate::util::rle;
+use anyhow::{bail, ensure, Result};
+
 /// f32 closest to sqrt(2): the log-domain rounding boundary (0x3FB504F3).
 pub const SQRT2_F32: f32 = f32::from_bits(0x3FB504F3);
 
@@ -35,13 +38,17 @@ pub fn pot_emax(b: u32) -> i32 {
 
 /// Pack an unpacked (exponent, sign) pair into one code byte.
 /// `e` must be ZERO_CODE or within [-emax, emax].
+///
+/// Both range checks hold in release builds too: an out-of-range `emax`
+/// or exponent used to wrap silently into the sign bit under
+/// `--release`, corrupting every downstream code-sum.
 #[inline]
 pub fn pack_code(e: i32, s: u8, emax: i32) -> u8 {
     if e == ZERO_CODE {
         return 0;
     }
-    debug_assert!((1..=15).contains(&emax), "emax {emax} exceeds the packed format");
-    debug_assert!((-emax..=emax).contains(&e), "exponent {e} out of [-{emax}, {emax}]");
+    assert!((1..=15).contains(&emax), "emax {emax} exceeds the packed format");
+    assert!((-emax..=emax).contains(&e), "exponent {e} out of [-{emax}, {emax}]");
     ((s & 1) << 7) | (MAG_OFFSET + e + emax) as u8
 }
 
@@ -52,6 +59,188 @@ pub fn unpack_code(c: u8, emax: i32) -> (i32, u8) {
         return (ZERO_CODE, 0);
     }
     ((c & MAG_MASK) as i32 - MAG_OFFSET - emax, (c >> 7) & 1)
+}
+
+// ---------------------------------------------------------------------------
+// sign-planed 4-bit nibble layout
+// ---------------------------------------------------------------------------
+
+/// Largest `emax` the 4-bit nibble layout holds: a nonzero code stores
+/// `e + emax + 1 in [1, 2*emax + 1]` as its magnitude nibble (0 is the
+/// zero code), which fits 4 bits iff `emax <= 7` — bit widths 3..=5.
+/// 6-bit tensors (emax 15) stay on the byte layout.
+pub const NIBBLE_EMAX_MAX: i32 = 7;
+
+/// Bias between a byte code's magnitude field ([32, 62]) and its nibble
+/// ([1, 15]): `nibble = mag - 31`, so nibble 0 stays the zero code.
+const NIBBLE_BIAS: u8 = (MAG_OFFSET - 1) as u8;
+
+/// Rebuild one byte code from its magnitude nibble and its sign bit
+/// (already positioned at 0x80). The inverse of the split
+/// [`encode_nibbles`] performs; a zero nibble decodes to the zero code
+/// regardless of the sign plane.
+#[inline]
+pub(crate) fn nibble_to_code(nib: u8, sign_bit: u8) -> u8 {
+    if nib == 0 {
+        0
+    } else {
+        sign_bit | (nib + NIBBLE_BIAS)
+    }
+}
+
+/// Append the sign-planed nibble encoding of `codes` onto `(mags, signs)`:
+/// element i's magnitude nibble lands in bits `4*(i & 1)` of
+/// `mags[i / 2]` (low nibble = even index) and its sign in bit `i & 7`
+/// of `signs[i / 8]`. Each call starts on fresh bytes, so a dangling
+/// half-byte / partial sign byte is zero-padded — callers encode each
+/// row or panel column separately and slices stay independently
+/// addressable. Errors (never wraps) when `emax` exceeds the nibble
+/// range or a code byte is not a valid `emax`-range code.
+fn encode_nibbles(codes: &[u8], emax: i32, mags: &mut Vec<u8>, signs: &mut Vec<u8>) -> Result<()> {
+    ensure!(
+        (1..=NIBBLE_EMAX_MAX).contains(&emax),
+        "nibble layout holds emax <= {NIBBLE_EMAX_MAX}, got {emax}"
+    );
+    let mag_hi = (MAG_OFFSET + 2 * emax) as u8;
+    let (m0, s0) = (mags.len(), signs.len());
+    mags.resize(m0 + codes.len().div_ceil(2), 0);
+    signs.resize(s0 + codes.len().div_ceil(8), 0);
+    for (i, &c) in codes.iter().enumerate() {
+        let m = c & MAG_MASK;
+        if m == 0 {
+            ensure!(c == 0, "corrupt code {c:#04x}: zero magnitude with a live sign bit");
+            continue;
+        }
+        ensure!(
+            (MAG_OFFSET as u8..=mag_hi).contains(&m),
+            "code {c:#04x} outside the emax {emax} nibble range"
+        );
+        mags[m0 + i / 2] |= (m - NIBBLE_BIAS) << ((i & 1) * 4);
+        if c & SIGN_BIT != 0 {
+            signs[s0 + i / 8] |= 1 << (i & 7);
+        }
+    }
+    Ok(())
+}
+
+/// The shared nibble-decode iterator: walks a (magnitude nibbles, sign
+/// bitplane) pair and yields the original byte codes. Every scalar
+/// consumer — [`PackedPlane::unpack`], the engine-side staging decode —
+/// goes through this one mapping, so the layout is defined in exactly
+/// one place.
+pub struct NibbleIter<'a> {
+    mags: &'a [u8],
+    signs: &'a [u8],
+    i: usize,
+    len: usize,
+}
+
+impl<'a> NibbleIter<'a> {
+    pub fn new(mags: &'a [u8], signs: &'a [u8], len: usize) -> NibbleIter<'a> {
+        assert!(
+            mags.len() >= len.div_ceil(2) && signs.len() >= len.div_ceil(8),
+            "nibble planes too short for {len} codes"
+        );
+        NibbleIter { mags, signs, i: 0, len }
+    }
+}
+
+impl Iterator for NibbleIter<'_> {
+    type Item = u8;
+
+    #[inline]
+    fn next(&mut self) -> Option<u8> {
+        if self.i >= self.len {
+            return None;
+        }
+        let i = self.i;
+        self.i += 1;
+        let nib = (self.mags[i / 2] >> ((i & 1) * 4)) & 0x0F;
+        let sbit = ((self.signs[i / 8] >> (i & 7)) & 1) << 7;
+        Some(nibble_to_code(nib, sbit))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let r = self.len - self.i;
+        (r, Some(r))
+    }
+}
+
+impl ExactSizeIterator for NibbleIter<'_> {}
+
+/// Bulk nibble decode into a staging buffer (the engines' per-panel-column
+/// unpack): `out[..len]` receives the byte codes of the packed planes.
+pub(crate) fn decode_nibbles_into(mags: &[u8], signs: &[u8], len: usize, out: &mut [u8]) {
+    for (o, c) in out[..len].iter_mut().zip(NibbleIter::new(mags, signs, len)) {
+        *o = c;
+    }
+}
+
+/// A standalone sign-planed 4-bit code plane: one bitplane of signs plus
+/// packed magnitude nibbles — the physical layout of the paper's
+/// "4-bit + sign" claim (half the bytes of the u8 code plane, rounded up
+/// per plane). Pure storage: [`PackedPlane::unpack`] reproduces the
+/// exact source bytes, so anything computed from the decoded codes is
+/// bit-identical to the byte layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedPlane {
+    len: usize,
+    mags: Vec<u8>,
+    signs: Vec<u8>,
+}
+
+impl PackedPlane {
+    /// Pack a byte code plane. Errors when `emax` exceeds
+    /// [`NIBBLE_EMAX_MAX`] or any code is out of the `emax` range.
+    pub fn pack(codes: &[u8], emax: i32) -> Result<PackedPlane> {
+        let mut mags = Vec::new();
+        let mut signs = Vec::new();
+        encode_nibbles(codes, emax, &mut mags, &mut signs)?;
+        Ok(PackedPlane { len: codes.len(), mags, signs })
+    }
+
+    /// Element count (codes, not bytes).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Physical bytes: magnitude nibbles + the sign bitplane
+    /// (`len/2 + len/8`, each rounded up).
+    pub fn bytes(&self) -> usize {
+        self.mags.len() + self.signs.len()
+    }
+
+    /// Decode iterator over the original byte codes.
+    pub fn iter(&self) -> NibbleIter<'_> {
+        NibbleIter::new(&self.mags, &self.signs, self.len)
+    }
+
+    /// Byte code at index i.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        assert!(i < self.len, "index {i} out of {} codes", self.len);
+        let nib = (self.mags[i / 2] >> ((i & 1) * 4)) & 0x0F;
+        let sbit = ((self.signs[i / 8] >> (i & 7)) & 1) << 7;
+        nibble_to_code(nib, sbit)
+    }
+
+    /// Decode back to the byte code plane.
+    pub fn unpack(&self) -> Vec<u8> {
+        self.iter().collect()
+    }
+}
+
+impl<'a> IntoIterator for &'a PackedPlane {
+    type Item = u8;
+    type IntoIter = NibbleIter<'a>;
+
+    fn into_iter(self) -> NibbleIter<'a> {
+        self.iter()
+    }
 }
 
 /// Mantissa field of [`SQRT2_F32`]: the log-domain rounding boundary as
@@ -290,19 +479,95 @@ pub struct KPanels {
     pub n: usize,
     pub panels: Vec<KPanelHeader>,
     codes: Vec<u8>,
+    /// `Some` = the panel columns store sign-planed nibbles instead of
+    /// byte codes (and `codes` is empty); see [`KPanels::to_nibble`]
+    nibbles: Option<NibbleStore>,
+}
+
+/// Nibble-layout backing store of a [`KPanels`]: every panel column's
+/// magnitude nibbles and sign bits, column-major within each panel like
+/// the byte layout, with each column starting on fresh `mags`/`signs`
+/// byte boundaries (dangling half-bytes and sign bits zero-padded) so
+/// columns stay independently addressable slices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NibbleStore {
+    mags: Vec<u8>,
+    signs: Vec<u8>,
+    /// per-panel (mags offset, signs offset); column strides derive from
+    /// the panel length: `len/2` and `len/8` bytes, rounded up
+    offs: Vec<(usize, usize)>,
 }
 
 impl KPanels {
     /// Contiguous codes of column `j` within `panel` (rows p0..p1).
+    /// Byte layout only — nibble-layout consumers use
+    /// [`KPanels::nibble_col`].
     #[inline]
     pub fn col(&self, panel: usize, j: usize) -> &[u8] {
+        debug_assert!(self.nibbles.is_none(), "col() on a nibble-layout KPanels");
         let h = &self.panels[panel];
         let len = h.p1 - h.p0;
         let base = h.offset + j * len;
         &self.codes[base..base + len]
     }
 
+    /// True when the panel columns store packed nibbles, not byte codes.
+    pub fn is_nibble(&self) -> bool {
+        self.nibbles.is_some()
+    }
+
+    /// (magnitude nibbles, sign bitplane) of column `j` within `panel`
+    /// (rows p0..p1). Nibble layout only.
+    #[inline]
+    pub fn nibble_col(&self, panel: usize, j: usize) -> (&[u8], &[u8]) {
+        let ns = self.nibbles.as_ref().expect("nibble_col() on a byte-layout KPanels");
+        let h = &self.panels[panel];
+        let len = h.p1 - h.p0;
+        let (m0, s0) = ns.offs[panel];
+        let (ms, ss) = (len.div_ceil(2), len.div_ceil(8));
+        (
+            &ns.mags[m0 + j * ms..m0 + (j + 1) * ms],
+            &ns.signs[s0 + j * ss..s0 + (j + 1) * ss],
+        )
+    }
+
+    /// Re-encode this byte layout into the sign-planed nibble layout:
+    /// identical headers and column order, each column's codes split into
+    /// packed magnitude nibbles + a sign bitplane ([`encode_nibbles`]).
+    /// Pure storage transform — decoding a column reproduces its exact
+    /// byte codes, which is what keeps every consumer bit-identical to
+    /// the byte layout. Errors for `emax > `[`NIBBLE_EMAX_MAX`].
+    pub fn to_nibble(&self, emax: i32) -> Result<KPanels> {
+        assert!(self.nibbles.is_none(), "to_nibble() on a nibble-layout KPanels");
+        let mut mags = Vec::with_capacity(self.codes.len().div_ceil(2));
+        let mut signs = Vec::with_capacity(self.codes.len().div_ceil(8));
+        let mut offs = Vec::with_capacity(self.panels.len());
+        for pi in 0..self.panels.len() {
+            offs.push((mags.len(), signs.len()));
+            for j in 0..self.n {
+                encode_nibbles(self.col(pi, j), emax, &mut mags, &mut signs)?;
+            }
+        }
+        Ok(KPanels {
+            k: self.k,
+            n: self.n,
+            panels: self.panels.clone(),
+            codes: Vec::new(),
+            nibbles: Some(NibbleStore { mags, signs, offs }),
+        })
+    }
+
+    /// Physical bytes of whichever code store is live (the bandwidth the
+    /// panel-streaming kernels actually move).
+    pub fn code_bytes(&self) -> usize {
+        match &self.nibbles {
+            Some(ns) => ns.mags.len() + ns.signs.len(),
+            None => self.codes.len(),
+        }
+    }
+
     /// The full packed code buffer (panel-major, then column-major).
+    /// Empty in the nibble layout.
     pub fn codes(&self) -> &[u8] {
         &self.codes
     }
@@ -332,6 +597,47 @@ impl KPanels {
     }
 }
 
+/// Physical layout selector for step-persistent and serialized code
+/// planes (`--pack auto|byte|nibble`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackMode {
+    /// nibble whenever the bit width fits the 4-bit magnitude
+    /// ([`NIBBLE_EMAX_MAX`]: bits 3..=5), byte for 6-bit tensors
+    Auto,
+    /// always the 1-byte-per-code layout
+    Byte,
+    /// always the sign-planed 4-bit layout (errors for 6-bit tensors)
+    Nibble,
+}
+
+impl PackMode {
+    pub fn parse(s: &str) -> Option<PackMode> {
+        match s {
+            "auto" => Some(PackMode::Auto),
+            "byte" => Some(PackMode::Byte),
+            "nibble" => Some(PackMode::Nibble),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PackMode::Auto => "auto",
+            PackMode::Byte => "byte",
+            PackMode::Nibble => "nibble",
+        }
+    }
+
+    /// Whether a `bits`-wide tensor stores nibbles under this mode.
+    pub fn nibble_for(self, bits: u32) -> bool {
+        match self {
+            PackMode::Auto => pot_emax(bits) <= NIBBLE_EMAX_MAX,
+            PackMode::Byte => false,
+            PackMode::Nibble => true,
+        }
+    }
+}
+
 /// A step-persistent packed operand: one quantized (k, n) tensor together
 /// with its [`KPanels`] layout, packed **once** for a fixed cut grid and
 /// reused across every GEMM that consumes the operand — the forward and
@@ -355,6 +661,29 @@ impl PackedOperand {
         PackedOperand { tensor, panels }
     }
 
+    /// [`PackedOperand::new`] with an explicit physical layout: under a
+    /// nibble-selecting [`PackMode`] the panel store is re-encoded into
+    /// the sign-planed 4-bit layout (half the hot-path bytes; the
+    /// row-major tensor keeps its byte codes for metadata and the
+    /// uncached fallback). Errors when `pack` forces nibbles onto a
+    /// 6-bit tensor.
+    pub fn new_packed(tensor: PotTensor, cuts: &[usize], pack: PackMode) -> Result<PackedOperand> {
+        let mut panels = tensor.pack_k_panels(cuts);
+        if pack.nibble_for(tensor.bits) {
+            panels = panels.to_nibble(pot_emax(tensor.bits))?;
+        }
+        Ok(PackedOperand { tensor, panels })
+    }
+
+    /// The live panel-store layout ("byte" / "nibble").
+    pub fn layout(&self) -> &'static str {
+        if self.panels.is_nibble() {
+            "nibble"
+        } else {
+            "byte"
+        }
+    }
+
     pub fn tensor(&self) -> &PotTensor {
         &self.tensor
     }
@@ -369,6 +698,204 @@ impl PackedOperand {
         bounds
             .iter()
             .all(|&c| c == self.panels.k || self.panels.has_boundary(c))
+    }
+
+    /// Serialize to the length-prefixed, digest-stamped wire format (the
+    /// checkpoint/socket code-plane codec): magic + version, a u64 body
+    /// length, the quantization header (bits, beta, shape, tile plane,
+    /// interior cut grid, layout byte), the RLE-compressed row-major code
+    /// plane, and an FNV-1a digest over the raw codes. Zero codes
+    /// dominate sparse gradient planes, which is where the RLE ratio
+    /// comes from.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let t = &self.tensor;
+        let mut body = Vec::new();
+        body.extend_from_slice(&t.bits.to_le_bytes());
+        body.extend_from_slice(&t.beta.to_le_bytes());
+        body.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            body.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match t.tile_scales() {
+            None => body.push(0),
+            Some(ts) => {
+                body.push(1);
+                body.extend_from_slice(&(ts.axis as u32).to_le_bytes());
+                body.extend_from_slice(&(ts.tile as u64).to_le_bytes());
+                body.extend_from_slice(&(ts.deltas.len() as u64).to_le_bytes());
+                for &d in &ts.deltas {
+                    body.extend_from_slice(&d.to_le_bytes());
+                }
+            }
+        }
+        // all interior panel boundaries: pack_k_panels re-derives the
+        // identical grid from these on the receiving side
+        let cuts: Vec<usize> = self.panels.panels.iter().skip(1).map(|h| h.p0).collect();
+        body.extend_from_slice(&(cuts.len() as u64).to_le_bytes());
+        for c in cuts {
+            body.extend_from_slice(&(c as u64).to_le_bytes());
+        }
+        body.push(if self.panels.is_nibble() { 1 } else { 0 });
+        let raw = t.codes();
+        let comp = rle::compress(raw);
+        body.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+        body.extend_from_slice(&(comp.len() as u64).to_le_bytes());
+        body.extend_from_slice(&comp);
+        body.extend_from_slice(&fnv1a(raw).to_le_bytes());
+        let mut out = Vec::with_capacity(PACK_MAGIC.len() + 8 + body.len());
+        out.extend_from_slice(PACK_MAGIC);
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Rebuild from [`PackedOperand::to_bytes`] output. Every violation —
+    /// foreign magic, version mismatch, wrong length prefix, truncation,
+    /// corrupt RLE stream, digest mismatch, out-of-range header fields or
+    /// codes — is an error, never a panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<PackedOperand> {
+        ensure!(bytes.len() >= PACK_MAGIC.len() + 8, "pack wire: truncated header");
+        ensure!(bytes[..7] == PACK_MAGIC[..7], "not a pack wire stream");
+        ensure!(
+            bytes[7] == PACK_MAGIC[7],
+            "pack wire version mismatch: got {}, expected {}",
+            bytes[7],
+            PACK_MAGIC[7]
+        );
+        let body_len =
+            u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes")) as usize;
+        ensure!(
+            bytes.len() == 16 + body_len,
+            "pack wire: length prefix says {body_len} body bytes, stream carries {}",
+            bytes.len() - 16
+        );
+        let mut r = Reader { buf: &bytes[16..], pos: 0 };
+        let bits = r.u32()?;
+        ensure!((3..=6).contains(&bits), "pack wire: bit width {bits} out of 3..=6");
+        let beta = r.i32()?;
+        let rank = r.u32()? as usize;
+        ensure!(rank == 2, "pack wire: operand must be 2-D, got rank {rank}");
+        let k = r.u64()? as usize;
+        let n = r.u64()? as usize;
+        let elems = k
+            .checked_mul(n)
+            .ok_or_else(|| anyhow::anyhow!("pack wire: shape {k}x{n} overflows"))?;
+        let tiles = match r.u8()? {
+            0 => None,
+            1 => {
+                let axis = r.u32()? as usize;
+                let tile = r.u64()? as usize;
+                let nd = r.u64()? as usize;
+                ensure!(axis == 0, "pack wire: tile plane must run along k (axis 0)");
+                ensure!(
+                    tile > 0 && tile.is_power_of_two(),
+                    "pack wire: tile size {tile} is not a power of two"
+                );
+                ensure!(
+                    nd == k.div_ceil(tile).max(1),
+                    "pack wire: {nd} tile deltas do not cover k = {k} at tile {tile}"
+                );
+                ensure!(nd <= r.remaining() / 4, "pack wire: truncated tile deltas");
+                let mut deltas = Vec::with_capacity(nd);
+                for _ in 0..nd {
+                    let d = r.i32()?;
+                    ensure!(
+                        (TILE_DELTA_MIN..=0).contains(&d),
+                        "pack wire: tile delta {d} out of [{TILE_DELTA_MIN}, 0]"
+                    );
+                    deltas.push(d);
+                }
+                Some(TileScales { axis, tile, deltas })
+            }
+            f => bail!("pack wire: bad tile flag {f}"),
+        };
+        let ncuts = r.u64()? as usize;
+        ensure!(ncuts <= r.remaining() / 8, "pack wire: truncated cut grid");
+        let mut cuts = Vec::with_capacity(ncuts);
+        for _ in 0..ncuts {
+            cuts.push(r.u64()? as usize);
+        }
+        let pack = match r.u8()? {
+            0 => PackMode::Byte,
+            1 => PackMode::Nibble,
+            f => bail!("pack wire: bad layout byte {f}"),
+        };
+        let raw_len = r.u64()? as usize;
+        ensure!(
+            raw_len == elems,
+            "pack wire: code plane holds {raw_len} codes for {elems} elements"
+        );
+        let comp_len = r.u64()? as usize;
+        let comp = r.take(comp_len)?;
+        let codes = rle::decompress(comp, raw_len)?;
+        let digest = r.u64()?;
+        ensure!(r.remaining() == 0, "pack wire: {} trailing bytes", r.remaining());
+        ensure!(digest == fnv1a(&codes), "pack wire: code-plane digest mismatch");
+        // every code must decode under this bit width before the panels
+        // (and their nibble re-encode) are built from it
+        let mag_hi = (MAG_OFFSET + 2 * pot_emax(bits)) as u8;
+        for &c in &codes {
+            let m = c & MAG_MASK;
+            ensure!(
+                m == 0 || (MAG_OFFSET as u8..=mag_hi).contains(&m),
+                "pack wire: code {c:#04x} outside the {bits}-bit range"
+            );
+            ensure!(m != 0 || c == 0, "pack wire: zero magnitude with a live sign bit");
+        }
+        let mut tensor = PotTensor::from_codes(codes, &[k, n], beta, bits);
+        if let Some(ts) = tiles {
+            tensor = tensor.with_tile_scales(ts);
+        }
+        PackedOperand::new_packed(tensor, &cuts, pack)
+    }
+}
+
+/// Wire-format magic + version byte of [`PackedOperand::to_bytes`].
+const PACK_MAGIC: &[u8; 8] = b"MFTPACK\x01";
+
+/// FNV-1a over a byte stream: the wire format's code-plane digest stamp.
+fn fnv1a(data: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian cursor over a wire body — every read is
+/// an error past the end, never a panic.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(n <= self.remaining(), "pack wire: truncated stream");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 }
 
@@ -723,7 +1250,7 @@ impl PotTensor {
             }
             panels.push(KPanelHeader { p0, p1, delta, offset });
         }
-        KPanels { k, n, panels, codes }
+        KPanels { k, n, panels, codes, nibbles: None }
     }
 }
 
@@ -1281,5 +1808,199 @@ mod tests {
         let kp = t.pack_k_panels(&[1]);
         assert_eq!(kp.panels.len(), 2);
         assert!(kp.codes().is_empty());
+    }
+
+    #[test]
+    fn nibble_plane_roundtrips_all_codes_and_odd_lengths() {
+        for b in [3u32, 4, 5] {
+            let emax = pot_emax(b);
+            // every representable code incl. the zero code; odd prefix
+            // lengths leave a dangling half-byte and partial sign byte
+            let mut codes = vec![0u8];
+            for e in -emax..=emax {
+                for s in [0u8, 1] {
+                    codes.push(pack_code(e, s, emax));
+                }
+            }
+            for cut in [codes.len(), codes.len() - 1, 1, 2, 3] {
+                let plane = PackedPlane::pack(&codes[..cut], emax).unwrap();
+                assert_eq!(plane.len(), cut);
+                assert_eq!(plane.unpack(), &codes[..cut], "b={b} cut={cut}");
+                for (i, &c) in codes[..cut].iter().enumerate() {
+                    assert_eq!(plane.get(i), c, "b={b} cut={cut} i={i}");
+                }
+                assert_eq!(plane.bytes(), cut.div_ceil(2) + cut.div_ceil(8));
+            }
+        }
+        let empty = PackedPlane::pack(&[], 7).unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(empty.bytes(), 0);
+        assert!(empty.unpack().is_empty());
+        assert_eq!(empty.iter().count(), 0);
+    }
+
+    #[test]
+    fn nibble_plane_rejects_out_of_range() {
+        // 6-bit (emax 15) magnitudes exceed 4 bits; emax 0 is degenerate
+        assert!(PackedPlane::pack(&[0], 15).is_err());
+        assert!(PackedPlane::pack(&[0], 0).is_err());
+        // a magnitude valid at emax 7 overflows the emax 3 range
+        let wide = pack_code(7, 0, 7);
+        assert!(PackedPlane::pack(&[wide], 3).is_err());
+        // zero magnitude with a live sign bit is not a valid code
+        assert!(PackedPlane::pack(&[SIGN_BIT], 7).is_err());
+    }
+
+    #[test]
+    fn nibble_plane_halves_bytes() {
+        let mut r = Pcg32::new(51);
+        let mut x = vec![0f32; 1024];
+        r.fill_normal(&mut x, 0.0, 0.5);
+        let t = pot_quantize(&x, 5, None);
+        let plane = PackedPlane::pack(t.codes(), t.emax()).unwrap();
+        assert_eq!(plane.bytes(), 512 + 128); // 0.625 bytes/elem vs 1
+        assert_eq!(plane.unpack(), t.codes());
+    }
+
+    #[test]
+    fn kpanels_nibble_layout_decodes_to_the_byte_columns() {
+        let mut r = Pcg32::new(52);
+        let (k, n) = (13, 5); // odd panel lengths -> dangling half-bytes
+        let mut x = vec![0f32; k * n];
+        r.fill_normal(&mut x, 0.0, 0.4);
+        let t = PotTensor::quantize_2d(&x, k, n, 5, None);
+        let kp = t.pack_k_panels(&[3, 8]);
+        assert!(!kp.is_nibble());
+        let nib = kp.to_nibble(t.emax()).unwrap();
+        assert!(nib.is_nibble());
+        assert_eq!(nib.panels, kp.panels);
+        assert!(nib.codes().is_empty());
+        assert!(
+            nib.code_bytes() < kp.code_bytes(),
+            "{} vs {}",
+            nib.code_bytes(),
+            kp.code_bytes()
+        );
+        for (pi, h) in kp.panels.iter().enumerate() {
+            let len = h.p1 - h.p0;
+            for j in 0..n {
+                let (mags, signs) = nib.nibble_col(pi, j);
+                let mut out = vec![0u8; len];
+                decode_nibbles_into(mags, signs, len, &mut out);
+                assert_eq!(out, kp.col(pi, j), "panel {pi} col {j}");
+            }
+        }
+        // 6-bit layouts have no nibble form
+        let t6 = PotTensor::quantize_2d(&x, k, n, 6, None);
+        assert!(t6.pack_k_panels(&[]).to_nibble(t6.emax()).is_err());
+    }
+
+    #[test]
+    fn pack_mode_parse_and_auto_rules() {
+        assert_eq!(PackMode::parse("auto"), Some(PackMode::Auto));
+        assert_eq!(PackMode::parse("byte"), Some(PackMode::Byte));
+        assert_eq!(PackMode::parse("nibble"), Some(PackMode::Nibble));
+        assert_eq!(PackMode::parse("bits"), None);
+        for b in [3u32, 4, 5] {
+            assert!(PackMode::Auto.nibble_for(b), "{b}");
+            assert!(PackMode::Nibble.nibble_for(b));
+            assert!(!PackMode::Byte.nibble_for(b));
+        }
+        assert!(!PackMode::Auto.nibble_for(6), "6-bit stays byte under auto");
+        assert_eq!(PackMode::Auto.as_str(), "auto");
+        assert_eq!(PackMode::Nibble.as_str(), "nibble");
+        // forcing nibbles onto a 6-bit tensor errors; auto falls back
+        let t = PotTensor::quantize_2d(&[0.5; 12], 4, 3, 6, None);
+        assert!(PackedOperand::new_packed(t.clone(), &[], PackMode::Nibble).is_err());
+        let p = PackedOperand::new_packed(t, &[], PackMode::Auto).unwrap();
+        assert_eq!(p.layout(), "byte");
+    }
+
+    #[test]
+    fn wire_codec_roundtrips_byte_and_nibble() {
+        let mut r = Pcg32::new(53);
+        let (k, n) = (24, 6);
+        let mut x = vec![0f32; k * n];
+        r.fill_normal(&mut x, 0.0, 0.3);
+        // mostly-zero plane so the RLE stage has runs to chew on
+        for (i, v) in x.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *v = 0.0;
+            }
+        }
+        for tiled in [false, true] {
+            let t = if tiled {
+                PotTensor::quantize_2d_tiled(&x, k, n, 5, 0, 8)
+            } else {
+                PotTensor::quantize_2d(&x, k, n, 5, None)
+            };
+            for pack in [PackMode::Byte, PackMode::Nibble] {
+                let p = PackedOperand::new_packed(t.clone(), &[6, 12], pack).unwrap();
+                let bytes = p.to_bytes();
+                let q = PackedOperand::from_bytes(&bytes).unwrap();
+                assert_eq!(q.tensor(), p.tensor(), "tiled={tiled} {pack:?}");
+                assert_eq!(q.panels(), p.panels(), "tiled={tiled} {pack:?}");
+                assert_eq!(q.layout(), p.layout());
+                // re-serialization is byte-identical (CI's cmp step)
+                assert_eq!(q.to_bytes(), bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_codec_compresses_sparse_planes() {
+        // a sparse gradient-like plane: >= 3x smaller on the wire than
+        // one byte per element
+        let mut r = Pcg32::new(54);
+        let (k, n) = (256, 16);
+        let mut g = vec![0f32; k * n];
+        for i in 0..k * n {
+            if r.below(16) == 0 {
+                g[i] = r.normal() * 1e-4;
+            }
+        }
+        let t = PotTensor::quantize_2d(&g, k, n, 5, None);
+        let p = PackedOperand::new_packed(t, &[], PackMode::Nibble).unwrap();
+        let wire = p.to_bytes();
+        assert!(
+            wire.len() * 3 <= k * n,
+            "wire {} bytes for {} codes",
+            wire.len(),
+            k * n
+        );
+    }
+
+    #[test]
+    fn wire_codec_rejects_corruption() {
+        let t = PotTensor::quantize_2d(&[0.5f32; 40], 8, 5, 5, None);
+        let p = PackedOperand::new_packed(t, &[4], PackMode::Nibble).unwrap();
+        let good = p.to_bytes();
+        // truncation at every prefix length errors, never panics
+        for cut in 0..good.len() {
+            assert!(PackedOperand::from_bytes(&good[..cut]).is_err(), "cut={cut}");
+        }
+        // foreign magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(PackedOperand::from_bytes(&bad).is_err());
+        // version mismatch is its own distinguishable error
+        let mut bad = good.clone();
+        bad[7] = 2;
+        let err = PackedOperand::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("version mismatch"), "{err}");
+        // corrupt digest stamp
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let err = PackedOperand::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("digest"), "{err}");
+        // trailing garbage breaks the length prefix
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(PackedOperand::from_bytes(&bad).is_err());
+        // out-of-range header fields: bit width, layout byte
+        let mut bad = good.clone();
+        bad[16] = 9; // bits field
+        assert!(PackedOperand::from_bytes(&bad).is_err());
     }
 }

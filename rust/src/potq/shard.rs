@@ -41,7 +41,7 @@ use anyhow::{bail, Result};
 
 use super::engine::{engine_by_name, KShardEngine, MacEngine};
 use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights};
-use super::quantize::scale_pow2;
+use super::quantize::{pot_emax, scale_pow2, PackMode, NIBBLE_EMAX_MAX};
 
 /// Data-parallel split of a global batch into `n_tiles` microbatch tiles
 /// of `tile` rows, executed by up to `workers` threads, each of whose
@@ -266,6 +266,11 @@ pub struct ShardedMlp {
     pub model: Arc<MfMlp>,
     pub plan: ShardPlan,
     engine: String,
+    /// physical layout of the step operand cache's code planes
+    /// ([`PackMode::Auto`] by default: nibble storage whenever the bit
+    /// width fits). Pure layout — the decode reproduces the exact byte
+    /// codes, so runs are digest-identical across pack modes.
+    pack: PackMode,
     /// long-lived worker pool; `None` when one worker runs in-thread
     pool: Option<WorkerPool>,
     /// the in-thread engine (single-worker path), built once
@@ -292,13 +297,34 @@ impl ShardedMlp {
             model: Arc::new(model),
             plan,
             engine: engine.to_string(),
+            pack: PackMode::Auto,
             pool,
             solo,
         })
     }
 
+    /// Choose the operand cache's physical code layout (`--pack`).
+    /// Rejects a *forced* nibble layout when the model's code width does
+    /// not fit 4-bit magnitudes (6-bit tensors); [`PackMode::Auto`] falls
+    /// back to bytes instead.
+    pub fn with_pack(mut self, pack: PackMode) -> Result<ShardedMlp> {
+        if pack == PackMode::Nibble && pot_emax(self.model.cfg.bits) > NIBBLE_EMAX_MAX {
+            bail!(
+                "--pack nibble needs a 4-bit magnitude (bits <= 5); \
+                 this model trains {}-bit codes — use auto or byte",
+                self.model.cfg.bits
+            );
+        }
+        self.pack = pack;
+        Ok(self)
+    }
+
     pub fn engine_name(&self) -> &str {
         &self.engine
+    }
+
+    pub fn pack_mode(&self) -> PackMode {
+        self.pack
     }
 
     /// Restore the master model from a packed state vector (checkpoint
@@ -380,8 +406,13 @@ impl ShardedMlp {
         assert_eq!(y.len(), plan.batch, "batch size does not match the shard plan");
         assert_eq!(x.len(), plan.batch * d_in, "x does not match (batch, d_in)");
         // the step-persistent operand cache: weights quantized + k-panel
-        // packed once, consumed by every tile on every worker
-        let weights = Arc::new(self.model.prepare_step_weights(plan.kshard));
+        // packed once (nibble-packed under the configured layout),
+        // consumed by every tile on every worker
+        let weights = Arc::new(
+            self.model
+                .prepare_step_weights_packed(plan.kshard, self.pack)
+                .expect("pack mode validated against the code width by with_pack"),
+        );
         match &self.pool {
             None => {
                 // in-thread path: same tiles, same order-independent math
@@ -563,6 +594,44 @@ mod tests {
             }
             assert_eq!(baseline, t.model.state_to_vec(), "{engine} W=2 K=2");
         }
+    }
+
+    #[test]
+    fn pack_mode_is_pure_layout() {
+        // nibble storage of the operand cache decodes to the exact byte
+        // codes, so seeded sharded runs are bit-identical across --pack
+        // values — the storage-format determinism law at module level
+        let (x, y) = toy_batch(37, 16, 12, 4);
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for pack in [PackMode::Byte, PackMode::Auto, PackMode::Nibble] {
+            let plan = ShardPlan::new(16, 4, 2).unwrap().with_kshard(2).unwrap();
+            let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 41);
+            let mut t = ShardedMlp::new(model, plan, "simd", 1)
+                .unwrap()
+                .with_pack(pack)
+                .unwrap();
+            assert_eq!(t.pack_mode(), pack);
+            for _ in 0..4 {
+                t.train_step(&x, &y, 0.1);
+            }
+            states.push(t.model.state_to_vec());
+        }
+        assert_eq!(states[0], states[1], "auto vs byte");
+        assert_eq!(states[0], states[2], "nibble vs byte");
+
+        // 6-bit codes do not fit the 4-bit magnitude: a forced nibble
+        // layout is a construction error, auto falls back to bytes
+        let mut cfg6 = NnConfig::mf(&[12, 16, 4]);
+        cfg6.bits = 6;
+        let plan = ShardPlan::new(16, 4, 1).unwrap();
+        let t = ShardedMlp::new(MfMlp::init(cfg6.clone(), 43), plan, "scalar", 1).unwrap();
+        let e = format!("{:#}", t.with_pack(PackMode::Nibble).unwrap_err());
+        assert!(e.contains("bits <= 5"), "{e}");
+        let mut t = ShardedMlp::new(MfMlp::init(cfg6, 43), plan, "scalar", 1)
+            .unwrap()
+            .with_pack(PackMode::Auto)
+            .unwrap();
+        t.train_step(&x, &y, 0.1); // byte fallback trains fine
     }
 
     #[test]

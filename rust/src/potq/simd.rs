@@ -32,10 +32,10 @@
 //! [`ScalarEngine`]: super::engine::ScalarEngine
 
 use super::engine::{
-    check_kslab, dims2, finish, k_shift_runs, lut_index, saturating_band, tile_args, MacEngine,
-    SaturationReport,
+    check_kslab, dims2, finish, k_shift_runs, lut_index, pair_panel_shifts, saturating_band,
+    tile_args, MacEngine, SaturationReport,
 };
-use super::quantize::{pot_emax, KPanels, PackedOperand, PotTensor};
+use super::quantize::{decode_nibbles_into, pot_emax, KPanels, NibbleIter, PackedOperand, PotTensor};
 
 /// Inner-loop strategy of a [`SimdEngine`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -441,15 +441,192 @@ unsafe fn hsum_epi64(v: std::arch::x86_64::__m256i) -> i64 {
     _mm_cvtsi128_si64(s2)
 }
 
-/// The per-panel kernel shifts of one pair: the PAIR-combined,
-/// dmin-normalized value from `tile_args` — not the header's w-only delta
-/// (that one serves single-operand consumers). Constant per panel because
-/// every consumer's panel grid refines both operands' tile grids.
-fn pair_panel_shifts(wp: &KPanels, kshifts: Option<&[u32]>) -> Vec<u32> {
-    wp.panels
-        .iter()
-        .map(|h| kshifts.map_or(0, |s| s[h.p0]))
-        .collect()
+/// SWAR inner loop over a **nibble-layout** column: 8 codes per
+/// iteration, reconstructed in registers from 4 packed magnitude bytes
+/// and one sign-bitplane byte — twice the codes per loaded byte of the
+/// byte path. The widen is three shift/mask steps (nibble spread), the
+/// sign plane is broadcast-multiplied against a per-byte bit selector,
+/// and zero nibbles are masked back to the zero code; from there the
+/// index build and spill cadence are exactly [`dot_codes_swar`]'s, so
+/// the sum is bit-identical.
+fn dot_codes_swar_nib(xs: &[u8], mags: &[u8], signs: &[u8], spill_groups: usize) -> i128 {
+    const SIGN64: u64 = 0x8080_8080_8080_8080;
+    const MAG64: u64 = 0x7F7F_7F7F_7F7F_7F7F;
+    const LOW_NIB: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+    const ONES: u64 = 0x0101_0101_0101_0101;
+    const BITSEL: u64 = 0x8040_2010_0804_0201;
+    const BIAS: u64 = 0x1F1F_1F1F_1F1F_1F1F; // NIBBLE_BIAS per byte
+    let len = xs.len();
+    let vec_len = len - len % 8;
+    let mut total: i128 = 0;
+    let mut acc: i64 = 0;
+    let mut groups = 0usize;
+    let mut g = 0usize;
+    while g < vec_len {
+        let vx = u64::from_le_bytes(xs[g..g + 8].try_into().unwrap());
+        // spread 8 magnitude nibbles (4 bytes, low nibble = even code)
+        // into one byte per code
+        let mut nb = u32::from_le_bytes(mags[g / 2..g / 2 + 4].try_into().unwrap()) as u64;
+        nb = (nb | (nb << 16)) & 0x0000_FFFF_0000_FFFF;
+        nb = (nb | (nb << 8)) & 0x00FF_00FF_00FF_00FF;
+        nb = (nb | (nb << 4)) & LOW_NIB;
+        // sign bit i of the plane byte -> 0x80 in code byte i
+        let sel = ((signs[g / 8] as u64) * ONES) & BITSEL;
+        let s80 = (sel + MAG64) & SIGN64;
+        // live mask: 0xFF per nonzero nibble (nibble 0 is the zero code)
+        let t = (nb + MAG64) & SIGN64;
+        let lm = t | (t - (t >> 7));
+        // reconstruct the byte codes: mag = nibble + bias, OR the sign
+        // plane back in, zero codes masked to 0x00 — then the byte
+        // path's index build runs unchanged
+        let vw = ((nb + BIAS) | s80) & lm;
+        let mut idx = ((vx ^ vw) & SIGN64) | ((vx & MAG64) + (vw & MAG64));
+        if spill_groups == 0 {
+            for _ in 0..8 {
+                total += swar_term((idx & 0xFF) as u32) as i128;
+                idx >>= 8;
+            }
+        } else {
+            for _ in 0..8 {
+                acc += swar_term((idx & 0xFF) as u32);
+                idx >>= 8;
+            }
+            groups += 1;
+            if groups >= spill_groups {
+                total += acc as i128;
+                acc = 0;
+                groups = 0;
+            }
+        }
+        g += 8;
+    }
+    // tail (< 8 codes): decode through the shared unpack iterator
+    let rem = len - vec_len;
+    if rem > 0 {
+        let mut buf = [0u8; 8];
+        decode_nibbles_into(&mags[vec_len / 2..], &signs[vec_len / 8..], rem, &mut buf[..rem]);
+        for (&cx, &cw) in xs[vec_len..].iter().zip(buf[..rem].iter()) {
+            total += swar_term(lut_index(cx, cw) as u32) as i128;
+        }
+    }
+    total + acc as i128
+}
+
+/// Scalar-fallback inner loop over a nibble-layout column (the shared
+/// unpack iterator feeding the per-byte term decode).
+fn dot_codes_scalar_nib(xs: &[u8], mags: &[u8], signs: &[u8]) -> i128 {
+    let mut total = 0i128;
+    for (&cx, cw) in xs.iter().zip(NibbleIter::new(mags, signs, xs.len())) {
+        total += swar_term(lut_index(cx, cw) as u32) as i128;
+    }
+    total
+}
+
+/// AVX2 inner loop over a **nibble-layout** column: 32 codes per
+/// iteration from 16 magnitude bytes + 4 sign-plane bytes. The nibble
+/// split widens each magnitude byte to a u16 lane
+/// (`_mm256_cvtepu8_epi16`) and isolates both nibbles with one
+/// shift-or-mask (`_mm256_slli_epi16` / `_mm256_and_si256`); the sign
+/// plane is broadcast and expanded against a per-byte bit selector.
+/// The reconstructed byte codes then run the existing 16-lane `2^e`
+/// shuffle-LUT gather + `_mm256_sad_epu8` binning body unchanged, so
+/// the sum is bit-identical to every other path.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_codes_avx2_nib(
+    xs: &[u8],
+    mags: &[u8],
+    signs: &[u8],
+    n_groups: usize,
+    spill_groups: usize,
+) -> i128 {
+    use std::arch::x86_64::*;
+    debug_assert!(n_groups <= 8);
+    let len = xs.len();
+    let vec_len = len - len % 32;
+    let pow_tbl = _mm256_setr_epi8(
+        1, 2, 4, 8, 16, 32, 64, -128, 0, 0, 0, 0, 0, 0, 0, 0, //
+        1, 2, 4, 8, 16, 32, 64, -128, 0, 0, 0, 0, 0, 0, 0, 0,
+    );
+    let m7f = _mm256_set1_epi8(0x7F);
+    let m80 = _mm256_set1_epi8(-128);
+    let m40 = _mm256_set1_epi8(0x40);
+    let m07 = _mm256_set1_epi8(0x07);
+    let m38 = _mm256_set1_epi8(0x38);
+    let m0f16 = _mm256_set1_epi16(0x0F0F);
+    let bias = _mm256_set1_epi8(0x1F); // NIBBLE_BIAS
+    let zero = _mm256_setzero_si256();
+    // byte i of a lane picks sign byte i/8 (lane-local shuffle), then
+    // tests bit i&7 — expanding the 32-bit sign plane to byte masks
+    let rep_ctl = _mm256_setr_epi8(
+        0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1, 1, 1, //
+        2, 2, 2, 2, 2, 2, 2, 2, 3, 3, 3, 3, 3, 3, 3, 3,
+    );
+    let bitsel = _mm256_setr_epi8(
+        1, 2, 4, 8, 16, 32, 64, -128, 1, 2, 4, 8, 16, 32, 64, -128, //
+        1, 2, 4, 8, 16, 32, 64, -128, 1, 2, 4, 8, 16, 32, 64, -128,
+    );
+    let group_ids: [__m256i; 8] = [
+        _mm256_set1_epi8(0),
+        _mm256_set1_epi8(8),
+        _mm256_set1_epi8(16),
+        _mm256_set1_epi8(24),
+        _mm256_set1_epi8(32),
+        _mm256_set1_epi8(40),
+        _mm256_set1_epi8(48),
+        _mm256_set1_epi8(56),
+    ];
+    let mut pos = [zero; 8];
+    let mut neg = [zero; 8];
+    let mut off = 0usize;
+    while off < vec_len {
+        let vx = _mm256_loadu_si256(xs.as_ptr().add(off) as *const __m256i);
+        // widen 16 magnitude bytes to u16 lanes, split both nibbles into
+        // their own bytes (low byte = even code, matching the layout)
+        let mrow = _mm_loadu_si128(mags.as_ptr().add(off / 2) as *const __m128i);
+        let wide = _mm256_cvtepu8_epi16(mrow);
+        let nb = _mm256_and_si256(_mm256_or_si256(wide, _mm256_slli_epi16(wide, 4)), m0f16);
+        // sign plane: broadcast the 4 bytes, replicate each across its 8
+        // codes, test the per-code bit, mask to 0x80
+        let s4 = u32::from_le_bytes(signs[off / 8..off / 8 + 4].try_into().unwrap());
+        let srep = _mm256_shuffle_epi8(_mm256_set1_epi32(s4 as i32), rep_ctl);
+        let sbit = _mm256_cmpeq_epi8(_mm256_and_si256(srep, bitsel), bitsel);
+        let s80v = _mm256_and_si256(sbit, m80);
+        // reconstruct byte codes; zero nibbles -> the zero code
+        let nbz = _mm256_cmpeq_epi8(nb, zero);
+        let vw = _mm256_andnot_si256(nbz, _mm256_or_si256(_mm256_add_epi8(nb, bias), s80v));
+        // from here: the byte path's body, verbatim
+        let sign = _mm256_and_si256(_mm256_xor_si256(vx, vw), m80);
+        let mag = _mm256_add_epi8(_mm256_and_si256(vx, m7f), _mm256_and_si256(vw, m7f));
+        let live = _mm256_cmpeq_epi8(_mm256_and_si256(mag, m40), m40);
+        let pw = _mm256_shuffle_epi8(pow_tbl, _mm256_and_si256(mag, m07));
+        let pw = _mm256_and_si256(pw, live);
+        let hi = _mm256_and_si256(mag, m38);
+        let posm = _mm256_cmpeq_epi8(sign, zero);
+        for (t, (pa, na)) in pos.iter_mut().zip(neg.iter_mut()).take(n_groups).enumerate() {
+            let gm = _mm256_cmpeq_epi8(hi, group_ids[t]);
+            let gp = _mm256_and_si256(pw, gm);
+            let p = _mm256_and_si256(gp, posm);
+            let ng = _mm256_andnot_si256(posm, gp);
+            *pa = _mm256_add_epi64(*pa, _mm256_sad_epu8(p, zero));
+            *na = _mm256_add_epi64(*na, _mm256_sad_epu8(ng, zero));
+        }
+        off += 32;
+    }
+    let mut total: i128 = 0;
+    for (t, (pa, na)) in pos.iter().zip(neg.iter()).take(n_groups).enumerate() {
+        let ps = hsum_epi64(*pa);
+        let ns = hsum_epi64(*na);
+        total += ((ps as i128) - (ns as i128)) << (8 * t);
+    }
+    // tail (< 32 codes) through the nibble SWAR path
+    let tail = dot_codes_swar_nib(
+        &xs[vec_len..],
+        &mags[vec_len / 2..],
+        &signs[vec_len / 8..],
+        spill_groups,
+    );
+    total + tail
 }
 
 /// The shared inner driver of every simd entry point: stream each
@@ -478,9 +655,11 @@ fn acc_panels(
     #[cfg(not(target_arch = "x86_64"))]
     let _ = n_groups;
     let spill = swar_spill_groups(emax);
+    let nibble = wp.is_nibble();
     let xc = x.codes();
-    // j-outer: the w panel column (k bytes) stays register/L1-hot while x
-    // streams; x itself is small enough to stay cached across columns
+    // j-outer: the w panel column (k bytes — or k/2 + k/8 in the nibble
+    // layout) stays register/L1-hot while x streams; x itself is small
+    // enough to stay cached across columns
     for j in 0..n {
         for i in 0..m {
             let xrow = &xc[i * k..(i + 1) * k];
@@ -488,14 +667,28 @@ fn acc_panels(
             for pi in prange.clone() {
                 let h = &wp.panels[pi];
                 let xs = &xrow[h.p0..h.p1];
-                let ws = wp.col(pi, j);
-                let part = match path {
-                    #[cfg(target_arch = "x86_64")]
-                    SimdPath::Avx2 => unsafe { dot_codes_avx2(xs, ws, n_groups, spill) },
-                    #[cfg(not(target_arch = "x86_64"))]
-                    SimdPath::Avx2 => dot_codes_swar(xs, ws, spill),
-                    SimdPath::Swar => dot_codes_swar(xs, ws, spill),
-                    SimdPath::Scalar => dot_codes_scalar(xs, ws),
+                let part = if nibble {
+                    let (mags, signs) = wp.nibble_col(pi, j);
+                    match path {
+                        #[cfg(target_arch = "x86_64")]
+                        SimdPath::Avx2 => unsafe {
+                            dot_codes_avx2_nib(xs, mags, signs, n_groups, spill)
+                        },
+                        #[cfg(not(target_arch = "x86_64"))]
+                        SimdPath::Avx2 => dot_codes_swar_nib(xs, mags, signs, spill),
+                        SimdPath::Swar => dot_codes_swar_nib(xs, mags, signs, spill),
+                        SimdPath::Scalar => dot_codes_scalar_nib(xs, mags, signs),
+                    }
+                } else {
+                    let ws = wp.col(pi, j);
+                    match path {
+                        #[cfg(target_arch = "x86_64")]
+                        SimdPath::Avx2 => unsafe { dot_codes_avx2(xs, ws, n_groups, spill) },
+                        #[cfg(not(target_arch = "x86_64"))]
+                        SimdPath::Avx2 => dot_codes_swar(xs, ws, spill),
+                        SimdPath::Swar => dot_codes_swar(xs, ws, spill),
+                        SimdPath::Scalar => dot_codes_scalar(xs, ws),
+                    }
                 };
                 av += part << shifts[pi];
             }
@@ -827,6 +1020,87 @@ mod tests {
                 &eng.matmul_packed(&xt, &packed),
                 &format!("tiled-x fallback {}", eng.path().label()),
             );
+        }
+    }
+
+    #[test]
+    fn nibble_kernels_match_byte_kernels() {
+        // every inner loop, widths with nibble forms, lengths straddling
+        // the 8- and 32-lane chunk boundaries (dangling half-bytes too)
+        for b in [3u32, 4, 5] {
+            let emax = pot_emax(b);
+            for klen in [1usize, 2, 7, 8, 9, 16, 31, 32, 33, 100] {
+                let seed = 4000 + 131 * b as u64 + klen as u64;
+                let x = rand_tensor(seed, 1, klen, 0.6, b);
+                let w = rand_tensor(seed + 500, klen, 1, 0.6, b);
+                let kp = w.pack_k_panels(&[]);
+                let nib = kp.to_nibble(emax).unwrap();
+                let (mags, signs) = nib.nibble_col(0, 0);
+                let xs = x.codes();
+                let want = dot_codes_scalar(xs, kp.col(0, 0));
+                assert_eq!(
+                    dot_codes_scalar_nib(xs, mags, signs),
+                    want,
+                    "scalar b={b} k={klen}"
+                );
+                for spill in [0usize, 1, 2, swar_spill_groups(emax)] {
+                    assert_eq!(
+                        dot_codes_swar_nib(xs, mags, signs, spill),
+                        want,
+                        "swar b={b} k={klen} spill={spill}"
+                    );
+                }
+                #[cfg(target_arch = "x86_64")]
+                if avx2_available() {
+                    let n_groups = ((4 * emax) as usize >> 3) + 1;
+                    let got = unsafe {
+                        dot_codes_avx2_nib(xs, mags, signs, n_groups, swar_spill_groups(emax))
+                    };
+                    assert_eq!(got, want, "avx2 b={b} k={klen}");
+                }
+            }
+        }
+        // max-magnitude codes (the emax boundary) through the nibble path
+        let (m, k, n) = (1, 67, 1);
+        let ones: Vec<f32> = (0..k).map(|i| if i % 3 == 0 { -1.0 } else { 1.0 }).collect();
+        let x = PotTensor::quantize_2d(&ones, m, k, 5, None);
+        let w = PotTensor::quantize_2d(&ones, k, n, 5, None);
+        let kp = w.pack_k_panels(&[]);
+        let nib = kp.to_nibble(pot_emax(5)).unwrap();
+        let (mags, signs) = nib.nibble_col(0, 0);
+        let want = dot_codes_scalar(x.codes(), kp.col(0, 0));
+        assert_eq!(dot_codes_scalar_nib(x.codes(), mags, signs), want);
+        assert_eq!(dot_codes_swar_nib(x.codes(), mags, signs, swar_spill_groups(7)), want);
+    }
+
+    #[test]
+    fn simd_nibble_packed_bit_exact_on_every_path() {
+        use crate::potq::engine::{finish_kslabs, kshard_cuts, kslab_bounds};
+        use crate::potq::{PackMode, PackedOperand};
+        let (m, k, n) = (5, 48, 4);
+        let x = rand_tensor(5200, m, k, 0.5, 5);
+        let w = rand_tiled(5201, k, n, 0, 16); // live tile shifts
+        let want = ScalarEngine.matmul(&x, &w);
+        let nib =
+            PackedOperand::new_packed(w.clone(), &kshard_cuts(k, 4), PackMode::Nibble).unwrap();
+        assert_eq!(nib.layout(), "nibble");
+        for eng in paths_under_test() {
+            let label = eng.path().label();
+            assert_bits_eq(
+                &want,
+                &eng.matmul_packed(&x, &nib),
+                &format!("nibble packed {label}"),
+            );
+            // nibble cache + k-shard composed
+            let parts: Vec<Vec<i128>> = kslab_bounds(k, 4)
+                .into_iter()
+                .map(|(k0, k1)| eng.matmul_kslab_packed(&x, &nib, k0, k1))
+                .collect();
+            let got = finish_kslabs(&x, &w, &parts);
+            assert_bits_eq(&want, &got, &format!("nibble kslab {label}"));
+            // a slab grid the cache does not cover falls back bit-exactly
+            let odd = eng.matmul_kslab_packed(&x, &nib, 5, 29);
+            assert_eq!(odd, eng.matmul_kslab(&x, &w, 5, 29), "nibble fallback {label}");
         }
     }
 

@@ -19,6 +19,7 @@ use crate::data::Batch;
 use crate::models::{self, NativeSpec};
 use crate::potq::nn::{MfMlp, NnConfig, Scheme, StepCensus};
 use crate::potq::shard::{ShardPlan, ShardedMlp};
+use crate::potq::PackMode;
 
 use super::artifact::ProbeSection;
 use super::session::{SessionBackend, SessionInfo};
@@ -30,6 +31,9 @@ pub struct NativeSession {
     engine_name: String,
     threads: usize,
     plan: ShardPlan,
+    /// physical layout of the step operand cache (`--pack`); pure
+    /// storage, so seeded runs are digest-identical across values
+    pack: PackMode,
     model: Option<ShardedMlp>,
     last_census: Option<StepCensus>,
 }
@@ -64,7 +68,10 @@ impl NativeSession {
             ShardPlan::auto_tile(spec.batch)
         };
         let plan = ShardPlan::new(spec.batch, tile, cfg.workers)?.with_kshard(cfg.kshard)?;
-        NativeSession::new(spec, nn_cfg, &cfg.engine, cfg.threads, plan)
+        let mut s = NativeSession::new(spec, nn_cfg, &cfg.engine, cfg.threads, plan)?;
+        s.pack = PackMode::parse(&cfg.pack)
+            .with_context(|| format!("native.pack must be auto|byte|nibble, got '{}'", cfg.pack))?;
+        Ok(s)
     }
 
     pub fn new(
@@ -110,6 +117,7 @@ impl NativeSession {
             engine_name: engine_name.to_string(),
             threads,
             plan,
+            pack: PackMode::Auto,
             model: None,
             last_census: None,
         })
@@ -129,9 +137,20 @@ impl NativeSession {
         self.plan
     }
 
-    fn sharded(cfg: &NnConfig, plan: ShardPlan, engine: &str, threads: usize, seed: u64)
-        -> Result<ShardedMlp> {
-        ShardedMlp::new(MfMlp::init(cfg.clone(), seed), plan, engine, threads)
+    /// Code-plane layout of the step operand cache (`--pack`).
+    pub fn pack_mode(&self) -> PackMode {
+        self.pack
+    }
+
+    fn sharded(
+        cfg: &NnConfig,
+        plan: ShardPlan,
+        engine: &str,
+        threads: usize,
+        pack: PackMode,
+        seed: u64,
+    ) -> Result<ShardedMlp> {
+        ShardedMlp::new(MfMlp::init(cfg.clone(), seed), plan, engine, threads)?.with_pack(pack)
     }
 
     fn model_mut(&mut self) -> Result<&mut ShardedMlp> {
@@ -161,6 +180,7 @@ impl SessionBackend for NativeSession {
             self.plan,
             &self.engine_name,
             self.threads,
+            self.pack,
             seed as u32 as u64,
         )?);
         self.last_census = None;
@@ -205,8 +225,14 @@ impl SessionBackend for NativeSession {
     fn state_from_host(&mut self, v: &[f32]) -> Result<()> {
         if self.model.is_none() {
             // checkpoint restore without init(): weights are overwritten
-            self.model =
-                Some(Self::sharded(&self.cfg, self.plan, &self.engine_name, self.threads, 0)?);
+            self.model = Some(Self::sharded(
+                &self.cfg,
+                self.plan,
+                &self.engine_name,
+                self.threads,
+                self.pack,
+                0,
+            )?);
         }
         self.model_mut()?.state_from_vec(v).map_err(anyhow::Error::msg)
     }
@@ -340,6 +366,43 @@ mod tests {
         for s in &states[1..] {
             assert_eq!(&states[0], s, "workers x kshard grid changed the session state");
         }
+    }
+
+    #[test]
+    fn pack_mode_is_invariant_at_session_level() {
+        // --pack picks the operand cache's physical layout only; seeded
+        // session states are bit-identical across byte/nibble storage
+        let mut states: Vec<Vec<f32>> = Vec::new();
+        for pack in ["byte", "nibble", "auto"] {
+            let cfg = TrainConfig {
+                variant: "tiny_mlp_mf".into(),
+                engine: "simd".into(),
+                workers: 2,
+                kshard: 2,
+                pack: pack.into(),
+                ..TrainConfig::default()
+            };
+            let mut s = NativeSession::from_config(&cfg).unwrap();
+            assert_eq!(s.pack_mode().as_str(), pack);
+            s.init(19).unwrap();
+            let b = batch_for(&s, 19);
+            for _ in 0..2 {
+                s.train_step(&b, 0.05).unwrap();
+            }
+            assert_eq!(s.last_census().unwrap().linear_fp32_muls, 0);
+            states.push(s.state_to_host().unwrap());
+        }
+        for s in &states[1..] {
+            assert_eq!(&states[0], s, "pack mode changed the session state");
+        }
+        // an unknown pack string is a clean construction error
+        let cfg = TrainConfig {
+            variant: "tiny_mlp_mf".into(),
+            pack: "bitplane".into(),
+            ..TrainConfig::default()
+        };
+        let err = format!("{:#}", NativeSession::from_config(&cfg).unwrap_err());
+        assert!(err.contains("auto|byte|nibble"), "{err}");
     }
 
     #[test]

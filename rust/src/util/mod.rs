@@ -2,5 +2,6 @@
 
 pub mod json;
 pub mod prng;
+pub mod rle;
 pub mod table;
 pub mod timer;

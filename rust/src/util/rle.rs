@@ -1,0 +1,166 @@
+//! Byte-oriented run-length codec for code planes and checkpoint state.
+//!
+//! Token stream: a control byte `c` followed by payload.
+//!   * `c < 0x80`  — literal run: the next `c + 1` bytes are copied
+//!     verbatim (1..=128 bytes per token);
+//!   * `c >= 0x80` — repeat run: the next byte repeats `(c & 0x7F) + 2`
+//!     times (2..=129 per token).
+//!
+//! The encoder emits repeat tokens only for runs of 3+ identical bytes,
+//! so worst-case expansion is one control byte per 128 input bytes
+//! (< 1%). Zero codes dominate sparse gradient planes, which is where
+//! the ratio comes from; the decoder is fully length-checked and returns
+//! errors (never panics) on truncated or oversized streams.
+
+use anyhow::{bail, Result};
+
+/// Longest repeat run one token encodes: `(0x7F & 0x7F) + 2`.
+const MAX_REPEAT: usize = 129;
+/// Longest literal run one token encodes: `0x7F + 1`.
+const MAX_LITERAL: usize = 128;
+
+/// Length of the run of identical bytes starting at `i`, capped.
+#[inline]
+fn run_len(data: &[u8], i: usize, cap: usize) -> usize {
+    let b = data[i];
+    let end = data.len().min(i + cap);
+    let mut j = i + 1;
+    while j < end && data[j] == b {
+        j += 1;
+    }
+    j - i
+}
+
+/// Compress `data` into the RLE token stream.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    while i < data.len() {
+        let run = run_len(data, i, MAX_REPEAT);
+        if run >= 3 {
+            out.push(0x80 | (run - 2) as u8);
+            out.push(data[i]);
+            i += run;
+            continue;
+        }
+        // literal segment: scan ahead until a 3+ run starts (or cap)
+        let start = i;
+        while i < data.len() && i - start < MAX_LITERAL {
+            if run_len(data, i, 3) >= 3 {
+                break;
+            }
+            i += 1;
+        }
+        out.push((i - start - 1) as u8);
+        out.extend_from_slice(&data[start..i]);
+    }
+    out
+}
+
+/// Decompress a stream produced by [`compress`]. `expect` is the exact
+/// decoded length; truncated streams, overlong streams, and tokens that
+/// would overrun the expected size are all errors, never panics.
+pub fn decompress(data: &[u8], expect: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expect);
+    let mut i = 0;
+    while i < data.len() {
+        let c = data[i];
+        i += 1;
+        if c < 0x80 {
+            let len = c as usize + 1;
+            if i + len > data.len() {
+                bail!("rle: truncated literal run ({len} bytes past end)");
+            }
+            out.extend_from_slice(&data[i..i + len]);
+            i += len;
+        } else {
+            let len = (c & 0x7F) as usize + 2;
+            let Some(&b) = data.get(i) else {
+                bail!("rle: truncated repeat run");
+            };
+            i += 1;
+            out.resize(out.len() + len, b);
+        }
+        if out.len() > expect {
+            bail!("rle: decoded stream overruns expected {expect} bytes");
+        }
+    }
+    if out.len() != expect {
+        bail!("rle: decoded {} bytes, expected {expect}", out.len());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn roundtrips_edge_shapes() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[7, 7]);
+        roundtrip(&[7, 7, 7]);
+        roundtrip(&[1, 2, 3, 4, 5]);
+        roundtrip(&vec![0u8; 1000]);
+        roundtrip(&(0..=255u8).collect::<Vec<_>>());
+        // runs straddling the 129-byte repeat cap
+        roundtrip(&vec![9u8; 129]);
+        roundtrip(&vec![9u8; 130]);
+        roundtrip(&vec![9u8; 400]);
+        // literals straddling the 128-byte cap
+        let lit: Vec<u8> = (0..300).map(|i| (i % 251) as u8).collect();
+        roundtrip(&lit);
+    }
+
+    #[test]
+    fn roundtrips_random_and_sparse() {
+        let mut r = Pcg32::new(77);
+        for n in [1usize, 17, 256, 4096] {
+            // dense random bytes
+            let dense: Vec<u8> = (0..n).map(|_| r.below(256) as u8).collect();
+            roundtrip(&dense);
+            // sparse (mostly-zero) planes compress well and round-trip
+            let sparse: Vec<u8> = (0..n)
+                .map(|_| if r.below(10) == 0 { r.below(256) as u8 } else { 0 })
+                .collect();
+            let c = compress(&sparse);
+            assert!(c.len() < sparse.len() / 2 + 16, "{} -> {}", sparse.len(), c.len());
+            roundtrip(&sparse);
+        }
+    }
+
+    #[test]
+    fn worst_case_expansion_is_bounded() {
+        // alternating bytes never form a 3-run: pure literals
+        let data: Vec<u8> = (0..10_000).map(|i| (i & 1) as u8).collect();
+        let c = compress(&data);
+        assert!(c.len() <= data.len() + data.len() / MAX_LITERAL + 1);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let good = compress(&vec![3u8; 50]);
+        // truncation at every prefix length
+        for cut in 0..good.len() {
+            assert!(decompress(&good[..cut], 50).is_err(), "cut={cut}");
+        }
+        // wrong expected lengths
+        assert!(decompress(&good, 49).is_err());
+        assert!(decompress(&good, 51).is_err());
+        // literal header claiming bytes past the end
+        assert!(decompress(&[0x7F, 1, 2], 128).is_err());
+        // repeat header with no payload byte
+        assert!(decompress(&[0x80], 2).is_err());
+        // stream decoding more than expected
+        assert!(decompress(&[0xFF, 0], 5).is_err());
+    }
+}

@@ -601,6 +601,87 @@ fn prop_lr_schedule_non_increasing_after_warmup() {
 }
 
 #[test]
+fn prop_nibble_plane_round_trips_byte_codes() {
+    // the sign-planed 4-bit layout is a pure relayout: at every nibble-
+    // eligible width (emax 1, 3, 7 — both boundaries inclusive), with
+    // zero codes, saturated +/-emax codes, and odd lengths (a dangling
+    // half-byte in the magnitude plane), decode reproduces the exact
+    // byte codes through all three read paths (unpack / iter / get)
+    property("nibble plane round-trips byte codes", 120, |g: &mut Gen| {
+        let b = [3u32, 4, 5][g.usize_in(0, 3)];
+        let emax = potq::pot_emax(b);
+        let len = g.usize_in(0, 201); // odd and even, including empty
+        let codes: Vec<u8> = (0..len)
+            .map(|_| match g.usize_in(0, 4) {
+                0 => potq::pack_code(ZERO_CODE, 0, emax),
+                1 => potq::pack_code(emax, g.bool() as u8, emax),
+                2 => potq::pack_code(-emax, g.bool() as u8, emax),
+                _ => potq::pack_code(g.i32_in(-emax, emax + 1), g.bool() as u8, emax),
+            })
+            .collect();
+        let plane = potq::PackedPlane::pack(&codes, emax).unwrap();
+        let physical = len.div_ceil(2) + len.div_ceil(8);
+        plane.len() == len
+            && plane.is_empty() == codes.is_empty()
+            && plane.bytes() == physical
+            && plane.unpack() == codes
+            && plane.iter().eq(codes.iter().copied())
+            && (0..len).all(|i| plane.get(i) == codes[i])
+    });
+}
+
+#[test]
+fn prop_nibble_plane_rejects_5_bit_magnitudes() {
+    // emax = 15 (bits = 6) needs 5 magnitude bits: the 4-bit plane must
+    // refuse it with a clean error (never a silent truncation) at both
+    // entry points — the raw plane packer and the packed-operand
+    // constructor — while PackMode::Auto falls back to the byte layout
+    property("nibble layout refuses emax > 7", 40, |g: &mut Gen| {
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 6);
+        let w = g.pot_tensor(k, n, 6);
+        let emax = potq::pot_emax(6); // 15
+        let plane_err = potq::PackedPlane::pack(w.codes(), emax).is_err();
+        let op_err = PackedOperand::new_packed(w.clone(), &[], potq::PackMode::Nibble).is_err();
+        let auto = PackedOperand::new_packed(w, &[], potq::PackMode::Auto).unwrap();
+        plane_err && op_err && auto.layout() == "byte"
+    });
+}
+
+#[test]
+fn prop_packed_operand_nibble_bit_exact() {
+    // the 4-bit storage law, property-tested: a nibble-packed operand
+    // cache is bit-identical to the byte layout on every engine,
+    // k-sharded or not, across bit widths 3..=5 and subnormal-salted
+    // data (flushed lanes become zero codes — the zero nibble)
+    property("nibble operand == byte operand, all engines", 25, |g: &mut Gen| {
+        let m = g.usize_in(1, 6);
+        let k = g.usize_in(1, 24);
+        let n = g.usize_in(1, 6);
+        let b = [3u32, 4, 5][g.usize_in(0, 3)];
+        let mut data = g.normal_vec(k * n, 0.0, 0.5);
+        data[g.usize_in(0, k * n)] = 1e-42; // subnormal -> flushed to the zero code
+        let w = potq::PotTensor::quantize_2d(&data, k, n, b, None);
+        let x = g.pot_tensor(m, k, b);
+        let kshard = g.usize_in(1, 5);
+        let cuts = potq::kshard_cuts(k, kshard);
+        let wb = PackedOperand::new_packed(w.clone(), &cuts, potq::PackMode::Byte).unwrap();
+        let wn = PackedOperand::new_packed(w, &cuts, potq::PackMode::Nibble).unwrap();
+        if wb.layout() != "byte" || wn.layout() != "nibble" {
+            return false;
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let want = ScalarEngine.matmul_packed(&x, &wb);
+        potq::ENGINE_NAMES.iter().all(|name| {
+            let eng = engine_by_name(name, 2).unwrap();
+            let keng = KShardEngine::new(engine_by_name(name, 2).unwrap(), kshard);
+            bits(&want) == bits(&eng.matmul_packed(&x, &wn))
+                && bits(&want) == bits(&keng.matmul_packed(&x, &wn))
+        })
+    });
+}
+
+#[test]
 fn prop_int32_accumulator_agrees_when_peak_small() {
     property("i64 fixed-point acc == f32 acc when unsaturated", 40, |g: &mut Gen| {
         let m = g.usize_in(1, 5);

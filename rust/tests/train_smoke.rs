@@ -295,6 +295,47 @@ fn native_kshard_checkpoints_digest_identical() {
 }
 
 #[test]
+fn native_pack_nibble_checkpoints_digest_identical() {
+    // the 4-bit storage acceptance pin: `--pack` picks a physical code
+    // layout only, so seeded `--pack nibble` runs are digest-identical
+    // to `--pack byte` — loss curves included — on every engine and
+    // across the workers x kshard grid (same cells as the k-shard pin)
+    let cells: [(&str, usize, usize); 4] =
+        [("scalar", 1, 1), ("blocked", 1, 2), ("threaded", 2, 4), ("simd", 2, 2)];
+    let mut digests: Vec<u64> = Vec::new();
+    let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
+    for (engine, workers, kshard) in cells {
+        for pack in ["byte", "nibble"] {
+            let ckpt = std::env::temp_dir()
+                .join(format!("mft_native_pack_{engine}_{workers}_{kshard}_{pack}.ckpt"));
+            std::fs::remove_file(&ckpt).ok();
+            let mut cfg = native_cfg("tiny_mlp_mf", 10, 43);
+            cfg.engine = engine.into();
+            cfg.workers = workers;
+            cfg.kshard = kshard;
+            cfg.pack = pack.into();
+            cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+            let mut t = Trainer::native(cfg).unwrap().quiet();
+            let rec = t.run().unwrap();
+            curves.push(rec.loss_curve.iter().map(|&(s, l)| (s, l.to_bits())).collect());
+            let ck = Checkpoint::load(&ckpt).unwrap();
+            assert_eq!(ck.step, 10);
+            digests.push(ck.digest());
+            labels.push(format!("{engine} W={workers} K={kshard} --pack {pack}"));
+        }
+    }
+    for i in 1..digests.len() {
+        assert_eq!(
+            digests[0], digests[i],
+            "{} checkpoint diverged from {}",
+            labels[i], labels[0]
+        );
+        assert_eq!(curves[0], curves[i], "{} loss curve", labels[i]);
+    }
+}
+
+#[test]
 fn native_kshard_census_is_schedule_invariant() {
     // census invariance across the workers x kshard grid: identical
     // per-GEMM op counts and zero FP32 muls including the k-combine
