@@ -324,9 +324,9 @@ fn shard_sweep() -> anyhow::Result<()> {
         let plan = ShardPlan::new(batch, tile, workers)?;
         let model = MfMlp::init(NnConfig::mf(&dims), 3);
         let mut sharded = ShardedMlp::new(model, plan, "blocked", 0)?;
-        sharded.train_step(&x, &y, 0.05); // warmup
+        sharded.train_step(&x, &y, 0.05)?; // warmup
         let timing = bench(0, steps, || {
-            std::hint::black_box(sharded.train_step(&x, &y, 0.05).loss);
+            std::hint::black_box(sharded.train_step(&x, &y, 0.05).unwrap().loss);
         });
         // the same seeded run regardless of W: pin it before reporting
         let digest = state_digest(&sharded.model.state_to_vec());
@@ -461,9 +461,9 @@ fn kshard_sweep() -> anyhow::Result<()> {
         let plan = ShardPlan::new(batch, tile, workers)?.with_kshard(kshard)?;
         let model = MfMlp::init(NnConfig::mf(&dims), 7);
         let mut sharded = ShardedMlp::new(model, plan, "simd", 0)?;
-        sharded.train_step(&x, &y, 0.05); // warmup
+        sharded.train_step(&x, &y, 0.05)?; // warmup
         let timing = bench(0, steps, || {
-            std::hint::black_box(sharded.train_step(&x, &y, 0.05).loss);
+            std::hint::black_box(sharded.train_step(&x, &y, 0.05).unwrap().loss);
         });
         // every grid cell is the same seeded run: pin before reporting
         let digest = state_digest(&sharded.model.state_to_vec());
@@ -697,6 +697,108 @@ fn pack_sweep() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Multi-node step throughput vs remote-worker count -> BENCH_multinode.json.
+/// Each "node" is an in-process `serve_on` socket worker on an ephemeral
+/// loopback port — the same wire path as a real `mft worker` process minus
+/// the fork. The membership is elastic and the tiling is membership-
+/// independent, so every row trains the *same* seeded run — the sweep
+/// asserts the final states are digest-identical across remote counts
+/// before reporting throughput.
+fn multinode_sweep() -> anyhow::Result<()> {
+    use mftrain::coordinator::state_digest;
+    use mftrain::potq::dist::serve_on;
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::{ShardPlan, ShardedMlp};
+    use std::net::TcpListener;
+
+    let dims = [256usize, 128, 10];
+    let (batch, tile, classes) = (32usize, 4usize, 10usize);
+    let steps: usize = std::env::var("MFT_BENCH_MULTINODE_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let mut rng = Pcg32::new(41);
+    let mut x = vec![0f32; batch * dims[0]];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(classes as u32) as i32).collect();
+
+    let mut t = Table::new(
+        &format!(
+            "multi-node MF training — batch {batch}, {} tiles of {tile}, {steps} timed steps, \
+             loopback socket workers",
+            batch / tile
+        ),
+        &["remotes", "members", "step mean", "steps/s", "vs local-only"],
+    );
+    let mut results = Vec::new();
+    let mut base_mean = 0f64;
+    let mut digest0 = None;
+    for remotes in [0usize, 1, 2, 4] {
+        let addrs: Vec<String> = (0..remotes)
+            .map(|_| {
+                let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+                let addr = listener.local_addr().expect("local addr").to_string();
+                std::thread::spawn(move || {
+                    let _ = serve_on(listener, "scalar", 1);
+                });
+                addr
+            })
+            .collect();
+        let plan = ShardPlan::new(batch, tile, 1)?;
+        let model = MfMlp::init(NnConfig::mf(&dims), 11);
+        let mut sharded = ShardedMlp::new(model, plan, "blocked", 0)?;
+        for addr in &addrs {
+            sharded.add_remote(addr)?;
+        }
+        sharded.train_step(&x, &y, 0.05)?; // warmup
+        let timing = bench(0, steps, || {
+            std::hint::black_box(sharded.train_step(&x, &y, 0.05).unwrap().loss);
+        });
+        assert_eq!(sharded.remote_count(), remotes, "a loopback worker dropped out mid-bench");
+        // every membership is the same seeded run: pin before reporting
+        let digest = state_digest(&sharded.model.state_to_vec());
+        match digest0 {
+            None => digest0 = Some(digest),
+            Some(d) => assert_eq!(d, digest, "{remotes} remotes diverged from local-only"),
+        }
+        let mean = timing.mean().as_secs_f64();
+        if remotes == 0 {
+            base_mean = mean;
+        }
+        let speedup = if mean > 0.0 { base_mean / mean } else { 0.0 };
+        t.row(&[
+            remotes.to_string(),
+            (remotes + 1).to_string(),
+            fmt_duration(timing.mean()),
+            format!("{:.1}", 1.0 / mean.max(1e-12)),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut o = BTreeMap::new();
+        o.insert("remotes".into(), Json::Num(remotes as f64));
+        o.insert("members".into(), Json::Num((remotes + 1) as f64));
+        o.insert("mean_secs".into(), Json::Num(mean));
+        o.insert("steps_per_s".into(), Json::Num(1.0 / mean.max(1e-12)));
+        o.insert("speedup_vs_local".into(), Json::Num(speedup));
+        o.insert("state_digest".into(), Json::Str(format!("{digest:#x}")));
+        results.push(Json::Obj(o));
+    }
+    t.note("every remote count verified digest-identical to the local-only run before \
+            timing is reported; workers speak the digest-sealed STEP/GRAD wire frames");
+    t.print();
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("multinode_throughput".into()));
+    root.insert("batch".into(), Json::Num(batch as f64));
+    root.insert("tile".into(), Json::Num(tile as f64));
+    root.insert("n_tiles".into(), Json::Num((batch / tile) as f64));
+    root.insert("dims".into(), Json::Arr(dims.iter().map(|&d| Json::Num(d as f64)).collect()));
+    root.insert("steps".into(), Json::Num(steps as f64));
+    root.insert("results".into(), Json::Arr(results));
+    std::fs::write("BENCH_multinode.json", Json::Obj(root).to_string())?;
+    println!("multinode sweep -> BENCH_multinode.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::var("MFT_BENCH_STEPS")
         .ok()
@@ -777,6 +879,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- physical code-plane layout -> BENCH_pack.json --------------------
     pack_sweep()?;
+
+    // ---- multi-node socket workers -> BENCH_multinode.json ----------------
+    multinode_sweep()?;
 
     // ---- end-to-end step latency per variant ------------------------------
     let rt = match Runtime::cpu() {

@@ -117,7 +117,7 @@ USAGE:
             [--engine scalar|blocked|threaded|simd|auto]
             [--threads N] [--bits 3..6] [--workers N] [--shard-tile P]
             [--kshard K] [--momentum F] [--weight-decay F]
-            [--pack auto|byte|nibble]
+            [--pack auto|byte|nibble] [--remote host:port,host:port]
             # native backend: the in-process multiplication-free trainer
             # (no artifacts needed); variants: mlp_mf, mlp_fp32,
             # tiny_mlp_mf, tiny_mlp_fp32. --workers N shards the batch
@@ -128,10 +128,18 @@ USAGE:
             # update stays multiplication-free. --pack picks the operand
             # cache's physical code layout (nibble = 4-bit magnitudes +
             # sign bitplane; auto = nibble whenever --bits <= 5) — pure
-            # storage, digest-identical across values
+            # storage, digest-identical across values. --remote joins
+            # `mft worker` socket processes to the step membership
+            # (elastic: dead workers are dropped and their tiles
+            # recomputed locally; seeded runs stay bit-identical for any
+            # membership history)
+  mft worker --listen host:port [--engine ...] [--threads N]
+             # a remote shard member: serves step frames from an `mft
+             # train --remote` coordinator over TCP; stateless between
+             # connections, kill/restart at any step boundary
   mft eval --variant <name> --checkpoint <path> [--batches N]
            [--engine ...] [--threads N] [--bits N] [--workers N]
-           [--kshard K] [--pack auto|byte|nibble]
+           [--kshard K] [--pack auto|byte|nibble] [--remote ...]
            # native checkpoints; --threads sizes the threaded engine,
            # --workers parallelizes eval over shard tiles, --kshard over
            # k-slabs

@@ -93,6 +93,12 @@ pub struct TrainConfig {
     /// "auto" picks nibble whenever the bit width fits (bits <= 5).
     /// Pure storage — runs are digest-identical across pack modes.
     pub pack: String,
+    /// remote `mft worker` socket addresses (`mft train --remote
+    /// host:port,host:port`) joined to the round-robin step membership
+    /// after the local workers. Elastic: a worker that dies mid-run is
+    /// dropped and its tiles recomputed locally — the seeded run stays
+    /// bit-identical for any membership history. Empty = single-node.
+    pub remotes: Vec<String>,
 }
 
 impl Default for TrainConfig {
@@ -128,6 +134,7 @@ impl Default for TrainConfig {
             shard_tile: 0,
             kshard: 1,
             pack: "auto".into(),
+            remotes: Vec::new(),
         }
     }
 }
@@ -185,6 +192,13 @@ impl TrainConfig {
             shard_tile: doc.i64_or("shard.tile", d.shard_tile as i64) as usize,
             kshard: doc.i64_or("shard.kshard", d.kshard as i64) as usize,
             pack: doc.str_or("native.pack", &d.pack).to_string(),
+            remotes: doc
+                .str_or("shard.remotes", "")
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect(),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -236,6 +250,11 @@ impl TrainConfig {
         }
         if self.kshard == 0 {
             bail!("kshard must be >= 1 (got 0); use 1 for no k-sharding");
+        }
+        for r in &self.remotes {
+            if !r.contains(':') {
+                bail!("shard.remotes entries must be host:port, got '{r}'");
+            }
         }
         match crate::potq::PackMode::parse(&self.pack) {
             None => bail!("native.pack must be auto|byte|nibble, got '{}'", self.pack),
@@ -399,6 +418,24 @@ kshard = 2
             let doc = toml::Doc::parse(bad).unwrap();
             assert!(TrainConfig::from_doc(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn remotes_field_parses_and_validates() {
+        assert!(TrainConfig::default().remotes.is_empty(), "single-node by default");
+        let doc = toml::Doc::parse(
+            "[shard]\nremotes = \"10.0.0.1:7701, 10.0.0.2:7701\"\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.remotes, vec!["10.0.0.1:7701", "10.0.0.2:7701"]);
+        // an empty string means no remotes, not one empty entry
+        let doc = toml::Doc::parse("[shard]\nremotes = \"\"\n").unwrap();
+        assert!(TrainConfig::from_doc(&doc).unwrap().remotes.is_empty());
+        // addresses must carry a port
+        let doc = toml::Doc::parse("[shard]\nremotes = \"tenmachine\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("host:port"), "{err}");
     }
 
     #[test]

@@ -2,7 +2,11 @@
 //! the LR schedule, telemetry and checkpoints. This is the L3 event loop;
 //! it drives any [`SessionBackend`] — the PJRT artifact executor or the
 //! native MacEngine trainer — through the same interface, so checkpoints,
-//! telemetry and the prefetch pipeline behave identically on both.
+//! telemetry and the prefetch pipeline behave identically on both. When
+//! the native session carries `--remote` socket workers, this loop is the
+//! multi-node coordinator: each train step fans tiles out over the
+//! elastic local + remote membership and the checkpoints it writes are
+//! bit-identical to a single-node run.
 
 use std::path::Path;
 use std::time::Instant;

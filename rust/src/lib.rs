@@ -33,7 +33,12 @@
 //!   weights once per step for every tile/worker/slab; gradients combine
 //!   multiplication-free (FP32 adds + a PoT-snapped 1/n_tiles exponent
 //!   add), so a seeded run is bit-identical for any
-//!   `--workers N --kshard K`.
+//!   `--workers N --kshard K`. `potq::dist` takes the same grid
+//!   multi-node: `mft worker` socket processes join the round-robin
+//!   membership elastically over digest-sealed wire frames
+//!   (`--remote host:port,...`), with dead members dropped and their
+//!   tiles recomputed locally — digests are invariant to the membership
+//!   history, failures included.
 //! * [`energy`] — the §6 energy model (Tables 1-2, Figure 1), including
 //!   the dynamic MAC census derived from packed codes (`mfmac_census`).
 //! * [`runtime`] — execution backends behind the `SessionBackend`

@@ -17,6 +17,7 @@ fn main() -> Result<()> {
     let args = cli::parse_env()?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "worker" => cmd_worker(&args),
         "eval" => cmd_eval(&args),
         "energy" => cmd_energy(&args),
         "census" => cmd_census(&args),
@@ -54,6 +55,10 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     cfg.kshard = args.u64_flag("kshard", cfg.kshard as u64)? as usize;
     if let Some(v) = args.str_flag("pack") {
         cfg.pack = v.to_string();
+    }
+    if let Some(v) = args.str_flag("remote") {
+        cfg.remotes =
+            v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect();
     }
     if args.flags.contains_key("momentum") {
         cfg.momentum = args.f64_flag("momentum", cfg.momentum as f64)? as f32;
@@ -114,8 +119,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         let path = mftrain::potq::engine_by_name(&cfg.engine, cfg.threads)
             .and_then(|e| e.vector_path().map(|p| format!(", {p} path")))
             .unwrap_or_default();
+        let remote = if cfg.remotes.is_empty() {
+            String::new()
+        } else {
+            format!(" + {} remote", cfg.remotes.len())
+        };
         println!(
-            "[mft] backend: native ({} engine{path}, {} worker{} x {} kshard)",
+            "[mft] backend: native ({} engine{path}, {} worker{} x {} kshard{remote})",
             cfg.engine,
             cfg.workers,
             if cfg.workers == 1 { "" } else { "s" },
@@ -129,6 +139,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         let mut trainer = Trainer::new(&rt, cfg)?;
         run_and_report(&mut trainer)
     }
+}
+
+/// `mft worker` — a remote shard member: serve a socket, build a model
+/// replica from each coordinator's hello frame, compute the step frames'
+/// assigned tiles on the local engine and return per-tile grad frames.
+/// Stateless between connections; kill/restart at any step boundary.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.require("listen")?;
+    let engine = args.str_flag("engine").unwrap_or("auto");
+    let threads = args.u64_flag("threads", 0)? as usize;
+    mftrain::potq::serve_worker(addr, engine, threads)
 }
 
 fn run_and_report(trainer: &mut Trainer) -> Result<()> {
@@ -178,6 +199,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
         cfg.kshard = args.u64_flag("kshard", cfg.kshard as u64)? as usize;
         if let Some(v) = args.str_flag("pack") {
             cfg.pack = v.to_string();
+        }
+        if let Some(v) = args.str_flag("remote") {
+            cfg.remotes =
+                v.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect();
         }
         cfg.validate()?;
         let mut session = NativeSession::from_config(&cfg)?;

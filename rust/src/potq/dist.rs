@@ -1,0 +1,986 @@
+//! Multi-node distributed training: the wire layer between the
+//! [`super::shard::ShardedMlp`] coordinator and remote `mft worker`
+//! socket processes.
+//!
+//! Three frame types share the `MFTPACK` framing discipline (8-byte
+//! magic + version, u64 LE body length, FNV-1a digest sealing the body;
+//! every violation an error, never a panic):
+//!
+//! - **hello** (`MFTHELO\x01`, coordinator → worker, once per
+//!   connection): the model architecture ([`NnConfig`]) plus the kshard
+//!   factor, from which the worker builds its local replica and engine.
+//! - **step** (`MFTSTEP\x01`, coordinator → worker, once per step): the
+//!   per-step mutable state (bias planes, PRC gammas; full FP32 weight
+//!   planes only under the FP32 baseline scheme), the step-persistent
+//!   operand cache as embedded [`PackedOperand`] wire frames (the MF
+//!   scheme never reads FP32 weights in forward/backward — the codes ARE
+//!   the operands), and this worker's assigned microbatch tiles.
+//! - **grad** (`MFTGRAD\x01`, worker → coordinator, one per step frame):
+//!   per-tile [`StepResult`]s — loss (bit-exact), census, RLE-compressed
+//!   gradient planes, probe activations — mirroring what an in-process
+//!   pool worker reports.
+//!
+//! Determinism contract: the wire codec reproduces the coordinator's
+//! exact operand codes, every engine is bit-exact, and the gradient
+//! combine walks tiles in index order — so a remote tile result is the
+//! identical bits the coordinator would have computed itself, and a
+//! seeded run's checkpoint digest is invariant to where tiles ran.
+//!
+//! Failure semantics: any socket error or malformed/corrupt frame drops
+//! that worker from the membership (elastic leave) and its tiles are
+//! recomputed locally within the step — the run completes with the same
+//! digest. Workers are stateless between connections: a restarted
+//! worker can rejoin at any step boundary.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::engine::{engine_by_name, KShardEngine, MacEngine, ENGINE_CHOICES};
+use super::nn::{
+    GemmCensus, LayerGrads, MfMlp, NnConfig, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights,
+};
+use super::quantize::{fnv1a, PackedOperand, Reader};
+use crate::energy::MacCensus;
+use crate::util::rle;
+
+/// Frame magics + version bytes. The 7-byte tag distinguishes the frame
+/// type; byte 7 is the protocol version (mismatch is its own error).
+const HELLO_MAGIC: &[u8; 8] = b"MFTHELO\x01";
+const STEP_MAGIC: &[u8; 8] = b"MFTSTEP\x01";
+const GRAD_MAGIC: &[u8; 8] = b"MFTGRAD\x01";
+
+/// Refuse frames whose length prefix asks for more than this — a corrupt
+/// or hostile header must not drive a giant allocation.
+const MAX_FRAME_BODY: usize = 1 << 30;
+
+/// Per-plane element cap inside a frame (f32 planes, code planes).
+const MAX_PLANE_ELEMS: usize = 1 << 26;
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+/// Append the FNV-1a digest of everything buffered so far — the last 8
+/// body bytes every decoder verifies first.
+fn seal(body: &mut Vec<u8>) {
+    let d = fnv1a(body);
+    body.extend_from_slice(&d.to_le_bytes());
+}
+
+/// Verify the trailing digest and return the payload it covers.
+fn unseal(body: &[u8]) -> Result<&[u8]> {
+    ensure!(body.len() >= 8, "dist wire: frame body too short for its digest");
+    let split = body.len() - 8;
+    let digest = u64::from_le_bytes(body[split..].try_into().expect("8 bytes"));
+    ensure!(digest == fnv1a(&body[..split]), "dist wire: frame digest mismatch");
+    Ok(&body[..split])
+}
+
+/// Write one `magic + len + body` frame and flush it onto the wire.
+fn write_frame(w: &mut impl Write, magic: &[u8; 8], body: &[u8]) -> Result<()> {
+    w.write_all(magic).context("dist wire: frame write")?;
+    w.write_all(&(body.len() as u64).to_le_bytes()).context("dist wire: frame write")?;
+    w.write_all(body).context("dist wire: frame write")?;
+    w.flush().context("dist wire: frame flush")?;
+    Ok(())
+}
+
+/// Read one frame of the expected type. `Ok(None)` on a clean EOF at a
+/// frame boundary (the peer hung up between steps — the elastic-leave
+/// signal); everything else short of a full valid frame is an error.
+fn read_frame_opt(r: &mut impl Read, magic: &[u8; 8]) -> Result<Option<Vec<u8>>> {
+    let mut head = [0u8; 16];
+    let mut got = 0usize;
+    while got < 16 {
+        let n = r.read(&mut head[got..]).context("dist wire: frame header read")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("dist wire: connection closed mid-header ({got}/16 bytes)");
+        }
+        got += n;
+    }
+    ensure!(head[..7] == magic[..7], "dist wire: foreign frame magic");
+    ensure!(
+        head[7] == magic[7],
+        "dist wire: frame version mismatch: got {}, expected {}",
+        head[7],
+        magic[7]
+    );
+    let body_len = u64::from_le_bytes(head[8..16].try_into().expect("8 bytes")) as usize;
+    ensure!(body_len <= MAX_FRAME_BODY, "dist wire: frame body {body_len} bytes over the cap");
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body).context("dist wire: frame body read")?;
+    Ok(Some(body))
+}
+
+// ---------------------------------------------------------------------
+// little-endian body helpers over the shared quantize::Reader cursor
+// ---------------------------------------------------------------------
+
+fn push_u64(b: &mut Vec<u8>, x: u64) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f32(b: &mut Vec<u8>, x: f32) {
+    b.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+fn push_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        push_f32(b, x);
+    }
+}
+
+fn read_f32(r: &mut Reader) -> Result<f32> {
+    Ok(f32::from_bits(r.u32()?))
+}
+
+fn read_f32s(r: &mut Reader, n: usize) -> Result<Vec<f32>> {
+    ensure!(n <= MAX_PLANE_ELEMS, "dist wire: f32 plane of {n} elements over the cap");
+    let bytes = r.take(n.checked_mul(4).ok_or_else(|| anyhow!("dist wire: plane overflows"))?)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4 bytes"))))
+        .collect())
+}
+
+/// RLE-compressed f32 plane: u64 compressed length + the RLE bytes of
+/// the raw little-endian plane. Gradient planes are zero-heavy, which is
+/// where the ratio comes from; the decode is exact (lossless).
+fn push_rle_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    let mut raw = Vec::with_capacity(xs.len() * 4);
+    push_f32s(&mut raw, xs);
+    let comp = rle::compress(&raw);
+    push_u64(b, comp.len() as u64);
+    b.extend_from_slice(&comp);
+}
+
+fn read_rle_f32s(r: &mut Reader, n: usize) -> Result<Vec<f32>> {
+    ensure!(n <= MAX_PLANE_ELEMS, "dist wire: f32 plane of {n} elements over the cap");
+    let comp_len = r.u64()? as usize;
+    let comp = r.take(comp_len)?;
+    let raw = rle::decompress(comp, n * 4)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4 bytes"))))
+        .collect())
+}
+
+fn read_flag(r: &mut Reader, what: &str) -> Result<bool> {
+    match r.u8()? {
+        0 => Ok(false),
+        1 => Ok(true),
+        f => bail!("dist wire: bad {what} flag {f}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// hello frame
+// ---------------------------------------------------------------------
+
+fn encode_hello_body(cfg: &NnConfig, kshard: usize) -> Vec<u8> {
+    let mut b = Vec::new();
+    b.extend_from_slice(&cfg.bits.to_le_bytes());
+    b.push(match cfg.scheme {
+        Scheme::Mf => 0,
+        Scheme::Fp32 => 1,
+    });
+    push_f32(&mut b, cfg.gamma_init);
+    push_f32(&mut b, cfg.grad_gamma);
+    push_f32(&mut b, cfg.momentum);
+    push_f32(&mut b, cfg.weight_decay);
+    push_u64(&mut b, cfg.dims.len() as u64);
+    for &d in &cfg.dims {
+        push_u64(&mut b, d as u64);
+    }
+    push_u64(&mut b, kshard as u64);
+    seal(&mut b);
+    b
+}
+
+/// Decode + validate a hello body. Validation mirrors the `MfMlp::init`
+/// asserts so a hostile hello is an *error* on the worker, not a panic.
+fn decode_hello_body(body: &[u8]) -> Result<(NnConfig, usize)> {
+    let mut r = Reader::new(unseal(body)?);
+    let bits = r.u32()?;
+    ensure!((3..=6).contains(&bits), "hello frame: bit width {bits} out of 3..=6");
+    let scheme = match r.u8()? {
+        0 => Scheme::Mf,
+        1 => Scheme::Fp32,
+        f => bail!("hello frame: bad scheme byte {f}"),
+    };
+    let gamma_init = read_f32(&mut r)?;
+    let grad_gamma = read_f32(&mut r)?;
+    let momentum = read_f32(&mut r)?;
+    let weight_decay = read_f32(&mut r)?;
+    ensure!(gamma_init.is_finite() && gamma_init > 0.0, "hello frame: bad gamma_init");
+    ensure!(grad_gamma.is_finite() && grad_gamma > 0.0, "hello frame: bad grad_gamma");
+    ensure!((0.0..1.0).contains(&momentum), "hello frame: momentum {momentum} out of [0, 1)");
+    ensure!(
+        weight_decay.is_finite() && weight_decay >= 0.0,
+        "hello frame: bad weight_decay"
+    );
+    let ndims = r.u64()? as usize;
+    ensure!((2..=64).contains(&ndims), "hello frame: {ndims} layer dims out of 2..=64");
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        let d = r.u64()? as usize;
+        ensure!((1..=1 << 20).contains(&d), "hello frame: layer dim {d} out of range");
+        dims.push(d);
+    }
+    let kshard = r.u64()? as usize;
+    ensure!((1..=4096).contains(&kshard), "hello frame: kshard {kshard} out of range");
+    ensure!(r.remaining() == 0, "hello frame: {} trailing bytes", r.remaining());
+    let cfg = NnConfig { dims, bits, scheme, gamma_init, grad_gamma, momentum, weight_decay };
+    Ok((cfg, kshard))
+}
+
+// ---------------------------------------------------------------------
+// step frame
+// ---------------------------------------------------------------------
+
+/// Encode one step frame body for a remote member: the step counter, the
+/// per-layer mutable state, the operand cache, and the member's tile
+/// assignment `(tile index, row range)` drawn from the round-robin grid.
+pub(crate) fn encode_step_body(
+    model: &MfMlp,
+    weights: &StepWeights,
+    x: &[f32],
+    y: &[i32],
+    tiles: &[(usize, Range<usize>)],
+    want_grads: bool,
+    want_probe: bool,
+    step: u64,
+) -> Vec<u8> {
+    let d_in = model.cfg.dims[0];
+    let mut b = Vec::new();
+    push_u64(&mut b, step);
+    b.push(want_grads as u8);
+    b.push(want_probe as u8);
+    push_u64(&mut b, model.layers.len() as u64);
+    // the MF scheme reads only b/gamma + the cached code operands in
+    // forward/backward; FP32 weight planes ship only for the FP32
+    // baseline, whose GEMMs consume them directly
+    let ship_w = model.cfg.scheme == Scheme::Fp32;
+    for l in &model.layers {
+        push_f32(&mut b, l.gamma);
+        push_u64(&mut b, l.b.len() as u64);
+        push_f32s(&mut b, &l.b);
+        if ship_w {
+            b.push(1);
+            push_u64(&mut b, l.w.len() as u64);
+            push_rle_f32s(&mut b, &l.w);
+        } else {
+            b.push(0);
+        }
+    }
+    push_u64(&mut b, weights.n_layers() as u64);
+    for li in 0..weights.n_layers() {
+        b.extend_from_slice(&weights.fw(li).to_bytes());
+        b.extend_from_slice(&weights.dx(li).to_bytes());
+    }
+    push_u64(&mut b, tiles.len() as u64);
+    for (t, r) in tiles {
+        push_u64(&mut b, *t as u64);
+        push_u64(&mut b, (r.end - r.start) as u64);
+        for &c in &y[r.start..r.end] {
+            b.extend_from_slice(&c.to_le_bytes());
+        }
+        push_f32s(&mut b, &x[r.start * d_in..r.end * d_in]);
+    }
+    seal(&mut b);
+    b
+}
+
+/// One decoded step frame on the worker side.
+struct StepFrame {
+    step: u64,
+    want_grads: bool,
+    want_probe: bool,
+    /// per layer: (gamma, bias plane, FP32 weight plane when shipped)
+    layers: Vec<(f32, Vec<f32>, Option<Vec<f32>>)>,
+    sw: StepWeights,
+    /// per assigned tile: (tile index, x rows, labels)
+    tiles: Vec<(usize, Vec<f32>, Vec<i32>)>,
+}
+
+/// Decode + validate a step body against the connection's model config.
+/// Every mismatch — layer counts, plane lengths, operand shapes, label
+/// ranges — is an error the server answers by dropping the connection,
+/// which the coordinator treats as elastic leave.
+fn decode_step_body(body: &[u8], cfg: &NnConfig) -> Result<StepFrame> {
+    let mut r = Reader::new(unseal(body)?);
+    let step = r.u64()?;
+    let want_grads = read_flag(&mut r, "want_grads")?;
+    let want_probe = read_flag(&mut r, "want_probe")?;
+    let nl = r.u64()? as usize;
+    ensure!(
+        nl == cfg.dims.len() - 1,
+        "step frame: {nl} layers for a {}-layer model",
+        cfg.dims.len() - 1
+    );
+    let mut layers = Vec::with_capacity(nl);
+    for li in 0..nl {
+        let gamma = read_f32(&mut r)?;
+        let blen = r.u64()? as usize;
+        ensure!(
+            blen == cfg.dims[li + 1],
+            "step frame: layer {li} bias holds {blen} values for fan_out {}",
+            cfg.dims[li + 1]
+        );
+        let bias = read_f32s(&mut r, blen)?;
+        let w = if read_flag(&mut r, "weight")? {
+            let wlen = r.u64()? as usize;
+            let expect = cfg.dims[li] * cfg.dims[li + 1];
+            ensure!(
+                wlen == expect,
+                "step frame: layer {li} weight plane holds {wlen} values for {expect}"
+            );
+            Some(read_rle_f32s(&mut r, wlen)?)
+        } else {
+            None
+        };
+        layers.push((gamma, bias, w));
+    }
+    let nsw = r.u64()? as usize;
+    let expect_sw = if cfg.scheme == Scheme::Mf { nl } else { 0 };
+    ensure!(
+        nsw == expect_sw,
+        "step frame: {nsw} cached operand pairs under the {} scheme (expected {expect_sw})",
+        cfg.scheme.name()
+    );
+    let mut pairs = Vec::with_capacity(nsw);
+    for li in 0..nsw {
+        let (fw, used) = PackedOperand::read_frame(r.rest())?;
+        r.take(used)?;
+        let (dx, used) = PackedOperand::read_frame(r.rest())?;
+        r.take(used)?;
+        let (fi, fo) = (cfg.dims[li], cfg.dims[li + 1]);
+        ensure!(
+            fw.tensor().shape() == [fi, fo] && dx.tensor().shape() == [fo, fi],
+            "step frame: layer {li} operand shapes do not match ({fi}, {fo})"
+        );
+        ensure!(
+            fw.tensor().bits == cfg.bits && dx.tensor().bits == cfg.bits,
+            "step frame: layer {li} operand bit width differs from the model's {}",
+            cfg.bits
+        );
+        pairs.push((fw, dx));
+    }
+    let sw = StepWeights::from_layers(pairs);
+    let nt = r.u64()? as usize;
+    ensure!((1..=4096).contains(&nt), "step frame: {nt} assigned tiles out of range");
+    let d_in = cfg.dims[0];
+    let classes = *cfg.dims.last().expect("ndims >= 2") as i32;
+    let mut tiles = Vec::with_capacity(nt);
+    for _ in 0..nt {
+        let t = r.u64()? as usize;
+        ensure!(t <= 1 << 20, "step frame: tile index {t} out of range");
+        let m = r.u64()? as usize;
+        ensure!((1..=1 << 20).contains(&m), "step frame: tile of {m} rows out of range");
+        ensure!(m <= r.remaining() / 4, "step frame: truncated labels");
+        let mut yv = Vec::with_capacity(m);
+        for _ in 0..m {
+            let c = r.i32()?;
+            ensure!(c >= 0 && c < classes, "step frame: label {c} outside 0..{classes}");
+            yv.push(c);
+        }
+        let xv = read_f32s(
+            &mut r,
+            m.checked_mul(d_in).ok_or_else(|| anyhow!("step frame: tile plane overflows"))?,
+        )?;
+        tiles.push((t, xv, yv));
+    }
+    ensure!(r.remaining() == 0, "step frame: {} trailing bytes", r.remaining());
+    Ok(StepFrame { step, want_grads, want_probe, layers, sw, tiles })
+}
+
+/// Overwrite the replica's step-mutable state with the frame's.
+fn apply_step_frame(replica: &mut MfMlp, f: &StepFrame) {
+    for (l, (gamma, bias, w)) in replica.layers.iter_mut().zip(&f.layers) {
+        l.gamma = *gamma;
+        l.b.copy_from_slice(bias);
+        if let Some(w) = w {
+            l.w.copy_from_slice(w);
+        }
+    }
+    replica.steps = f.step;
+}
+
+// ---------------------------------------------------------------------
+// grad frame
+// ---------------------------------------------------------------------
+
+/// Encode per-tile results into a grad frame body — everything
+/// [`super::shard::ShardedMlp`]'s reduce/combine reads, bit-exact:
+/// f32/f64 scalars travel as raw bit patterns, gradient planes as RLE'd
+/// exact bytes.
+fn encode_grad_body(step: u64, results: &[(usize, StepResult)]) -> Vec<u8> {
+    let mut b = Vec::new();
+    push_u64(&mut b, step);
+    push_u64(&mut b, results.len() as u64);
+    for (t, res) in results {
+        push_u64(&mut b, *t as u64);
+        push_f32(&mut b, res.loss);
+        push_u64(&mut b, res.loss_sum.to_bits());
+        push_u64(&mut b, res.n_correct as u64);
+        push_u64(&mut b, res.census.linear_fp32_muls);
+        push_u64(&mut b, res.census.overhead_fp32_muls);
+        push_u64(&mut b, res.census.combine_exp_adds);
+        push_u64(&mut b, res.census.gemms.len() as u64);
+        for g in &res.census.gemms {
+            push_u64(&mut b, g.label.len() as u64);
+            b.extend_from_slice(g.label.as_bytes());
+            push_u64(&mut b, g.census.total_macs);
+            push_u64(&mut b, g.census.live_macs);
+        }
+        match &res.grads {
+            None => b.push(0),
+            Some(gr) => {
+                b.push(1);
+                push_u64(&mut b, gr.len() as u64);
+                for lg in gr {
+                    push_u64(&mut b, lg.dw.len() as u64);
+                    push_rle_f32s(&mut b, &lg.dw);
+                    push_u64(&mut b, lg.db.len() as u64);
+                    push_f32s(&mut b, &lg.db);
+                    push_f32(&mut b, lg.dgamma);
+                }
+            }
+        }
+        // only the probe's activation block ships: the coordinator
+        // reassembles A from the tiles and already owns W and the
+        // combined G
+        match &res.probe {
+            None => b.push(0),
+            Some(p) => {
+                b.push(1);
+                push_u64(&mut b, p.a.len() as u64);
+                push_f32s(&mut b, &p.a);
+            }
+        }
+    }
+    seal(&mut b);
+    b
+}
+
+/// Decode a grad frame body into `(step, per-tile results)`.
+fn decode_grad_body(body: &[u8]) -> Result<(u64, Vec<(usize, StepResult)>)> {
+    let mut r = Reader::new(unseal(body)?);
+    let step = r.u64()?;
+    let nt = r.u64()? as usize;
+    ensure!(nt <= 4096, "grad frame: {nt} tiles out of range");
+    let mut out = Vec::with_capacity(nt);
+    for _ in 0..nt {
+        let t = r.u64()? as usize;
+        ensure!(t <= 1 << 20, "grad frame: tile index {t} out of range");
+        let loss = read_f32(&mut r)?;
+        let loss_sum = f64::from_bits(r.u64()?);
+        let n_correct = r.u64()? as usize;
+        let linear_fp32_muls = r.u64()?;
+        let overhead_fp32_muls = r.u64()?;
+        let combine_exp_adds = r.u64()?;
+        let ng = r.u64()? as usize;
+        ensure!(ng <= 4096, "grad frame: {ng} gemm censuses out of range");
+        let mut gemms = Vec::with_capacity(ng);
+        for _ in 0..ng {
+            let ll = r.u64()? as usize;
+            ensure!(ll <= 64, "grad frame: gemm label of {ll} bytes out of range");
+            let label = std::str::from_utf8(r.take(ll)?)
+                .map_err(|_| anyhow!("grad frame: gemm label is not utf-8"))?
+                .to_string();
+            let total_macs = r.u64()?;
+            let live_macs = r.u64()?;
+            gemms.push(GemmCensus { label, census: MacCensus { total_macs, live_macs } });
+        }
+        let census =
+            StepCensus { linear_fp32_muls, overhead_fp32_muls, combine_exp_adds, gemms };
+        let grads = if read_flag(&mut r, "grads")? {
+            let nl = r.u64()? as usize;
+            ensure!((1..=64).contains(&nl), "grad frame: {nl} gradient layers out of range");
+            let mut gr = Vec::with_capacity(nl);
+            for _ in 0..nl {
+                let dwl = r.u64()? as usize;
+                let dw = read_rle_f32s(&mut r, dwl)?;
+                let dbl = r.u64()? as usize;
+                let db = read_f32s(&mut r, dbl)?;
+                let dgamma = read_f32(&mut r)?;
+                gr.push(LayerGrads { dw, db, dgamma });
+            }
+            Some(gr)
+        } else {
+            None
+        };
+        let probe = if read_flag(&mut r, "probe")? {
+            let al = r.u64()? as usize;
+            let a = read_f32s(&mut r, al)?;
+            Some(ProbeRaw { w: Vec::new(), a, g: Vec::new() })
+        } else {
+            None
+        };
+        out.push((t, StepResult { loss, loss_sum, n_correct, census, probe, grads }));
+    }
+    ensure!(r.remaining() == 0, "grad frame: {} trailing bytes", r.remaining());
+    Ok((step, out))
+}
+
+// ---------------------------------------------------------------------
+// coordinator client
+// ---------------------------------------------------------------------
+
+/// One connected remote `mft worker` — the coordinator's handle inside
+/// [`super::shard::ShardedMlp`]'s membership. Holds the socket for the
+/// connection's lifetime; dropping it hangs up, which the worker reads
+/// as a clean leave.
+pub struct RemoteWorker {
+    addr: String,
+    stream: TcpStream,
+}
+
+impl RemoteWorker {
+    /// Connect and send the hello frame describing the model replica the
+    /// worker must build.
+    pub fn connect(addr: &str, cfg: &NnConfig, kshard: usize) -> Result<RemoteWorker> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connect to worker {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let mut rw = RemoteWorker { addr: addr.to_string(), stream };
+        let hello = encode_hello_body(cfg, kshard);
+        write_frame(&mut rw.stream, HELLO_MAGIC, &hello)
+            .with_context(|| format!("hello to worker {addr}"))?;
+        Ok(rw)
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Ship one encoded step body ([`encode_step_body`]).
+    pub(crate) fn send_step(&mut self, body: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, STEP_MAGIC, body)
+    }
+
+    /// Block for this step's grad frame. A hangup or any malformed frame
+    /// is an error — the coordinator drops the member and reassigns.
+    pub(crate) fn recv_grads(&mut self, step: u64) -> Result<Vec<(usize, StepResult)>> {
+        let body = read_frame_opt(&mut self.stream, GRAD_MAGIC)?
+            .ok_or_else(|| anyhow!("worker {} closed the connection mid-step", self.addr))?;
+        let (got, results) = decode_grad_body(&body)?;
+        ensure!(
+            got == step,
+            "worker {}: grad frame for step {got}, expected {step}",
+            self.addr
+        );
+        Ok(results)
+    }
+}
+
+// ---------------------------------------------------------------------
+// worker server
+// ---------------------------------------------------------------------
+
+/// The `mft worker` entry point: bind, announce the bound address on
+/// stdout (tests and scripts parse this line), serve forever.
+pub fn serve_worker(addr: &str, engine: &str, threads: usize) -> Result<()> {
+    ensure!(
+        engine_by_name(engine, threads).is_some(),
+        "unknown engine '{engine}' (available: {})",
+        ENGINE_CHOICES.join("|")
+    );
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    println!("[mft] worker listening on {} ({engine} engine)", listener.local_addr()?);
+    std::io::stdout().flush().ok();
+    serve_on(listener, engine, threads)
+}
+
+/// Accept-loop over an already-bound listener (tests bind an ephemeral
+/// port themselves). Each connection is served on its own thread; a
+/// failed connection is logged and the loop keeps accepting — a
+/// restarted coordinator can always come back.
+pub fn serve_on(listener: TcpListener, engine: &str, threads: usize) -> Result<()> {
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let engine = engine.to_string();
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(stream, &engine, threads) {
+                        eprintln!("[mft] worker: connection {peer} failed: {e:#}");
+                    }
+                });
+            }
+            Err(e) => eprintln!("[mft] worker: accept failed: {e}"),
+        }
+    }
+}
+
+/// One coordinator connection: hello → replica + engine, then a step →
+/// grad frame loop until the coordinator hangs up. Any protocol
+/// violation returns an error, closing the connection — the coordinator
+/// side reassigns the step's tiles, so a misbehaving link never corrupts
+/// a run, it only shrinks the membership.
+fn handle_conn(mut stream: TcpStream, engine: &str, threads: usize) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let hello = read_frame_opt(&mut stream, HELLO_MAGIC)?
+        .ok_or_else(|| anyhow!("connection closed before hello"))?;
+    let (cfg, kshard) = decode_hello_body(&hello)?;
+    let eng: Box<dyn MacEngine + Send> = {
+        let inner = engine_by_name(engine, threads)
+            .ok_or_else(|| anyhow!("unknown engine '{engine}'"))?;
+        if kshard > 1 {
+            Box::new(KShardEngine::new(inner, kshard))
+        } else {
+            inner
+        }
+    };
+    // the replica's weight init is placeholder: every step frame
+    // overwrites everything forward/backward reads (bias, gamma, the
+    // cached code operands; FP32 weight planes too under that scheme)
+    let mut replica = MfMlp::init(cfg, 0);
+    while let Some(body) = read_frame_opt(&mut stream, STEP_MAGIC)? {
+        let f = decode_step_body(&body, &replica.cfg)?;
+        apply_step_frame(&mut replica, &f);
+        let mut results = Vec::with_capacity(f.tiles.len());
+        for (t, xv, yv) in &f.tiles {
+            results.push((
+                *t,
+                replica.forward_backward_with(
+                    xv,
+                    yv,
+                    eng.as_ref(),
+                    f.want_grads,
+                    f.want_probe,
+                    Some(&f.sw),
+                ),
+            ));
+        }
+        let grad = encode_grad_body(f.step, &results);
+        write_frame(&mut stream, GRAD_MAGIC, &grad)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potq::shard::{ShardPlan, ShardedMlp};
+    use crate::util::prng::Pcg32;
+
+    fn toy_batch(seed: u64, m: usize, d: usize, classes: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut r = Pcg32::new(seed);
+        let mut x = vec![0f32; m * d];
+        let mut y = vec![0i32; m];
+        for i in 0..m {
+            let c = r.below(classes as u32) as i32;
+            y[i] = c;
+            for j in 0..d {
+                let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+                let centre = (c as f32 - classes as f32 / 2.0) * 0.5 * sign;
+                x[i * d + j] = centre + 0.3 * r.normal();
+            }
+        }
+        (x, y)
+    }
+
+    /// Bind an ephemeral localhost port, serve it on a detached thread,
+    /// return the address to connect to.
+    fn spawn_worker_thread(engine: &'static str) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let _ = serve_on(listener, engine, 1);
+        });
+        addr
+    }
+
+    fn step_results(seed: u64, want_probe: bool) -> Vec<(usize, StepResult)> {
+        // real per-tile results to round-trip, probe included
+        let (x, y) = toy_batch(seed, 8, 12, 4);
+        let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), seed);
+        let sw = model
+            .prepare_step_weights_packed(1, crate::potq::PackMode::Auto)
+            .unwrap();
+        let eng = engine_by_name("scalar", 1).unwrap();
+        (0..2)
+            .map(|t| {
+                let (lo, hi) = (t * 4, (t + 1) * 4);
+                (
+                    t,
+                    model.forward_backward_with(
+                        &x[lo * 12..hi * 12],
+                        &y[lo..hi],
+                        eng.as_ref(),
+                        true,
+                        want_probe,
+                        Some(&sw),
+                    ),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hello_frame_roundtrips_and_validates() {
+        for cfg in [NnConfig::mf(&[12, 16, 4]), NnConfig::fp32(&[8, 6, 3])] {
+            let body = encode_hello_body(&cfg, 3);
+            let (got, kshard) = decode_hello_body(&body).unwrap();
+            assert_eq!(got.dims, cfg.dims);
+            assert_eq!(got.bits, cfg.bits);
+            assert_eq!(got.scheme, cfg.scheme);
+            assert_eq!(got.gamma_init.to_bits(), cfg.gamma_init.to_bits());
+            assert_eq!(got.momentum.to_bits(), cfg.momentum.to_bits());
+            assert_eq!(kshard, 3);
+        }
+        // corruption: digest flip + truncation at every prefix
+        let good = encode_hello_body(&NnConfig::mf(&[12, 16, 4]), 1);
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let err = decode_hello_body(&bad).unwrap_err().to_string();
+        assert!(err.contains("digest"), "{err}");
+        for cut in 0..good.len() {
+            assert!(decode_hello_body(&good[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn step_frame_roundtrips_bit_exactly() {
+        let (x, y) = toy_batch(7, 16, 12, 4);
+        let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 11);
+        let sw = model
+            .prepare_step_weights_packed(2, crate::potq::PackMode::Auto)
+            .unwrap();
+        let tiles = vec![(1usize, 4..8), (3usize, 12..16)];
+        let body = encode_step_body(&model, &sw, &x, &y, &tiles, true, false, 9);
+        let f = decode_step_body(&body, &model.cfg).unwrap();
+        assert_eq!(f.step, 9);
+        assert!(f.want_grads);
+        assert!(!f.want_probe);
+        assert_eq!(f.layers.len(), 2);
+        for (li, (gamma, bias, w)) in f.layers.iter().enumerate() {
+            assert_eq!(gamma.to_bits(), model.layers[li].gamma.to_bits());
+            assert_eq!(bias, &model.layers[li].b);
+            assert!(w.is_none(), "MF ships no FP32 weight planes");
+        }
+        assert_eq!(f.sw.n_layers(), 2);
+        for li in 0..2 {
+            assert_eq!(f.sw.fw(li).tensor(), sw.fw(li).tensor(), "layer {li} fw codes");
+            assert_eq!(f.sw.dx(li).tensor(), sw.dx(li).tensor(), "layer {li} dx codes");
+        }
+        assert_eq!(f.tiles.len(), 2);
+        let (t, xv, yv) = &f.tiles[1];
+        assert_eq!(*t, 3);
+        assert_eq!(yv, &y[12..16]);
+        assert_eq!(xv, &x[12 * 12..16 * 12]);
+        // fp32 scheme ships the weight planes
+        let fp = MfMlp::init(NnConfig::fp32(&[12, 16, 4]), 11);
+        let swf = fp.prepare_step_weights_packed(1, crate::potq::PackMode::Auto).unwrap();
+        let body = encode_step_body(&fp, &swf, &x, &y, &tiles, true, false, 0);
+        let f = decode_step_body(&body, &fp.cfg).unwrap();
+        assert_eq!(f.sw.n_layers(), 0);
+        assert_eq!(f.layers[0].2.as_ref().unwrap(), &fp.layers[0].w);
+    }
+
+    #[test]
+    fn grad_frame_roundtrips_bit_exactly() {
+        for want_probe in [false, true] {
+            let results = step_results(21, want_probe);
+            let body = encode_grad_body(5, &results);
+            let (step, got) = decode_grad_body(&body).unwrap();
+            assert_eq!(step, 5);
+            assert_eq!(got.len(), results.len());
+            for ((t, a), (u, b)) in results.iter().zip(&got) {
+                assert_eq!(t, u);
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+                assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+                assert_eq!(a.n_correct, b.n_correct);
+                assert_eq!(a.census.linear_fp32_muls, b.census.linear_fp32_muls);
+                assert_eq!(a.census.gemms.len(), b.census.gemms.len());
+                for (ga, gb) in a.census.gemms.iter().zip(&b.census.gemms) {
+                    assert_eq!(ga.label, gb.label);
+                    assert_eq!(ga.census, gb.census);
+                }
+                let (gra, grb) = (a.grads.as_ref().unwrap(), b.grads.as_ref().unwrap());
+                assert_eq!(gra.len(), grb.len());
+                for (la, lb) in gra.iter().zip(grb) {
+                    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(bits(&la.dw), bits(&lb.dw));
+                    assert_eq!(bits(&la.db), bits(&lb.db));
+                    assert_eq!(la.dgamma.to_bits(), lb.dgamma.to_bits());
+                }
+                match (&a.probe, &b.probe) {
+                    (None, None) => assert!(!want_probe),
+                    (Some(pa), Some(pb)) => {
+                        assert!(want_probe);
+                        assert_eq!(pa.a, pb.a, "probe activations");
+                        assert!(pb.w.is_empty() && pb.g.is_empty(), "only A ships");
+                    }
+                    _ => panic!("probe presence diverged"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_frame_rejects_corruption() {
+        // mirror of quantize's wire_codec_rejects_corruption for the new
+        // frame: truncation at every prefix, digest flip, header abuse
+        let results = step_results(33, false);
+        let good = encode_grad_body(2, &results);
+        for cut in 0..good.len() {
+            assert!(decode_grad_body(&good[..cut]).is_err(), "cut={cut}");
+        }
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        let err = decode_grad_body(&bad).unwrap_err().to_string();
+        assert!(err.contains("digest"), "{err}");
+        // trailing garbage changes the digest coverage -> error
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_grad_body(&bad).is_err());
+        // a flipped interior byte must never pass the digest
+        let mut bad = good.clone();
+        bad[9] ^= 0x01;
+        assert!(decode_grad_body(&bad).is_err());
+    }
+
+    #[test]
+    fn framing_rejects_bad_magic_version_and_truncation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, GRAD_MAGIC, b"payloadpayload00").unwrap();
+        let mut c = std::io::Cursor::new(buf.clone());
+        let body = read_frame_opt(&mut c, GRAD_MAGIC).unwrap().unwrap();
+        assert_eq!(body, b"payloadpayload00");
+        // clean EOF at a frame boundary is None, not an error
+        assert!(read_frame_opt(&mut c, GRAD_MAGIC).unwrap().is_none());
+        // foreign magic (a step frame where grads are expected)
+        let mut c = std::io::Cursor::new(buf.clone());
+        let err = read_frame_opt(&mut c, STEP_MAGIC).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // version byte
+        let mut bad = buf.clone();
+        bad[7] = 2;
+        let mut c = std::io::Cursor::new(bad);
+        let err = read_frame_opt(&mut c, GRAD_MAGIC).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // mid-header and mid-body truncation are errors, not clean EOFs
+        for cut in [1usize, 8, 15, 17] {
+            let mut c = std::io::Cursor::new(buf[..cut].to_vec());
+            assert!(read_frame_opt(&mut c, GRAD_MAGIC).is_err(), "cut={cut}");
+        }
+        // oversized length prefix refuses the allocation
+        let mut bad = buf.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut c = std::io::Cursor::new(bad);
+        let err = read_frame_opt(&mut c, GRAD_MAGIC).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn remote_workers_match_local_runs_bit_identically() {
+        // the tentpole determinism law over sockets: local-only vs
+        // local + 2 remote members, same seed -> identical state bits
+        let (x, y) = toy_batch(3, 16, 12, 4);
+        let steps = 4;
+        let baseline = {
+            let plan = ShardPlan::new(16, 4, 1).unwrap();
+            let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 7);
+            let mut t = ShardedMlp::new(model, plan, "scalar", 1).unwrap();
+            for _ in 0..steps {
+                t.train_step(&x, &y, 0.1).unwrap();
+            }
+            t.model.state_to_vec()
+        };
+        let plan = ShardPlan::new(16, 4, 1).unwrap().with_kshard(2).unwrap();
+        let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 7);
+        let mut t = ShardedMlp::new(model, plan, "blocked", 1).unwrap();
+        t.add_remote(&spawn_worker_thread("scalar")).unwrap();
+        t.add_remote(&spawn_worker_thread("simd")).unwrap();
+        assert_eq!(t.remote_count(), 2);
+        for _ in 0..steps {
+            t.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert_eq!(t.remote_count(), 2, "healthy remotes stay in the membership");
+        assert_eq!(baseline, t.model.state_to_vec());
+        // eval + probe flow over the sockets too
+        let e = t.eval_batch(&x, &y).unwrap();
+        assert!(e.loss.is_finite());
+        let p = t.probe_step(&x, &y).unwrap();
+        assert_eq!(p.probe.unwrap().a.len(), 16 * 16);
+    }
+
+    #[test]
+    fn elastic_join_between_steps_keeps_the_digest() {
+        let (x, y) = toy_batch(13, 16, 12, 4);
+        let mk = || {
+            let plan = ShardPlan::new(16, 4, 2).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 19), plan, "blocked", 1)
+                .unwrap()
+        };
+        let mut local = mk();
+        let mut elastic = mk();
+        for _ in 0..2 {
+            local.train_step(&x, &y, 0.1).unwrap();
+            elastic.train_step(&x, &y, 0.1).unwrap();
+        }
+        // a worker joins mid-run; the round-robin grid recomputes
+        elastic.add_remote(&spawn_worker_thread("scalar")).unwrap();
+        for _ in 0..2 {
+            local.train_step(&x, &y, 0.1).unwrap();
+            elastic.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert_eq!(local.model.state_to_vec(), elastic.model.state_to_vec());
+    }
+
+    #[test]
+    fn remote_failure_reassigns_tiles_and_drops_the_member() {
+        // a "worker" that accepts the connection then hangs up: the step
+        // must still complete bit-identically, with the member dropped
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            if let Ok((stream, _)) = listener.accept() {
+                drop(stream);
+            }
+        });
+        let (x, y) = toy_batch(23, 16, 12, 4);
+        let mk = || {
+            let plan = ShardPlan::new(16, 4, 2).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 29), plan, "scalar", 1)
+                .unwrap()
+        };
+        let mut local = mk();
+        let mut flaky = mk();
+        flaky.add_remote(&addr).unwrap();
+        for _ in 0..3 {
+            local.train_step(&x, &y, 0.1).unwrap();
+            flaky.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert_eq!(flaky.remote_count(), 0, "dead member left the grid");
+        assert_eq!(local.model.state_to_vec(), flaky.model.state_to_vec());
+    }
+
+    #[test]
+    fn fp32_scheme_trains_over_sockets_too() {
+        // the FP32 baseline ships weight planes instead of code frames
+        let (x, y) = toy_batch(31, 16, 8, 3);
+        let mk = || {
+            let plan = ShardPlan::new(16, 4, 1).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::fp32(&[8, 10, 3]), 37), plan, "scalar", 1)
+                .unwrap()
+        };
+        let mut local = mk();
+        let mut remote = mk();
+        remote.add_remote(&spawn_worker_thread("scalar")).unwrap();
+        for _ in 0..3 {
+            local.train_step(&x, &y, 0.05).unwrap();
+            remote.train_step(&x, &y, 0.05).unwrap();
+        }
+        assert_eq!(local.model.state_to_vec(), remote.model.state_to_vec());
+    }
+}

@@ -18,7 +18,10 @@
 //! multiplication-free training loop (forward/backward MLP whose every
 //! linear-layer GEMM runs on a MacEngine) from those pieces, and
 //! [`shard`] scales that loop out to data-parallel worker threads with a
-//! multiplication-free gradient combine.
+//! multiplication-free gradient combine, which [`dist`] extends across
+//! machines: `mft worker` socket processes join the same round-robin
+//! step grid over digest-sealed wire frames, elastically and
+//! bit-identically.
 //!
 //! K-panel layout invariants (shared by blocked/threaded/simd): a pair's
 //! per-k tile shifts are hoisted into contiguous constant-shift runs
@@ -30,6 +33,7 @@
 //! on an exact integer partial, so every schedule — tiled or untiled,
 //! any engine, any worker count — produces bit-identical results.
 
+pub mod dist;
 pub mod engine;
 mod mfmac;
 pub mod nn;
@@ -37,6 +41,7 @@ mod quantize;
 pub mod shard;
 pub mod simd;
 
+pub use dist::{serve_worker, RemoteWorker};
 pub use engine::{
     engine_by_name, finish_kslabs, kshard_cuts, kslab_bounds, BlockedEngine, KShardEngine,
     MacEngine, SaturationReport, ScalarEngine, ThreadedEngine, ENGINE_CHOICES, ENGINE_NAMES,

@@ -269,6 +269,19 @@ pub struct StepWeights {
 }
 
 impl StepWeights {
+    /// Assemble a cache from per-layer (fw, dx) operand pairs — the
+    /// remote-worker path, which receives the operands as wire frames
+    /// instead of quantizing locally. Bit-identical by construction: the
+    /// wire codec reproduces the exact codes the coordinator packed.
+    pub fn from_layers(layers: Vec<(PackedOperand, PackedOperand)>) -> StepWeights {
+        StepWeights { layers }
+    }
+
+    /// Number of cached layers (0 for non-MF schemes).
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
     /// The cached forward operand of layer `l`.
     pub fn fw(&self, l: usize) -> &PackedOperand {
         &self.layers[l].0

@@ -752,8 +752,24 @@ impl PackedOperand {
     /// Rebuild from [`PackedOperand::to_bytes`] output. Every violation —
     /// foreign magic, version mismatch, wrong length prefix, truncation,
     /// corrupt RLE stream, digest mismatch, out-of-range header fields or
-    /// codes — is an error, never a panic.
+    /// codes — is an error, never a panic. Strict: the stream must hold
+    /// exactly one frame with no trailing bytes.
     pub fn from_bytes(bytes: &[u8]) -> Result<PackedOperand> {
+        let (op, used) = Self::read_frame(bytes)?;
+        ensure!(
+            used == bytes.len(),
+            "pack wire: length prefix says {} body bytes, stream carries {}",
+            used - 16,
+            bytes.len() - 16
+        );
+        Ok(op)
+    }
+
+    /// Read one frame off the front of `bytes`, tolerating trailing bytes
+    /// (the multi-frame socket-buffer case), and return the operand plus
+    /// the number of bytes consumed. Same validation as [`from_bytes`]
+    /// minus the exact-length check.
+    pub fn read_frame(bytes: &[u8]) -> Result<(PackedOperand, usize)> {
         ensure!(bytes.len() >= PACK_MAGIC.len() + 8, "pack wire: truncated header");
         ensure!(bytes[..7] == PACK_MAGIC[..7], "not a pack wire stream");
         ensure!(
@@ -765,11 +781,11 @@ impl PackedOperand {
         let body_len =
             u64::from_le_bytes(bytes[8..16].try_into().expect("8 bytes")) as usize;
         ensure!(
-            bytes.len() == 16 + body_len,
+            bytes.len() >= 16 + body_len,
             "pack wire: length prefix says {body_len} body bytes, stream carries {}",
             bytes.len() - 16
         );
-        let mut r = Reader { buf: &bytes[16..], pos: 0 };
+        let mut r = Reader::new(&bytes[16..16 + body_len]);
         let bits = r.u32()?;
         ensure!((3..=6).contains(&bits), "pack wire: bit width {bits} out of 3..=6");
         let beta = r.i32()?;
@@ -846,7 +862,8 @@ impl PackedOperand {
         if let Some(ts) = tiles {
             tensor = tensor.with_tile_scales(ts);
         }
-        PackedOperand::new_packed(tensor, &cuts, pack)
+        let op = PackedOperand::new_packed(tensor, &cuts, pack)?;
+        Ok((op, 16 + body_len))
     }
 }
 
@@ -854,7 +871,7 @@ impl PackedOperand {
 const PACK_MAGIC: &[u8; 8] = b"MFTPACK\x01";
 
 /// FNV-1a over a byte stream: the wire format's code-plane digest stamp.
-fn fnv1a(data: &[u8]) -> u64 {
+pub(crate) fn fnv1a(data: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in data {
         h ^= b as u64;
@@ -864,37 +881,48 @@ fn fnv1a(data: &[u8]) -> u64 {
 }
 
 /// Bounds-checked little-endian cursor over a wire body — every read is
-/// an error past the end, never a panic.
-struct Reader<'a> {
+/// an error past the end, never a panic. Shared by the `MFTPACK` codec
+/// and the multi-node step/grad frames in `potq::dist`.
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn remaining(&self) -> usize {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    /// The unconsumed tail, without advancing — lets an embedded frame
+    /// parser (e.g. [`PackedOperand::read_frame`]) report its own length.
+    pub(crate) fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         ensure!(n <= self.remaining(), "pack wire: truncated stream");
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn i32(&mut self) -> Result<i32> {
+    pub(crate) fn i32(&mut self) -> Result<i32> {
         Ok(i32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 }
@@ -2002,5 +2030,32 @@ mod tests {
         let mut bad = good.clone();
         bad[16] = 9; // bits field
         assert!(PackedOperand::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn read_frame_accepts_trailing_bytes() {
+        // a socket buffer holds frames back to back: read_frame peels one
+        // off and reports the consumed length; from_bytes stays strict
+        let ta = PotTensor::quantize_2d(&[0.5f32; 40], 8, 5, 5, None);
+        let tb = PotTensor::quantize_2d(&[-0.25f32; 24], 6, 4, 4, None);
+        let pa = PackedOperand::new_packed(ta, &[4], PackMode::Nibble).unwrap();
+        let pb = PackedOperand::new_packed(tb, &[], PackMode::Byte).unwrap();
+        let (wa, wb) = (pa.to_bytes(), pb.to_bytes());
+        let mut buf = wa.clone();
+        buf.extend_from_slice(&wb);
+        let (qa, used) = PackedOperand::read_frame(&buf).unwrap();
+        assert_eq!(used, wa.len());
+        assert_eq!(qa.tensor(), pa.tensor());
+        let (qb, used_b) = PackedOperand::read_frame(&buf[used..]).unwrap();
+        assert_eq!(used_b, wb.len());
+        assert_eq!(qb.tensor(), pb.tensor());
+        assert_eq!(used + used_b, buf.len());
+        // strict decode rejects the concatenation outright
+        let err = PackedOperand::from_bytes(&buf).unwrap_err().to_string();
+        assert!(err.contains("length prefix"), "{err}");
+        // read_frame still validates everything inside its own frame
+        for cut in 0..wa.len() {
+            assert!(PackedOperand::read_frame(&wa[..cut]).is_err(), "cut={cut}");
+        }
     }
 }

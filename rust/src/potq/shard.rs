@@ -30,6 +30,14 @@
 //! `--workers N --kshard K` — the property the sharded train_smoke pins
 //! (`--engine simd --workers 2 --kshard 2` == `--engine scalar
 //! --workers 1 --kshard 1`, digest-level).
+//!
+//! Multi-node: [`ShardedMlp::add_remote`] grows the same round-robin
+//! membership with remote `mft worker` socket processes (the wire layer
+//! lives in [`super::dist`]). Membership is *elastic* — remotes join
+//! between steps and are dropped on any socket/frame error, with their
+//! tiles recomputed in-thread within the step — and because tile
+//! granularity is a plan property and every engine is bit-exact, the
+//! digest is identical for any membership history, failures included.
 
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -37,8 +45,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use super::dist::{encode_step_body, RemoteWorker};
 use super::engine::{engine_by_name, KShardEngine, MacEngine};
 use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights};
 use super::quantize::{pot_emax, scale_pow2, PackMode, NIBBLE_EMAX_MAX};
@@ -138,6 +147,11 @@ struct StepJob {
     x: Vec<f32>,
     y: Vec<i32>,
     plan: ShardPlan,
+    /// round-robin stride = total step membership (pool threads + remote
+    /// socket workers); pool worker `wid` computes tiles `wid, wid +
+    /// stride, ...`, so remote members slot into the same deterministic
+    /// grid without the pool knowing about them
+    stride: usize,
     want_grads: bool,
     want_probe: bool,
 }
@@ -155,9 +169,38 @@ enum Job {
 /// are digest-identical to it.
 struct WorkerPool {
     txs: Vec<Sender<Job>>,
-    rx: Receiver<Vec<(usize, StepResult)>>,
+    rx: Receiver<(usize, Vec<(usize, StepResult)>)>,
     handles: Vec<JoinHandle<()>>,
 }
+
+/// Named error of one pooled step dispatch: which workers died (send
+/// failed, thread finished without reporting, or the result channel
+/// disconnected) plus every tile result that *did* arrive — the
+/// coordinator recomputes the missing tiles on surviving capacity, which
+/// is what keeps a seeded run bit-identical through worker deaths.
+///
+/// Benign race: a worker that queued its results and then exited can be
+/// listed dead with no missing tiles; reassignment is then a no-op.
+#[derive(Debug)]
+pub struct StepFailure {
+    /// pool worker ids that never reported this step
+    pub dead: Vec<usize>,
+    /// per-tile results that did arrive, in receipt order
+    pub completed: Vec<(usize, StepResult)>,
+}
+
+impl std::fmt::Display for StepFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard pool worker(s) {:?} died mid-step ({} tile(s) completed)",
+            self.dead,
+            self.completed.len()
+        )
+    }
+}
+
+impl std::error::Error for StepFailure {}
 
 impl WorkerPool {
     fn new(workers: usize, engine: &str, threads: usize, kshard: usize) -> WorkerPool {
@@ -172,7 +215,7 @@ impl WorkerPool {
                 let eng = build_engine(&engine, threads, kshard);
                 while let Ok(Job::Step(job)) = job_rx.recv() {
                     let d_in = job.model.cfg.dims[0];
-                    let stride = job.plan.effective_workers();
+                    let stride = job.stride;
                     let mut mine = Vec::new();
                     let mut t = wid;
                     while t < job.plan.n_tiles {
@@ -194,7 +237,7 @@ impl WorkerPool {
                     // release the model/weights before reporting, so the
                     // master's Arc::get_mut succeeds right after collect
                     drop(job);
-                    if res_tx.send(mine).is_err() {
+                    if res_tx.send((wid, mine)).is_err() {
                         break;
                     }
                 }
@@ -204,40 +247,78 @@ impl WorkerPool {
         WorkerPool { txs, rx, handles }
     }
 
-    /// Dispatch one step to every worker and collect all tiles, indexed
-    /// by tile (deterministic regardless of completion order). A worker
-    /// that panics mid-step can never report, and its siblings keep the
-    /// result channel open — so collection polls worker liveness instead
-    /// of blocking forever, propagating the death like the scoped
-    /// implementation's `join().expect` did.
-    fn run(&self, job: Arc<StepJob>) -> Vec<StepResult> {
-        let n_tiles = job.plan.n_tiles;
-        for tx in &self.txs {
-            tx.send(Job::Step(job.clone())).expect("pool worker alive");
+    /// Dispatch one step to every worker and collect the per-tile results
+    /// (deterministic regardless of completion order). A worker that
+    /// panics mid-step can never report, and its siblings keep the result
+    /// channel open — so collection polls worker liveness instead of
+    /// blocking forever. Worker death is a [`StepFailure`] *error* (never
+    /// a panic) carrying everything that did complete, so the caller can
+    /// reassign the missing tiles.
+    fn run(&self, job: Arc<StepJob>) -> std::result::Result<Vec<(usize, StepResult)>, StepFailure> {
+        let workers = self.txs.len();
+        let mut dead: Vec<usize> = Vec::new();
+        // reported[wid]: result received, or wid already counted dead
+        let mut reported = vec![false; workers];
+        for (wid, tx) in self.txs.iter().enumerate() {
+            if tx.send(Job::Step(job.clone())).is_err() {
+                dead.push(wid);
+                reported[wid] = true;
+            }
         }
         drop(job);
-        let mut out: Vec<Option<StepResult>> = (0..n_tiles).map(|_| None).collect();
-        let mut pending = self.txs.len();
+        let mut completed: Vec<(usize, StepResult)> = Vec::new();
+        let mut pending = reported.iter().filter(|&&r| !r).count();
         while pending > 0 {
             match self.rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(batch) => {
-                    for (t, res) in batch {
-                        out[t] = Some(res);
+                Ok((wid, batch)) => {
+                    completed.extend(batch);
+                    if !reported[wid] {
+                        reported[wid] = true;
+                        pending -= 1;
                     }
-                    pending -= 1;
+                    // check liveness on every receipt, not only on
+                    // timeout: a worker that dies after its siblings
+                    // report would otherwise be detected one 50 ms poll
+                    // late
+                    pending -= Self::sweep_dead(&self.handles, &mut reported, &mut dead);
                 }
                 Err(RecvTimeoutError::Timeout) => {
-                    assert!(
-                        !self.handles.iter().any(|h| h.is_finished()),
-                        "shard pool worker died mid-step (panicked)"
-                    );
+                    pending -= Self::sweep_dead(&self.handles, &mut reported, &mut dead);
                 }
                 Err(RecvTimeoutError::Disconnected) => {
-                    panic!("shard pool workers disconnected mid-step");
+                    for (wid, r) in reported.iter_mut().enumerate() {
+                        if !*r {
+                            *r = true;
+                            dead.push(wid);
+                        }
+                    }
+                    break;
                 }
             }
         }
-        out.into_iter().map(|o| o.expect("every tile computed")).collect()
+        if dead.is_empty() {
+            Ok(completed)
+        } else {
+            Err(StepFailure { dead, completed })
+        }
+    }
+
+    /// Mark every unreported-but-finished worker dead; returns how many
+    /// pending slots that closed.
+    fn sweep_dead(
+        handles: &[JoinHandle<()>],
+        reported: &mut [bool],
+        dead: &mut Vec<usize>,
+    ) -> usize {
+        let mut closed = 0;
+        for (wid, h) in handles.iter().enumerate() {
+            if !reported[wid] && h.is_finished() {
+                reported[wid] = true;
+                dead.push(wid);
+                closed += 1;
+            }
+        }
+        closed
     }
 }
 
@@ -266,6 +347,7 @@ pub struct ShardedMlp {
     pub model: Arc<MfMlp>,
     pub plan: ShardPlan,
     engine: String,
+    threads: usize,
     /// physical layout of the step operand cache's code planes
     /// ([`PackMode::Auto`] by default: nibble storage whenever the bit
     /// width fits). Pure layout — the decode reproduces the exact byte
@@ -273,8 +355,12 @@ pub struct ShardedMlp {
     pack: PackMode,
     /// long-lived worker pool; `None` when one worker runs in-thread
     pool: Option<WorkerPool>,
-    /// the in-thread engine (single-worker path), built once
+    /// the in-thread engine (single-worker path + tile reassignment
+    /// fallback), built once
     solo: Box<dyn MacEngine + Send>,
+    /// remote socket workers (`mft worker` processes), elastic members of
+    /// the round-robin step grid after the local threads
+    remotes: Vec<RemoteWorker>,
 }
 
 impl ShardedMlp {
@@ -297,10 +383,28 @@ impl ShardedMlp {
             model: Arc::new(model),
             plan,
             engine: engine.to_string(),
+            threads,
             pack: PackMode::Auto,
             pool,
             solo,
+            remotes: Vec::new(),
         })
+    }
+
+    /// Connect a remote socket worker (an `mft worker` process) and add
+    /// it to the step membership. Elastic join: takes effect from the
+    /// next step, with the round-robin plan recomputed over the new
+    /// member count — digests are unchanged because tile granularity is a
+    /// plan property and the combine walks tiles in index order.
+    pub fn add_remote(&mut self, addr: &str) -> Result<()> {
+        let r = RemoteWorker::connect(addr, &self.model.cfg, self.plan.kshard)?;
+        self.remotes.push(r);
+        Ok(())
+    }
+
+    /// Remote socket workers currently in the membership.
+    pub fn remote_count(&self) -> usize {
+        self.remotes.len()
     }
 
     /// Choose the operand cache's physical code layout (`--pack`).
@@ -341,10 +445,10 @@ impl ShardedMlp {
     }
 
     /// One data-parallel SGD step over the global batch.
-    pub fn train_step(&mut self, x: &[f32], y: &[i32], lr: f32) -> StepResult {
-        let tiles = self.run_tiles(x, y, true, false);
+    pub fn train_step(&mut self, x: &[f32], y: &[i32], lr: f32) -> Result<StepResult> {
+        let tiles = self.run_tiles(x, y, true, false)?;
         let (mut census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
-        let grads = self.combine_grads(&tiles, &mut census);
+        let grads = self.combine_grads(&tiles, &mut census)?;
         let loss = (loss_sum / self.plan.batch as f64) as f32;
         let scheme = self.model.cfg.scheme;
         let model = self.model_mut();
@@ -358,68 +462,102 @@ impl ShardedMlp {
                 "FP32 multiplies leaked into the sharded step"
             );
         }
-        StepResult { loss, loss_sum, n_correct, census, probe: None, grads: Some(grads) }
+        Ok(StepResult { loss, loss_sum, n_correct, census, probe: None, grads: Some(grads) })
     }
 
     /// Loss/accuracy over the global batch (tiles evaluated in parallel,
     /// reduced in fixed tile order — deterministic for any worker count).
-    pub fn eval_batch(&mut self, x: &[f32], y: &[i32]) -> StepResult {
-        let tiles = self.run_tiles(x, y, false, false);
+    pub fn eval_batch(&mut self, x: &[f32], y: &[i32]) -> Result<StepResult> {
+        let tiles = self.run_tiles(x, y, false, false)?;
         let (census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
         let loss = (loss_sum / self.plan.batch as f64) as f32;
-        StepResult { loss, loss_sum, n_correct, census, probe: None, grads: None }
+        Ok(StepResult { loss, loss_sum, n_correct, census, probe: None, grads: None })
     }
 
     /// Forward + backward without an update, capturing [W | A | G] of the
     /// first layer: A reassembled from the tiles in order, G the combined
     /// (averaged) weight gradient — what the optimizer would have seen.
-    pub fn probe_step(&mut self, x: &[f32], y: &[i32]) -> StepResult {
-        let tiles = self.run_tiles(x, y, true, true);
+    pub fn probe_step(&mut self, x: &[f32], y: &[i32]) -> Result<StepResult> {
+        let tiles = self.run_tiles(x, y, true, true)?;
         let (mut census, loss_sum, n_correct) = Self::reduce_scalars(&tiles);
-        let grads = self.combine_grads(&tiles, &mut census);
+        let grads = self.combine_grads(&tiles, &mut census)?;
         let loss = (loss_sum / self.plan.batch as f64) as f32;
         let mut a = Vec::with_capacity(self.plan.batch * self.model.cfg.dims[1]);
         for t in &tiles {
-            a.extend_from_slice(&t.probe.as_ref().expect("tile probe captured").a);
+            let p = t.probe.as_ref().ok_or_else(|| anyhow!("tile probe not captured"))?;
+            a.extend_from_slice(&p.a);
         }
         let probe = ProbeRaw {
             w: self.model.layers[0].w.clone(),
             a,
             g: grads[0].dw.clone(),
         };
-        StepResult { loss, loss_sum, n_correct, census, probe: Some(probe), grads: Some(grads) }
+        Ok(StepResult { loss, loss_sum, n_correct, census, probe: Some(probe), grads: Some(grads) })
     }
 
     /// Run one forward(/backward) pass per tile, distributed round-robin
-    /// over the persistent pool; returns per-tile results indexed by
-    /// tile. Builds the step's operand cache exactly once, whichever path
-    /// executes the tiles.
+    /// over the membership (local pool threads first, then remote socket
+    /// workers); returns per-tile results indexed by tile. Builds the
+    /// step's operand cache exactly once, whichever members execute the
+    /// tiles.
+    ///
+    /// Failure semantics: a member that dies mid-step (pool thread panic,
+    /// socket error, malformed or corrupt frame) is dropped from the
+    /// membership and its tiles are recomputed on the in-thread engine —
+    /// all engines are bit-exact and the combine walks tiles in index
+    /// order, so the step's result (and the run's digest) is unchanged.
     fn run_tiles(
-        &self,
+        &mut self,
         x: &[f32],
         y: &[i32],
         want_grads: bool,
         want_probe: bool,
-    ) -> Vec<StepResult> {
+    ) -> Result<Vec<StepResult>> {
         let plan = self.plan;
         let d_in = self.model.cfg.dims[0];
         assert_eq!(y.len(), plan.batch, "batch size does not match the shard plan");
         assert_eq!(x.len(), plan.batch * d_in, "x does not match (batch, d_in)");
         // the step-persistent operand cache: weights quantized + k-panel
         // packed once (nibble-packed under the configured layout),
-        // consumed by every tile on every worker
-        let weights = Arc::new(
-            self.model
-                .prepare_step_weights_packed(plan.kshard, self.pack)
-                .expect("pack mode validated against the code width by with_pack"),
-        );
-        match &self.pool {
+        // consumed by every tile on every member
+        let weights = Arc::new(self.model.prepare_step_weights_packed(plan.kshard, self.pack)?);
+        let locals = if self.pool.is_some() { plan.effective_workers() } else { 1 };
+        let stride = locals + self.remotes.len();
+        let mut slots: Vec<Option<StepResult>> = (0..plan.n_tiles).map(|_| None).collect();
+
+        // (1) ship step frames to the remote members (members
+        // locals..locals+R of the round-robin grid) before computing
+        // locally, so the sockets overlap with local work
+        let step = self.model.steps;
+        let mut failed = vec![false; self.remotes.len()];
+        let mut assigned: Vec<Vec<usize>> = Vec::with_capacity(self.remotes.len());
+        for ri in 0..self.remotes.len() {
+            let tiles: Vec<(usize, Range<usize>)> = ((locals + ri)..plan.n_tiles)
+                .step_by(stride)
+                .map(|t| (t, plan.tile_range(t)))
+                .collect();
+            if tiles.is_empty() {
+                assigned.push(Vec::new());
+                continue;
+            }
+            let body =
+                encode_step_body(&self.model, &weights, x, y, &tiles, want_grads, want_probe, step);
+            if let Err(e) = self.remotes[ri].send_step(&body) {
+                eprintln!(
+                    "[mft] remote worker {} dropped at step {step}: {e:#}",
+                    self.remotes[ri].addr()
+                );
+                failed[ri] = true;
+            }
+            assigned.push(tiles.into_iter().map(|(t, _)| t).collect());
+        }
+
+        // (2) local tiles: members 0..locals
+        match self.pool.take() {
             None => {
-                // in-thread path: same tiles, same order-independent math
-                let mut out = Vec::with_capacity(plan.n_tiles);
-                for t in 0..plan.n_tiles {
+                for t in (0..plan.n_tiles).step_by(stride) {
                     let r = plan.tile_range(t);
-                    out.push(self.model.forward_backward_with(
+                    slots[t] = Some(self.model.forward_backward_with(
                         &x[r.start * d_in..r.end * d_in],
                         &y[r],
                         self.solo.as_ref(),
@@ -428,18 +566,98 @@ impl ShardedMlp {
                         Some(&*weights),
                     ));
                 }
-                out
             }
-            Some(pool) => pool.run(Arc::new(StepJob {
-                model: self.model.clone(),
-                weights,
-                x: x.to_vec(),
-                y: y.to_vec(),
-                plan,
-                want_grads,
-                want_probe,
-            })),
+            Some(pool) => {
+                let job = Arc::new(StepJob {
+                    model: self.model.clone(),
+                    weights: weights.clone(),
+                    x: x.to_vec(),
+                    y: y.to_vec(),
+                    plan,
+                    stride,
+                    want_grads,
+                    want_probe,
+                });
+                match pool.run(job) {
+                    Ok(results) => {
+                        for (t, res) in results {
+                            slots[t] = Some(res);
+                        }
+                        self.pool = Some(pool);
+                    }
+                    Err(f) => {
+                        // keep what completed, retire the wounded pool
+                        // (its Drop joins the survivors) and rebuild at
+                        // full local width for later steps; the missing
+                        // tiles fall through to reassignment below
+                        eprintln!("[mft] {f}; reassigning tiles");
+                        for (t, res) in f.completed {
+                            slots[t] = Some(res);
+                        }
+                        drop(pool);
+                        self.pool =
+                            Some(WorkerPool::new(locals, &self.engine, self.threads, plan.kshard));
+                    }
+                }
+            }
         }
+
+        // (3) collect remote grad frames in member order
+        for (ri, remote) in self.remotes.iter_mut().enumerate() {
+            if failed[ri] || assigned[ri].is_empty() {
+                continue;
+            }
+            match remote.recv_grads(step) {
+                Ok(results) => {
+                    for (t, res) in results {
+                        if assigned[ri].contains(&t) && slots[t].is_none() {
+                            slots[t] = Some(res);
+                        } else {
+                            eprintln!(
+                                "[mft] remote worker {} returned unassigned tile {t}; dropping it",
+                                remote.addr()
+                            );
+                            failed[ri] = true;
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[mft] remote worker {} failed at step {step}: {e:#}; \
+                         reassigning its tiles",
+                        remote.addr()
+                    );
+                    failed[ri] = true;
+                }
+            }
+        }
+
+        // (4) elastic leave: drop failed members from the next step's grid
+        if failed.iter().any(|&f| f) {
+            let mut it = failed.iter();
+            self.remotes.retain(|_| !*it.next().unwrap());
+        }
+
+        // (5) in-step tile reassignment: recompute anything still missing
+        // on the in-thread engine — bit-identical because every engine is
+        for t in 0..plan.n_tiles {
+            if slots[t].is_none() {
+                let r = plan.tile_range(t);
+                slots[t] = Some(self.model.forward_backward_with(
+                    &x[r.start * d_in..r.end * d_in],
+                    &y[r],
+                    self.solo.as_ref(),
+                    want_grads,
+                    want_probe,
+                    Some(&*weights),
+                ));
+            }
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(t, o)| o.ok_or_else(|| anyhow!("tile {t} missing after reassignment")))
+            .collect()
     }
 
     /// Merge per-tile scalar results and censuses in fixed tile order.
@@ -460,7 +678,11 @@ impl ShardedMlp {
     /// PoT-snapped 1/n_tiles coefficient by exponent add. Each tile's
     /// backward already carries the 1/tile loss scale, so the result is
     /// the exact 1/batch-scaled global gradient.
-    fn combine_grads(&self, tiles: &[StepResult], census: &mut StepCensus) -> Vec<LayerGrads> {
+    fn combine_grads(
+        &self,
+        tiles: &[StepResult],
+        census: &mut StepCensus,
+    ) -> Result<Vec<LayerGrads>> {
         let avg_e = -(self.plan.n_tiles.trailing_zeros() as i32);
         let mut combined: Vec<LayerGrads> = self
             .model
@@ -473,7 +695,8 @@ impl ShardedMlp {
             })
             .collect();
         for t in tiles {
-            let grads = t.grads.as_ref().expect("tile gradients requested");
+            let grads =
+                t.grads.as_ref().ok_or_else(|| anyhow!("tile result carries no gradients"))?;
             for (acc, g) in combined.iter_mut().zip(grads) {
                 for (a, &v) in acc.dw.iter_mut().zip(&g.dw) {
                     *a += v;
@@ -494,7 +717,7 @@ impl ShardedMlp {
             acc.dgamma = scale_pow2(acc.dgamma, avg_e);
             census.combine_exp_adds += (acc.dw.len() + acc.db.len() + 1) as u64;
         }
-        combined
+        Ok(combined)
     }
 }
 
@@ -562,7 +785,7 @@ mod tests {
             let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 17);
             let mut t = ShardedMlp::new(model, plan, "blocked", 1).unwrap();
             for _ in 0..5 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             states.push(t.model.state_to_vec());
         }
@@ -581,7 +804,7 @@ mod tests {
             let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 23);
             let mut t = ShardedMlp::new(model, plan, "scalar", 1).unwrap();
             for _ in 0..4 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             t.model.state_to_vec()
         };
@@ -590,7 +813,7 @@ mod tests {
             let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 23);
             let mut t = ShardedMlp::new(model, plan, engine, 1).unwrap();
             for _ in 0..4 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             assert_eq!(baseline, t.model.state_to_vec(), "{engine} W=2 K=2");
         }
@@ -612,7 +835,7 @@ mod tests {
                 .unwrap();
             assert_eq!(t.pack_mode(), pack);
             for _ in 0..4 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             states.push(t.model.state_to_vec());
         }
@@ -631,7 +854,7 @@ mod tests {
             .unwrap()
             .with_pack(PackMode::Auto)
             .unwrap();
-        t.train_step(&x, &y, 0.1); // byte fallback trains fine
+        t.train_step(&x, &y, 0.1).unwrap(); // byte fallback trains fine
     }
 
     #[test]
@@ -646,15 +869,15 @@ mod tests {
         };
         let mut a = mk(4);
         for _ in 0..3 {
-            a.train_step(&x, &y, 0.1);
+            a.train_step(&x, &y, 0.1).unwrap();
         }
         let snap = a.model.state_to_vec();
         // restore into a pool of a different size mid-life
         let mut b = mk(2);
         b.state_from_vec(&snap).unwrap();
         for _ in 0..3 {
-            a.train_step(&x, &y, 0.1);
-            b.train_step(&x, &y, 0.1);
+            a.train_step(&x, &y, 0.1).unwrap();
+            b.train_step(&x, &y, 0.1).unwrap();
         }
         assert_eq!(a.model.state_to_vec(), b.model.state_to_vec());
         assert_eq!(a.model.steps, 6);
@@ -671,7 +894,7 @@ mod tests {
         for workers in [1usize, 3, 4] {
             let mut t = sharded(7, workers, "blocked");
             for _ in 0..6 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             states.push(t.model.state_to_vec());
             losses.push(t.model.last_loss.to_bits());
@@ -690,7 +913,7 @@ mod tests {
         for engine in crate::potq::ENGINE_NAMES {
             let mut t = sharded(9, 4, engine);
             for _ in 0..4 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             states.push(t.model.state_to_vec());
         }
@@ -703,7 +926,7 @@ mod tests {
     fn sharded_training_learns_and_stays_multiplication_free() {
         let (x, y) = toy_batch(11, 16, 12, 4);
         let mut t = sharded(1, 4, "blocked");
-        let first = t.train_step(&x, &y, 0.1);
+        let first = t.train_step(&x, &y, 0.1).unwrap();
         assert_eq!(first.census.linear_fp32_muls, 0);
         // one merged row per logical GEMM (3 per layer), not per tile
         assert_eq!(first.census.gemms.len(), 3 * t.model.layers.len());
@@ -712,7 +935,7 @@ mod tests {
         let dense: u64 = 3 * (16 * 12 * 16 + 16 * 16 * 4) as u64;
         assert_eq!(first.census.total_macs(), dense, "tiles cover the dense MACs");
         for _ in 0..60 {
-            t.train_step(&x, &y, 0.1);
+            t.train_step(&x, &y, 0.1).unwrap();
         }
         assert!(t.model.last_loss.is_finite());
         assert!(
@@ -725,16 +948,75 @@ mod tests {
     }
 
     #[test]
+    fn worker_pool_run_surfaces_death_as_step_failure() {
+        // a dead pool worker is a named StepFailure error carrying the
+        // completed tiles — never a panic (the reassignment prerequisite)
+        let pool = WorkerPool::new(2, "scalar", 1, 1);
+        pool.txs[1].send(Job::Quit).unwrap();
+        while !pool.handles[1].is_finished() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let (x, y) = toy_batch(1, 8, 12, 4);
+        let model = Arc::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 3));
+        let weights = Arc::new(model.prepare_step_weights_packed(1, PackMode::Auto).unwrap());
+        let plan = ShardPlan::new(8, 4, 2).unwrap();
+        let job = Arc::new(StepJob {
+            model,
+            weights,
+            x,
+            y,
+            plan,
+            stride: 2,
+            want_grads: true,
+            want_probe: false,
+        });
+        let err = pool.run(job).unwrap_err();
+        assert_eq!(err.dead, vec![1]);
+        let got: Vec<usize> = err.completed.iter().map(|(t, _)| *t).collect();
+        assert_eq!(got, vec![0], "worker 0's tile still arrives");
+        let msg = err.to_string();
+        assert!(msg.contains("died mid-step"), "{msg}");
+    }
+
+    #[test]
+    fn pool_worker_death_reassigns_tiles_bit_identically() {
+        // kill one pool worker between steps: the coordinator surfaces
+        // the StepFailure, recomputes the missing tiles in-thread,
+        // rebuilds the pool, and the run stays bit-identical to a
+        // healthy one — the in-step reassignment determinism law
+        let (x, y) = toy_batch(43, 16, 12, 4);
+        let mut healthy = sharded(51, 4, "blocked");
+        let mut wounded = sharded(51, 4, "blocked");
+        for _ in 0..2 {
+            healthy.train_step(&x, &y, 0.1).unwrap();
+            wounded.train_step(&x, &y, 0.1).unwrap();
+        }
+        {
+            let pool = wounded.pool.as_ref().unwrap();
+            pool.txs[1].send(Job::Quit).unwrap();
+            while !pool.handles[1].is_finished() {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        for _ in 0..3 {
+            healthy.train_step(&x, &y, 0.1).unwrap();
+            wounded.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert_eq!(healthy.model.state_to_vec(), wounded.model.state_to_vec());
+        assert_eq!(wounded.model.steps, 5);
+    }
+
+    #[test]
     fn sharded_eval_and_probe_are_consistent() {
         let (x, y) = toy_batch(2, 16, 12, 4);
         let mut t = sharded(4, 4, "scalar");
         let before = t.model.state_to_vec();
-        let e1 = t.eval_batch(&x, &y);
-        let e2 = t.eval_batch(&x, &y);
+        let e1 = t.eval_batch(&x, &y).unwrap();
+        let e2 = t.eval_batch(&x, &y).unwrap();
         assert_eq!(e1.loss.to_bits(), e2.loss.to_bits());
         assert_eq!(e1.n_correct, e2.n_correct);
         assert!(e1.n_correct <= 16);
-        let p = t.probe_step(&x, &y);
+        let p = t.probe_step(&x, &y).unwrap();
         let probe = p.probe.expect("probe capture");
         assert_eq!(probe.w.len(), 12 * 16);
         assert_eq!(probe.a.len(), 16 * 16, "A reassembled over all tiles");

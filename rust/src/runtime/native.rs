@@ -34,6 +34,10 @@ pub struct NativeSession {
     /// physical layout of the step operand cache (`--pack`); pure
     /// storage, so seeded runs are digest-identical across values
     pack: PackMode,
+    /// remote `mft worker` addresses (`--remote`), connected at model
+    /// construction — unreachable workers are a startup error, while
+    /// mid-run failures are handled elastically by the sharded trainer
+    remotes: Vec<String>,
     model: Option<ShardedMlp>,
     last_census: Option<StepCensus>,
 }
@@ -71,6 +75,7 @@ impl NativeSession {
         let mut s = NativeSession::new(spec, nn_cfg, &cfg.engine, cfg.threads, plan)?;
         s.pack = PackMode::parse(&cfg.pack)
             .with_context(|| format!("native.pack must be auto|byte|nibble, got '{}'", cfg.pack))?;
+        s.remotes = cfg.remotes.clone();
         Ok(s)
     }
 
@@ -118,6 +123,7 @@ impl NativeSession {
             threads,
             plan,
             pack: PackMode::Auto,
+            remotes: Vec::new(),
             model: None,
             last_census: None,
         })
@@ -148,9 +154,15 @@ impl NativeSession {
         engine: &str,
         threads: usize,
         pack: PackMode,
+        remotes: &[String],
         seed: u64,
     ) -> Result<ShardedMlp> {
-        ShardedMlp::new(MfMlp::init(cfg.clone(), seed), plan, engine, threads)?.with_pack(pack)
+        let mut m = ShardedMlp::new(MfMlp::init(cfg.clone(), seed), plan, engine, threads)?
+            .with_pack(pack)?;
+        for addr in remotes {
+            m.add_remote(addr)?;
+        }
+        Ok(m)
     }
 
     fn model_mut(&mut self) -> Result<&mut ShardedMlp> {
@@ -181,6 +193,7 @@ impl SessionBackend for NativeSession {
             &self.engine_name,
             self.threads,
             self.pack,
+            &self.remotes,
             seed as u32 as u64,
         )?);
         self.last_census = None;
@@ -192,7 +205,7 @@ impl SessionBackend for NativeSession {
         let model = self.model.as_mut().context("call init() first")?;
         // the zero-FP32-multiply invariant is asserted inside the sharded
         // step (combine included); the census is retained for callers
-        let res = model.train_step(x, y, lr);
+        let res = model.train_step(x, y, lr)?;
         self.last_census = Some(res.census);
         Ok(())
     }
@@ -205,14 +218,14 @@ impl SessionBackend for NativeSession {
     fn eval_batch(&mut self, batch: &Batch) -> Result<(f64, f64)> {
         let (x, y) = self.batch_xy(batch)?;
         let model = self.model.as_mut().context("call init() first")?;
-        let res = model.eval_batch(x, y);
+        let res = model.eval_batch(x, y)?;
         Ok((res.loss_sum, res.n_correct as f64))
     }
 
     fn probe(&mut self, batch: &Batch) -> Result<Vec<f32>> {
         let (x, y) = self.batch_xy(batch)?;
         let model = self.model.as_mut().context("call init() first")?;
-        let res = model.probe_step(x, y);
+        let res = model.probe_step(x, y)?;
         self.last_census = Some(res.census);
         Ok(res.probe.context("probe produced no capture")?.concat())
     }
@@ -231,6 +244,7 @@ impl SessionBackend for NativeSession {
                 &self.engine_name,
                 self.threads,
                 self.pack,
+                &self.remotes,
                 0,
             )?);
         }
@@ -403,6 +417,20 @@ mod tests {
         };
         let err = format!("{:#}", NativeSession::from_config(&cfg).unwrap_err());
         assert!(err.contains("auto|byte|nibble"), "{err}");
+    }
+
+    #[test]
+    fn unreachable_remote_is_a_startup_error() {
+        // --remote addresses are connected when the model is built; a
+        // worker nobody is serving must fail loudly at init, not later
+        let cfg = TrainConfig {
+            variant: "tiny_mlp_mf".into(),
+            remotes: vec!["127.0.0.1:1".into()],
+            ..TrainConfig::default()
+        };
+        let mut s = NativeSession::from_config(&cfg).unwrap();
+        let err = format!("{:#}", s.init(0).unwrap_err());
+        assert!(err.contains("connect to worker 127.0.0.1:1"), "{err}");
     }
 
     #[test]

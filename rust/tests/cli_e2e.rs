@@ -273,6 +273,166 @@ fn native_train_rejects_unknown_engine_and_variant() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("no native spec"));
 }
 
+/// An `mft worker` subprocess bound to an ephemeral loopback port; the
+/// address is parsed from its startup banner. Killed on drop so a failed
+/// assertion never leaks a listener.
+struct Worker {
+    child: std::process::Child,
+    addr: String,
+}
+
+impl Worker {
+    fn spawn(engine: &str) -> Worker {
+        use std::io::BufRead;
+        let mut child = mft()
+            .args(["worker", "--listen", "127.0.0.1:0", "--engine", engine])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn mft worker");
+        let stdout = child.stdout.take().expect("worker stdout");
+        let line = std::io::BufReader::new(stdout)
+            .lines()
+            .next()
+            .expect("worker exited before its banner")
+            .expect("worker banner read");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable worker banner: {line}"))
+            .to_string();
+        Worker { child, addr }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn multinode_train_matches_in_process_checkpoint() {
+    // the multi-node acceptance pin at the binary level: one coordinator
+    // + two `mft worker` socket processes writes the byte-identical
+    // checkpoint of the in-process `--workers 2` run
+    let w1 = Worker::spawn("scalar");
+    let w2 = Worker::spawn("simd");
+    let ck_remote = std::env::temp_dir().join("mft_cli_multinode_remote.ckpt");
+    let ck_local = std::env::temp_dir().join("mft_cli_multinode_local.ckpt");
+    std::fs::remove_file(&ck_remote).ok();
+    std::fs::remove_file(&ck_local).ok();
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--engine", "blocked", "--workers", "1", "--steps", "6"])
+        .args(["--lr", "0.05", "--seed", "9", "--remote"])
+        .arg(format!("{},{}", w1.addr, w2.addr))
+        .arg("--checkpoint")
+        .arg(&ck_remote)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("+ 2 remote"), "banner should count the remotes: {s}");
+
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--engine", "blocked", "--workers", "2", "--steps", "6"])
+        .args(["--lr", "0.05", "--seed", "9", "--checkpoint"])
+        .arg(&ck_local)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let (a, b) = (std::fs::read(&ck_remote).unwrap(), std::fs::read(&ck_local).unwrap());
+    assert_eq!(a, b, "multi-node checkpoint bytes diverged from the in-process run");
+}
+
+#[test]
+fn multinode_train_survives_a_worker_kill_mid_run() {
+    // kill one of two workers while the run is in flight: the coordinator
+    // drops the dead member, recomputes its tiles locally, and the
+    // checkpoint stays byte-identical to a local-only run. Digests are
+    // membership-invariant, so this holds whether or not the kill lands
+    // mid-step — the test cannot flake on timing.
+    let w1 = Worker::spawn("scalar");
+    let mut w2 = Worker::spawn("scalar");
+    let ck_killed = std::env::temp_dir().join("mft_cli_multinode_killed.ckpt");
+    let ck_solo = std::env::temp_dir().join("mft_cli_multinode_solo.ckpt");
+    std::fs::remove_file(&ck_killed).ok();
+    std::fs::remove_file(&ck_solo).ok();
+    let mut train = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--engine", "blocked", "--workers", "1", "--steps", "12"])
+        .args(["--lr", "0.05", "--seed", "10", "--remote"])
+        .arg(format!("{},{}", w1.addr, w2.addr))
+        .arg("--checkpoint")
+        .arg(&ck_killed)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    // wait for a step log line — proof both remotes connected (startup
+    // connects are hard errors) and the run is in flight — then kill
+    {
+        use std::io::BufRead;
+        let mut lines = std::io::BufReader::new(train.stdout.take().unwrap()).lines();
+        let mut saw_step = false;
+        for line in &mut lines {
+            if line.unwrap().contains("step") {
+                saw_step = true;
+                break;
+            }
+        }
+        assert!(saw_step, "train exited before printing a step line");
+        let _ = w2.child.kill();
+        let _ = w2.child.wait();
+        // drain stdout to EOF so the child never blocks on a full pipe
+        for line in lines {
+            let _ = line;
+        }
+    }
+    let out = train.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(ck_killed.exists());
+
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--engine", "blocked", "--workers", "1", "--steps", "12"])
+        .args(["--lr", "0.05", "--seed", "10", "--checkpoint"])
+        .arg(&ck_solo)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let (a, b) = (std::fs::read(&ck_killed).unwrap(), std::fs::read(&ck_solo).unwrap());
+    assert_eq!(a, b, "kill-mid-run checkpoint bytes diverged from the local-only run");
+}
+
+#[test]
+fn unreachable_remote_is_a_clean_cli_error() {
+    // nothing listens on port 1: connecting at model construction must
+    // fail the run with a named address, not hang or panic
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--steps", "2", "--remote", "127.0.0.1:1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("connect to worker 127.0.0.1:1"), "{e}");
+
+    // and a remote that is not host:port is rejected by config validation
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--steps", "2", "--remote", "tenmachine"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("host:port"), "{e}");
+}
+
 #[test]
 fn list_subcommand_enumerates_variants() {
     if !have_artifacts() {

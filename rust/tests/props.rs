@@ -507,7 +507,7 @@ fn prop_sharded_step_is_worker_invariant() {
             let model = MfMlp::init(NnConfig::mf(&[d, 8, classes]), seed);
             let mut t = ShardedMlp::new(model, plan, "blocked", 1).unwrap();
             for _ in 0..2 {
-                t.train_step(&x, &y, 0.1);
+                t.train_step(&x, &y, 0.1).unwrap();
             }
             states.push(t.model.state_to_vec());
         }
