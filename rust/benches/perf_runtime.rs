@@ -799,6 +799,110 @@ fn multinode_sweep() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Observability overhead — the traced vs untraced step throughput of a
+/// 1-remote loopback grid -> BENCH_obs.json. Tracing + metrics read
+/// clocks and counters but never the numeric path, so the sweep pins the
+/// trained state digest-identical across both configs and asserts the
+/// wall-clock overhead of full observability stays under 5% (best-of-3
+/// against scheduler noise).
+fn obs_sweep() -> anyhow::Result<()> {
+    use mftrain::coordinator::state_digest;
+    use mftrain::potq::dist::serve_on;
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::{obs, ShardPlan, ShardedMlp};
+    use std::net::TcpListener;
+
+    let dims = [256usize, 128, 10];
+    let (batch, tile, classes) = (32usize, 4usize, 10usize);
+    let steps: usize = std::env::var("MFT_BENCH_OBS_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let reps = 3;
+    let mut rng = Pcg32::new(53);
+    let mut x = vec![0f32; batch * dims[0]];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(classes as u32) as i32).collect();
+
+    // [untraced, traced]: best-of-`reps` mean step time each
+    let mut means = [f64::INFINITY; 2];
+    let mut digests = [0u64; 2];
+    for (i, on) in [false, true].into_iter().enumerate() {
+        obs::set_trace_enabled(on);
+        obs::set_metrics_enabled(on);
+        for _rep in 0..reps {
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = listener.local_addr().expect("local addr").to_string();
+            std::thread::spawn(move || {
+                let _ = serve_on(listener, "scalar", 1);
+            });
+            let plan = ShardPlan::new(batch, tile, 1)?;
+            let model = MfMlp::init(NnConfig::mf(&dims), 11);
+            let mut sharded = ShardedMlp::new(model, plan, "blocked", 0)?;
+            sharded.add_remote(&addr)?;
+            sharded.train_step(&x, &y, 0.05)?; // warmup
+            let timing = bench(0, steps, || {
+                std::hint::black_box(sharded.train_step(&x, &y, 0.05).unwrap().loss);
+            });
+            means[i] = means[i].min(timing.mean().as_secs_f64());
+            digests[i] = state_digest(&sharded.model.state_to_vec());
+        }
+    }
+    obs::set_trace_enabled(false);
+    obs::set_metrics_enabled(false);
+    // the traced reps accumulated real spans: prove they serialize and
+    // reload as a valid trace before reporting overhead
+    let trace_path = std::env::temp_dir().join("mft_bench_obs.trace.json");
+    let trace_path = trace_path.to_string_lossy();
+    obs::write_trace(&trace_path)?;
+    let rep = obs::load_trace(&trace_path)?;
+    anyhow::ensure!(!rep.spans.is_empty(), "traced bench reps recorded no spans");
+
+    assert_eq!(
+        digests[0], digests[1],
+        "observability changed the trained state digest"
+    );
+    let overhead = means[1] / means[0] - 1.0;
+    let mut t = Table::new(
+        &format!(
+            "observability overhead — 1 loopback remote, {steps} timed steps, best of {reps}"
+        ),
+        &["config", "step mean", "steps/s", "overhead"],
+    );
+    for (label, mean) in [("untraced", means[0]), ("traced+metrics", means[1])] {
+        t.row(&[
+            label.into(),
+            fmt_duration(std::time::Duration::from_secs_f64(mean)),
+            format!("{:.1}", 1.0 / mean.max(1e-12)),
+            if mean == means[0] {
+                "-".into()
+            } else {
+                format!("{:+.2}%", overhead * 100.0)
+            },
+        ]);
+    }
+    t.note("digest-identical across configs; spans reloaded from the written trace");
+    t.print();
+    assert!(
+        overhead < 0.05,
+        "observability overhead {:.2}% exceeds the 5% budget",
+        overhead * 100.0
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("obs_overhead".into()));
+    root.insert("steps".into(), Json::Num(steps as f64));
+    root.insert("reps".into(), Json::Num(reps as f64));
+    root.insert("untraced_mean_secs".into(), Json::Num(means[0]));
+    root.insert("traced_mean_secs".into(), Json::Num(means[1]));
+    root.insert("overhead_fraction".into(), Json::Num(overhead));
+    root.insert("trace_spans".into(), Json::Num(rep.spans.len() as f64));
+    root.insert("state_digest".into(), Json::Str(format!("{:#x}", digests[0])));
+    std::fs::write("BENCH_obs.json", Json::Obj(root).to_string())?;
+    println!("obs sweep -> BENCH_obs.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::var("MFT_BENCH_STEPS")
         .ok()
@@ -882,6 +986,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- multi-node socket workers -> BENCH_multinode.json ----------------
     multinode_sweep()?;
+
+    // ---- observability overhead -> BENCH_obs.json -------------------------
+    obs_sweep()?;
 
     // ---- end-to-end step latency per variant ------------------------------
     let rt = match Runtime::cpu() {

@@ -118,6 +118,7 @@ USAGE:
             [--threads N] [--bits 3..6] [--workers N] [--shard-tile P]
             [--kshard K] [--momentum F] [--weight-decay F]
             [--pack auto|byte|nibble] [--remote host:port,host:port]
+            [--trace out.trace.json]
             # native backend: the in-process multiplication-free trainer
             # (no artifacts needed); variants: mlp_mf, mlp_fp32,
             # tiny_mlp_mf, tiny_mlp_fp32. --workers N shards the batch
@@ -132,11 +133,16 @@ USAGE:
             # `mft worker` socket processes to the step membership
             # (elastic: dead workers are dropped and their tiles
             # recomputed locally; seeded runs stay bit-identical for any
-            # membership history)
+            # membership history). --trace writes a Chrome trace-event
+            # JSON of the run's spans + metrics + membership events
+            # (open in Perfetto, or render with `mft report`); tracing
+            # never changes the checkpoint bytes
   mft worker --listen host:port [--engine ...] [--threads N]
+             [--trace out.trace.json]
              # a remote shard member: serves step frames from an `mft
              # train --remote` coordinator over TCP; stateless between
-             # connections, kill/restart at any step boundary
+             # connections, kill/restart at any step boundary. --trace
+             # flushes this member's spans when a connection closes
   mft eval --variant <name> --checkpoint <path> [--batches N]
            [--engine ...] [--threads N] [--bits N] [--workers N]
            [--kshard K] [--pack auto|byte|nibble] [--remote ...]
@@ -147,7 +153,14 @@ USAGE:
   mft census [--variant mlp_mf] [--engine ...] [--threads N] [--bits N]
              [--workers N] [--kshard K] [--seed N] [--lr F] [--json out.json]
              # measured per-GEMM live-MAC energy from one real native
-             # training step (the measured counterpart of `mft energy`)
+             # training step (the measured counterpart of `mft energy`);
+             # --json includes a `metrics` block of the step's
+             # deterministic observability counters
+  mft report --trace <file.trace.json> [--check]
+             # render a --trace file: per-span timing rollups (count/
+             # total/mean/p50/p95), the metrics registry and membership
+             # events; --check validates the file and prints a one-line
+             # summary (nonzero exit on malformed/empty traces)
   mft kernels [--engine scalar|blocked|threaded|simd|auto] [--threads N]
               [--shape MxKxN] [--bits 5] [--seed N] [--check]
               [--pack auto|byte|nibble] [--json out.json]

@@ -99,6 +99,12 @@ pub struct TrainConfig {
     /// dropped and its tiles recomputed locally — the seeded run stays
     /// bit-identical for any membership history. Empty = single-node.
     pub remotes: Vec<String>,
+    /// write a Chrome trace-event JSON of the run's spans + metrics +
+    /// membership events here (`mft train --trace PATH`, or
+    /// `[telemetry] trace` in a config file). Observability is
+    /// digest-neutral: traced and untraced runs write identical
+    /// checkpoints. None = tracing off (the near-zero-cost default).
+    pub trace: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -135,6 +141,7 @@ impl Default for TrainConfig {
             kshard: 1,
             pack: "auto".into(),
             remotes: Vec::new(),
+            trace: None,
         }
     }
 }
@@ -199,6 +206,7 @@ impl TrainConfig {
                 .filter(|s| !s.is_empty())
                 .map(str::to_string)
                 .collect(),
+            trace: doc.get("telemetry.trace").and_then(|v| v.as_str()).map(str::to_string),
         };
         cfg.validate()?;
         Ok(cfg)

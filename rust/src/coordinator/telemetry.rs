@@ -25,8 +25,14 @@ pub struct TensorStats {
     pub beta: i32,
     /// fraction of elements whose packed PoT code is nonzero (live MACs)
     pub pot_live_fraction: f64,
-    /// bytes of the packed PoT image (1 byte/elem in the PotTensor format)
+    /// bytes of the byte-code `PotTensor` image these probe stats are
+    /// computed from (1 byte/elem — intentional: probes analyze the
+    /// logical code space; nibble packing is a storage concern)
     pub packed_bytes: usize,
+    /// bytes the same codes occupy in the sign-planed nibble store
+    /// (packed 4-bit magnitudes + 1-bit sign plane: 0.625 bytes/code) —
+    /// the honest storage figure next to `packed_bytes`
+    pub packed_nibble_bytes: usize,
     /// MSE between tensor and its 5-bit PoT image
     pub quant_mse: f64,
     /// lognormality of |x| (sigma of log2|x|; None if degenerate)
@@ -53,6 +59,7 @@ impl TensorStats {
             beta: blk.beta,
             pot_live_fraction: live,
             packed_bytes: blk.bytes(),
+            packed_nibble_bytes: blk.len().div_ceil(2) + blk.len().div_ceil(8),
             quant_mse: crate::stats::mse(x, &deq),
             log2_sigma: fit.as_ref().map(|f| f.sigma_log2),
             log2_hist: log2_histogram(x, -40.0, 10.0, 50),
@@ -95,6 +102,17 @@ pub struct RunRecord {
     /// data-parallel workers the run was configured with (native backend
     /// sharding; 1 elsewhere)
     pub workers: usize,
+    /// the rest of the run grid, so a record pins the full schedule it
+    /// was produced under (digest-irrelevant — all schedules are
+    /// bit-identical — but essential for reading throughput numbers)
+    pub kshard: usize,
+    /// remote `mft worker` members configured at launch
+    pub remote_count: usize,
+    pub engine: String,
+    pub pack: String,
+    /// elastic-membership events (join/drop/reassign, with named
+    /// `StepFailure` reasons) observed during the run, in order
+    pub events: Vec<potq::MemberEvent>,
 }
 
 impl RunRecord {
@@ -144,7 +162,14 @@ mod tests {
         assert!(t.quant_mse > 0.0);
         assert!(t.beta <= -4 && t.beta >= -11, "beta {}", t.beta);
         assert!(t.pot_live_fraction > 0.9 && t.pot_live_fraction <= 1.0);
-        assert_eq!(t.packed_bytes, 4096, "1 byte per element");
+        // probe stats deliberately measure the byte-code layout (the
+        // logical code space), not the nibble store
+        assert_eq!(t.packed_bytes, 4096, "byte-code layout: 1 byte per code");
+        assert_eq!(
+            t.packed_nibble_bytes,
+            2048 + 512,
+            "nibble store: 0.5 B magnitudes + 0.125 B signs per code"
+        );
     }
 
     #[test]

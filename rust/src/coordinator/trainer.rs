@@ -15,6 +15,7 @@ use anyhow::{Context, Result};
 
 use crate::config::TrainConfig;
 use crate::data;
+use crate::potq::obs;
 use crate::runtime::{NativeSession, Runtime, Session, SessionBackend};
 
 use super::checkpoint::Checkpoint;
@@ -64,9 +65,21 @@ impl<'rt> Trainer<'rt> {
 
     /// Initialize (or restore) and run the configured number of steps.
     pub fn run(&mut self) -> Result<RunRecord> {
+        // observability: spans record only when a trace is requested
+        // (near-zero cost off); the metrics registry aggregates every
+        // run. Neither touches the numeric path — traced and untraced
+        // runs write byte-identical checkpoints.
+        if self.cfg.trace.is_some() {
+            obs::set_trace_enabled(true);
+        }
+        obs::set_metrics_enabled(true);
         let mut rec = RunRecord {
             variant: self.cfg.variant.clone(),
             workers: self.cfg.workers,
+            kshard: self.cfg.kshard,
+            remote_count: self.cfg.remotes.len(),
+            engine: self.cfg.engine.clone(),
+            pack: self.cfg.pack.clone(),
             ..Default::default()
         };
         let start_step = if let Some(path) = self.resumable_checkpoint() {
@@ -97,7 +110,9 @@ impl<'rt> Trainer<'rt> {
         for step in start_step..self.cfg.steps {
             let batch = self.train_data.next();
             let lr = self.cfg.lr.at(step);
+            let st = Instant::now();
             self.session.train_step(&batch, lr)?;
+            obs::observe_secs("step.train", st.elapsed().as_secs_f64());
 
             let last = step + 1 == self.cfg.steps;
             if last || (self.cfg.log_every > 0 && (step + 1) % self.cfg.log_every == 0) {
@@ -144,6 +159,16 @@ impl<'rt> Trainer<'rt> {
                 println!("[mft] checkpoint -> {}", path.display());
             }
         }
+        // trace first (it snapshots the event log), then drain the
+        // events into the record
+        if let Some(path) = &self.cfg.trace {
+            obs::write_trace(path)?;
+            obs::set_trace_enabled(false);
+            if !self.quiet {
+                println!("[mft] trace -> {path}");
+            }
+        }
+        rec.events = obs::take_events();
         Ok(rec)
     }
 
@@ -174,6 +199,7 @@ impl<'rt> Trainer<'rt> {
         let Some(path) = self.final_checkpoint_path() else {
             return Ok(());
         };
+        let _sp = obs::span("checkpoint_write", "checkpoint");
         let state = self.session.state_to_host()?;
         Checkpoint { variant: self.cfg.variant.clone(), step, state }
             .save(&path)

@@ -21,6 +21,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "energy" => cmd_energy(&args),
         "census" => cmd_census(&args),
+        "report" => cmd_report(&args),
         "kernels" => cmd_kernels(&args),
         "macs" => cmd_macs(&args),
         "distributions" => cmd_distributions(&args),
@@ -89,6 +90,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(p) = args.str_flag("checkpoint") {
         cfg.checkpoint_path = Some(p.to_string());
     }
+    if let Some(p) = args.str_flag("trace") {
+        cfg.trace = Some(p.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -149,6 +153,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.require("listen")?;
     let engine = args.str_flag("engine").unwrap_or("auto");
     let threads = args.u64_flag("threads", 0)? as usize;
+    if let Some(path) = args.str_flag("trace") {
+        // worker-side tracing: serving threads record spans, flushed to
+        // `path` whenever a coordinator connection closes
+        mftrain::potq::obs::set_trace_enabled(true);
+        mftrain::potq::obs::set_trace_path(Some(path.to_string()));
+    }
     mftrain::potq::serve_worker(addr, engine, threads)
 }
 
@@ -170,6 +180,12 @@ fn run_and_report(trainer: &mut Trainer) -> Result<()> {
         println!("[mft] train loss {first:.4} -> {last:.4}");
     }
     println!("[mft] final eval accuracy {:.2}%", rec.final_accuracy * 100.0);
+    if !rec.events.is_empty() {
+        println!("[mft] membership events:");
+        for e in &rec.events {
+            println!("[mft]   {e}");
+        }
+    }
     Ok(())
 }
 
@@ -285,6 +301,11 @@ fn cmd_census(args: &Args) -> Result<()> {
     let mut ds =
         mftrain::data::for_variant(&info.model, &info.x_shape, &info.y_shape, 1.0, cfg.seed);
     let b = ds.next_batch();
+    // the metrics registry is process-global: reset, then meter exactly
+    // the one measured step (only the counters land in --json — they are
+    // schedule-deterministic, unlike wall-clock durations)
+    mftrain::potq::obs::reset();
+    mftrain::potq::obs::set_metrics_enabled(true);
     s.train_step(&b, args.f64_flag("lr", cfg.lr.base as f64)? as f32)?;
     let census = s.last_census().expect("train step records a census").clone();
 
@@ -363,8 +384,93 @@ fn cmd_census(args: &Args) -> Result<()> {
         o.insert("live_macs".to_string(), Json::Num(census.live_macs() as f64));
         o.insert("mf_energy_pj".to_string(), Json::Num(census.mf_energy_pj()));
         o.insert("gemms".to_string(), Json::Arr(gemms));
+        let mut metrics = BTreeMap::new();
+        for row in mftrain::potq::obs::metrics_snapshot() {
+            if matches!(row.kind, mftrain::potq::MetricKind::Counter) {
+                metrics.insert(row.name.clone(), Json::Num(row.sum));
+            }
+        }
+        o.insert("metrics".to_string(), Json::Obj(metrics));
         std::fs::write(path, Json::Obj(o).to_string())?;
         println!("json -> {path}");
+    }
+    Ok(())
+}
+
+/// `mft report` — render (or `--check` validate) a trace file written by
+/// `mft train --trace` / `mft worker --trace`: per-span timing rollups,
+/// the aggregated metrics registry and the membership event log.
+fn cmd_report(args: &Args) -> Result<()> {
+    use mftrain::potq::obs;
+    use mftrain::util::timer::{fmt_duration, Timing};
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    let path = args.require("trace")?;
+    let rep = obs::load_trace(path)?;
+    anyhow::ensure!(!rep.spans.is_empty(), "trace '{path}' contains no spans");
+    let members = rep.members();
+    let cats = rep.categories();
+
+    if args.bool_flag("check") {
+        println!(
+            "trace OK: {} span(s) from {} member(s) {:?}, categories {:?}, \
+             {} metric(s), {} event(s)",
+            rep.spans.len(),
+            members.len(),
+            members,
+            cats,
+            rep.metrics.len(),
+            rep.events.len()
+        );
+        return Ok(());
+    }
+
+    let mut groups: BTreeMap<(String, String), Vec<Duration>> = BTreeMap::new();
+    for s in &rep.spans {
+        groups
+            .entry((s.cat.clone(), s.name.clone()))
+            .or_default()
+            .push(Duration::from_secs_f64(s.dur_us.max(0.0) / 1e6));
+    }
+    let mut t = Table::new(
+        &format!("trace report — {path} ({} members)", members.len()),
+        &["category", "span", "count", "total", "mean", "p50", "p95"],
+    );
+    for ((cat, name), samples) in groups {
+        let total: Duration = samples.iter().sum();
+        let timing = Timing { samples };
+        let (p50, p95) = timing.p50_p95();
+        t.row(&[
+            cat,
+            name,
+            timing.samples.len().to_string(),
+            fmt_duration(total),
+            fmt_duration(timing.mean()),
+            fmt_duration(p50),
+            fmt_duration(p95),
+        ]);
+    }
+    t.print();
+
+    if !rep.metrics.is_empty() {
+        let mut mt = Table::new("metrics", &["name", "kind", "count", "sum", "mean"]);
+        for m in &rep.metrics {
+            mt.row(&[
+                m.name.clone(),
+                m.kind.as_str().to_string(),
+                m.count.to_string(),
+                fnum(m.sum),
+                fnum(m.mean()),
+            ]);
+        }
+        mt.print();
+    }
+    if !rep.events.is_empty() {
+        println!("membership events:");
+        for e in &rep.events {
+            println!("  {e}");
+        }
     }
     Ok(())
 }

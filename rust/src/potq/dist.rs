@@ -35,6 +35,7 @@
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::ops::Range;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -42,6 +43,7 @@ use super::engine::{engine_by_name, KShardEngine, MacEngine, ENGINE_CHOICES};
 use super::nn::{
     GemmCensus, LayerGrads, MfMlp, NnConfig, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights,
 };
+use super::obs::{self, MetricRow};
 use super::quantize::{fnv1a, PackedOperand, Reader};
 use crate::energy::MacCensus;
 use crate::util::rle;
@@ -419,8 +421,11 @@ fn apply_step_frame(replica: &mut MfMlp, f: &StepFrame) {
 /// Encode per-tile results into a grad frame body — everything
 /// [`super::shard::ShardedMlp`]'s reduce/combine reads, bit-exact:
 /// f32/f64 scalars travel as raw bit patterns, gradient planes as RLE'd
-/// exact bytes.
-fn encode_grad_body(step: u64, results: &[(usize, StepResult)]) -> Vec<u8> {
+/// exact bytes. `metrics` is the member's per-step observability rows,
+/// appended as an optional trailing section inside the sealed body (an
+/// empty slice appends nothing — the exact pre-section wire image, so
+/// old coordinators keep decoding new workers and vice versa).
+fn encode_grad_body(step: u64, results: &[(usize, StepResult)], metrics: &[MetricRow]) -> Vec<u8> {
     let mut b = Vec::new();
     push_u64(&mut b, step);
     push_u64(&mut b, results.len() as u64);
@@ -465,12 +470,15 @@ fn encode_grad_body(step: u64, results: &[(usize, StepResult)]) -> Vec<u8> {
             }
         }
     }
+    obs::push_metrics_section(&mut b, metrics);
     seal(&mut b);
     b
 }
 
-/// Decode a grad frame body into `(step, per-tile results)`.
-fn decode_grad_body(body: &[u8]) -> Result<(u64, Vec<(usize, StepResult)>)> {
+/// Decode a grad frame body into `(step, per-tile results, member
+/// metrics)`. A body ending right after its tiles is an old peer —
+/// accepted with empty metrics.
+fn decode_grad_body(body: &[u8]) -> Result<(u64, Vec<(usize, StepResult)>, Vec<MetricRow>)> {
     let mut r = Reader::new(unseal(body)?);
     let step = r.u64()?;
     let nt = r.u64()? as usize;
@@ -525,8 +533,10 @@ fn decode_grad_body(body: &[u8]) -> Result<(u64, Vec<(usize, StepResult)>)> {
         };
         out.push((t, StepResult { loss, loss_sum, n_correct, census, probe, grads }));
     }
+    let metrics =
+        if r.remaining() > 0 { obs::read_metrics_section(&mut r)? } else { Vec::new() };
     ensure!(r.remaining() == 0, "grad frame: {} trailing bytes", r.remaining());
-    Ok((step, out))
+    Ok((step, out, metrics))
 }
 
 // ---------------------------------------------------------------------
@@ -540,6 +550,9 @@ fn decode_grad_body(body: &[u8]) -> Result<(u64, Vec<(usize, StepResult)>)> {
 pub struct RemoteWorker {
     addr: String,
     stream: TcpStream,
+    /// When the last step frame hit the wire — the start of the frame
+    /// round-trip the next `recv_grads` closes out (metrics only).
+    last_send: Option<Instant>,
 }
 
 impl RemoteWorker {
@@ -549,7 +562,7 @@ impl RemoteWorker {
         let stream =
             TcpStream::connect(addr).with_context(|| format!("connect to worker {addr}"))?;
         stream.set_nodelay(true).ok();
-        let mut rw = RemoteWorker { addr: addr.to_string(), stream };
+        let mut rw = RemoteWorker { addr: addr.to_string(), stream, last_send: None };
         let hello = encode_hello_body(cfg, kshard);
         write_frame(&mut rw.stream, HELLO_MAGIC, &hello)
             .with_context(|| format!("hello to worker {addr}"))?;
@@ -562,20 +575,38 @@ impl RemoteWorker {
 
     /// Ship one encoded step body ([`encode_step_body`]).
     pub(crate) fn send_step(&mut self, body: &[u8]) -> Result<()> {
+        let _sp = obs::span("send_step", "dist");
+        if obs::metrics_enabled() {
+            obs::counter_add(&format!("wire.bytes_sent.{}", self.addr), body.len() as u64);
+            self.last_send = Some(Instant::now());
+        }
         write_frame(&mut self.stream, STEP_MAGIC, body)
     }
 
     /// Block for this step's grad frame. A hangup or any malformed frame
     /// is an error — the coordinator drops the member and reassigns.
     pub(crate) fn recv_grads(&mut self, step: u64) -> Result<Vec<(usize, StepResult)>> {
+        let sp = obs::span("recv_grads", "dist");
         let body = read_frame_opt(&mut self.stream, GRAD_MAGIC)?
             .ok_or_else(|| anyhow!("worker {} closed the connection mid-step", self.addr))?;
-        let (got, results) = decode_grad_body(&body)?;
+        drop(sp);
+        let _sp = obs::span("decode_grads", "dist");
+        let (got, results, member_metrics) = decode_grad_body(&body)?;
         ensure!(
             got == step,
             "worker {}: grad frame for step {got}, expected {step}",
             self.addr
         );
+        if obs::metrics_enabled() {
+            obs::counter_add(&format!("wire.bytes_recv.{}", self.addr), body.len() as u64);
+            if let Some(sent) = self.last_send.take() {
+                obs::observe_secs(
+                    &format!("wire.rtt.{}", self.addr),
+                    sent.elapsed().as_secs_f64(),
+                );
+            }
+            obs::absorb_member_rows(&member_metrics);
+        }
         Ok(results)
     }
 }
@@ -625,6 +656,10 @@ pub fn serve_on(listener: TcpListener, engine: &str, threads: usize) -> Result<(
 /// a run, it only shrinks the membership.
 fn handle_conn(mut stream: TcpStream, engine: &str, threads: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // tag this connection's spans with a fresh grid-member id (the
+    // coordinator is member 0), so a trace from an in-process loopback
+    // run — or this worker's own `--trace` file — separates members
+    obs::set_thread_member(obs::next_member_id());
     let hello = read_frame_opt(&mut stream, HELLO_MAGIC)?
         .ok_or_else(|| anyhow!("connection closed before hello"))?;
     let (cfg, kshard) = decode_hello_body(&hello)?;
@@ -642,7 +677,11 @@ fn handle_conn(mut stream: TcpStream, engine: &str, threads: usize) -> Result<()
     // cached code operands; FP32 weight planes too under that scheme)
     let mut replica = MfMlp::init(cfg, 0);
     while let Some(body) = read_frame_opt(&mut stream, STEP_MAGIC)? {
-        let f = decode_step_body(&body, &replica.cfg)?;
+        let t0 = Instant::now();
+        let f = {
+            let _sp = obs::span("decode_step", "dist");
+            decode_step_body(&body, &replica.cfg)?
+        };
         apply_step_frame(&mut replica, &f);
         let mut results = Vec::with_capacity(f.tiles.len());
         for (t, xv, yv) in &f.tiles {
@@ -658,8 +697,23 @@ fn handle_conn(mut stream: TcpStream, engine: &str, threads: usize) -> Result<()
                 ),
             ));
         }
-        let grad = encode_grad_body(f.step, &results);
+        // this member's per-step rows ride the grad frame; built as
+        // local values, never drained from the process registry — an
+        // in-process loopback worker shares that registry with the
+        // coordinator and must not steal its rows
+        let rows = [
+            MetricRow::duration("member.step", t0.elapsed().as_secs_f64()),
+            MetricRow::counter("member.tiles", results.len() as u64),
+            MetricRow::counter("member.step_bytes_in", body.len() as u64),
+        ];
+        let grad = encode_grad_body(f.step, &results, &rows);
+        let _sp = obs::span("send_grads", "dist");
         write_frame(&mut stream, GRAD_MAGIC, &grad)?;
+    }
+    // a worker process with `--trace` rewrites its file at every
+    // connection boundary so a later kill cannot lose a served run
+    if let Err(e) = obs::flush_trace() {
+        eprintln!("[mft] worker: trace flush failed: {e:#}");
     }
     Ok(())
 }
@@ -789,9 +843,10 @@ mod tests {
     fn grad_frame_roundtrips_bit_exactly() {
         for want_probe in [false, true] {
             let results = step_results(21, want_probe);
-            let body = encode_grad_body(5, &results);
-            let (step, got) = decode_grad_body(&body).unwrap();
+            let body = encode_grad_body(5, &results, &[]);
+            let (step, got, metrics) = decode_grad_body(&body).unwrap();
             assert_eq!(step, 5);
+            assert!(metrics.is_empty(), "no section encoded, none decoded");
             assert_eq!(got.len(), results.len());
             for ((t, a), (u, b)) in results.iter().zip(&got) {
                 assert_eq!(t, u);
@@ -828,9 +883,11 @@ mod tests {
     #[test]
     fn grad_frame_rejects_corruption() {
         // mirror of quantize's wire_codec_rejects_corruption for the new
-        // frame: truncation at every prefix, digest flip, header abuse
+        // frame: truncation at every prefix, digest flip, header abuse —
+        // encoded WITH a metrics section so the sweep covers its bytes
         let results = step_results(33, false);
-        let good = encode_grad_body(2, &results);
+        let rows = [MetricRow::counter("member.tiles", 2)];
+        let good = encode_grad_body(2, &results, &rows);
         for cut in 0..good.len() {
             assert!(decode_grad_body(&good[..cut]).is_err(), "cut={cut}");
         }
@@ -846,6 +903,63 @@ mod tests {
         // a flipped interior byte must never pass the digest
         let mut bad = good.clone();
         bad[9] ^= 0x01;
+        assert!(decode_grad_body(&bad).is_err());
+    }
+
+    #[test]
+    fn grad_frame_metrics_section_roundtrips() {
+        let results = step_results(41, false);
+        let rows = vec![
+            MetricRow::duration("member.step", 0.005),
+            MetricRow::counter("member.tiles", results.len() as u64),
+        ];
+        let body = encode_grad_body(3, &results, &rows);
+        let (step, got, metrics) = decode_grad_body(&body).unwrap();
+        assert_eq!(step, 3);
+        assert_eq!(got.len(), results.len());
+        assert_eq!(metrics, rows, "member metrics survive the frame bit-exactly");
+    }
+
+    #[test]
+    fn grad_frame_without_metrics_section_still_decodes() {
+        // backward compat: an old peer's frame ends right after its
+        // tiles; the decoder must accept it with empty metrics
+        let results = step_results(43, true);
+        let old_wire_image = encode_grad_body(6, &results, &[]);
+        let (step, got, metrics) = decode_grad_body(&old_wire_image).unwrap();
+        assert_eq!(step, 6);
+        assert_eq!(got.len(), results.len());
+        assert!(metrics.is_empty());
+    }
+
+    #[test]
+    fn grad_frame_rejects_tampered_metrics_section() {
+        // re-sealed tampering (digest recomputed over the corrupt body)
+        // must still die in the section parser with a named error
+        let results = step_results(47, false);
+        let rows = [MetricRow::counter("member.tiles", 2)];
+        let sealed = encode_grad_body(2, &results, &rows);
+        let plain = &sealed[..sealed.len() - 8]; // strip the seal
+        let section_at = plain.len() - {
+            let mut section = Vec::new();
+            obs::push_metrics_section(&mut section, &rows);
+            section.len()
+        };
+        // bad section magic
+        let mut bad = plain.to_vec();
+        bad[section_at] ^= 0xFF;
+        seal(&mut bad);
+        let err = decode_grad_body(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown trailing section"), "{err}");
+        // hostile row count
+        let mut bad = plain.to_vec();
+        bad[section_at + 4..section_at + 12].copy_from_slice(&u64::MAX.to_le_bytes());
+        seal(&mut bad);
+        let err = decode_grad_body(&bad).unwrap_err().to_string();
+        assert!(err.contains("claims"), "{err}");
+        // truncated section (cut inside it, re-sealed) is an error too
+        let mut bad = plain[..section_at + 6].to_vec();
+        seal(&mut bad);
         assert!(decode_grad_body(&bad).is_err());
     }
 
@@ -982,5 +1096,37 @@ mod tests {
             remote.train_step(&x, &y, 0.05).unwrap();
         }
         assert_eq!(local.model.state_to_vec(), remote.model.state_to_vec());
+    }
+
+    #[test]
+    fn loopback_trace_contains_spans_from_every_member() {
+        // the acceptance-criterion trace: a traced 2-remote loopback run
+        // whose trace file parses and separates coordinator (member 0)
+        // from both worker connections (members > 0)
+        let (x, y) = toy_batch(51, 16, 12, 4);
+        let plan = ShardPlan::new(16, 4, 1).unwrap();
+        let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 53);
+        let mut t = ShardedMlp::new(model, plan, "blocked", 1).unwrap();
+        obs::set_trace_enabled(true);
+        t.add_remote(&spawn_worker_thread("scalar")).unwrap();
+        t.add_remote(&spawn_worker_thread("simd")).unwrap();
+        for _ in 0..3 {
+            t.train_step(&x, &y, 0.1).unwrap();
+        }
+        obs::set_trace_enabled(false);
+        assert_eq!(t.remote_count(), 2);
+        let path = std::env::temp_dir().join("mft_dist_loopback.trace.json");
+        obs::write_trace(path.to_str().unwrap()).unwrap();
+        let rep = obs::load_trace(path.to_str().unwrap()).unwrap();
+        let members = rep.members();
+        assert!(members.contains(&0), "coordinator spans present: {members:?}");
+        assert!(
+            members.iter().filter(|&&m| m > 0).count() >= 2,
+            "spans from both worker members: {members:?}"
+        );
+        let cats = rep.categories();
+        for want in ["dist", "gemm", "quantize"] {
+            assert!(cats.contains(want), "span category '{want}' missing from {cats:?}");
+        }
     }
 }

@@ -318,6 +318,7 @@ pub(crate) fn kslab_acc_reference(
 /// emits) and apply the single shared [`finish`] rounding. Bit-identical
 /// to the unsharded matmul for any disjoint slab cover of `[0, k)`.
 pub fn finish_kslabs(x: &PotTensor, w: &PotTensor, partials: &[Vec<i128>]) -> Vec<f32> {
+    let _sp = super::obs::span("finish_kslabs", "combine");
     let (m, k, n) = dims2(x, w);
     let (_, scale) = tile_args(x, w, k);
     let mut acc = vec![0i128; m * n];

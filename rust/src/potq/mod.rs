@@ -21,7 +21,8 @@
 //! multiplication-free gradient combine, which [`dist`] extends across
 //! machines: `mft worker` socket processes join the same round-robin
 //! step grid over digest-sealed wire frames, elastically and
-//! bit-identically.
+//! bit-identically. [`obs`] threads a runtime-toggled span/metrics/event
+//! layer through all of the above without touching the numeric path.
 //!
 //! K-panel layout invariants (shared by blocked/threaded/simd): a pair's
 //! per-k tile shifts are hoisted into contiguous constant-shift runs
@@ -37,11 +38,13 @@ pub mod dist;
 pub mod engine;
 mod mfmac;
 pub mod nn;
+pub mod obs;
 mod quantize;
 pub mod shard;
 pub mod simd;
 
 pub use dist::{serve_worker, RemoteWorker};
+pub use obs::{MemberEvent, MemberEventKind, MetricKind, MetricRow, TraceReport};
 pub use engine::{
     engine_by_name, finish_kslabs, kshard_cuts, kslab_bounds, BlockedEngine, KShardEngine,
     MacEngine, SaturationReport, ScalarEngine, ThreadedEngine, ENGINE_CHOICES, ENGINE_NAMES,

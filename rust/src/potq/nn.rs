@@ -43,6 +43,7 @@ use crate::util::prng::Pcg32;
 use anyhow::Result;
 
 use super::engine::{kshard_cuts, MacEngine};
+use super::obs;
 use super::quantize::{round_log2_abs, scale_pow2, PackMode, PackedOperand, PotTensor};
 use super::{ratio_clip, weight_bias_correction};
 
@@ -412,6 +413,8 @@ impl MfMlp {
         if self.cfg.scheme != Scheme::Mf {
             return Ok(StepWeights { layers: Vec::new() });
         }
+        let _sp = obs::span("prepare_step_weights", "quantize");
+        obs::counter_add("cache.build", 1);
         let bits = self.cfg.bits;
         let layers = self
             .layers
@@ -495,6 +498,8 @@ impl MfMlp {
                                 label: format!("fw{l}"),
                                 census: mfmac_census(&aq, pw.tensor()),
                             });
+                            obs::counter_add("cache.hit", 1);
+                            let _sp = obs::span("fw", "gemm");
                             engine.matmul_packed(&aq, pw)
                         }
                         None => {
@@ -504,7 +509,9 @@ impl MfMlp {
                                 label: format!("fw{l}"),
                                 census: mfmac_census(&aq, &wq),
                             });
+                            let sp = obs::span("fw", "gemm");
                             let z = engine.matmul(&aq, &wq);
+                            drop(sp);
                             cache.wq = Some(wq);
                             z
                         }
@@ -617,6 +624,7 @@ impl MfMlp {
                                 });
                                 // one call so k-sharded engines overlap
                                 // the two GEMMs' slab grids
+                                let _sp = obs::span("dx_dw", "gemm");
                                 engine.matmul_backward_pair((&gq, pwt), (&aq_t, &gq))
                             }
                             None => {
@@ -631,8 +639,10 @@ impl MfMlp {
                                     census: mfmac_census(&aq_t, &gq),
                                 });
                                 // one batched call: LUT/thread-scope amortized
+                                let sp = obs::span("dx_dw", "gemm");
                                 let mut outs =
                                     engine.matmul_batch(&[(&gq, &wq_t), (&aq_t, &gq)]);
+                                drop(sp);
                                 let dw = outs.pop().unwrap();
                                 let dx = outs.pop().unwrap();
                                 (dx, dw)

@@ -958,6 +958,7 @@ impl PotTensor {
     /// the adaptive layer-wise scale; `Some(0)` disables ALS (the Table 5
     /// collapse column).
     pub fn quantize(f: &[f32], b: u32, beta: Option<i32>) -> PotTensor {
+        let _sp = super::obs::span("quantize", "quantize");
         // the packed magnitude field [32, 62] only holds emax <= 15
         assert!((3..=6).contains(&b), "packed PoT codes support 3..=6 bits, got {b}");
         let beta = beta.unwrap_or_else(|| compute_beta(f, b));

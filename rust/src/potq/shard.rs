@@ -50,6 +50,7 @@ use anyhow::{anyhow, bail, Result};
 use super::dist::{encode_step_body, RemoteWorker};
 use super::engine::{engine_by_name, KShardEngine, MacEngine};
 use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights};
+use super::obs::{self, MemberEventKind};
 use super::quantize::{pot_emax, scale_pow2, PackMode, NIBBLE_EMAX_MAX};
 
 /// Data-parallel split of a global batch into `n_tiles` microbatch tiles
@@ -398,6 +399,7 @@ impl ShardedMlp {
     /// plan property and the combine walks tiles in index order.
     pub fn add_remote(&mut self, addr: &str) -> Result<()> {
         let r = RemoteWorker::connect(addr, &self.model.cfg, self.plan.kshard)?;
+        obs::member_event(self.model.steps, MemberEventKind::Join, addr, "remote worker");
         self.remotes.push(r);
         Ok(())
     }
@@ -547,6 +549,12 @@ impl ShardedMlp {
                     "[mft] remote worker {} dropped at step {step}: {e:#}",
                     self.remotes[ri].addr()
                 );
+                obs::member_event(
+                    step,
+                    MemberEventKind::Drop,
+                    self.remotes[ri].addr(),
+                    &format!("step send failed: {e:#}"),
+                );
                 failed[ri] = true;
             }
             assigned.push(tiles.into_iter().map(|(t, _)| t).collect());
@@ -591,6 +599,12 @@ impl ShardedMlp {
                         // full local width for later steps; the missing
                         // tiles fall through to reassignment below
                         eprintln!("[mft] {f}; reassigning tiles");
+                        obs::member_event(
+                            step,
+                            MemberEventKind::Drop,
+                            "local-pool",
+                            &f.to_string(),
+                        );
                         for (t, res) in f.completed {
                             slots[t] = Some(res);
                         }
@@ -617,6 +631,12 @@ impl ShardedMlp {
                                 "[mft] remote worker {} returned unassigned tile {t}; dropping it",
                                 remote.addr()
                             );
+                            obs::member_event(
+                                step,
+                                MemberEventKind::Drop,
+                                remote.addr(),
+                                &format!("returned unassigned tile {t}"),
+                            );
                             failed[ri] = true;
                         }
                     }
@@ -626,6 +646,12 @@ impl ShardedMlp {
                         "[mft] remote worker {} failed at step {step}: {e:#}; \
                          reassigning its tiles",
                         remote.addr()
+                    );
+                    obs::member_event(
+                        step,
+                        MemberEventKind::Drop,
+                        remote.addr(),
+                        &format!("grad frame failed: {e:#}"),
                     );
                     failed[ri] = true;
                 }
@@ -640,8 +666,10 @@ impl ShardedMlp {
 
         // (5) in-step tile reassignment: recompute anything still missing
         // on the in-thread engine — bit-identical because every engine is
+        let mut reassigned = 0u64;
         for t in 0..plan.n_tiles {
             if slots[t].is_none() {
+                reassigned += 1;
                 let r = plan.tile_range(t);
                 slots[t] = Some(self.model.forward_backward_with(
                     &x[r.start * d_in..r.end * d_in],
@@ -652,6 +680,15 @@ impl ShardedMlp {
                     Some(&*weights),
                 ));
             }
+        }
+        if reassigned > 0 {
+            obs::counter_add("tiles.reassigned", reassigned);
+            obs::member_event(
+                step,
+                MemberEventKind::Reassign,
+                "local",
+                &format!("{reassigned} tile(s) recomputed in-thread"),
+            );
         }
         slots
             .into_iter()
@@ -683,6 +720,7 @@ impl ShardedMlp {
         tiles: &[StepResult],
         census: &mut StepCensus,
     ) -> Result<Vec<LayerGrads>> {
+        let _sp = obs::span("combine_grads", "combine");
         let avg_e = -(self.plan.n_tiles.trailing_zeros() as i32);
         let mut combined: Vec<LayerGrads> = self
             .model

@@ -170,15 +170,18 @@ impl MacEngine for SimdEngine {
                 }
             }
         }
-        let panels: Vec<KPanels> = groups
-            .iter()
-            .map(|(j, cuts)| {
-                let mut c = cuts.clone();
-                c.sort_unstable();
-                c.dedup();
-                pairs[*j].1.pack_k_panels(&c)
-            })
-            .collect();
+        let panels: Vec<KPanels> = {
+            let _sp = super::obs::span("pack_panels", "pack");
+            groups
+                .iter()
+                .map(|(j, cuts)| {
+                    let mut c = cuts.clone();
+                    c.sort_unstable();
+                    c.dedup();
+                    pairs[*j].1.pack_k_panels(&c)
+                })
+                .collect()
+        };
         pairs
             .iter()
             .enumerate()

@@ -18,6 +18,7 @@ use crate::config::TrainConfig;
 use crate::data::Batch;
 use crate::models::{self, NativeSpec};
 use crate::potq::nn::{MfMlp, NnConfig, Scheme, StepCensus};
+use crate::potq::obs;
 use crate::potq::shard::{ShardPlan, ShardedMlp};
 use crate::potq::PackMode;
 
@@ -201,11 +202,20 @@ impl SessionBackend for NativeSession {
     }
 
     fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<()> {
+        let _sp = obs::span("train_step", "step");
         let (x, y) = self.batch_xy(batch)?;
         let model = self.model.as_mut().context("call init() first")?;
         // the zero-FP32-multiply invariant is asserted inside the sharded
         // step (combine included); the census is retained for callers
         let res = model.train_step(x, y, lr)?;
+        if obs::metrics_enabled() {
+            // census totals are deterministic counts off the packed
+            // codes, so these rows are schedule- and trace-invariant
+            obs::counter_add("census.live_macs", res.census.live_macs());
+            obs::counter_add("census.total_macs", res.census.total_macs());
+            obs::counter_add("census.combine_exp_adds", res.census.combine_exp_adds);
+            obs::counter_add("step.count", 1);
+        }
         self.last_census = Some(res.census);
         Ok(())
     }

@@ -26,14 +26,29 @@ impl Timing {
         self.percentile(95.0)
     }
 
+    /// Both common percentiles off one sort (callers wanting p50 *and*
+    /// p95 should use this instead of two `percentile` calls).
+    pub fn p50_p95(&self) -> (Duration, Duration) {
+        let v = self.sorted();
+        (Self::percentile_of(&v, 50.0), Self::percentile_of(&v, 95.0))
+    }
+
     pub fn percentile(&self, p: f64) -> Duration {
-        if self.samples.is_empty() {
-            return Duration::ZERO;
-        }
+        Self::percentile_of(&self.sorted(), p)
+    }
+
+    fn sorted(&self) -> Vec<Duration> {
         let mut v = self.samples.clone();
         v.sort();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        v
+    }
+
+    fn percentile_of(sorted: &[Duration], p: f64) -> Duration {
+        if sorted.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx.min(sorted.len() - 1)]
     }
 
     pub fn throughput(&self, items_per_run: u64) -> f64 {
@@ -60,15 +75,17 @@ pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
     Timing { samples }
 }
 
-/// Human-readable duration.
+/// Human-readable duration, down to span-scale nanoseconds.
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
     if s >= 1.0 {
         format!("{s:.2}s")
     } else if s >= 1e-3 {
         format!("{:.2}ms", s * 1e3)
-    } else {
+    } else if s >= 1e-6 {
         format!("{:.1}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
     }
 }
 
@@ -88,6 +105,9 @@ mod tests {
         assert_eq!(t.mean(), Duration::from_millis(20));
         assert_eq!(t.best(), Duration::from_millis(10));
         assert_eq!(t.p50(), Duration::from_millis(20));
+        // the sort-once pair matches the per-call percentiles exactly
+        assert_eq!(t.p50_p95(), (t.p50(), t.p95()));
+        assert_eq!(t.p95(), Duration::from_millis(30));
     }
 
     #[test]
@@ -103,5 +123,7 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
         assert_eq!(fmt_duration(Duration::from_millis(5)), "5.00ms");
         assert!(fmt_duration(Duration::from_micros(7)).ends_with("µs"));
+        assert_eq!(fmt_duration(Duration::from_nanos(250)), "250ns");
+        assert_eq!(fmt_duration(Duration::ZERO), "0ns");
     }
 }

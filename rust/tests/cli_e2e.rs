@@ -106,6 +106,75 @@ fn native_sharded_train_and_eval_honor_workers_and_threads() {
 }
 
 #[test]
+fn traced_train_is_byte_identical_and_reportable() {
+    // `--trace` must not perturb training: the traced run's checkpoint
+    // bytes equal the untraced run's, and the trace it writes renders
+    // under `mft report` and validates under `mft report --check`
+    let ck_plain = std::env::temp_dir().join("mft_cli_trace_plain.ckpt");
+    let ck_traced = std::env::temp_dir().join("mft_cli_trace_traced.ckpt");
+    let trace = std::env::temp_dir().join("mft_cli_trace.trace.json");
+    for f in [&ck_plain, &ck_traced, &trace] {
+        std::fs::remove_file(f).ok();
+    }
+    let base = [
+        "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine", "blocked",
+        "--workers", "2", "--steps", "6", "--lr", "0.05", "--seed", "9", "--checkpoint",
+    ];
+    let out = mft().args(base).arg(&ck_plain).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = mft().args(base).arg(&ck_traced).arg("--trace").arg(&trace).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("trace ->"), "{s}");
+
+    let a = std::fs::read(&ck_plain).unwrap();
+    let b = std::fs::read(&ck_traced).unwrap();
+    assert_eq!(a, b, "--trace changed the checkpoint bytes");
+
+    let out = mft().args(["report", "--check", "--trace"]).arg(&trace).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("trace OK"), "{s}");
+
+    let out = mft().args(["report", "--trace"]).arg(&trace).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("trace report"), "{s}");
+    assert!(s.contains("gemm"), "span rollup missing gemm category:\n{s}");
+    assert!(s.contains("step.train"), "metrics table missing step.train:\n{s}");
+}
+
+#[test]
+fn report_rejects_missing_and_malformed_traces() {
+    let out = mft().args(["report", "--trace", "/nonexistent/nope.json"]).output().unwrap();
+    assert!(!out.status.success());
+
+    let bad = std::env::temp_dir().join("mft_cli_bad_trace.json");
+    std::fs::write(&bad, "{\"not\": \"a trace\"}").unwrap();
+    let out = mft().args(["report", "--check", "--trace"]).arg(&bad).output().unwrap();
+    assert!(!out.status.success());
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("traceEvents"), "error must name the missing key: {e}");
+}
+
+#[test]
+fn census_json_carries_deterministic_metrics_block() {
+    let json = std::env::temp_dir().join("mft_cli_census_metrics.json");
+    std::fs::remove_file(&json).ok();
+    let out = mft()
+        .args(["census", "--variant", "tiny_mlp_mf", "--seed", "3", "--json"])
+        .arg(&json)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = std::fs::read_to_string(&json).unwrap();
+    assert!(j.contains("\"metrics\""), "{j}");
+    assert!(j.contains("\"step.count\":1"), "{j}");
+    assert!(j.contains("\"census.live_macs\""), "{j}");
+}
+
+#[test]
 fn native_kshard_train_matches_unsharded_checkpoint() {
     // the binary-level acceptance pin: --engine simd --workers 2
     // --kshard 2 writes the byte-identical checkpoint of --engine scalar

@@ -336,6 +336,61 @@ fn native_pack_nibble_checkpoints_digest_identical() {
 }
 
 #[test]
+fn native_traced_checkpoints_digest_identical() {
+    // the observability acceptance pin: `--trace` reads clocks and
+    // counters but never the numeric path, so traced runs write
+    // byte-identical checkpoints to untraced ones — on every engine and
+    // across the workers x kshard grid (same cells as the pack pin)
+    let cells: [(&str, usize, usize); 4] =
+        [("scalar", 1, 1), ("blocked", 1, 2), ("threaded", 2, 4), ("simd", 2, 2)];
+    let mut digests: Vec<u64> = Vec::new();
+    let mut curves: Vec<Vec<(u64, u32)>> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
+    let mut last_trace = None;
+    for (engine, workers, kshard) in cells {
+        for traced in [false, true] {
+            let tag = format!("{engine}_{workers}_{kshard}_{traced}");
+            let ckpt = std::env::temp_dir().join(format!("mft_native_trace_{tag}.ckpt"));
+            std::fs::remove_file(&ckpt).ok();
+            let mut cfg = native_cfg("tiny_mlp_mf", 10, 47);
+            cfg.engine = engine.into();
+            cfg.workers = workers;
+            cfg.kshard = kshard;
+            cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+            if traced {
+                let trace = std::env::temp_dir().join(format!("mft_native_trace_{tag}.json"));
+                std::fs::remove_file(&trace).ok();
+                cfg.trace = Some(trace.to_string_lossy().into_owned());
+                last_trace = cfg.trace.clone();
+            }
+            let mut t = Trainer::native(cfg).unwrap().quiet();
+            let rec = t.run().unwrap();
+            curves.push(rec.loss_curve.iter().map(|&(s, l)| (s, l.to_bits())).collect());
+            let ck = Checkpoint::load(&ckpt).unwrap();
+            assert_eq!(ck.step, 10);
+            digests.push(ck.digest());
+            labels.push(format!("{engine} W={workers} K={kshard} traced={traced}"));
+        }
+    }
+    for i in 1..digests.len() {
+        assert_eq!(
+            digests[0], digests[i],
+            "{} checkpoint diverged from {}",
+            labels[i], labels[0]
+        );
+        assert_eq!(curves[0], curves[i], "{} loss curve", labels[i]);
+    }
+    // and the trace the last cell wrote is a valid Chrome trace-event
+    // file with spans from the canonical step phases
+    let rep = mftrain::potq::obs::load_trace(&last_trace.unwrap()).unwrap();
+    assert!(!rep.spans.is_empty(), "traced run wrote no spans");
+    let cats = rep.categories();
+    for want in ["gemm", "quantize", "step", "checkpoint"] {
+        assert!(cats.contains(want), "trace missing category '{want}': {cats:?}");
+    }
+}
+
+#[test]
 fn native_kshard_census_is_schedule_invariant() {
     // census invariance across the workers x kshard grid: identical
     // per-GEMM op counts and zero FP32 muls including the k-combine
