@@ -903,6 +903,110 @@ fn obs_sweep() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fault-layer overhead — armed-but-idle chaos plumbing vs none on a
+/// 1-remote loopback grid -> BENCH_faults.json. The armed config installs
+/// a FaultPlan whose window never opens plus a 30s socket deadline, so
+/// every send/recv consults the plan and runs under SO_RCVTIMEO without a
+/// single fault firing. The sweep pins the trained state digest-identical
+/// across both configs and asserts the overhead stays under 2%
+/// (best-of-3 against scheduler noise).
+fn faults_sweep() -> anyhow::Result<()> {
+    use mftrain::coordinator::state_digest;
+    use mftrain::potq::dist::serve_on;
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::{FaultPlan, ShardPlan, ShardedMlp};
+    use std::net::TcpListener;
+
+    let dims = [256usize, 128, 10];
+    let (batch, tile, classes) = (32usize, 4usize, 10usize);
+    let steps: usize = std::env::var("MFT_BENCH_FAULTS_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let reps = 3;
+    let mut rng = Pcg32::new(59);
+    let mut x = vec![0f32; batch * dims[0]];
+    rng.fill_normal(&mut x, 0.0, 0.5);
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(classes as u32) as i32).collect();
+
+    // [off, armed]: best-of-`reps` mean step time each
+    let mut means = [f64::INFINITY; 2];
+    let mut digests = [0u64; 2];
+    for (i, armed) in [false, true].into_iter().enumerate() {
+        for _rep in 0..reps {
+            let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = listener.local_addr().expect("local addr").to_string();
+            std::thread::spawn(move || {
+                let _ = serve_on(listener, "scalar", 1);
+            });
+            let plan = ShardPlan::new(batch, tile, 1)?;
+            let model = MfMlp::init(NnConfig::mf(&dims), 11);
+            let mut sharded = ShardedMlp::new(model, plan, "blocked", 0)?;
+            if armed {
+                // the window never opens: full plumbing, zero faults
+                let never = FaultPlan::parse("seed=1,rate=1,after=1000000000")?;
+                sharded = sharded
+                    .with_deadline(Some(std::time::Duration::from_secs(30)))?
+                    .with_faults(Some(never));
+            }
+            sharded.add_remote(&addr)?;
+            sharded.train_step(&x, &y, 0.05)?; // warmup
+            let timing = bench(0, steps, || {
+                std::hint::black_box(sharded.train_step(&x, &y, 0.05).unwrap().loss);
+            });
+            anyhow::ensure!(
+                sharded.faults_injected() == 0,
+                "the armed-but-idle plan fired a fault"
+            );
+            means[i] = means[i].min(timing.mean().as_secs_f64());
+            digests[i] = state_digest(&sharded.model.state_to_vec());
+        }
+    }
+    assert_eq!(
+        digests[0], digests[1],
+        "the armed fault layer changed the trained state digest"
+    );
+    let overhead = means[1] / means[0] - 1.0;
+    let mut t = Table::new(
+        &format!(
+            "fault-layer overhead — 1 loopback remote, {steps} timed steps, best of {reps}"
+        ),
+        &["config", "step mean", "steps/s", "overhead"],
+    );
+    for (label, mean) in [("off", means[0]), ("armed (plan + deadline)", means[1])] {
+        t.row(&[
+            label.into(),
+            fmt_duration(std::time::Duration::from_secs_f64(mean)),
+            format!("{:.1}", 1.0 / mean.max(1e-12)),
+            if mean == means[0] {
+                "-".into()
+            } else {
+                format!("{:+.2}%", overhead * 100.0)
+            },
+        ]);
+    }
+    t.note("digest-identical across configs; the armed plan's window never opens, so this \
+            prices the always-on plumbing (plan consult + SO_RCVTIMEO), not injected faults");
+    t.print();
+    assert!(
+        overhead < 0.02,
+        "fault-layer overhead {:.2}% exceeds the 2% budget",
+        overhead * 100.0
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("faults_overhead".into()));
+    root.insert("steps".into(), Json::Num(steps as f64));
+    root.insert("reps".into(), Json::Num(reps as f64));
+    root.insert("off_mean_secs".into(), Json::Num(means[0]));
+    root.insert("armed_mean_secs".into(), Json::Num(means[1]));
+    root.insert("overhead_fraction".into(), Json::Num(overhead));
+    root.insert("state_digest".into(), Json::Str(format!("{:#x}", digests[0])));
+    std::fs::write("BENCH_faults.json", Json::Obj(root).to_string())?;
+    println!("faults sweep -> BENCH_faults.json");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let steps: usize = std::env::var("MFT_BENCH_STEPS")
         .ok()
@@ -989,6 +1093,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- observability overhead -> BENCH_obs.json -------------------------
     obs_sweep()?;
+
+    // ---- fault-injection layer overhead -> BENCH_faults.json --------------
+    faults_sweep()?;
 
     // ---- end-to-end step latency per variant ------------------------------
     let rt = match Runtime::cpu() {

@@ -118,7 +118,8 @@ USAGE:
             [--threads N] [--bits 3..6] [--workers N] [--shard-tile P]
             [--kshard K] [--momentum F] [--weight-decay F]
             [--pack auto|byte|nibble] [--remote host:port,host:port]
-            [--trace out.trace.json]
+            [--trace out.trace.json] [--deadline-ms N] [--faults spec]
+            [--resume auto|path]
             # native backend: the in-process multiplication-free trainer
             # (no artifacts needed); variants: mlp_mf, mlp_fp32,
             # tiny_mlp_mf, tiny_mlp_fp32. --workers N shards the batch
@@ -136,13 +137,32 @@ USAGE:
             # membership history). --trace writes a Chrome trace-event
             # JSON of the run's spans + metrics + membership events
             # (open in Perfetto, or render with `mft report`); tracing
-            # never changes the checkpoint bytes
+            # never changes the checkpoint bytes. --deadline-ms bounds
+            # how long a stalled (open but silent) remote can hold a
+            # step before its tiles are reassigned (default 30000, 0 =
+            # block forever); dropped remotes are re-dialed with capped
+            # backoff at step boundaries. --faults installs a seeded
+            # fault-injection plan on the remote sockets (e.g.
+            # \"seed=7,rate=0.25,kinds=drop+stall,after=2,until=20\") —
+            # digest-neutral by construction. --resume auto restores
+            # from --checkpoint when it exists and validates (torn or
+            # corrupt files are skipped, starting fresh); --resume PATH
+            # requires that checkpoint
   mft worker --listen host:port [--engine ...] [--threads N]
              [--trace out.trace.json]
              # a remote shard member: serves step frames from an `mft
              # train --remote` coordinator over TCP; stateless between
              # connections, kill/restart at any step boundary. --trace
              # flushes this member's spans when a connection closes
+  mft chaos [--seed N] [--steps N] [--workers N] [--engine ...]
+            [--faults spec] [--deadline-ms N]
+            [--clean-ckpt path] [--chaos-ckpt path]
+            # seeded self-healing soak: the same run clean and under the
+            # fault plan (drops/stalls/truncated/flipped frames) over
+            # loopback socket workers; asserts >= 1 injected fault, >= 1
+            # rejoin, and bit-identical final digests (nonzero exit
+            # otherwise); --clean-ckpt/--chaos-ckpt write both final
+            # states as checkpoints for byte-level comparison
   mft eval --variant <name> --checkpoint <path> [--batches N]
            [--engine ...] [--threads N] [--bits N] [--workers N]
            [--kshard K] [--pack auto|byte|nibble] [--remote ...]

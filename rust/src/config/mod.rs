@@ -105,6 +105,25 @@ pub struct TrainConfig {
     /// digest-neutral: traced and untraced runs write identical
     /// checkpoints. None = tracing off (the near-zero-cost default).
     pub trace: Option<String>,
+    /// per-step socket deadline in milliseconds for remote members
+    /// (`mft train --deadline-ms N`, or `[faults] deadline_ms`): a
+    /// stalled — open but silent — peer becomes a named step failure
+    /// within this bound and its tiles are reassigned. 0 disables
+    /// (reads block forever, the pre-deadline behavior).
+    pub deadline_ms: u64,
+    /// deterministic fault-injection spec (`mft train --faults SPEC`, or
+    /// `[faults] spec`), e.g. "seed=7,rate=0.25,kinds=drop+stall".
+    /// Parsed by [`crate::potq::FaultPlan::parse`]; faults land on the
+    /// coordinator's remote-worker sockets only and every one collapses
+    /// into the drop-and-reassign path, so the run's checkpoint digest
+    /// is unchanged. None = no injection (production default).
+    pub faults: Option<String>,
+    /// resume policy (`mft train --resume auto|PATH`): "auto" restores
+    /// from `checkpoint.path` when it exists and validates (a torn or
+    /// corrupt file is skipped with a warning, starting fresh); an
+    /// explicit path must load or the run errors. None = the legacy
+    /// behavior (resume from `checkpoint.path` whenever it exists).
+    pub resume: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -142,6 +161,9 @@ impl Default for TrainConfig {
             pack: "auto".into(),
             remotes: Vec::new(),
             trace: None,
+            deadline_ms: 30_000,
+            faults: None,
+            resume: None,
         }
     }
 }
@@ -207,6 +229,9 @@ impl TrainConfig {
                 .map(str::to_string)
                 .collect(),
             trace: doc.get("telemetry.trace").and_then(|v| v.as_str()).map(str::to_string),
+            deadline_ms: doc.i64_or("faults.deadline_ms", d.deadline_ms as i64) as u64,
+            faults: doc.get("faults.spec").and_then(|v| v.as_str()).map(str::to_string),
+            resume: doc.get("checkpoint.resume").and_then(|v| v.as_str()).map(str::to_string),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -262,6 +287,14 @@ impl TrainConfig {
         for r in &self.remotes {
             if !r.contains(':') {
                 bail!("shard.remotes entries must be host:port, got '{r}'");
+            }
+        }
+        if let Some(spec) = &self.faults {
+            crate::potq::FaultPlan::parse(spec)?;
+        }
+        if let Some(resume) = &self.resume {
+            if resume.is_empty() {
+                bail!("checkpoint.resume must be \"auto\" or a checkpoint path");
             }
         }
         match crate::potq::PackMode::parse(&self.pack) {
@@ -444,6 +477,35 @@ kshard = 2
         let doc = toml::Doc::parse("[shard]\nremotes = \"tenmachine\"\n").unwrap();
         let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
         assert!(err.contains("host:port"), "{err}");
+    }
+
+    #[test]
+    fn faults_and_resume_fields_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(d.deadline_ms, 30_000, "deadline defaults on");
+        assert!(d.faults.is_none(), "no injection by default");
+        assert!(d.resume.is_none());
+        let doc = toml::Doc::parse(
+            r#"
+[faults]
+spec = "seed=7,rate=0.25,kinds=drop+stall"
+deadline_ms = 400
+[checkpoint]
+resume = "auto"
+"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.faults.as_deref(), Some("seed=7,rate=0.25,kinds=drop+stall"));
+        assert_eq!(cfg.deadline_ms, 400);
+        assert_eq!(cfg.resume.as_deref(), Some("auto"));
+        // a bad spec is rejected at config time, with the parser's error
+        let doc = toml::Doc::parse("[faults]\nspec = \"kinds=gamma-ray\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("unknown kind"), "{err}");
+        let doc = toml::Doc::parse("[checkpoint]\nresume = \"\"\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("resume"), "{err}");
     }
 
     #[test]

@@ -61,6 +61,10 @@ impl Checkpoint {
     pub fn digest(&self) -> u64 {
         state_digest(&self.state)
     }
+    /// Atomic write: the full image goes to a `.tmp` sibling, is fsynced,
+    /// and only then renamed over `path` — a crash or kill at any point
+    /// leaves either the previous checkpoint or the new one, never a torn
+    /// file at the published path.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent).ok();
@@ -84,6 +88,7 @@ impl Checkpoint {
             f.write_all(&(comp.len() as u64).to_le_bytes())?;
             f.write_all(&comp)?;
             f.write_all(&state_digest(&self.state).to_le_bytes())?;
+            f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
         }
         std::fs::rename(&tmp, path).context("atomic checkpoint rename")?;
         Ok(())
@@ -225,5 +230,29 @@ mod tests {
         let path = std::env::temp_dir().join("mft_ckpt_foreign.bin");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn torn_tmp_write_never_touches_the_previous_checkpoint() {
+        // simulate a kill mid-save: the .tmp sibling holds a torn image,
+        // the published path must still load the previous checkpoint
+        let ck = Checkpoint {
+            variant: "survivor".into(),
+            step: 42,
+            state: (0..512).map(|i| (i as f32).sin()).collect(),
+        };
+        let path = std::env::temp_dir().join("mft_ckpt_torn.bin");
+        ck.save(&path).unwrap();
+        let tmp = path.with_extension("tmp");
+        let image = std::fs::read(&path).unwrap();
+        std::fs::write(&tmp, &image[..image.len() / 2]).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back, "the published checkpoint survived the torn tmp");
+        assert!(Checkpoint::load(&tmp).is_err(), "the torn tmp is detectably invalid");
+        // the next save overwrites the torn tmp and republishes cleanly
+        let ck2 = Checkpoint { step: 43, ..ck };
+        ck2.save(&path).unwrap();
+        assert!(!tmp.exists(), "a completed save leaves no tmp behind");
+        assert_eq!(Checkpoint::load(&path).unwrap().step, 43);
     }
 }

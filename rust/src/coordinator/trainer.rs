@@ -82,7 +82,7 @@ impl<'rt> Trainer<'rt> {
             pack: self.cfg.pack.clone(),
             ..Default::default()
         };
-        let start_step = if let Some(path) = self.resumable_checkpoint() {
+        let start_step = if let Some(path) = self.resumable_checkpoint()? {
             let ck = Checkpoint::load(&path)?;
             anyhow::ensure!(
                 ck.variant == self.cfg.variant,
@@ -186,9 +186,49 @@ impl<'rt> Trainer<'rt> {
         Ok((sl / n, sc / n))
     }
 
-    fn resumable_checkpoint(&self) -> Option<std::path::PathBuf> {
-        let p = std::path::PathBuf::from(self.cfg.checkpoint_path.as_ref()?);
-        p.exists().then_some(p)
+    /// Which checkpoint (if any) this run restores from, under the
+    /// configured resume policy: `--resume auto` takes `checkpoint.path`
+    /// when it exists and validates (a torn or corrupt file — e.g. from
+    /// a kill mid-write — is skipped with a warning, starting fresh); an
+    /// explicit `--resume PATH` must exist or the run errors; no policy
+    /// keeps the legacy behavior (resume whenever `checkpoint.path`
+    /// exists, propagating load errors).
+    fn resumable_checkpoint(&self) -> Result<Option<std::path::PathBuf>> {
+        match self.cfg.resume.as_deref() {
+            Some("auto") => {
+                let Some(p) = self.cfg.checkpoint_path.as_ref() else { return Ok(None) };
+                let p = std::path::PathBuf::from(p);
+                if !p.exists() {
+                    return Ok(None);
+                }
+                match Checkpoint::load(&p) {
+                    Ok(_) => Ok(Some(p)),
+                    Err(e) => {
+                        eprintln!(
+                            "[mft] resume auto: skipping invalid checkpoint {}: {e:#}",
+                            p.display()
+                        );
+                        Ok(None)
+                    }
+                }
+            }
+            Some(path) => {
+                let p = std::path::PathBuf::from(path);
+                anyhow::ensure!(
+                    p.exists(),
+                    "--resume {}: checkpoint not found (use --resume auto to start \
+                     fresh when none exists)",
+                    p.display()
+                );
+                Ok(Some(p))
+            }
+            None => Ok(self
+                .cfg
+                .checkpoint_path
+                .as_ref()
+                .map(std::path::PathBuf::from)
+                .filter(|p| p.exists())),
+        }
     }
 
     fn final_checkpoint_path(&self) -> Option<std::path::PathBuf> {

@@ -18,6 +18,7 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "worker" => cmd_worker(&args),
+        "chaos" => cmd_chaos(&args),
         "eval" => cmd_eval(&args),
         "energy" => cmd_energy(&args),
         "census" => cmd_census(&args),
@@ -93,6 +94,13 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(p) = args.str_flag("trace") {
         cfg.trace = Some(p.to_string());
     }
+    cfg.deadline_ms = args.u64_flag("deadline-ms", cfg.deadline_ms)?;
+    if let Some(v) = args.str_flag("faults") {
+        cfg.faults = Some(v.to_string());
+    }
+    if let Some(v) = args.str_flag("resume") {
+        cfg.resume = Some(v.to_string());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -160,6 +168,113 @@ fn cmd_worker(args: &Args) -> Result<()> {
         mftrain::potq::obs::set_trace_path(Some(path.to_string()));
     }
     mftrain::potq::serve_worker(addr, engine, threads)
+}
+
+/// `mft chaos` — a seeded self-healing soak. Trains the same toy model
+/// twice over loopback socket workers: once clean, once under a
+/// deterministic fault plan (drops / stalls / truncated / bit-flipped
+/// frames) with socket deadlines and backoff rejoin active. The chaos
+/// run must actually inject faults and heal (>= 1 rejoin), and its final
+/// state must be bit-identical to the clean run's — the digest-invariance
+/// law, exercised end to end. Exits nonzero on any violation.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use mftrain::coordinator::state_digest;
+    use mftrain::potq::dist::serve_on;
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::{FaultPlan, ShardPlan, ShardedMlp};
+    use mftrain::util::prng::Pcg32;
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    let seed = args.u64_flag("seed", 7)?;
+    let steps = args.u64_flag("steps", 24)?;
+    let spec = args.str_flag("faults").unwrap_or("seed=7,rate=0.3");
+    let deadline_ms = args.u64_flag("deadline-ms", 400)?;
+    let n_remotes = args.u64_flag("workers", 2)? as usize;
+    let engine = args.str_flag("engine").unwrap_or("scalar").to_string();
+    println!(
+        "[mft] chaos soak: seed {seed}, {steps} steps, {n_remotes} loopback worker(s), \
+         deadline {deadline_ms}ms, faults \"{spec}\""
+    );
+
+    // the dist test suite's toy task: class-conditioned clusters
+    let dims = [12usize, 16, 4];
+    let (batch, classes) = (16usize, 4u32);
+    let mut rng = Pcg32::new(seed);
+    let mut x = vec![0f32; batch * dims[0]];
+    let mut y = vec![0i32; batch];
+    for i in 0..batch {
+        let c = rng.below(classes) as i32;
+        y[i] = c;
+        for j in 0..dims[0] {
+            let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+            let centre = (c as f32 - classes as f32 / 2.0) * 0.5 * sign;
+            x[i * dims[0] + j] = centre + 0.3 * rng.normal();
+        }
+    }
+
+    // loopback `mft worker` equivalents, one detached serving thread
+    // each; each run gets a fresh grid so the two are independent
+    let spawn_grid = |n: usize| -> Result<Vec<String>> {
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(listener.local_addr()?.to_string());
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                let _ = serve_on(listener, &engine, 1);
+            });
+        }
+        Ok(addrs)
+    };
+
+    let run = |label: &str, plan: Option<FaultPlan>| -> Result<(Vec<f32>, u64, u64, u64)> {
+        let shard = ShardPlan::new(batch, 4, 2)?;
+        let mut t = ShardedMlp::new(MfMlp::init(NnConfig::mf(&dims), seed), shard, &engine, 1)?
+            .with_deadline(Some(Duration::from_millis(deadline_ms)))?
+            .with_faults(plan);
+        for addr in spawn_grid(n_remotes)? {
+            t.add_remote(&addr)?;
+        }
+        for _ in 0..steps {
+            t.train_step(&x, &y, 0.1)?;
+        }
+        let (injected, rejoins, hits) =
+            (t.faults_injected(), t.rejoin_count(), t.deadline_hit_count());
+        println!(
+            "[mft] chaos: {label} run done — {injected} fault(s) injected, {rejoins} \
+             rejoin(s), {hits} deadline hit(s), digest {:#018x}",
+            state_digest(&t.model.state_to_vec())
+        );
+        Ok((t.model.state_to_vec(), injected, rejoins, hits))
+    };
+
+    let (clean, _, _, _) = run("clean", None)?;
+    let (chaos, injected, rejoins, _) = run("faulted", Some(FaultPlan::parse(spec)?))?;
+
+    if let Some(path) = args.str_flag("clean-ckpt") {
+        Checkpoint { variant: "chaos_soak".into(), step: steps, state: clean.clone() }
+            .save(Path::new(path))?;
+        println!("[mft] chaos: clean checkpoint -> {path}");
+    }
+    if let Some(path) = args.str_flag("chaos-ckpt") {
+        Checkpoint { variant: "chaos_soak".into(), step: steps, state: chaos.clone() }
+            .save(Path::new(path))?;
+        println!("[mft] chaos: faulted checkpoint -> {path}");
+    }
+
+    if injected == 0 {
+        bail!("chaos soak injected no faults — raise rate or steps in \"{spec}\"");
+    }
+    if rejoins == 0 {
+        bail!("chaos soak saw no rejoin — the self-healing path was not exercised");
+    }
+    let (dc, df) = (state_digest(&clean), state_digest(&chaos));
+    if dc != df {
+        bail!("chaos digest {df:#018x} diverged from the clean run's {dc:#018x}");
+    }
+    println!("[mft] chaos: PASS — faulted run digest {df:#018x} is bit-identical to clean");
+    Ok(())
 }
 
 fn run_and_report(trainer: &mut Trainer) -> Result<()> {

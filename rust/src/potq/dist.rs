@@ -29,21 +29,34 @@
 //! Failure semantics: any socket error or malformed/corrupt frame drops
 //! that worker from the membership (elastic leave) and its tiles are
 //! recomputed locally within the step — the run completes with the same
-//! digest. Workers are stateless between connections: a restarted
-//! worker can rejoin at any step boundary.
+//! digest. A configurable socket deadline ([`RemoteWorker::set_deadline`])
+//! bounds how long a *stalled* (open but silent) peer can hold a step:
+//! past it the blocked read becomes a named deadline error and the same
+//! drop-and-reassign path absorbs it. Workers are stateless between
+//! connections: a restarted worker can rejoin at any step boundary, and
+//! the coordinator re-dials dropped members with capped backoff.
+//!
+//! Chaos: a [`super::faults::FaultPlan`] installed on a [`RemoteWorker`]
+//! injects deterministic drops / stalls / truncations / byte flips at
+//! the send and receive boundaries. Every injected fault manifests
+//! through a real failure surface (closed sockets, digest rejection on
+//! the worker, expired deadlines) and collapses into the elastic-leave
+//! path — so a chaos run's digest equals the fault-free run's.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::ops::Range;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::engine::{engine_by_name, KShardEngine, MacEngine, ENGINE_CHOICES};
+use super::faults::{Fault, FaultPlan, FaultSite};
 use super::nn::{
     GemmCensus, LayerGrads, MfMlp, NnConfig, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights,
 };
-use super::obs::{self, MetricRow};
+use super::obs::{self, MemberEventKind, MetricRow};
 use super::quantize::{fnv1a, PackedOperand, Reader};
 use crate::energy::MacCensus;
 use crate::util::rle;
@@ -60,6 +73,22 @@ const MAX_FRAME_BODY: usize = 1 << 30;
 
 /// Per-plane element cap inside a frame (f32 planes, code planes).
 const MAX_PLANE_ELEMS: usize = 1 << 26;
+
+/// Root message of an expired socket deadline. The vendored anyhow chain
+/// is string-only (no downcast), so callers recognize deadline errors by
+/// this marker via [`error_is_deadline`].
+pub(crate) const DEADLINE_MSG: &str = "socket deadline expired";
+
+/// Did this error chain bottom out in an expired socket deadline?
+pub(crate) fn error_is_deadline(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.contains(DEADLINE_MSG))
+}
+
+/// `SO_RCVTIMEO`/`SO_SNDTIMEO` expiry surfaces as `WouldBlock` on unix
+/// and `TimedOut` on windows.
+fn is_timeout_kind(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
 
 // ---------------------------------------------------------------------
 // framing
@@ -97,7 +126,11 @@ fn read_frame_opt(r: &mut impl Read, magic: &[u8; 8]) -> Result<Option<Vec<u8>>>
     let mut head = [0u8; 16];
     let mut got = 0usize;
     while got < 16 {
-        let n = r.read(&mut head[got..]).context("dist wire: frame header read")?;
+        let n = match r.read(&mut head[got..]) {
+            Ok(n) => n,
+            Err(e) if is_timeout_kind(&e) => bail!("dist wire: frame header read: {DEADLINE_MSG}"),
+            Err(e) => return Err(e).context("dist wire: frame header read"),
+        };
         if n == 0 {
             if got == 0 {
                 return Ok(None);
@@ -116,7 +149,12 @@ fn read_frame_opt(r: &mut impl Read, magic: &[u8; 8]) -> Result<Option<Vec<u8>>>
     let body_len = u64::from_le_bytes(head[8..16].try_into().expect("8 bytes")) as usize;
     ensure!(body_len <= MAX_FRAME_BODY, "dist wire: frame body {body_len} bytes over the cap");
     let mut body = vec![0u8; body_len];
-    r.read_exact(&mut body).context("dist wire: frame body read")?;
+    if let Err(e) = r.read_exact(&mut body) {
+        if is_timeout_kind(&e) {
+            bail!("dist wire: frame body read: {DEADLINE_MSG}");
+        }
+        return Err(e).context("dist wire: frame body read");
+    }
     Ok(Some(body))
 }
 
@@ -553,6 +591,11 @@ pub struct RemoteWorker {
     /// When the last step frame hit the wire — the start of the frame
     /// round-trip the next `recv_grads` closes out (metrics only).
     last_send: Option<Instant>,
+    /// per-socket I/O deadline (`SO_RCVTIMEO`/`SO_SNDTIMEO`); `None`
+    /// blocks forever, the pre-deadline behavior
+    deadline: Option<Duration>,
+    /// installed chaos plan, consulted at every send/recv boundary
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl RemoteWorker {
@@ -562,7 +605,13 @@ impl RemoteWorker {
         let stream =
             TcpStream::connect(addr).with_context(|| format!("connect to worker {addr}"))?;
         stream.set_nodelay(true).ok();
-        let mut rw = RemoteWorker { addr: addr.to_string(), stream, last_send: None };
+        let mut rw = RemoteWorker {
+            addr: addr.to_string(),
+            stream,
+            last_send: None,
+            deadline: None,
+            faults: None,
+        };
         let hello = encode_hello_body(cfg, kshard);
         write_frame(&mut rw.stream, HELLO_MAGIC, &hello)
             .with_context(|| format!("hello to worker {addr}"))?;
@@ -573,9 +622,34 @@ impl RemoteWorker {
         &self.addr
     }
 
+    /// Bound every read/write on this connection: a peer that stalls
+    /// longer than `deadline` turns the blocked syscall into a named
+    /// deadline error instead of hanging the coordinator.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(deadline)
+            .with_context(|| format!("set read deadline on worker {}", self.addr))?;
+        self.stream
+            .set_write_timeout(deadline)
+            .with_context(|| format!("set write deadline on worker {}", self.addr))?;
+        self.deadline = deadline;
+        Ok(())
+    }
+
+    /// Install (or clear) the chaos plan this connection consults.
+    pub(crate) fn set_faults(&mut self, plan: Option<Arc<FaultPlan>>) {
+        self.faults = plan;
+    }
+
     /// Ship one encoded step body ([`encode_step_body`]).
-    pub(crate) fn send_step(&mut self, body: &[u8]) -> Result<()> {
+    pub(crate) fn send_step(&mut self, step: u64, body: &[u8]) -> Result<()> {
         let _sp = obs::span("send_step", "dist");
+        if let Some(plan) = self.faults.clone() {
+            if let Some(f) = plan.decide(step, &self.addr, FaultSite::Send) {
+                plan.note_injected();
+                return self.inject_send(step, f, body);
+            }
+        }
         if obs::metrics_enabled() {
             obs::counter_add(&format!("wire.bytes_sent.{}", self.addr), body.len() as u64);
             self.last_send = Some(Instant::now());
@@ -583,12 +657,79 @@ impl RemoteWorker {
         write_frame(&mut self.stream, STEP_MAGIC, body)
     }
 
-    /// Block for this step's grad frame. A hangup or any malformed frame
-    /// is an error — the coordinator drops the member and reassigns.
+    /// Manifest an injected send-site fault. Every kind collapses into
+    /// the elastic drop-and-reassign path, each through a different real
+    /// failure surface: `Drop` errors here; `Flip` ships a frame the
+    /// worker's digest check rejects; `Truncate` cuts the body mid-frame
+    /// so the worker dies mid-`read_exact`; `Stall` goes silent so the
+    /// receive deadline fires (degraded to `Drop` when no deadline is
+    /// configured — silence would otherwise hang the step).
+    fn inject_send(&mut self, step: u64, fault: Fault, body: &[u8]) -> Result<()> {
+        match fault {
+            Fault::Stall if self.deadline.is_some() => Ok(()),
+            Fault::Drop | Fault::Stall => {
+                self.stream.shutdown(Shutdown::Both).ok();
+                bail!(
+                    "fault injection: dropped connection to worker {} at step {step}",
+                    self.addr
+                )
+            }
+            Fault::Truncate(salt) => {
+                let keep = (salt % body.len() as u64) as usize;
+                let mut head = Vec::with_capacity(16);
+                head.extend_from_slice(STEP_MAGIC);
+                head.extend_from_slice(&(body.len() as u64).to_le_bytes());
+                self.stream.write_all(&head).context("dist wire: frame write")?;
+                self.stream.write_all(&body[..keep]).context("dist wire: frame write")?;
+                self.stream.flush().context("dist wire: frame flush")?;
+                // half-close so the worker's read_exact sees EOF now
+                // rather than blocking on the bytes that never come
+                self.stream.shutdown(Shutdown::Write).ok();
+                Ok(())
+            }
+            Fault::Flip(salt) => {
+                let mut corrupt = body.to_vec();
+                let at = (salt % body.len() as u64) as usize;
+                corrupt[at] ^= 1 << ((salt >> 32) & 7);
+                write_frame(&mut self.stream, STEP_MAGIC, &corrupt)
+            }
+        }
+    }
+
+    /// Block for this step's grad frame. A hangup, any malformed frame,
+    /// or an expired deadline is an error — the coordinator drops the
+    /// member and reassigns.
     pub(crate) fn recv_grads(&mut self, step: u64) -> Result<Vec<(usize, StepResult)>> {
         let sp = obs::span("recv_grads", "dist");
-        let body = read_frame_opt(&mut self.stream, GRAD_MAGIC)?
-            .ok_or_else(|| anyhow!("worker {} closed the connection mid-step", self.addr))?;
+        if let Some(plan) = self.faults.clone() {
+            // only a drop makes sense coordinator-side on the read path;
+            // stall/corruption faults are send-site constructs
+            if matches!(plan.decide(step, &self.addr, FaultSite::Recv), Some(Fault::Drop)) {
+                plan.note_injected();
+                self.stream.shutdown(Shutdown::Both).ok();
+                bail!(
+                    "fault injection: dropped connection to worker {} at step {step}",
+                    self.addr
+                );
+            }
+        }
+        let t0 = Instant::now();
+        let body = match read_frame_opt(&mut self.stream, GRAD_MAGIC) {
+            Ok(Some(body)) => body,
+            Ok(None) => bail!("worker {} closed the connection mid-step", self.addr),
+            Err(e) if error_is_deadline(&e) => {
+                return Err(e).with_context(|| {
+                    format!(
+                        "worker {}: no grad frame within the {:?} step deadline \
+                         ({:?} elapsed)",
+                        self.addr,
+                        self.deadline.unwrap_or_default(),
+                        t0.elapsed()
+                    )
+                });
+            }
+            Err(e) => return Err(e),
+        };
         drop(sp);
         let _sp = obs::span("decode_grads", "dist");
         let (got, results, member_metrics) = decode_grad_body(&body)?;
@@ -640,7 +781,16 @@ pub fn serve_on(listener: TcpListener, engine: &str, threads: usize) -> Result<(
                 let engine = engine.to_string();
                 std::thread::spawn(move || {
                     if let Err(e) = handle_conn(stream, &engine, threads) {
+                        // log + record, then let the thread end: the
+                        // accept loop keeps serving, so one bad client
+                        // never affects the next connection
                         eprintln!("[mft] worker: connection {peer} failed: {e:#}");
+                        obs::member_event(
+                            0,
+                            MemberEventKind::Drop,
+                            &peer.to_string(),
+                            &format!("connection failed: {e:#}"),
+                        );
                     }
                 });
             }
@@ -1127,6 +1277,133 @@ mod tests {
         let cats = rep.categories();
         for want in ["dist", "gemm", "quantize"] {
             assert!(cats.contains(want), "span category '{want}' missing from {cats:?}");
+        }
+    }
+
+    #[test]
+    fn worker_keeps_serving_after_bad_connections() {
+        // two hostile clients poison their own connections; the accept
+        // loop must shrug them off and serve the next honest coordinator
+        let addr = spawn_worker_thread("scalar");
+        {
+            // garbage where the hello frame belongs
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"NOTAFRAMEGARBAGE").unwrap();
+        }
+        {
+            // a hello header announcing a body that never arrives
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(HELLO_MAGIC).unwrap();
+            s.write_all(&64u64.to_le_bytes()).unwrap();
+        }
+        let (x, y) = toy_batch(61, 16, 12, 4);
+        let mk = || {
+            let plan = ShardPlan::new(16, 4, 2).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 67), plan, "scalar", 1)
+                .unwrap()
+        };
+        let mut local = mk();
+        let mut healthy = mk();
+        healthy.add_remote(&addr).unwrap();
+        for _ in 0..2 {
+            local.train_step(&x, &y, 0.1).unwrap();
+            healthy.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert_eq!(healthy.remote_count(), 1, "the worker still serves after bad clients");
+        assert_eq!(local.model.state_to_vec(), healthy.model.state_to_vec());
+    }
+
+    #[test]
+    fn stalled_peer_times_out_within_the_deadline_and_reassigns() {
+        // a peer that accepts, swallows frames, and never answers — open
+        // but silent, so only the socket deadline can unblock the step.
+        // (distinct from the accept-then-hangup test above, where the
+        // failure is an immediate EOF rather than silence)
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { break };
+                let _ = read_frame_opt(&mut stream, HELLO_MAGIC);
+                let mut buf = [0u8; 4096];
+                while let Ok(n) = stream.read(&mut buf) {
+                    if n == 0 {
+                        break;
+                    }
+                }
+            }
+        });
+        let (x, y) = toy_batch(71, 16, 12, 4);
+        let mk = || {
+            let plan = ShardPlan::new(16, 4, 2).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 73), plan, "scalar", 1)
+                .unwrap()
+        };
+        let mut local = mk();
+        let mut stalled = mk().with_deadline(Some(Duration::from_millis(300))).unwrap();
+        stalled.add_remote(&addr).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            local.train_step(&x, &y, 0.1).unwrap();
+            stalled.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "the deadline bounded the stall: {:?}",
+            t0.elapsed()
+        );
+        assert!(stalled.deadline_hit_count() >= 1, "the deadline fired at least once");
+        assert_eq!(stalled.remote_count(), 0, "the silent member left the grid");
+        assert_eq!(local.model.state_to_vec(), stalled.model.state_to_vec());
+    }
+
+    #[test]
+    fn faultplan_transient_drop_rejoins_and_keeps_the_digest() {
+        let (x, y) = toy_batch(79, 16, 12, 4);
+        let mk = || {
+            let plan = ShardPlan::new(16, 4, 2).unwrap();
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 83), plan, "scalar", 1)
+                .unwrap()
+        };
+        let mut local = mk();
+        // every send at step 2 drops the connection; the window closes
+        // at 3, so the step-3 re-dial finds the worker healthy again
+        let plan = FaultPlan::parse("seed=1,rate=1,kinds=drop,after=2,until=3").unwrap();
+        let mut chaos = mk().with_faults(Some(plan));
+        chaos.add_remote(&spawn_worker_thread("scalar")).unwrap();
+        for _ in 0..6 {
+            local.train_step(&x, &y, 0.1).unwrap();
+            chaos.train_step(&x, &y, 0.1).unwrap();
+        }
+        assert!(chaos.faults_injected() >= 1, "the drop fired");
+        assert!(chaos.rejoin_count() >= 1, "the member re-dialed back in");
+        assert_eq!(chaos.remote_count(), 1, "membership healed");
+        assert_eq!(local.model.state_to_vec(), chaos.model.state_to_vec());
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_and_reassigned() {
+        // a flipped byte trips the worker's digest check; a truncated
+        // body EOFs its read_exact — both collapse into drop-and-rejoin
+        for kinds in ["flip", "truncate"] {
+            let (x, y) = toy_batch(89, 16, 12, 4);
+            let mk = || {
+                let plan = ShardPlan::new(16, 4, 2).unwrap();
+                ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 97), plan, "scalar", 1)
+                    .unwrap()
+            };
+            let mut local = mk();
+            let spec = format!("seed=2,rate=1,kinds={kinds},after=1,until=2");
+            let plan = FaultPlan::parse(&spec).unwrap();
+            let mut chaos = mk().with_faults(Some(plan));
+            chaos.add_remote(&spawn_worker_thread("scalar")).unwrap();
+            for _ in 0..4 {
+                local.train_step(&x, &y, 0.1).unwrap();
+                chaos.train_step(&x, &y, 0.1).unwrap();
+            }
+            assert!(chaos.faults_injected() >= 1, "{kinds}: the fault fired");
+            assert_eq!(chaos.remote_count(), 1, "{kinds}: membership healed");
+            assert_eq!(local.model.state_to_vec(), chaos.model.state_to_vec(), "{kinds}");
         }
     }
 }

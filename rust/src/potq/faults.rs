@@ -1,0 +1,345 @@
+//! Deterministic fault injection for the dist grid.
+//!
+//! A [`FaultPlan`] decides, purely from `(seed, step, member, site)`, whether
+//! a fault fires at a given I/O boundary and which kind it is. The decision
+//! is a hash of those coordinates — no shared stream, no call-order
+//! dependence — so the same plan injects the same faults no matter how many
+//! members run, in what order they are polled, or whether the run is
+//! replayed. Every injected fault collapses into the drop-and-reassign path
+//! the elastic membership already absorbs, so a chaos run's checkpoint
+//! digest stays bit-identical to the fault-free run by construction.
+//!
+//! Plans are built from a compact spec string (`--faults` / `[faults]`):
+//!
+//! ```text
+//! seed=7,rate=0.25,kinds=drop+stall,after=2,until=20
+//! ```
+//!
+//! `rate` is the per-(step, member, site) firing probability; `kinds`
+//! selects the fault mix; `after`/`until` bound the eligible step window
+//! (`until` exclusive). `rate=1,after=S,until=S+1` gives a guaranteed
+//! injection at exactly step S — the form the tests use.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::prng::SplitMix64;
+use anyhow::{bail, Result};
+
+use super::quantize::fnv1a;
+
+/// Where in the step's I/O the plan is being consulted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Coordinator about to send a STEP frame to a remote.
+    Send,
+    /// Coordinator about to read a GRAD frame from a remote.
+    Recv,
+}
+
+impl FaultSite {
+    fn salt(self) -> u64 {
+        match self {
+            FaultSite::Send => 0x5345,
+            FaultSite::Recv => 0x5243,
+        }
+    }
+}
+
+/// A concrete fault to inject. The payload `u64` is a deterministic salt
+/// the injection site uses to derive positions (which byte to flip, where
+/// to truncate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Close the connection instead of performing the I/O.
+    Drop,
+    /// Go silent: skip the write so the peer waits out the deadline.
+    Stall,
+    /// Write the frame header but cut the body short at a salted offset.
+    Truncate(u64),
+    /// Flip one salted byte in the sealed body before writing.
+    Flip(u64),
+}
+
+impl Fault {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fault::Drop => "drop",
+            Fault::Stall => "stall",
+            Fault::Truncate(_) => "truncate",
+            Fault::Flip(_) => "flip",
+        }
+    }
+}
+
+const KIND_DROP: u8 = 1 << 0;
+const KIND_STALL: u8 = 1 << 1;
+const KIND_TRUNCATE: u8 = 1 << 2;
+const KIND_FLIP: u8 = 1 << 3;
+const KIND_ALL: u8 = KIND_DROP | KIND_STALL | KIND_TRUNCATE | KIND_FLIP;
+
+/// Seeded, order-independent fault schedule. Cheap to consult (two hash
+/// mixes per decision) and inert unless installed, so the fault layer
+/// costs nothing when chaos is off.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Firing probability per (step, member, site), scaled to u32 range.
+    threshold: u32,
+    kinds: u8,
+    after: u64,
+    until: Option<u64>,
+    injected: AtomicU64,
+}
+
+impl Clone for FaultPlan {
+    fn clone(&self) -> FaultPlan {
+        FaultPlan {
+            seed: self.seed,
+            threshold: self.threshold,
+            kinds: self.kinds,
+            after: self.after,
+            until: self.until,
+            injected: AtomicU64::new(self.injected.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `key=value,...` spec. Keys: `seed` (u64, default 0), `rate`
+    /// (probability in (0, 1], default 0.1), `kinds`
+    /// (`drop|stall|truncate|flip` joined with `+`, default all), `after`
+    /// (first eligible step, default 0), `until` (first ineligible step,
+    /// default unbounded).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut rate = 0.1f64;
+        let mut kinds = KIND_ALL;
+        let mut after = 0u64;
+        let mut until = None;
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (key, val) = match part.split_once('=') {
+                Some((k, v)) => (k.trim(), v.trim()),
+                None => bail!("faults spec: '{part}' is not key=value"),
+            };
+            match key {
+                "seed" => {
+                    seed = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults spec: bad seed '{val}'"))?;
+                }
+                "rate" => {
+                    rate = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults spec: bad rate '{val}'"))?;
+                    if !(rate > 0.0 && rate <= 1.0) {
+                        bail!("faults spec: rate must be in (0, 1], got {rate}");
+                    }
+                }
+                "kinds" => {
+                    kinds = 0;
+                    for k in val.split('+').filter(|k| !k.is_empty()) {
+                        kinds |= match k {
+                            "drop" => KIND_DROP,
+                            "stall" => KIND_STALL,
+                            "truncate" => KIND_TRUNCATE,
+                            "flip" => KIND_FLIP,
+                            other => bail!(
+                                "faults spec: unknown kind '{other}' \
+                                 (want drop|stall|truncate|flip)"
+                            ),
+                        };
+                    }
+                    if kinds == 0 {
+                        bail!("faults spec: kinds selects no fault kinds");
+                    }
+                }
+                "after" => {
+                    after = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults spec: bad after '{val}'"))?;
+                }
+                "until" => {
+                    let u: u64 = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("faults spec: bad until '{val}'"))?;
+                    until = Some(u);
+                }
+                other => bail!(
+                    "faults spec: unknown key '{other}' \
+                     (want seed|rate|kinds|after|until)"
+                ),
+            }
+        }
+        if let Some(u) = until {
+            if u <= after {
+                bail!("faults spec: until ({u}) must be > after ({after})");
+            }
+        }
+        let threshold = (rate * u32::MAX as f64).round().min(u32::MAX as f64) as u32;
+        Ok(FaultPlan { seed, threshold, kinds, after, until, injected: AtomicU64::new(0) })
+    }
+
+    /// Decide whether a fault fires at this (step, member, site) point.
+    /// Pure in its inputs: the same coordinates always give the same
+    /// answer for the same plan. The injection site calls
+    /// [`FaultPlan::note_injected`] when it actually manifests the fault.
+    pub fn decide(&self, step: u64, member: &str, site: FaultSite) -> Option<Fault> {
+        if step < self.after || self.until.is_some_and(|u| step >= u) {
+            return None;
+        }
+        // order-independent: hash the coordinates, then run SplitMix64 on
+        // the mix so neighbouring (step, member) points decorrelate
+        let mix = self
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(step.wrapping_mul(0xA24BAED4963EE407))
+            .wrapping_add(fnv1a(member.as_bytes()))
+            .wrapping_add(site.salt());
+        let mut sm = SplitMix64::new(mix);
+        let draw = sm.next_u64();
+        if (draw as u32) > self.threshold {
+            return None;
+        }
+        let enabled: Vec<u8> = [KIND_DROP, KIND_STALL, KIND_TRUNCATE, KIND_FLIP]
+            .into_iter()
+            .filter(|k| self.kinds & k != 0)
+            .collect();
+        let pick = sm.next_u64();
+        let salt = sm.next_u64();
+        Some(match enabled[(pick % enabled.len() as u64) as usize] {
+            KIND_DROP => Fault::Drop,
+            KIND_STALL => Fault::Stall,
+            KIND_TRUNCATE => Fault::Truncate(salt),
+            _ => Fault::Flip(salt),
+        })
+    }
+
+    /// Record one manifested fault (the injection site calls this right
+    /// before acting on a [`Fault`] it drew from [`FaultPlan::decide`]).
+    pub fn note_injected(&self) {
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        super::obs::counter_add("faults.injected", 1);
+    }
+
+    /// How many faults this plan has manifested so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_full_spec_and_defaults() {
+        let p = FaultPlan::parse("seed=7,rate=0.25,kinds=drop+stall,after=2,until=20").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.kinds, KIND_DROP | KIND_STALL);
+        assert_eq!(p.after, 2);
+        assert_eq!(p.until, Some(20));
+
+        let d = FaultPlan::parse("").unwrap();
+        assert_eq!(d.seed, 0);
+        assert_eq!(d.kinds, KIND_ALL);
+        assert_eq!(d.after, 0);
+        assert_eq!(d.until, None);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs_with_named_errors() {
+        for (spec, needle) in [
+            ("rate=0", "rate must be in (0, 1]"),
+            ("rate=1.5", "rate must be in (0, 1]"),
+            ("rate=x", "bad rate"),
+            ("kinds=gamma", "unknown kind 'gamma'"),
+            ("bogus=1", "unknown key 'bogus'"),
+            ("seed", "not key=value"),
+            ("after=5,until=5", "until (5) must be > after (5)"),
+        ] {
+            let e = format!("{:#}", FaultPlan::parse(spec).unwrap_err());
+            assert!(e.contains(needle), "spec '{spec}': {e}");
+        }
+    }
+
+    #[test]
+    fn decide_is_deterministic_and_order_independent() {
+        let p = FaultPlan::parse("seed=3,rate=0.5").unwrap();
+        let q = FaultPlan::parse("seed=3,rate=0.5").unwrap();
+        // q consults the same coordinates in a scrambled order; every
+        // answer must match p's
+        let mut answers = Vec::new();
+        for step in 0..32u64 {
+            for member in ["127.0.0.1:7001", "127.0.0.1:7002"] {
+                for site in [FaultSite::Send, FaultSite::Recv] {
+                    answers.push((step, member, site, p.decide(step, member, site)));
+                }
+            }
+        }
+        for (step, member, site, want) in answers.iter().rev() {
+            assert_eq!(q.decide(*step, member, *site), *want);
+        }
+        // a 50% plan over 128 points fires with overwhelming probability
+        let fired = answers.iter().filter(|(_, _, _, f)| f.is_some()).count();
+        assert!(fired > 0, "rate=0.5 plan never fired in 128 draws");
+    }
+
+    #[test]
+    fn decide_respects_the_step_window() {
+        let p = FaultPlan::parse("rate=1,after=4,until=6").unwrap();
+        for step in [0, 3, 6, 7, 100] {
+            assert_eq!(p.decide(step, "w", FaultSite::Send), None, "step {step}");
+        }
+        assert!(p.decide(4, "w", FaultSite::Send).is_some());
+        assert!(p.decide(5, "w", FaultSite::Recv).is_some());
+    }
+
+    #[test]
+    fn injected_counts_only_manifested_faults() {
+        let p = FaultPlan::parse("rate=1").unwrap();
+        assert!(p.decide(0, "w", FaultSite::Send).is_some());
+        assert_eq!(p.injected(), 0, "a decision alone is not an injection");
+        p.note_injected();
+        p.note_injected();
+        assert_eq!(p.injected(), 2);
+        // clones carry the count forward but diverge after
+        let q = p.clone();
+        q.note_injected();
+        assert_eq!(q.injected(), 3);
+        assert_eq!(p.injected(), 2);
+    }
+
+    #[test]
+    fn kinds_filter_constrains_what_fires() {
+        let p = FaultPlan::parse("rate=1,kinds=flip").unwrap();
+        for step in 0..16u64 {
+            match p.decide(step, "w", FaultSite::Send) {
+                Some(Fault::Flip(_)) => {}
+                other => panic!("kinds=flip produced {other:?}"),
+            }
+        }
+        let p = FaultPlan::parse("rate=1,kinds=drop+stall").unwrap();
+        for step in 0..16u64 {
+            match p.decide(step, "w", FaultSite::Recv) {
+                Some(Fault::Drop) | Some(Fault::Stall) => {}
+                other => panic!("kinds=drop+stall produced {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_members_and_sites_draw_independently() {
+        let p = FaultPlan::parse("seed=11,rate=0.5,kinds=drop").unwrap();
+        let mut per_member = [0u32; 2];
+        for step in 0..64u64 {
+            for (i, member) in ["a:1", "b:2"].into_iter().enumerate() {
+                if p.decide(step, member, FaultSite::Send).is_some() {
+                    per_member[i] += 1;
+                }
+            }
+        }
+        // both members see faults, and not in lockstep
+        assert!(per_member.iter().all(|&n| n > 8), "{per_member:?}");
+        assert_ne!(per_member[0], per_member[1], "members drew identically");
+    }
+}

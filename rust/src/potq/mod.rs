@@ -36,6 +36,7 @@
 
 pub mod dist;
 pub mod engine;
+pub mod faults;
 mod mfmac;
 pub mod nn;
 pub mod obs;
@@ -44,6 +45,7 @@ pub mod shard;
 pub mod simd;
 
 pub use dist::{serve_worker, RemoteWorker};
+pub use faults::{Fault, FaultPlan, FaultSite};
 pub use obs::{MemberEvent, MemberEventKind, MetricKind, MetricRow, TraceReport};
 pub use engine::{
     engine_by_name, finish_kslabs, kshard_cuts, kslab_bounds, BlockedEngine, KShardEngine,

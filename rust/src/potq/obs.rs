@@ -301,6 +301,7 @@ pub enum MemberEventKind {
     Join,
     Drop,
     Reassign,
+    Rejoin,
 }
 
 impl MemberEventKind {
@@ -309,6 +310,7 @@ impl MemberEventKind {
             MemberEventKind::Join => "join",
             MemberEventKind::Drop => "drop",
             MemberEventKind::Reassign => "reassign",
+            MemberEventKind::Rejoin => "rejoin",
         }
     }
 }

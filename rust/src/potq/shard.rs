@@ -43,12 +43,13 @@ use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::dist::{encode_step_body, RemoteWorker};
+use super::dist::{encode_step_body, error_is_deadline, RemoteWorker};
 use super::engine::{engine_by_name, KShardEngine, MacEngine};
+use super::faults::FaultPlan;
 use super::nn::{LayerGrads, MfMlp, ProbeRaw, Scheme, StepCensus, StepResult, StepWeights};
 use super::obs::{self, MemberEventKind};
 use super::quantize::{pot_emax, scale_pow2, PackMode, NIBBLE_EMAX_MAX};
@@ -188,15 +189,19 @@ pub struct StepFailure {
     pub dead: Vec<usize>,
     /// per-tile results that did arrive, in receipt order
     pub completed: Vec<(usize, StepResult)>,
+    /// how long the dispatch ran before failing — under a step deadline
+    /// this is how much of the budget the dead workers consumed
+    pub elapsed: Duration,
 }
 
 impl std::fmt::Display for StepFailure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "shard pool worker(s) {:?} died mid-step ({} tile(s) completed)",
+            "shard pool worker(s) {:?} died mid-step ({} tile(s) completed, {:?} elapsed)",
             self.dead,
-            self.completed.len()
+            self.completed.len(),
+            self.elapsed
         )
     }
 }
@@ -252,10 +257,18 @@ impl WorkerPool {
     /// (deterministic regardless of completion order). A worker that
     /// panics mid-step can never report, and its siblings keep the result
     /// channel open — so collection polls worker liveness instead of
-    /// blocking forever. Worker death is a [`StepFailure`] *error* (never
-    /// a panic) carrying everything that did complete, so the caller can
-    /// reassign the missing tiles.
-    fn run(&self, job: Arc<StepJob>) -> std::result::Result<Vec<(usize, StepResult)>, StepFailure> {
+    /// blocking forever. `deadline` bounds the whole dispatch (the same
+    /// step deadline the remote sockets run under): past it, every
+    /// unreported worker is treated as dead and its tiles reassigned;
+    /// `None` waits forever, polling at the legacy 50 ms. Worker death is
+    /// a [`StepFailure`] *error* (never a panic) carrying everything that
+    /// did complete, so the caller can reassign the missing tiles.
+    fn run(
+        &self,
+        job: Arc<StepJob>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<Vec<(usize, StepResult)>, StepFailure> {
+        let t0 = Instant::now();
         let workers = self.txs.len();
         let mut dead: Vec<usize> = Vec::new();
         // reported[wid]: result received, or wid already counted dead
@@ -267,10 +280,15 @@ impl WorkerPool {
             }
         }
         drop(job);
+        // poll liveness at ~1/20 of the deadline so expiry is detected
+        // promptly without spinning
+        let poll = deadline.map_or(Duration::from_millis(50), |d| {
+            (d / 20).clamp(Duration::from_millis(5), Duration::from_millis(50))
+        });
         let mut completed: Vec<(usize, StepResult)> = Vec::new();
         let mut pending = reported.iter().filter(|&&r| !r).count();
         while pending > 0 {
-            match self.rx.recv_timeout(Duration::from_millis(50)) {
+            match self.rx.recv_timeout(poll) {
                 Ok((wid, batch)) => {
                     completed.extend(batch);
                     if !reported[wid] {
@@ -279,12 +297,22 @@ impl WorkerPool {
                     }
                     // check liveness on every receipt, not only on
                     // timeout: a worker that dies after its siblings
-                    // report would otherwise be detected one 50 ms poll
-                    // late
+                    // report would otherwise be detected one poll late
                     pending -= Self::sweep_dead(&self.handles, &mut reported, &mut dead);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     pending -= Self::sweep_dead(&self.handles, &mut reported, &mut dead);
+                    if pending > 0 && deadline.is_some_and(|d| t0.elapsed() >= d) {
+                        // step deadline expired: every unreported worker
+                        // is dead to this step, its tiles reassigned
+                        for (wid, r) in reported.iter_mut().enumerate() {
+                            if !*r {
+                                *r = true;
+                                dead.push(wid);
+                            }
+                        }
+                        break;
+                    }
                 }
                 Err(RecvTimeoutError::Disconnected) => {
                     for (wid, r) in reported.iter_mut().enumerate() {
@@ -300,7 +328,7 @@ impl WorkerPool {
         if dead.is_empty() {
             Ok(completed)
         } else {
-            Err(StepFailure { dead, completed })
+            Err(StepFailure { dead, completed, elapsed: t0.elapsed() })
         }
     }
 
@@ -362,7 +390,33 @@ pub struct ShardedMlp {
     /// remote socket workers (`mft worker` processes), elastic members of
     /// the round-robin step grid after the local threads
     remotes: Vec<RemoteWorker>,
+    /// step deadline shared by the local pool dispatch and every remote
+    /// socket (`None` = wait forever, the legacy behavior)
+    deadline: Option<Duration>,
+    /// installed chaos plan, shared with every remote connection
+    faults: Option<Arc<FaultPlan>>,
+    /// dropped remotes being re-dialed at step boundaries with capped
+    /// exponential backoff
+    pending_rejoin: Vec<PendingRejoin>,
+    /// lifetime counters, always on (unlike the gated obs metrics) so
+    /// tests and `mft chaos` can assert on them directly
+    rejoins: u64,
+    deadline_hits: u64,
 }
+
+/// One dropped remote awaiting a re-dial: retried at the first step
+/// boundary at or past `next_step`, with the gap between attempts
+/// doubling (capped) until the attempt budget runs out.
+struct PendingRejoin {
+    addr: String,
+    next_step: u64,
+    attempt: u32,
+}
+
+/// Give up on a dropped remote after this many failed re-dials.
+const REJOIN_MAX_ATTEMPTS: u32 = 6;
+/// Backoff cap: never wait more than this many steps between re-dials.
+const REJOIN_BACKOFF_CAP_STEPS: u64 = 32;
 
 impl ShardedMlp {
     /// `engine`/`threads` name the per-worker [`crate::potq::MacEngine`]
@@ -389,6 +443,11 @@ impl ShardedMlp {
             pool,
             solo,
             remotes: Vec::new(),
+            deadline: None,
+            faults: None,
+            pending_rejoin: Vec::new(),
+            rejoins: 0,
+            deadline_hits: 0,
         })
     }
 
@@ -396,9 +455,14 @@ impl ShardedMlp {
     /// it to the step membership. Elastic join: takes effect from the
     /// next step, with the round-robin plan recomputed over the new
     /// member count — digests are unchanged because tile granularity is a
-    /// plan property and the combine walks tiles in index order.
+    /// plan property and the combine walks tiles in index order. The
+    /// *initial* connect is a hard error (a misspelled `--remote` should
+    /// fail the run, not silently shrink it); only members that were once
+    /// healthy get the backoff re-dial treatment.
     pub fn add_remote(&mut self, addr: &str) -> Result<()> {
-        let r = RemoteWorker::connect(addr, &self.model.cfg, self.plan.kshard)?;
+        let mut r = RemoteWorker::connect(addr, &self.model.cfg, self.plan.kshard)?;
+        r.set_deadline(self.deadline)?;
+        r.set_faults(self.faults.clone());
         obs::member_event(self.model.steps, MemberEventKind::Join, addr, "remote worker");
         self.remotes.push(r);
         Ok(())
@@ -407,6 +471,94 @@ impl ShardedMlp {
     /// Remote socket workers currently in the membership.
     pub fn remote_count(&self) -> usize {
         self.remotes.len()
+    }
+
+    /// Bound every step dispatch — the local pool collect and each remote
+    /// socket read/write — by one shared deadline. A member that blows it
+    /// becomes a named failure whose tiles reassign in-step; `None` (the
+    /// default) waits forever.
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Result<ShardedMlp> {
+        for r in &mut self.remotes {
+            r.set_deadline(deadline)?;
+        }
+        self.deadline = deadline;
+        Ok(self)
+    }
+
+    /// Install a deterministic chaos plan, consulted at every remote
+    /// send/recv boundary (current members and later joins alike).
+    pub fn with_faults(mut self, plan: Option<FaultPlan>) -> ShardedMlp {
+        let plan = plan.map(Arc::new);
+        for r in &mut self.remotes {
+            r.set_faults(plan.clone());
+        }
+        self.faults = plan;
+        self
+    }
+
+    /// Successful backoff re-dials of dropped members over this run.
+    pub fn rejoin_count(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// Step-deadline expiries observed on remote members over this run.
+    pub fn deadline_hit_count(&self) -> u64 {
+        self.deadline_hits
+    }
+
+    /// Faults the installed plan has manifested (0 without a plan).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults.as_ref().map_or(0, |p| p.injected())
+    }
+
+    /// Re-dial dropped remotes whose backoff window has elapsed — called
+    /// once per step at the boundary, before tiles are assigned, so a
+    /// successful rejoin takes part in the step. A failed dial
+    /// reschedules with the gap doubling per attempt (capped) until the
+    /// budget is spent; membership digests are invariant either way.
+    fn try_rejoins(&mut self, step: u64) {
+        let mut still: Vec<PendingRejoin> = Vec::new();
+        for mut p in std::mem::take(&mut self.pending_rejoin) {
+            if p.next_step > step {
+                still.push(p);
+                continue;
+            }
+            let dial =
+                RemoteWorker::connect(&p.addr, &self.model.cfg, self.plan.kshard).and_then(
+                    |mut r| {
+                        r.set_deadline(self.deadline)?;
+                        Ok(r)
+                    },
+                );
+            match dial {
+                Ok(mut r) => {
+                    r.set_faults(self.faults.clone());
+                    eprintln!("[mft] remote worker {} rejoined at step {step}", p.addr);
+                    obs::member_event(
+                        step,
+                        MemberEventKind::Rejoin,
+                        &p.addr,
+                        &format!("reconnected after {} failed re-dial(s)", p.attempt),
+                    );
+                    obs::counter_add("member.rejoins", 1);
+                    self.rejoins += 1;
+                    self.remotes.push(r);
+                }
+                Err(_) if p.attempt + 1 < REJOIN_MAX_ATTEMPTS => {
+                    p.attempt += 1;
+                    p.next_step = step + (1u64 << p.attempt).min(REJOIN_BACKOFF_CAP_STEPS);
+                    still.push(p);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "[mft] remote worker {} did not return after {} re-dials; giving up: {e:#}",
+                        p.addr,
+                        p.attempt + 1
+                    );
+                }
+            }
+        }
+        self.pending_rejoin = still;
     }
 
     /// Choose the operand cache's physical code layout (`--pack`).
@@ -519,6 +671,10 @@ impl ShardedMlp {
         let d_in = self.model.cfg.dims[0];
         assert_eq!(y.len(), plan.batch, "batch size does not match the shard plan");
         assert_eq!(x.len(), plan.batch * d_in, "x does not match (batch, d_in)");
+        let step = self.model.steps;
+        // (0) step boundary: re-dial dropped members whose backoff has
+        // elapsed, so a healed remote takes tiles this very step
+        self.try_rejoins(step);
         // the step-persistent operand cache: weights quantized + k-panel
         // packed once (nibble-packed under the configured layout),
         // consumed by every tile on every member
@@ -530,7 +686,6 @@ impl ShardedMlp {
         // (1) ship step frames to the remote members (members
         // locals..locals+R of the round-robin grid) before computing
         // locally, so the sockets overlap with local work
-        let step = self.model.steps;
         let mut failed = vec![false; self.remotes.len()];
         let mut assigned: Vec<Vec<usize>> = Vec::with_capacity(self.remotes.len());
         for ri in 0..self.remotes.len() {
@@ -544,7 +699,7 @@ impl ShardedMlp {
             }
             let body =
                 encode_step_body(&self.model, &weights, x, y, &tiles, want_grads, want_probe, step);
-            if let Err(e) = self.remotes[ri].send_step(&body) {
+            if let Err(e) = self.remotes[ri].send_step(step, &body) {
                 eprintln!(
                     "[mft] remote worker {} dropped at step {step}: {e:#}",
                     self.remotes[ri].addr()
@@ -586,7 +741,7 @@ impl ShardedMlp {
                     want_grads,
                     want_probe,
                 });
-                match pool.run(job) {
+                match pool.run(job, self.deadline) {
                     Ok(results) => {
                         for (t, res) in results {
                             slots[t] = Some(res);
@@ -642,6 +797,10 @@ impl ShardedMlp {
                     }
                 }
                 Err(e) => {
+                    if error_is_deadline(&e) {
+                        self.deadline_hits += 1;
+                        obs::counter_add("step.deadline_hits", 1);
+                    }
                     eprintln!(
                         "[mft] remote worker {} failed at step {step}: {e:#}; \
                          reassigning its tiles",
@@ -659,9 +818,21 @@ impl ShardedMlp {
         }
 
         // (4) elastic leave: drop failed members from the next step's grid
+        // and queue them for backoff re-dial at a later step boundary
         if failed.iter().any(|&f| f) {
-            let mut it = failed.iter();
-            self.remotes.retain(|_| !*it.next().unwrap());
+            let mut kept = Vec::with_capacity(self.remotes.len());
+            for (ri, r) in self.remotes.drain(..).enumerate() {
+                if failed[ri] {
+                    self.pending_rejoin.push(PendingRejoin {
+                        addr: r.addr().to_string(),
+                        next_step: step + 1,
+                        attempt: 0,
+                    });
+                } else {
+                    kept.push(r);
+                }
+            }
+            self.remotes = kept;
         }
 
         // (5) in-step tile reassignment: recompute anything still missing
@@ -1008,12 +1179,13 @@ mod tests {
             want_grads: true,
             want_probe: false,
         });
-        let err = pool.run(job).unwrap_err();
+        let err = pool.run(job, None).unwrap_err();
         assert_eq!(err.dead, vec![1]);
         let got: Vec<usize> = err.completed.iter().map(|(t, _)| *t).collect();
         assert_eq!(got, vec![0], "worker 0's tile still arrives");
         let msg = err.to_string();
         assert!(msg.contains("died mid-step"), "{msg}");
+        assert!(msg.contains("elapsed"), "{msg}");
     }
 
     #[test]

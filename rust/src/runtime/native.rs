@@ -39,6 +39,12 @@ pub struct NativeSession {
     /// construction — unreachable workers are a startup error, while
     /// mid-run failures are handled elastically by the sharded trainer
     remotes: Vec<String>,
+    /// per-step socket deadline for those remotes (`--deadline-ms`);
+    /// 0 = block forever
+    deadline_ms: u64,
+    /// deterministic fault-injection spec (`--faults`), applied to the
+    /// remote sockets only — digest-neutral by the elastic-leave law
+    faults: Option<String>,
     model: Option<ShardedMlp>,
     last_census: Option<StepCensus>,
 }
@@ -77,6 +83,8 @@ impl NativeSession {
         s.pack = PackMode::parse(&cfg.pack)
             .with_context(|| format!("native.pack must be auto|byte|nibble, got '{}'", cfg.pack))?;
         s.remotes = cfg.remotes.clone();
+        s.deadline_ms = cfg.deadline_ms;
+        s.faults = cfg.faults.clone();
         Ok(s)
     }
 
@@ -125,6 +133,8 @@ impl NativeSession {
             plan,
             pack: PackMode::Auto,
             remotes: Vec::new(),
+            deadline_ms: 0,
+            faults: None,
             model: None,
             last_census: None,
         })
@@ -149,18 +159,20 @@ impl NativeSession {
         self.pack
     }
 
-    fn sharded(
-        cfg: &NnConfig,
-        plan: ShardPlan,
-        engine: &str,
-        threads: usize,
-        pack: PackMode,
-        remotes: &[String],
-        seed: u64,
-    ) -> Result<ShardedMlp> {
-        let mut m = ShardedMlp::new(MfMlp::init(cfg.clone(), seed), plan, engine, threads)?
-            .with_pack(pack)?;
-        for addr in remotes {
+    fn sharded(&self, seed: u64) -> Result<ShardedMlp> {
+        let deadline = (self.deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.deadline_ms));
+        let faults = self.faults.as_deref().map(crate::potq::FaultPlan::parse).transpose()?;
+        let mut m = ShardedMlp::new(
+            MfMlp::init(self.cfg.clone(), seed),
+            self.plan,
+            &self.engine_name,
+            self.threads,
+        )?
+        .with_pack(self.pack)?
+        .with_deadline(deadline)?
+        .with_faults(faults);
+        for addr in &self.remotes {
             m.add_remote(addr)?;
         }
         Ok(m)
@@ -188,15 +200,7 @@ impl SessionBackend for NativeSession {
     }
 
     fn init(&mut self, seed: i32) -> Result<()> {
-        self.model = Some(Self::sharded(
-            &self.cfg,
-            self.plan,
-            &self.engine_name,
-            self.threads,
-            self.pack,
-            &self.remotes,
-            seed as u32 as u64,
-        )?);
+        self.model = Some(self.sharded(seed as u32 as u64)?);
         self.last_census = None;
         Ok(())
     }
@@ -248,15 +252,7 @@ impl SessionBackend for NativeSession {
     fn state_from_host(&mut self, v: &[f32]) -> Result<()> {
         if self.model.is_none() {
             // checkpoint restore without init(): weights are overwritten
-            self.model = Some(Self::sharded(
-                &self.cfg,
-                self.plan,
-                &self.engine_name,
-                self.threads,
-                self.pack,
-                &self.remotes,
-                0,
-            )?);
+            self.model = Some(self.sharded(0)?);
         }
         self.model_mut()?.state_from_vec(v).map_err(anyhow::Error::msg)
     }

@@ -563,3 +563,93 @@ fn train_with_config_file() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("step     8"));
 }
+
+#[test]
+fn chaos_soak_digest_matches_clean_run() {
+    // the self-healing acceptance pin at the binary level: a seeded soak
+    // under drops/stalls/corrupt frames must write the byte-identical
+    // checkpoint of the fault-free run (the subcommand itself exits
+    // nonzero if no fault was injected, no rejoin happened, or the
+    // digests diverge — so a plain success assert covers all three)
+    let clean = std::env::temp_dir().join("mft_cli_chaos_clean.ckpt");
+    let chaos = std::env::temp_dir().join("mft_cli_chaos_fault.ckpt");
+    std::fs::remove_file(&clean).ok();
+    std::fs::remove_file(&chaos).ok();
+    let out = mft()
+        .args(["chaos", "--seed", "7", "--steps", "12", "--workers", "2"])
+        .args(["--faults", "seed=7,rate=0.4", "--deadline-ms", "300"])
+        .arg("--clean-ckpt")
+        .arg(&clean)
+        .arg("--chaos-ckpt")
+        .arg(&chaos)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("PASS"), "{s}");
+    let (a, b) = (std::fs::read(&clean).unwrap(), std::fs::read(&chaos).unwrap());
+    assert_eq!(a, b, "chaos checkpoint bytes diverged from the clean run");
+}
+
+#[test]
+fn resume_auto_restores_and_explicit_missing_path_is_an_error() {
+    let ckpt = std::env::temp_dir().join("mft_cli_resume_auto.ckpt");
+    std::fs::remove_file(&ckpt).ok();
+    // first run writes the checkpoint; --resume auto finds nothing and
+    // starts fresh
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--steps", "8", "--lr", "0.05", "--seed", "11"])
+        .args(["--resume", "auto", "--checkpoint"])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(!String::from_utf8_lossy(&out.stdout).contains("resumed"));
+    assert!(ckpt.exists());
+
+    // the identical rerun restores from it instead of retraining
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--steps", "8", "--lr", "0.05", "--seed", "11"])
+        .args(["--resume", "auto", "--checkpoint"])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("resumed tiny_mlp_mf at step 8"), "{s}");
+
+    // an explicit --resume PATH that does not exist is a clean error,
+    // not a silent fresh start
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--steps", "8", "--resume", "/nonexistent/mft_resume.ckpt"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("checkpoint not found"), "{e}");
+}
+
+#[test]
+fn resume_auto_skips_a_torn_checkpoint() {
+    // a kill mid-write can only ever leave a stale `.tmp` beside a good
+    // checkpoint (writes are tmp + fsync + rename), but a checkpoint
+    // truncated by other means must not brick the run under
+    // --resume auto: it is skipped with a warning and training restarts
+    let ckpt = std::env::temp_dir().join("mft_cli_resume_torn.ckpt");
+    // a correct magic + version but a body cut off mid-header
+    std::fs::write(&ckpt, b"MFTCKPT\x02\x0b\x00").unwrap();
+    let out = mft()
+        .args(["train", "--backend", "native", "--variant", "tiny_mlp_mf"])
+        .args(["--steps", "4", "--lr", "0.05", "--seed", "12"])
+        .args(["--resume", "auto", "--checkpoint"])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let e = String::from_utf8_lossy(&out.stderr);
+    assert!(e.contains("skipping invalid checkpoint"), "{e}");
+    assert!(!String::from_utf8_lossy(&out.stdout).contains("resumed"));
+}
