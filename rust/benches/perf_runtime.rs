@@ -739,7 +739,7 @@ fn multinode_sweep() -> anyhow::Result<()> {
                 let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
                 let addr = listener.local_addr().expect("local addr").to_string();
                 std::thread::spawn(move || {
-                    let _ = serve_on(listener, "scalar", 1);
+                    let _ = serve_on(listener, "scalar", 1, Default::default());
                 });
                 addr
             })
@@ -834,7 +834,7 @@ fn obs_sweep() -> anyhow::Result<()> {
             let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
             let addr = listener.local_addr().expect("local addr").to_string();
             std::thread::spawn(move || {
-                let _ = serve_on(listener, "scalar", 1);
+                let _ = serve_on(listener, "scalar", 1, Default::default());
             });
             let plan = ShardPlan::new(batch, tile, 1)?;
             let model = MfMlp::init(NnConfig::mf(&dims), 11);
@@ -937,7 +937,7 @@ fn faults_sweep() -> anyhow::Result<()> {
             let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
             let addr = listener.local_addr().expect("local addr").to_string();
             std::thread::spawn(move || {
-                let _ = serve_on(listener, "scalar", 1);
+                let _ = serve_on(listener, "scalar", 1, Default::default());
             });
             let plan = ShardPlan::new(batch, tile, 1)?;
             let model = MfMlp::init(NnConfig::mf(&dims), 11);
@@ -1004,6 +1004,213 @@ fn faults_sweep() -> anyhow::Result<()> {
     root.insert("state_digest".into(), Json::Str(format!("{:#x}", digests[0])));
     std::fs::write("BENCH_faults.json", Json::Obj(root).to_string())?;
     println!("faults sweep -> BENCH_faults.json");
+    Ok(())
+}
+
+/// Serving front-end sweep -> BENCH_serve.json: request latency
+/// (p50/p99) and throughput vs concurrent client count, the shed rate
+/// under a deterministic overload burst, and the armed-but-idle
+/// envelope overhead (socket deadlines + a never-opening client
+/// FaultPlan vs neither), asserted under 5% (best-of-3).
+fn serve_sweep() -> anyhow::Result<()> {
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::serve::{http_request, predict_body, ServeModel, ServeOptions, Server};
+    use mftrain::potq::{FaultPlan, FaultSite, PackMode};
+    use std::time::Duration;
+
+    let dims = [48usize, 32, 10];
+    let per_client: usize = std::env::var("MFT_BENCH_SERVE_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32);
+    let timeout = Duration::from_secs(30);
+    let spawn_server = |opts: ServeOptions| -> anyhow::Result<Server> {
+        let model = ServeModel::new(
+            MfMlp::init(NnConfig::mf(&dims), 17),
+            "scalar",
+            1,
+            1,
+            PackMode::Auto,
+            0,
+            "bench",
+        )?;
+        Ok(Server::spawn(model, opts, "127.0.0.1:0")?)
+    };
+    let mut rng = Pcg32::new(17);
+    let mut row = vec![0f32; dims[0]];
+    rng.fill_normal(&mut row, 0.0, 0.5);
+    let body = predict_body(&row);
+
+    // ---- latency/throughput vs concurrent clients ----
+    let mut t = Table::new(
+        &format!("serving front-end — {per_client} requests/client, scalar engine"),
+        &["clients", "p50", "p99", "req/s"],
+    );
+    let mut rows_json = Vec::new();
+    for &clients in &[1usize, 4, 8] {
+        let srv = spawn_server(ServeOptions::default())?;
+        let addr = srv.addr().to_string();
+        // warmup
+        let (status, _) = http_request(&addr, "POST", "/predict", &body, timeout)?;
+        anyhow::ensure!(status == 200, "bench warmup request failed");
+        let wall = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let addr = addr.clone();
+                let body = body.clone();
+                std::thread::spawn(move || {
+                    let mut lat = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let t0 = Instant::now();
+                        let (status, _) =
+                            http_request(&addr, "POST", "/predict", &body, timeout)
+                                .expect("bench request");
+                        assert_eq!(status, 200);
+                        lat.push(t0.elapsed().as_secs_f64());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        let mut lat: Vec<f64> = Vec::new();
+        for h in handles {
+            lat.extend(h.join().expect("bench client"));
+        }
+        let wall = wall.elapsed().as_secs_f64();
+        srv.shutdown();
+        lat.sort_by(f64::total_cmp);
+        let pct = |p: f64| lat[((lat.len() - 1) as f64 * p) as usize];
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        let rps = lat.len() as f64 / wall.max(1e-12);
+        t.row(&[
+            fnum(clients as f64),
+            fmt_duration(Duration::from_secs_f64(p50)),
+            fmt_duration(Duration::from_secs_f64(p99)),
+            format!("{rps:.0}"),
+        ]);
+        let mut r = BTreeMap::new();
+        r.insert("clients".into(), Json::Num(clients as f64));
+        r.insert("p50_secs".into(), Json::Num(p50));
+        r.insert("p99_secs".into(), Json::Num(p99));
+        r.insert("req_per_sec".into(), Json::Num(rps));
+        rows_json.push(Json::Obj(r));
+    }
+    t.print();
+
+    // ---- shed rate under a deterministic overload burst ----
+    let opts = ServeOptions { queue_cap: 4, ..ServeOptions::default() };
+    let srv = spawn_server(opts)?;
+    let addr = srv.addr().to_string();
+    srv.set_paused(true); // freeze the tick: the queue can only fill
+    let offered = 4 * opts.queue_cap;
+    let burst: Vec<_> = (0..offered)
+        .map(|_| {
+            let addr = addr.clone();
+            let body = body.clone();
+            std::thread::spawn(move || {
+                http_request(&addr, "POST", "/predict", &body, timeout)
+                    .map(|(s, _)| s)
+                    .unwrap_or(0)
+            })
+        })
+        .collect();
+    // admission is immediate (enqueue or named 429) — give the burst a
+    // beat to land, then release the queued ones
+    std::thread::sleep(Duration::from_millis(300));
+    srv.set_paused(false);
+    let statuses: Vec<u16> = burst.into_iter().map(|h| h.join().unwrap_or(0)).collect();
+    srv.shutdown();
+    let shed = statuses.iter().filter(|&&s| s == 429).count();
+    let served = statuses.iter().filter(|&&s| s == 200).count();
+    anyhow::ensure!(shed > 0, "overload burst was not shed: {statuses:?}");
+    anyhow::ensure!(served > 0, "overload burst starved the queue: {statuses:?}");
+    let shed_rate = shed as f64 / offered as f64;
+    let mut t = Table::new(
+        &format!("overload shed — {offered} concurrent vs queue-cap {}", opts.queue_cap),
+        &["offered", "served (200)", "shed (429)", "shed rate"],
+    );
+    t.row(&[
+        fnum(offered as f64),
+        fnum(served as f64),
+        fnum(shed as f64),
+        format!("{:.0}%", shed_rate * 100.0),
+    ]);
+    t.print();
+
+    // ---- armed-but-idle envelope overhead ----
+    // armed = socket deadlines on every connection + the client consults
+    // a FaultPlan whose window never opens before each request; off =
+    // no deadline, no plan. Same request stream, best-of-3 mean.
+    let reps = 3;
+    let n_overhead: usize = per_client * 2;
+    let mut means = [f64::INFINITY; 2];
+    for (i, armed) in [false, true].into_iter().enumerate() {
+        let plan = armed
+            .then(|| FaultPlan::parse("seed=1,rate=1,after=1000000000"))
+            .transpose()?;
+        for _rep in 0..reps {
+            let opts = ServeOptions {
+                deadline: armed.then(|| Duration::from_secs(30)),
+                ..ServeOptions::default()
+            };
+            let srv = spawn_server(opts)?;
+            let addr = srv.addr().to_string();
+            let (status, _) = http_request(&addr, "POST", "/predict", &body, timeout)?;
+            anyhow::ensure!(status == 200, "overhead warmup failed");
+            let t0 = Instant::now();
+            for req in 0..n_overhead {
+                if let Some(p) = &plan {
+                    // armed-but-idle: the consult happens, nothing fires
+                    anyhow::ensure!(
+                        p.decide(req as u64, "bench-client", FaultSite::Request).is_none(),
+                        "the never-opening plan fired"
+                    );
+                }
+                let (status, _) = http_request(&addr, "POST", "/predict", &body, timeout)?;
+                anyhow::ensure!(status == 200, "overhead request failed");
+            }
+            means[i] = means[i].min(t0.elapsed().as_secs_f64() / n_overhead as f64);
+            srv.shutdown();
+        }
+    }
+    let overhead = means[1] / means[0] - 1.0;
+    let mut t = Table::new(
+        &format!("armed-but-idle serving overhead — {n_overhead} requests, best of {reps}"),
+        &["config", "request mean", "overhead"],
+    );
+    for (label, mean) in [("off", means[0]), ("armed (deadline + plan)", means[1])] {
+        t.row(&[
+            label.into(),
+            fmt_duration(Duration::from_secs_f64(mean)),
+            if mean == means[0] { "-".into() } else { format!("{:+.2}%", overhead * 100.0) },
+        ]);
+    }
+    t.note("the armed plan's window never opens: this prices socket deadlines plus the \
+            per-request plan consult, not injected faults");
+    t.print();
+    assert!(
+        overhead < 0.05,
+        "armed-but-idle serving overhead {:.2}% exceeds the 5% budget",
+        overhead * 100.0
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Json::Str("serve".into()));
+    root.insert("requests_per_client".into(), Json::Num(per_client as f64));
+    root.insert("latency".into(), Json::Arr(rows_json));
+    let mut shed_obj = BTreeMap::new();
+    shed_obj.insert("offered".into(), Json::Num(offered as f64));
+    shed_obj.insert("served".into(), Json::Num(served as f64));
+    shed_obj.insert("shed".into(), Json::Num(shed as f64));
+    shed_obj.insert("shed_rate".into(), Json::Num(shed_rate));
+    root.insert("overload".into(), Json::Obj(shed_obj));
+    let mut oh = BTreeMap::new();
+    oh.insert("off_mean_secs".into(), Json::Num(means[0]));
+    oh.insert("armed_mean_secs".into(), Json::Num(means[1]));
+    oh.insert("overhead_fraction".into(), Json::Num(overhead));
+    root.insert("armed_idle".into(), Json::Obj(oh));
+    std::fs::write("BENCH_serve.json", Json::Obj(root).to_string())?;
+    println!("serve sweep -> BENCH_serve.json");
     Ok(())
 }
 
@@ -1096,6 +1303,9 @@ fn main() -> anyhow::Result<()> {
 
     // ---- fault-injection layer overhead -> BENCH_faults.json --------------
     faults_sweep()?;
+
+    // ---- serving front-end -> BENCH_serve.json ----------------------------
+    serve_sweep()?;
 
     // ---- end-to-end step latency per variant ------------------------------
     let rt = match Runtime::cpu() {

@@ -149,11 +149,34 @@ USAGE:
             # corrupt files are skipped, starting fresh); --resume PATH
             # requires that checkpoint
   mft worker --listen host:port [--engine ...] [--threads N]
-             [--trace out.trace.json]
+             [--trace out.trace.json] [--max-conns N] [--deadline-ms N]
              # a remote shard member: serves step frames from an `mft
              # train --remote` coordinator over TCP; stateless between
              # connections, kill/restart at any step boundary. --trace
-             # flushes this member's spans when a connection closes
+             # flushes this member's spans when a connection closes.
+             # --max-conns caps concurrent coordinator connections
+             # (default 64, named rejection past it); --deadline-ms
+             # bounds reads/writes on accepted connections so a stalled
+             # coordinator cannot pin a worker thread (default 30000,
+             # 0 = block forever)
+  mft serve --checkpoint <path> [--listen host:port] [--variant name]
+            [--engine ...] [--threads N] [--kshard K]
+            [--pack auto|byte|nibble] [--max-batch P] [--queue-cap N]
+            [--max-conns N] [--deadline-ms N] [--trace out.trace.json]
+            # batched MF inference over HTTP/JSON on a trained native
+            # checkpoint (default listen 127.0.0.1:7800). Weights are
+            # WBC'd, quantized and k-panel-packed once at load;
+            # concurrent POST /predict {\"x\": [...]} requests aggregate
+            # into PoT micro-batches (<= --max-batch, a power of two)
+            # per engine tick. Bounded by construction: past
+            # --queue-cap requests shed with a named 429, past
+            # --max-conns dials shed with a 503, past --deadline-ms a
+            # queued request is expired from the batch (504) and a
+            # stalled client gets the named 408. GET /healthz and
+            # /readyz report queue depth; SIGTERM/SIGINT drains
+            # gracefully (stop accepting, flush in-flight, exit 0).
+            # Each request row quantizes in its own scope, so responses
+            # are bit-identical whatever batch they ride in
   mft chaos [--seed N] [--steps N] [--workers N] [--engine ...]
             [--faults spec] [--deadline-ms N]
             [--clean-ckpt path] [--chaos-ckpt path]
@@ -163,6 +186,15 @@ USAGE:
             # rejoin, and bit-identical final digests (nonzero exit
             # otherwise); --clean-ckpt/--chaos-ckpt write both final
             # states as checkpoints for byte-level comparison
+  mft chaos --serve [--seed N] [--requests N] [--faults spec]
+            [--deadline-ms N] [--queue-cap N] [--max-batch P] [--engine ...]
+            # serving soak: the same seeded request sweep against an
+            # in-process `mft serve` twice — clean, then with faults at
+            # the server socket (connect-drop / stall / truncated body /
+            # flipped byte) plus an overload burst against a paused
+            # tick; asserts >= 1 injected fault, >= 1 shed, >= 1
+            # deadline hit, and byte-identical responses for every
+            # surviving request (nonzero exit otherwise)
   mft eval --variant <name> --checkpoint <path> [--batches N]
            [--engine ...] [--threads N] [--bits N] [--workers N]
            [--kshard K] [--pack auto|byte|nibble] [--remote ...]

@@ -118,6 +118,16 @@ pub struct TrainConfig {
     /// into the drop-and-reassign path, so the run's checkpoint digest
     /// is unchanged. None = no injection (production default).
     pub faults: Option<String>,
+    /// `mft serve`: largest micro-batch one engine tick hands the
+    /// MacEngine (`--max-batch N`, or `[serve] max_batch`); power of two.
+    pub serve_max_batch: usize,
+    /// `mft serve`: admission-queue capacity (`--queue-cap N`, or
+    /// `[serve] queue_cap`); past it requests are shed with a named 429.
+    pub serve_queue_cap: usize,
+    /// `mft serve` / `mft worker`: concurrent-connection cap
+    /// (`--max-conns N`, or `[serve] max_conns`); past it dials are
+    /// rejected with a named 503 / Drop event, never an unbounded spawn.
+    pub serve_max_conns: usize,
     /// resume policy (`mft train --resume auto|PATH`): "auto" restores
     /// from `checkpoint.path` when it exists and validates (a torn or
     /// corrupt file is skipped with a warning, starting fresh); an
@@ -163,6 +173,9 @@ impl Default for TrainConfig {
             trace: None,
             deadline_ms: 30_000,
             faults: None,
+            serve_max_batch: 8,
+            serve_queue_cap: 64,
+            serve_max_conns: 64,
             resume: None,
         }
     }
@@ -231,6 +244,9 @@ impl TrainConfig {
             trace: doc.get("telemetry.trace").and_then(|v| v.as_str()).map(str::to_string),
             deadline_ms: doc.i64_or("faults.deadline_ms", d.deadline_ms as i64) as u64,
             faults: doc.get("faults.spec").and_then(|v| v.as_str()).map(str::to_string),
+            serve_max_batch: doc.i64_or("serve.max_batch", d.serve_max_batch as i64) as usize,
+            serve_queue_cap: doc.i64_or("serve.queue_cap", d.serve_queue_cap as i64) as usize,
+            serve_max_conns: doc.i64_or("serve.max_conns", d.serve_max_conns as i64) as usize,
             resume: doc.get("checkpoint.resume").and_then(|v| v.as_str()).map(str::to_string),
         };
         cfg.validate()?;
@@ -291,6 +307,18 @@ impl TrainConfig {
         }
         if let Some(spec) = &self.faults {
             crate::potq::FaultPlan::parse(spec)?;
+        }
+        if self.serve_max_batch == 0 || !self.serve_max_batch.is_power_of_two() {
+            bail!(
+                "serve.max_batch must be a power of two >= 1, got {}",
+                self.serve_max_batch
+            );
+        }
+        if self.serve_queue_cap == 0 {
+            bail!("serve.queue_cap must be >= 1");
+        }
+        if self.serve_max_conns == 0 {
+            bail!("serve.max_conns must be >= 1");
         }
         if let Some(resume) = &self.resume {
             if resume.is_empty() {
@@ -477,6 +505,34 @@ kshard = 2
         let doc = toml::Doc::parse("[shard]\nremotes = \"tenmachine\"\n").unwrap();
         let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
         assert!(err.contains("host:port"), "{err}");
+    }
+
+    #[test]
+    fn serve_fields_parse_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(
+            (d.serve_max_batch, d.serve_queue_cap, d.serve_max_conns),
+            (8, 64, 64)
+        );
+        let doc = toml::Doc::parse(
+            "[serve]\nmax_batch = 4\nqueue_cap = 16\nmax_conns = 8\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(
+            (cfg.serve_max_batch, cfg.serve_queue_cap, cfg.serve_max_conns),
+            (4, 16, 8)
+        );
+        // non-PoT micro-batch and zero caps are named config errors
+        let doc = toml::Doc::parse("[serve]\nmax_batch = 3\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("power of two"), "{err}");
+        let doc = toml::Doc::parse("[serve]\nqueue_cap = 0\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("queue_cap"), "{err}");
+        let doc = toml::Doc::parse("[serve]\nmax_conns = 0\n").unwrap();
+        let err = format!("{:#}", TrainConfig::from_doc(&doc).unwrap_err());
+        assert!(err.contains("max_conns"), "{err}");
     }
 
     #[test]

@@ -18,6 +18,7 @@ fn main() -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(&args),
         "worker" => cmd_worker(&args),
+        "serve" => cmd_serve(&args),
         "chaos" => cmd_chaos(&args),
         "eval" => cmd_eval(&args),
         "energy" => cmd_energy(&args),
@@ -98,6 +99,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.str_flag("faults") {
         cfg.faults = Some(v.to_string());
     }
+    cfg.serve_max_batch = args.u64_flag("max-batch", cfg.serve_max_batch as u64)? as usize;
+    cfg.serve_queue_cap = args.u64_flag("queue-cap", cfg.serve_queue_cap as u64)? as usize;
+    cfg.serve_max_conns = args.u64_flag("max-conns", cfg.serve_max_conns as u64)? as usize;
     if let Some(v) = args.str_flag("resume") {
         cfg.resume = Some(v.to_string());
     }
@@ -158,6 +162,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// assigned tiles on the local engine and return per-tile grad frames.
 /// Stateless between connections; kill/restart at any step boundary.
 fn cmd_worker(args: &Args) -> Result<()> {
+    use mftrain::potq::WorkerLimits;
+    use std::time::Duration;
+
     let addr = args.require("listen")?;
     let engine = args.str_flag("engine").unwrap_or("auto");
     let threads = args.u64_flag("threads", 0)? as usize;
@@ -167,7 +174,96 @@ fn cmd_worker(args: &Args) -> Result<()> {
         mftrain::potq::obs::set_trace_enabled(true);
         mftrain::potq::obs::set_trace_path(Some(path.to_string()));
     }
-    mftrain::potq::serve_worker(addr, engine, threads)
+    let d = WorkerLimits::default();
+    let max_conns = args.u64_flag("max-conns", d.max_conns as u64)? as usize;
+    anyhow::ensure!(max_conns >= 1, "--max-conns must be >= 1");
+    let deadline_ms =
+        args.u64_flag("deadline-ms", d.deadline.unwrap_or_default().as_millis() as u64)?;
+    let limits = WorkerLimits {
+        max_conns,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+    };
+    mftrain::potq::serve_worker(addr, engine, threads, limits)
+}
+
+/// `mft serve` — batched MF inference over HTTP/JSON on a trained native
+/// checkpoint. Weights are WBC'd, quantized and k-panel-packed once at
+/// load (the model-lifetime operand cache); concurrent requests aggregate
+/// into PoT micro-batches, one engine tick each, inside a bounded
+/// admission queue with named load shedding, per-request deadlines and
+/// graceful SIGTERM/SIGINT drain.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use mftrain::potq::nn::MfMlp;
+    use mftrain::potq::serve::{signal, ServeModel, ServeOptions, Server};
+    use mftrain::potq::{obs, PackMode};
+    use mftrain::runtime::nn_config_for;
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    let ckpt = Checkpoint::load(Path::new(args.require("checkpoint")?))?;
+    let mut cfg = build_config(args)?;
+    cfg.backend = "native".into();
+    if args.str_flag("variant").is_none() && args.str_flag("config").is_none() {
+        // serve what the checkpoint was trained as, unless told otherwise
+        cfg.variant = ckpt.variant.clone();
+    }
+    cfg.validate()?;
+    if ckpt.variant != cfg.variant {
+        bail!("checkpoint is for '{}', not '{}'", ckpt.variant, cfg.variant);
+    }
+
+    // serving counters are the product here: always on
+    obs::reset();
+    obs::set_metrics_enabled(true);
+    if let Some(path) = &cfg.trace {
+        obs::set_trace_enabled(true);
+        obs::set_trace_path(Some(path.clone()));
+    }
+
+    let (_spec, nn_cfg) = nn_config_for(&cfg)?;
+    let mut mlp = MfMlp::init(nn_cfg, 0);
+    mlp.state_from_vec(&ckpt.state).map_err(|e| anyhow::anyhow!(e))?;
+    let pack = PackMode::parse(&cfg.pack).expect("pack validated");
+    let model =
+        ServeModel::new(mlp, &cfg.engine, cfg.threads, cfg.kshard, pack, ckpt.step, &ckpt.variant)?;
+    let opts = ServeOptions {
+        max_batch: cfg.serve_max_batch,
+        queue_cap: cfg.serve_queue_cap,
+        max_conns: cfg.serve_max_conns,
+        deadline: (cfg.deadline_ms > 0).then(|| Duration::from_millis(cfg.deadline_ms)),
+    };
+    let listen = args.str_flag("listen").unwrap_or("127.0.0.1:7800");
+    let server = Server::spawn(model, opts, listen)?;
+    println!(
+        "[mft] serve: {} @ step {} listening on {} ({} engine, max-batch {}, queue-cap {}, \
+         max-conns {}, deadline {}ms)",
+        ckpt.variant,
+        ckpt.step,
+        server.addr(),
+        cfg.engine,
+        opts.max_batch,
+        opts.queue_cap,
+        opts.max_conns,
+        cfg.deadline_ms
+    );
+    std::io::stdout().flush().ok();
+
+    signal::install_termination_handlers();
+    while !signal::termination_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("[mft] serve: termination requested — draining");
+    server.shutdown();
+    println!(
+        "[mft] serve: drained — {} request(s), {} shed, {} deadline hit(s)",
+        obs::counter_value("serve.requests"),
+        obs::counter_value("serve.shed"),
+        obs::counter_value("serve.deadline_hits")
+    );
+    if let Err(e) = obs::flush_trace() {
+        eprintln!("[mft] serve: trace flush failed: {e:#}");
+    }
+    Ok(())
 }
 
 /// `mft chaos` — a seeded self-healing soak. Trains the same toy model
@@ -186,6 +282,9 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     use std::net::TcpListener;
     use std::time::Duration;
 
+    if args.bool_flag("serve") {
+        return cmd_chaos_serve(args);
+    }
     let seed = args.u64_flag("seed", 7)?;
     let steps = args.u64_flag("steps", 24)?;
     let spec = args.str_flag("faults").unwrap_or("seed=7,rate=0.3");
@@ -222,7 +321,7 @@ fn cmd_chaos(args: &Args) -> Result<()> {
             addrs.push(listener.local_addr()?.to_string());
             let engine = engine.clone();
             std::thread::spawn(move || {
-                let _ = serve_on(listener, &engine, 1);
+                let _ = serve_on(listener, &engine, 1, Default::default());
             });
         }
         Ok(addrs)
@@ -275,6 +374,240 @@ fn cmd_chaos(args: &Args) -> Result<()> {
     }
     println!("[mft] chaos: PASS — faulted run digest {df:#018x} is bit-identical to clean");
     Ok(())
+}
+
+/// `mft chaos --serve` — the serving soak: point the PR 9 fault machinery
+/// at the HTTP front-end. Runs the same seeded request sweep twice over a
+/// fresh in-process server — once clean, once with client-side faults
+/// (drops / stalls / truncations / byte flips at the server socket) plus
+/// a deterministic overload burst against a paused engine tick. Exits
+/// nonzero unless the server survives with >= 1 shed and >= 1 deadline
+/// hit observed in its counters and every surviving request's response is
+/// byte-identical to the clean run's.
+fn cmd_chaos_serve(args: &Args) -> Result<()> {
+    use mftrain::potq::nn::{MfMlp, NnConfig};
+    use mftrain::potq::serve::{http_request, predict_body, ServeModel, ServeOptions, Server};
+    use mftrain::potq::{obs, FaultPlan, FaultSite, PackMode};
+    use mftrain::util::prng::Pcg32;
+    use std::io::Write as _;
+    use std::time::Duration;
+
+    let seed = args.u64_flag("seed", 7)?;
+    let n_requests = args.u64_flag("requests", 24)? as usize;
+    let spec = args.str_flag("faults").unwrap_or("seed=7,rate=0.35");
+    let deadline_ms = args.u64_flag("deadline-ms", 300)?;
+    let queue_cap = args.u64_flag("queue-cap", 4)? as usize;
+    let max_batch = args.u64_flag("max-batch", 4)? as usize;
+    let engine = args.str_flag("engine").unwrap_or("scalar").to_string();
+    let deadline = Duration::from_millis(deadline_ms);
+    let client_timeout = deadline * 4 + Duration::from_secs(1);
+    println!(
+        "[mft] chaos --serve: seed {seed}, {n_requests} request(s), deadline {deadline_ms}ms, \
+         queue-cap {queue_cap}, faults \"{spec}\""
+    );
+
+    let dims = [12usize, 16, 4];
+    let mut rng = Pcg32::new(seed);
+    let rows: Vec<Vec<f32>> = (0..n_requests)
+        .map(|_| (0..dims[0]).map(|_| rng.normal()).collect())
+        .collect();
+
+    let spawn_server = |engine: &str| -> Result<Server> {
+        let model = ServeModel::new(
+            MfMlp::init(NnConfig::mf(&dims), seed),
+            engine,
+            1,
+            1,
+            PackMode::Auto,
+            0,
+            "chaos_serve",
+        )?;
+        let opts = ServeOptions {
+            max_batch,
+            queue_cap,
+            max_conns: 64,
+            deadline: Some(deadline),
+        };
+        Server::spawn(model, opts, "127.0.0.1:0")
+    };
+
+    // ---- clean run: every request, no faults, sequential ----
+    obs::reset();
+    obs::set_metrics_enabled(true);
+    let server = spawn_server(&engine)?;
+    let addr = server.addr().to_string();
+    let mut clean = Vec::with_capacity(n_requests);
+    for row in &rows {
+        let (status, body) =
+            http_request(&addr, "POST", "/predict", &predict_body(row), client_timeout)?;
+        anyhow::ensure!(status == 200, "clean run request failed ({status}): {body}");
+        clean.push(body);
+    }
+    server.shutdown();
+    println!("[mft] chaos --serve: clean run done — {n_requests} response(s) recorded");
+
+    // ---- faulted run: overload burst + seeded per-request faults ----
+    obs::reset();
+    obs::set_metrics_enabled(true);
+    let server = spawn_server(&engine)?;
+    let addr = server.addr().to_string();
+
+    // deterministic overload: freeze the engine tick, fire 2x queue_cap
+    // concurrent requests — exactly queue_cap enqueue, the rest are shed
+    // with a named 429; then outwait the deadline so the queued ones
+    // expire (shed from the batch, not allowed to stall the tick)
+    server.set_paused(true);
+    let pad = vec![0.25f32; dims[0]];
+    let burst: Vec<_> = (0..2 * queue_cap)
+        .map(|_| {
+            let addr = addr.clone();
+            let body = predict_body(&pad);
+            let timeout = client_timeout;
+            std::thread::spawn(move || {
+                http_request(&addr, "POST", "/predict", &body, timeout)
+                    .map(|(s, _)| s)
+                    .unwrap_or(0)
+            })
+        })
+        .collect();
+    let burst_statuses: Vec<u16> = burst.into_iter().map(|h| h.join().unwrap_or(0)).collect();
+    std::thread::sleep(deadline + Duration::from_millis(100));
+    server.set_paused(false);
+    // let the batcher flush the expired queue before the sweep starts
+    std::thread::sleep(Duration::from_millis(100));
+    println!("[mft] chaos --serve: overload burst statuses {burst_statuses:?}");
+
+    let plan = FaultPlan::parse(spec)?;
+    let mut survivors = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        match plan.decide(i as u64, "serve-client", FaultSite::Request) {
+            None => {
+                let (status, body) =
+                    http_request(&addr, "POST", "/predict", &predict_body(row), client_timeout)?;
+                anyhow::ensure!(
+                    status == 200,
+                    "surviving request {i} failed ({status}): {body}"
+                );
+                anyhow::ensure!(
+                    body == clean[i],
+                    "surviving request {i} diverged from the clean run:\n  clean: {}\n  chaos: {body}",
+                    clean[i]
+                );
+                survivors += 1;
+            }
+            Some(fault) => {
+                plan.note_injected();
+                inject_serve_fault(&addr, fault, row, client_timeout);
+            }
+        }
+    }
+
+    // the accept loop must still be serving after all of that
+    let (status, body) = http_request(&addr, "GET", "/healthz", "", client_timeout)?;
+    anyhow::ensure!(status == 200, "healthz after chaos: {status} {body}");
+    server.shutdown(); // graceful drain
+
+    let injected = plan.injected();
+    let shed = obs::counter_value("serve.shed");
+    let hits = obs::counter_value("serve.deadline_hits");
+    if injected == 0 {
+        bail!("chaos --serve injected no faults — raise rate or requests in \"{spec}\"");
+    }
+    if survivors == 0 {
+        bail!("chaos --serve left no surviving requests — lower the fault rate in \"{spec}\"");
+    }
+    if shed == 0 {
+        bail!("chaos --serve observed no load shedding (serve.shed == 0)");
+    }
+    if hits == 0 {
+        bail!("chaos --serve observed no deadline hits (serve.deadline_hits == 0)");
+    }
+    println!(
+        "[mft] chaos --serve: PASS — {survivors} surviving response(s) bit-identical to clean; \
+         {injected} fault(s) injected, {shed} shed, {hits} deadline hit(s)"
+    );
+    std::io::stdout().flush().ok();
+    Ok(())
+}
+
+/// Manifest one drawn fault against the serving socket. Every kind maps
+/// to a concrete hostile client the server must absorb:
+/// drop = connect-then-hangup, stall = partial request held past the
+/// server's read deadline (expects the named 408), truncate = body cut
+/// short at a salted offset (expects the named 400), flip = one salted
+/// corrupted body byte (expects the named 400).
+fn inject_serve_fault(
+    addr: &str,
+    fault: mftrain::potq::Fault,
+    row: &[f32],
+    client_timeout: std::time::Duration,
+) {
+    use mftrain::potq::serve::{predict_body, read_http_response};
+    use mftrain::potq::Fault;
+    use std::io::Write as _;
+    use std::net::{Shutdown, TcpStream};
+
+    let connect = || -> Option<TcpStream> {
+        let sock: std::net::SocketAddr = addr.parse().ok()?;
+        let s = TcpStream::connect_timeout(&sock, client_timeout).ok()?;
+        s.set_read_timeout(Some(client_timeout)).ok()?;
+        s.set_write_timeout(Some(client_timeout)).ok()?;
+        Some(s)
+    };
+    let body = predict_body(row);
+    match fault {
+        Fault::Drop => {
+            // connect and hang up before sending a byte: the server must
+            // treat the clean EOF as a non-event
+            drop(connect());
+        }
+        Fault::Stall => {
+            // hold a half-written request open past the server's read
+            // deadline; the server answers with the named 408 and the
+            // deadline-hit counter moves
+            if let Some(mut s) = connect() {
+                let _ = s.write_all(b"POST /predict HTTP/1.1\r\n");
+                let _ = s.flush();
+                let _ = read_http_response(&s); // blocks until the 408
+            }
+        }
+        Fault::Truncate(salt) => {
+            // full headers, body cut short at a salted offset, FIN: the
+            // server must answer the named truncated-body 400
+            if let Some(mut s) = connect() {
+                let cut = 1 + salt as usize % (body.len() - 1);
+                let head = format!(
+                    "POST /predict HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                    body.len()
+                );
+                let _ = s.write_all(head.as_bytes());
+                let _ = s.write_all(&body.as_bytes()[..cut]);
+                let _ = s.flush();
+                let _ = s.shutdown(Shutdown::Write);
+                let _ = read_http_response(&s);
+            }
+        }
+        Fault::Flip(salt) => {
+            // one corrupted body byte (position salted, the first byte's
+            // `{` xor keeps it always-invalid JSON): named 400
+            if let Some(mut s) = connect() {
+                let mut bytes = body.into_bytes();
+                let pos = if bytes.len() > 1 { salt as usize % bytes.len() } else { 0 };
+                bytes[0] ^= 0x40; // '{' -> ';': unparseable from byte 0
+                if pos > 0 {
+                    bytes[pos] ^= 0x40;
+                }
+                let head = format!(
+                    "POST /predict HTTP/1.1\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                    bytes.len()
+                );
+                let _ = s.write_all(head.as_bytes());
+                let _ = s.write_all(&bytes);
+                let _ = s.flush();
+                let _ = read_http_response(&s);
+            }
+        }
+    }
 }
 
 fn run_and_report(trainer: &mut Trainer) -> Result<()> {

@@ -46,6 +46,7 @@
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -756,9 +757,29 @@ impl RemoteWorker {
 // worker server
 // ---------------------------------------------------------------------
 
+/// Bounds on the worker's accept loop. Today an aggressive dialer can
+/// no longer exhaust threads (`max_conns`) or pin one forever by going
+/// silent mid-step (`deadline` as read/write socket timeouts on every
+/// *accepted* connection — the same `--deadline-ms` discipline the
+/// coordinator applies to the sockets it dials).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerLimits {
+    /// Concurrent-connection cap; the next dial gets a named rejection
+    /// (logged + `Drop` MemberEvent) and an immediate close.
+    pub max_conns: usize,
+    /// Per-I/O deadline on accepted connections; `None` disables.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for WorkerLimits {
+    fn default() -> Self {
+        WorkerLimits { max_conns: 64, deadline: Some(Duration::from_millis(30_000)) }
+    }
+}
+
 /// The `mft worker` entry point: bind, announce the bound address on
 /// stdout (tests and scripts parse this line), serve forever.
-pub fn serve_worker(addr: &str, engine: &str, threads: usize) -> Result<()> {
+pub fn serve_worker(addr: &str, engine: &str, threads: usize, limits: WorkerLimits) -> Result<()> {
     ensure!(
         engine_by_name(engine, threads).is_some(),
         "unknown engine '{engine}' (available: {})",
@@ -767,20 +788,38 @@ pub fn serve_worker(addr: &str, engine: &str, threads: usize) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
     println!("[mft] worker listening on {} ({engine} engine)", listener.local_addr()?);
     std::io::stdout().flush().ok();
-    serve_on(listener, engine, threads)
+    serve_on(listener, engine, threads, limits)
 }
 
 /// Accept-loop over an already-bound listener (tests bind an ephemeral
-/// port themselves). Each connection is served on its own thread; a
-/// failed connection is logged and the loop keeps accepting — a
-/// restarted coordinator can always come back.
-pub fn serve_on(listener: TcpListener, engine: &str, threads: usize) -> Result<()> {
+/// port themselves). Each connection is served on its own thread, up to
+/// `limits.max_conns` at once; a failed connection is logged and the
+/// loop keeps accepting — a restarted coordinator can always come back.
+pub fn serve_on(
+    listener: TcpListener,
+    engine: &str,
+    threads: usize,
+    limits: WorkerLimits,
+) -> Result<()> {
+    let active = Arc::new(AtomicUsize::new(0));
     loop {
         match listener.accept() {
             Ok((stream, peer)) => {
+                if active.load(Ordering::SeqCst) >= limits.max_conns {
+                    // named rejection, no thread spawned: close the
+                    // socket so the dialer sees an immediate EOF
+                    let detail =
+                        format!("rejected: connection cap {} reached", limits.max_conns);
+                    eprintln!("[mft] worker: {peer}: {detail}");
+                    obs::member_event(0, MemberEventKind::Drop, &peer.to_string(), &detail);
+                    stream.shutdown(Shutdown::Both).ok();
+                    continue;
+                }
+                active.fetch_add(1, Ordering::SeqCst);
                 let engine = engine.to_string();
+                let active = Arc::clone(&active);
                 std::thread::spawn(move || {
-                    if let Err(e) = handle_conn(stream, &engine, threads) {
+                    if let Err(e) = handle_conn(stream, &engine, threads, limits.deadline) {
                         // log + record, then let the thread end: the
                         // accept loop keeps serving, so one bad client
                         // never affects the next connection
@@ -792,6 +831,7 @@ pub fn serve_on(listener: TcpListener, engine: &str, threads: usize) -> Result<(
                             &format!("connection failed: {e:#}"),
                         );
                     }
+                    active.fetch_sub(1, Ordering::SeqCst);
                 });
             }
             Err(e) => eprintln!("[mft] worker: accept failed: {e}"),
@@ -804,8 +844,18 @@ pub fn serve_on(listener: TcpListener, engine: &str, threads: usize) -> Result<(
 /// violation returns an error, closing the connection — the coordinator
 /// side reassigns the step's tiles, so a misbehaving link never corrupts
 /// a run, it only shrinks the membership.
-fn handle_conn(mut stream: TcpStream, engine: &str, threads: usize) -> Result<()> {
+fn handle_conn(
+    mut stream: TcpStream,
+    engine: &str,
+    threads: usize,
+    deadline: Option<Duration>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // a stalled (or vanished-without-FIN) coordinator must not pin this
+    // thread forever: every read/write gets the worker-side deadline,
+    // and a timeout surfaces as the usual DEADLINE error below
+    stream.set_read_timeout(deadline).ok();
+    stream.set_write_timeout(deadline).ok();
     // tag this connection's spans with a fresh grid-member id (the
     // coordinator is member 0), so a trace from an in-process loopback
     // run — or this worker's own `--trace` file — separates members
@@ -893,12 +943,70 @@ mod tests {
     /// Bind an ephemeral localhost port, serve it on a detached thread,
     /// return the address to connect to.
     fn spawn_worker_thread(engine: &'static str) -> String {
+        spawn_worker_thread_with(engine, WorkerLimits::default())
+    }
+
+    fn spawn_worker_thread_with(engine: &'static str, limits: WorkerLimits) -> String {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         std::thread::spawn(move || {
-            let _ = serve_on(listener, engine, 1);
+            let _ = serve_on(listener, engine, 1, limits);
         });
         addr
+    }
+
+    #[test]
+    fn stalled_coordinator_is_dropped_within_the_deadline() {
+        let limits = WorkerLimits {
+            max_conns: 8,
+            deadline: Some(Duration::from_millis(300)),
+        };
+        let addr = spawn_worker_thread_with("scalar", limits);
+        // a coordinator that connects and then goes silent: the worker's
+        // read deadline must free the thread (we observe the hangup as a
+        // clean EOF on our end) instead of pinning it forever
+        let stalled = TcpStream::connect(&addr).unwrap();
+        stalled.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 8];
+        let n = (&stalled).read(&mut buf).unwrap();
+        assert_eq!(n, 0, "worker must hang up on a stalled coordinator");
+        // and the worker still serves a healthy coordinator afterwards
+        let (x, y) = toy_batch(3, 16, 12, 4);
+        let plan = ShardPlan::new(16, 4, 1).unwrap();
+        let mut t =
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 5), plan, "scalar", 1)
+                .unwrap();
+        t.add_remote(&addr).unwrap();
+        t.train_step(&x, &y, 0.1).unwrap();
+        assert_eq!(t.remote_count(), 1);
+    }
+
+    #[test]
+    fn connection_cap_rejects_the_overflow_dialer() {
+        let limits = WorkerLimits {
+            max_conns: 1,
+            deadline: Some(Duration::from_secs(5)),
+        };
+        let addr = spawn_worker_thread_with("scalar", limits);
+        // first dialer holds the only slot (never sends its hello)
+        let holder = TcpStream::connect(&addr).unwrap();
+        std::thread::sleep(Duration::from_millis(100)); // let the accept land
+        // second dialer must be rejected immediately: EOF, not a stall
+        let rejected = TcpStream::connect(&addr).unwrap();
+        rejected.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut buf = [0u8; 8];
+        let n = (&rejected).read(&mut buf).unwrap();
+        assert_eq!(n, 0, "over-cap dial must get an immediate close");
+        // freeing the slot re-opens the door
+        drop(holder);
+        std::thread::sleep(Duration::from_millis(200));
+        let (x, y) = toy_batch(3, 16, 12, 4);
+        let plan = ShardPlan::new(16, 4, 1).unwrap();
+        let mut t =
+            ShardedMlp::new(MfMlp::init(NnConfig::mf(&[12, 16, 4]), 5), plan, "scalar", 1)
+                .unwrap();
+        t.add_remote(&addr).unwrap();
+        t.train_step(&x, &y, 0.1).unwrap();
     }
 
     fn step_results(seed: u64, want_probe: bool) -> Vec<(usize, StepResult)> {

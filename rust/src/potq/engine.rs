@@ -121,6 +121,17 @@ pub trait MacEngine: Sync {
         self.matmul_kslab(x, w.tensor(), k0, k1)
     }
 
+    /// Batched [`MacEngine::matmul_packed`]: many x operands against ONE
+    /// shared step- (or model-) lifetime packed weight — the serving
+    /// tick's shape, where every admitted request row is its own
+    /// quantization scope and the weight operand was packed once at
+    /// checkpoint load. Must be bit-identical to calling `matmul_packed`
+    /// per operand; the default does exactly that (the packed path
+    /// already amortizes the weight-side decode).
+    fn matmul_batch_packed(&self, xs: &[&PotTensor], w: &PackedOperand) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| self.matmul_packed(x, w)).collect()
+    }
+
     /// The backward pass's (dX, dW) GEMM pair in one call: dX against the
     /// step-cached weight transpose, dW against plain per-tile operands.
     /// Exists so engines with internal parallelism can overlap the two

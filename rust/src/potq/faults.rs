@@ -34,6 +34,9 @@ pub enum FaultSite {
     Send,
     /// Coordinator about to read a GRAD frame from a remote.
     Recv,
+    /// Serving front-end: a client about to issue a request to the
+    /// server (the `mft chaos --serve` soak consults this per request).
+    Request,
 }
 
 impl FaultSite {
@@ -41,6 +44,7 @@ impl FaultSite {
         match self {
             FaultSite::Send => 0x5345,
             FaultSite::Recv => 0x5243,
+            FaultSite::Request => 0x5251,
         }
     }
 }

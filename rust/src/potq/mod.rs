@@ -41,10 +41,12 @@ mod mfmac;
 pub mod nn;
 pub mod obs;
 mod quantize;
+pub mod serve;
 pub mod shard;
 pub mod simd;
 
-pub use dist::{serve_worker, RemoteWorker};
+pub use dist::{serve_worker, RemoteWorker, WorkerLimits};
+pub use serve::{ServeModel, ServeOptions, Server};
 pub use faults::{Fault, FaultPlan, FaultSite};
 pub use obs::{MemberEvent, MemberEventKind, MetricKind, MetricRow, TraceReport};
 pub use engine::{

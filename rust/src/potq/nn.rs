@@ -486,9 +486,8 @@ impl MfMlp {
                     // Same arithmetic as [`ratio_clip`], reusing the amax
                     // already computed for the cache.
                     let t = layer.gamma * amax;
-                    let a_clip: Vec<f32> = a.iter().map(|&v| v.clamp(-t, t)).collect();
                     census.overhead_fp32_muls += 1; // t = gamma * amax
-                    let aq = PotTensor::quantize_2d(&a_clip, m, k, bits, None);
+                    let aq = PotTensor::quantize_2d_clamped(a, m, k, bits, t);
                     let z = match weights {
                         Some(sw) => {
                             // operand cache hit: the step's packed weight
@@ -721,6 +720,88 @@ impl MfMlp {
             probe,
             grads: want_grads.then_some(grads),
         }
+    }
+
+    /// Forward-only inference over independent rows — the `potq::serve`
+    /// hot path. Every weight operand comes from the model-lifetime
+    /// cache `sw` (WBC'd, quantized, k-panel-packed once at checkpoint
+    /// load); activations are PRC-clipped and ALS-PoTQ'd **per row**,
+    /// never per batch, so a row's logits are bit-identical no matter
+    /// which other rows share its engine tick — the invariant the
+    /// serving chaos soak pins (surviving requests must match a
+    /// fault-free run whose batch composition differs). The returned
+    /// census proves the serving path stays multiplication-free.
+    pub fn forward_rows(
+        &self,
+        rows: &[&[f32]],
+        engine: &dyn MacEngine,
+        sw: &StepWeights,
+    ) -> (Vec<Vec<f32>>, StepCensus) {
+        let m = rows.len();
+        assert!(m > 0, "empty serve batch");
+        let nl = self.layers.len();
+        let (bits, scheme) = (self.cfg.bits, self.cfg.scheme);
+        let mut census = StepCensus::default();
+        let mut acts: Vec<Vec<f32>> = rows
+            .iter()
+            .map(|r| {
+                assert_eq!(r.len(), self.cfg.dims[0], "row does not match d_in");
+                r.to_vec()
+            })
+            .collect();
+        for l in 0..nl {
+            let layer = &self.layers[l];
+            let (k, n) = (layer.fan_in, layer.fan_out);
+            let mut z: Vec<Vec<f32>> = match scheme {
+                Scheme::Mf => {
+                    let pw = sw.fw(l);
+                    let qs: Vec<PotTensor> = acts
+                        .iter()
+                        .map(|a| {
+                            let amax = a.iter().fold(0f32, |mx, &v| mx.max(v.abs()));
+                            let t = layer.gamma * amax;
+                            census.overhead_fp32_muls += 1; // t = gamma * amax
+                            PotTensor::quantize_2d_clamped(a, 1, k, bits, t)
+                        })
+                        .collect();
+                    for aq in &qs {
+                        census.gemms.push(GemmCensus {
+                            label: format!("fw{l}"),
+                            census: mfmac_census(aq, pw.tensor()),
+                        });
+                    }
+                    obs::counter_add("cache.hit", m as u64);
+                    let refs: Vec<&PotTensor> = qs.iter().collect();
+                    let _sp = obs::span("serve_fw", "gemm");
+                    engine.matmul_batch_packed(&refs, pw)
+                }
+                Scheme::Fp32 => acts
+                    .iter()
+                    .map(|a| {
+                        census.linear_fp32_muls += (k * n) as u64;
+                        matmul_f32(a, &layer.w, 1, k, n)
+                    })
+                    .collect(),
+            };
+            for zr in z.iter_mut() {
+                for (v, &bb) in zr.iter_mut().zip(&layer.b) {
+                    *v += bb; // FP32 adds only
+                }
+                if l + 1 < nl {
+                    for v in zr.iter_mut() {
+                        *v = v.max(0.0);
+                    }
+                }
+            }
+            acts = z;
+        }
+        if scheme == Scheme::Mf {
+            assert_eq!(
+                census.linear_fp32_muls, 0,
+                "FP32 multiplies leaked into the serving path"
+            );
+        }
+        (acts, census)
     }
 
     /// Apply per-layer gradients to the model — the optimizer step.
@@ -1010,6 +1091,33 @@ mod tests {
         for (i, eng) in engines.iter().enumerate().skip(1) {
             assert_eq!(losses[0], losses[i], "scalar vs {} loss", eng.name());
             assert_eq!(states[0], states[i], "scalar vs {} state", eng.name());
+        }
+    }
+
+    #[test]
+    fn forward_rows_is_batch_composition_invariant() {
+        // A row's logits must be bit-identical whether it is served alone
+        // or packed into a batch with arbitrary other rows — the per-row
+        // quantization contract `potq::serve` depends on.
+        let model = MfMlp::init(NnConfig::mf(&[12, 16, 4]), 5);
+        let sw = model.prepare_step_weights_packed(2, PackMode::Auto).unwrap();
+        let (x, _) = toy_batch(21, 6, 12, 4);
+        let rows: Vec<&[f32]> = x.chunks(12).collect();
+        let engines: [Box<dyn MacEngine>; 3] = [
+            Box::new(ScalarEngine),
+            Box::new(ThreadedEngine::new(3)),
+            Box::new(crate::potq::SimdEngine::new()),
+        ];
+        for eng in &engines {
+            let (batched, census) = model.forward_rows(&rows, eng.as_ref(), &sw);
+            assert_eq!(census.linear_fp32_muls, 0, "{} serving muls", eng.name());
+            for (i, row) in rows.iter().enumerate() {
+                let (solo, _) = model.forward_rows(&[row], eng.as_ref(), &sw);
+                let solo_bits: Vec<u32> = solo[0].iter().map(|v| v.to_bits()).collect();
+                let batch_bits: Vec<u32> =
+                    batched[i].iter().map(|v| v.to_bits()).collect();
+                assert_eq!(solo_bits, batch_bits, "row {i} on {}", eng.name());
+            }
         }
     }
 

@@ -283,6 +283,13 @@ pub fn metrics_snapshot() -> Vec<MetricRow> {
     lock(&METRICS).values().cloned().collect()
 }
 
+/// Current accumulated value of a named counter (0 when absent or when
+/// metrics were never enabled). Counters fold `n` into `sum`, so the
+/// sum *is* the count of things, not the number of `counter_add` calls.
+pub fn counter_value(name: &str) -> u64 {
+    lock(&METRICS).get(name).map_or(0, |r| r.sum as u64)
+}
+
 /// Clear metrics + events and sweep pending spans out of thread buffers
 /// (for a fresh per-command measurement window, e.g. `mft census`).
 pub fn reset() {

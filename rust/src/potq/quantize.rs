@@ -987,6 +987,18 @@ impl PotTensor {
         PotTensor::quantize(f, b, beta).with_shape(&[rows, cols])
     }
 
+    /// PRC + ALS-PoTQ in one call: quantize a row-major (rows, cols)
+    /// block with every value clamped to `[-t, t]` first (eq. 12's ratio
+    /// clip, `t = gamma * amax`). Produces exactly the codes
+    /// `quantize_2d` would on a pre-clamped copy — the training forward
+    /// pass and the serving hot path share this so activations quantize
+    /// one way everywhere.
+    pub fn quantize_2d_clamped(f: &[f32], rows: usize, cols: usize, b: u32, t: f32) -> PotTensor {
+        assert_eq!(f.len(), rows * cols, "data length != rows*cols");
+        let clamped: Vec<f32> = f.iter().map(|&v| v.clamp(-t, t)).collect();
+        PotTensor::quantize(&clamped, b, None).with_shape(&[rows, cols])
+    }
+
     /// ALS-PoTQ of a row-major (rows, cols) matrix with a per-tile beta
     /// plane: each `tile`-wide slab along `axis` is quantized with its own
     /// adaptive scale (the slab's local beta), stored as a delta against

@@ -1,0 +1,931 @@
+//! Batched multiplication-free inference serving (`mft serve`).
+//!
+//! The serving stack is three pieces threaded through one robustness
+//! envelope:
+//!
+//! * [`ServeModel`] — the model-lifetime operand cache. Weights are
+//!   WBC'd, quantized and k-panel-packed **once** at checkpoint load
+//!   (the same [`StepWeights`] cache the training step builds per step,
+//!   promoted to model lifetime) and shared read-only across every
+//!   request thread behind an `Arc`.
+//! * the batcher tick — concurrent requests are admitted into a
+//!   **bounded** queue and drained once per engine tick into PoT-sized
+//!   micro-batches ([`ShardPlan::serve_tiles`]) executed by one
+//!   [`MacEngine::matmul_batch_packed`] forward per layer
+//!   ([`MfMlp::forward_rows`]). Each admitted row is its own
+//!   quantization scope, so a response is bit-identical no matter which
+//!   batch it rode in — the property the chaos soak asserts.
+//! * a minimal HTTP/JSON front-end over [`crate::util::json`] — no new
+//!   dependencies, one request per connection, every parse failure a
+//!   *named* error response.
+//!
+//! The envelope, by construction rather than by retrofit:
+//!
+//! * **bounded admission**: the queue sheds with a named 429 reason at
+//!   `queue_cap`; the accept loop sheds with a 503 at `max_conns`.
+//!   There is no unbounded queue and no unbounded thread spawn.
+//! * **deadlines**: socket read/write timeouts on every accepted
+//!   connection (PR 9's `--deadline-ms` discipline), and a per-request
+//!   deadline — an expired request is shed *from the batch* by the
+//!   batcher, never allowed to stall the tick.
+//! * **isolation**: a hostile connection gets a named error response
+//!   and its thread ends; the accept loop keeps serving.
+//! * **drain**: shutdown stops accepting, flushes every in-flight
+//!   request through the batcher, then joins — exit 0.
+//!
+//! Observability: `serve.requests`, `serve.shed`, `serve.deadline_hits`
+//! and `serve.batch_size` counters plus `serve.queue_wait` durations,
+//! all through [`super::obs`] and therefore visible in `mft report`.
+
+use std::collections::VecDeque;
+use std::io::{self, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{engine_by_name, MacEngine};
+use super::nn::{MfMlp, Scheme, StepWeights};
+use super::obs;
+use super::quantize::PackMode;
+use super::shard::{self, ShardPlan};
+use crate::util::json::Json;
+
+/// Request-line byte cap (method + path + version + CRLF).
+pub const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Total header-block byte cap, mirroring `dist`'s `MAX_FRAME_BODY`
+/// discipline of naming every length bound.
+pub const MAX_HEADER_BYTES: usize = 32 * 1024;
+/// Request body byte cap.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// How long the accept loop sleeps when the (non-blocking) listener has
+/// nothing for it, and the batcher's condvar re-check period.
+const POLL: Duration = Duration::from_millis(5);
+
+// ---------------------------------------------------------------------------
+// options
+
+/// Serving knobs. Every bound is explicit; there is no "unlimited".
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Largest micro-batch the tick hands to the engine (power of two).
+    pub max_batch: usize,
+    /// Admission-queue capacity; request `queue_cap + 1` is shed (429).
+    pub queue_cap: usize,
+    /// Concurrent-connection cap; connection `max_conns + 1` is shed (503).
+    pub max_conns: usize,
+    /// Per-request deadline, applied both as socket read/write timeouts
+    /// and as the queue-residency bound. `None` disables both.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_batch: 8,
+            queue_cap: 64,
+            max_conns: 64,
+            deadline: Some(Duration::from_millis(30_000)),
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 || !self.max_batch.is_power_of_two() {
+            bail!("serve max_batch must be a power of two >= 1, got {}", self.max_batch);
+        }
+        if self.queue_cap == 0 {
+            bail!("serve queue_cap must be >= 1");
+        }
+        if self.max_conns == 0 {
+            bail!("serve max_conns must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// model-lifetime operand cache
+
+/// A loaded model plus everything the serving hot path needs, built
+/// once: the packed weight operands and the tick engine. Shared
+/// read-only across the accept loop, connection threads and the
+/// batcher behind one `Arc` (the `ShardedMlp` snapshot pattern).
+pub struct ServeModel {
+    pub mlp: MfMlp,
+    weights: StepWeights,
+    engine: Box<dyn MacEngine + Send>,
+    /// Training step the checkpoint froze at (echoed in responses).
+    pub step: u64,
+    /// Checkpoint variant name (banner + /healthz).
+    pub variant: String,
+}
+
+impl ServeModel {
+    /// Build the cache: validate the engine name, WBC + quantize +
+    /// k-panel-pack every layer once, then run one warm-up row through
+    /// the serving forward to fail fast (and to prove the census: the
+    /// MF serving path executes zero FP32 multiplies in linear layers —
+    /// `forward_rows` asserts it).
+    pub fn new(
+        mlp: MfMlp,
+        engine_name: &str,
+        threads: usize,
+        kshard: usize,
+        pack: PackMode,
+        step: u64,
+        variant: &str,
+    ) -> Result<ServeModel> {
+        if engine_by_name(engine_name, threads).is_none() {
+            bail!("unknown engine '{engine_name}'");
+        }
+        let engine = shard::build_engine(engine_name, threads, kshard);
+        let weights = mlp
+            .prepare_step_weights_packed(kshard, pack)
+            .context("packing model weights for serving")?;
+        let model = ServeModel { mlp, weights, engine, step, variant: variant.to_string() };
+        let zero = vec![0f32; model.d_in()];
+        let (logits, census) = model.mlp.forward_rows(&[&zero], model.engine.as_ref(), &model.weights);
+        assert_eq!(logits.len(), 1);
+        if model.mlp.cfg.scheme == Scheme::Mf {
+            assert_eq!(census.linear_fp32_muls, 0, "serving warm-up leaked FP32 multiplies");
+        }
+        Ok(model)
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.mlp.cfg.dims[0]
+    }
+
+    pub fn classes(&self) -> usize {
+        self.mlp.classes()
+    }
+
+    /// One serving tick's forward over already-validated rows.
+    fn forward(&self, rows: &[&[f32]]) -> Vec<Vec<f32>> {
+        let (logits, _census) = self.mlp.forward_rows(rows, self.engine.as_ref(), &self.weights);
+        logits
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared server state
+
+enum Reply {
+    Logits(Vec<f32>),
+    /// The batcher shed this request from its batch: its deadline
+    /// passed while it sat in the queue.
+    Expired,
+}
+
+struct Pending {
+    row: Vec<f32>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    resp: SyncSender<Reply>,
+}
+
+struct Shared {
+    model: ServeModel,
+    opts: ServeOptions,
+    queue: Mutex<VecDeque<Pending>>,
+    tick_cv: Condvar,
+    /// Set once at shutdown: stop accepting, flush, exit.
+    draining: AtomicBool,
+    /// Test/chaos hook: freeze the batcher tick so overload (queue-full
+    /// sheds, queue-residency deadline hits) is deterministic.
+    paused: AtomicBool,
+    active_conns: AtomicUsize,
+}
+
+impl Shared {
+    fn queue_depth(&self) -> usize {
+        lock_queue(&self.queue).len()
+    }
+}
+
+/// Queue mutex, poison-proof: a panicking connection thread must never
+/// take the whole server down with it.
+fn lock_queue(m: &Mutex<VecDeque<Pending>>) -> std::sync::MutexGuard<'_, VecDeque<Pending>> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+/// Decrements the live-connection gauge even if the handler panics.
+struct ConnGuard(Arc<Shared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the server
+
+/// A running serving front-end: accept loop + batcher tick, joined on
+/// [`Server::shutdown`] (graceful drain) or on drop.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `listen` and start serving `model`. Returns once the
+    /// listener is live; `addr()` carries the resolved port (bind to
+    /// port 0 for an ephemeral one).
+    pub fn spawn(model: ServeModel, opts: ServeOptions, listen: &str) -> Result<Server> {
+        opts.validate()?;
+        let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            model,
+            opts,
+            queue: Mutex::new(VecDeque::new()),
+            tick_cv: Condvar::new(),
+            draining: AtomicBool::new(false),
+            paused: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(listener, shared))?
+        };
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("serve-batch".into())
+                .spawn(move || batcher_loop(shared))?
+        };
+        Ok(Server { shared, addr, accept: Some(accept), batcher: Some(batcher) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue_depth()
+    }
+
+    /// Freeze / unfreeze the batcher tick (deterministic-overload hook
+    /// for tests and `mft chaos --serve`). Draining overrides a pause.
+    pub fn set_paused(&self, on: bool) {
+        self.shared.paused.store(on, Ordering::SeqCst);
+        if !on {
+            self.shared.tick_cv.notify_all();
+        }
+    }
+
+    /// Graceful drain: stop accepting, flush every in-flight request
+    /// through the batcher, join both loops.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.tick_cv.notify_all();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        // In-flight connection threads already hold their replies (the
+        // batcher flushed before exiting); give them a bounded window
+        // to write and hang up.
+        let patience = Instant::now() + Duration::from_secs(5);
+        while self.shared.active_conns.load(Ordering::SeqCst) > 0 && Instant::now() < patience {
+            thread::sleep(POLL);
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// accept loop
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.draining.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let prev = shared.active_conns.fetch_add(1, Ordering::SeqCst);
+                let guard = ConnGuard(Arc::clone(&shared));
+                if prev >= shared.opts.max_conns {
+                    // Named shed, inline: do NOT spawn a thread for a
+                    // connection we are rejecting.
+                    obs::counter_add("serve.shed", 1);
+                    let reason =
+                        format!("shed: connection capacity ({}) reached", shared.opts.max_conns);
+                    let _ = write_response(&stream, 503, &error_body(503, &reason));
+                    drop(guard);
+                    continue;
+                }
+                let shared2 = Arc::clone(&shared);
+                let spawned = thread::Builder::new()
+                    .name(format!("serve-conn-{peer}"))
+                    .spawn(move || {
+                        let _guard = guard;
+                        handle_conn(stream, &shared2);
+                    });
+                if let Err(e) = spawned {
+                    // Thread exhaustion is a shed, not a crash.
+                    eprintln!("[mft] serve: spawn failed for {peer}: {e}");
+                    obs::counter_add("serve.shed", 1);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(e) => {
+                if shared.draining.load(Ordering::SeqCst) {
+                    return;
+                }
+                eprintln!("[mft] serve: accept error: {e}");
+                thread::sleep(POLL);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batcher tick
+
+fn batcher_loop(shared: Arc<Shared>) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = lock_queue(&shared.queue);
+            loop {
+                let draining = shared.draining.load(Ordering::SeqCst);
+                let paused = shared.paused.load(Ordering::SeqCst) && !draining;
+                if !q.is_empty() && !paused {
+                    let n = q.len().min(shared.opts.max_batch);
+                    break q.drain(..n).collect();
+                }
+                if draining && q.is_empty() {
+                    return; // flushed: the drain is complete
+                }
+                q = match shared.tick_cv.wait_timeout(q, POLL) {
+                    Ok((g, _)) => g,
+                    Err(poison) => poison.into_inner().0,
+                };
+            }
+        };
+        let now = Instant::now();
+        let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
+        for p in batch {
+            if p.deadline.is_some_and(|d| now >= d) {
+                // Shed from the batch: an expired request must not
+                // stall the tick for the live ones.
+                obs::counter_add("serve.deadline_hits", 1);
+                let _ = p.resp.send(Reply::Expired);
+            } else {
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        obs::counter_add("serve.batch_size", live.len() as u64);
+        for p in &live {
+            obs::observe_secs("serve.queue_wait", now.duration_since(p.enqueued).as_secs_f64());
+        }
+        let _sp = obs::span("serve_tick", "serve");
+        for tile in ShardPlan::serve_tiles(live.len(), shared.opts.max_batch) {
+            let rows: Vec<&[f32]> = live[tile.clone()].iter().map(|p| p.row.as_slice()).collect();
+            let logits = shared.model.forward(&rows);
+            for (p, l) in live[tile].iter().zip(logits) {
+                let _ = p.resp.send(Reply::Logits(l)); // receiver may have timed out; fine
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-connection HTTP handling
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// A named, respondable protocol failure. `status == 0` is the
+/// "connection unusable" sentinel: hang up without a response.
+struct HttpError {
+    status: u16,
+    reason: String,
+}
+
+impl HttpError {
+    fn new(status: u16, reason: impl Into<String>) -> HttpError {
+        HttpError { status, reason: reason.into() }
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn io_to_http(e: io::Error, what: &str) -> HttpError {
+    if is_timeout(&e) {
+        HttpError::new(408, format!("deadline exceeded {what}"))
+    } else {
+        HttpError::new(0, format!("i/o error {what}: {e}"))
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    if let Some(d) = shared.opts.deadline {
+        let _ = stream.set_read_timeout(Some(d));
+        let _ = stream.set_write_timeout(Some(d));
+    }
+    let req = {
+        let mut reader = BufReader::new(&stream);
+        match parse_request(&mut reader) {
+            Ok(Some(req)) => req,
+            Ok(None) => return, // clean close before any bytes
+            Err(e) => {
+                if e.status == 408 {
+                    // A stalled client ate its deadline: that is a
+                    // deadline hit, same counter as a queue expiry.
+                    obs::counter_add("serve.deadline_hits", 1);
+                }
+                if e.status != 0 {
+                    let _ = write_response(&stream, e.status, &error_body(e.status, &e.reason));
+                }
+                return;
+            }
+        }
+    };
+    let (status, body) = route(&req, shared);
+    let _ = write_response(&stream, status, &body);
+}
+
+/// Parse one HTTP/1.x request with hard byte caps at every stage.
+/// `Ok(None)` = the peer closed before sending anything (not an error).
+fn parse_request(reader: &mut BufReader<&TcpStream>) -> Result<Option<HttpRequest>, HttpError> {
+    let line = match read_line_capped(reader, MAX_REQUEST_LINE, "request line")? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if v.starts_with("HTTP/") => (m, p, v),
+        _ => return Err(HttpError::new(400, format!("malformed request line: {line:?}"))),
+    };
+    let _ = version;
+    let mut header_bytes = 0usize;
+    let mut content_length = 0usize;
+    loop {
+        let h = read_line_capped(reader, MAX_HEADER_BYTES, "header line")?
+            .ok_or_else(|| HttpError::new(400, "truncated headers: peer closed mid-block"))?;
+        if h.is_empty() {
+            break;
+        }
+        header_bytes += h.len() + 2;
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::new(
+                431,
+                format!("headers exceed the {MAX_HEADER_BYTES}-byte cap"),
+            ));
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| {
+                    HttpError::new(400, format!("bad Content-Length: {:?}", value.trim()))
+                })?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::new(
+            413,
+            format!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            HttpError::new(400, format!("truncated body: wanted {content_length} bytes"))
+        } else {
+            io_to_http(e, "reading request body")
+        }
+    })?;
+    Ok(Some(HttpRequest { method: method.to_string(), path: path.to_string(), body }))
+}
+
+/// Read one CRLF/LF-terminated line of at most `cap` bytes.
+/// `Ok(None)` = clean EOF before any byte.
+fn read_line_capped(
+    reader: &mut BufReader<&TcpStream>,
+    cap: usize,
+    what: &str,
+) -> Result<Option<String>, HttpError> {
+    let mut buf = Vec::new();
+    let n = reader
+        .take((cap + 1) as u64)
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| io_to_http(e, &format!("reading {what}")))?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') {
+        if buf.len() > cap {
+            return Err(HttpError::new(431, format!("{what} exceeds the {cap}-byte cap")));
+        }
+        return Err(HttpError::new(400, format!("truncated {what}: no line terminator")));
+    }
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map(Some).map_err(|_| HttpError::new(400, format!("{what} is not UTF-8")))
+}
+
+fn route(req: &HttpRequest, shared: &Shared) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("variant".to_string(), Json::Str(shared.model.variant.clone()));
+            m.insert("step".to_string(), Json::Num(shared.model.step as f64));
+            m.insert("queue_depth".to_string(), Json::Num(shared.queue_depth() as f64));
+            m.insert(
+                "draining".to_string(),
+                Json::Bool(shared.draining.load(Ordering::SeqCst)),
+            );
+            (200, Json::Obj(m))
+        }
+        ("GET", "/readyz") => {
+            let depth = shared.queue_depth();
+            let draining = shared.draining.load(Ordering::SeqCst);
+            if draining {
+                (503, error_body(503, "not ready: draining"))
+            } else if depth >= shared.opts.queue_cap {
+                (503, error_body(503, format!("not ready: queue full ({depth})")))
+            } else {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("ready".to_string(), Json::Bool(true));
+                m.insert("queue_depth".to_string(), Json::Num(depth as f64));
+                (200, Json::Obj(m))
+            }
+        }
+        ("POST", "/predict") => predict(req, shared),
+        _ => (
+            404,
+            error_body(404, format!("no such endpoint: {} {}", req.method, req.path)),
+        ),
+    }
+}
+
+fn predict(req: &HttpRequest, shared: &Shared) -> (u16, Json) {
+    obs::counter_add("serve.requests", 1);
+    let row = match parse_predict_row(&req.body, shared.model.d_in()) {
+        Ok(r) => r,
+        Err(reason) => return (400, error_body(400, reason)),
+    };
+    let enqueued = Instant::now();
+    let deadline = shared.opts.deadline.map(|d| enqueued + d);
+    let (tx, rx): (SyncSender<Reply>, Receiver<Reply>) = sync_channel(1);
+    {
+        let mut q = lock_queue(&shared.queue);
+        if shared.draining.load(Ordering::SeqCst) {
+            obs::counter_add("serve.shed", 1);
+            return (503, error_body(503, "shed: server draining"));
+        }
+        if q.len() >= shared.opts.queue_cap {
+            obs::counter_add("serve.shed", 1);
+            return (
+                429,
+                error_body(429, format!("shed: queue full (cap {})", shared.opts.queue_cap)),
+            );
+        }
+        q.push_back(Pending { row, enqueued, deadline, resp: tx });
+    }
+    shared.tick_cv.notify_all();
+    let reply = match deadline {
+        Some(d) => {
+            // Small grace so a boundary-straddling tick can still land
+            // its reply; the batcher remains the deadline authority.
+            let wait = d.saturating_duration_since(Instant::now()) + Duration::from_millis(200);
+            rx.recv_timeout(wait)
+        }
+        None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+    };
+    match reply {
+        Ok(Reply::Logits(logits)) => {
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map_or(0, |(i, _)| i);
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("argmax".to_string(), Json::Num(argmax as f64));
+            m.insert(
+                "logits".to_string(),
+                Json::Arr(logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+            );
+            m.insert("step".to_string(), Json::Num(shared.model.step as f64));
+            (200, Json::Obj(m))
+        }
+        Ok(Reply::Expired) | Err(RecvTimeoutError::Timeout) => {
+            (504, error_body(504, "deadline exceeded waiting for a batch slot"))
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            (500, error_body(500, "batcher dropped the request"))
+        }
+    }
+}
+
+fn parse_predict_row(body: &[u8], d_in: usize) -> Result<Vec<f32>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let xs = doc
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing 'x' array".to_string())?;
+    if xs.len() != d_in {
+        return Err(format!("'x' has {} values, model d_in is {d_in}", xs.len()));
+    }
+    let mut row = Vec::with_capacity(d_in);
+    for (i, v) in xs.iter().enumerate() {
+        let f = v.as_f64().ok_or_else(|| format!("'x'[{i}] is not a number"))? as f32;
+        if !f.is_finite() {
+            return Err(format!("'x'[{i}] is not finite"));
+        }
+        row.push(f);
+    }
+    Ok(row)
+}
+
+fn error_body(status: u16, reason: impl Into<String>) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("status".to_string(), Json::Num(status as f64));
+    m.insert("error".to_string(), Json::Str(reason.into()));
+    Json::Obj(m)
+}
+
+fn status_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(mut stream: &TcpStream, status: u16, body: &Json) -> io::Result<()> {
+    let body = body.to_string();
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_phrase(status),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------------
+// tiny client (tests, chaos soak, benches)
+
+/// One blocking HTTP exchange: connect, send, read the full response.
+/// Returns `(status, body)`.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    timeout: Duration,
+) -> io::Result<(u16, String)> {
+    let sock: SocketAddr = addr
+        .parse()
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, format!("bad addr {addr}: {e}")))?;
+    let stream = TcpStream::connect_timeout(&sock, timeout)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    (&stream).write_all(req.as_bytes())?;
+    read_http_response(&stream)
+}
+
+/// Parse the status line and body of a response already on the wire.
+pub fn read_http_response(stream: &TcpStream) -> io::Result<(u16, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad status line: {status_line:?}"),
+            )
+        })?;
+    let mut content_length = None;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse::<usize>().ok();
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            let mut b = vec![0u8; n];
+            reader.read_exact(&mut b)?;
+            String::from_utf8_lossy(&b).into_owned()
+        }
+        None => {
+            let mut b = String::new();
+            reader.read_to_string(&mut b)?;
+            b
+        }
+    };
+    Ok((status, body))
+}
+
+/// The canonical `/predict` request body for a feature row.
+pub fn predict_body(row: &[f32]) -> String {
+    let xs: Vec<Json> = row.iter().map(|&v| Json::Num(v as f64)).collect();
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("x".to_string(), Json::Arr(xs));
+    Json::Obj(m).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// termination signals (no libc dependency: raw signal(2))
+
+pub mod signal {
+    //! SIGTERM/SIGINT latch for the serve loop's graceful drain. The
+    //! handler only stores to an `AtomicBool` (async-signal-safe); the
+    //! serve loop polls [`termination_requested`].
+
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the latch for SIGTERM + SIGINT. Idempotent.
+    pub fn install_termination_handlers() {
+        unsafe {
+            signal(SIGTERM, on_term as usize);
+            signal(SIGINT, on_term as usize);
+        }
+    }
+
+    /// True once SIGTERM/SIGINT arrived (sticky).
+    pub fn termination_requested() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+
+    /// Test hook: simulate/clear a termination request in-process.
+    pub fn set_termination_requested(on: bool) {
+        TERM.store(on, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::potq::nn::NnConfig;
+
+    fn tiny_model() -> ServeModel {
+        let mlp = MfMlp::init(NnConfig::mf(&[6, 8, 3]), 7);
+        ServeModel::new(mlp, "scalar", 1, 1, PackMode::Auto, 0, "test").unwrap()
+    }
+
+    fn spawn_tiny(opts: ServeOptions) -> Server {
+        Server::spawn(tiny_model(), opts, "127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn predict_round_trips_and_is_batch_invariant() {
+        let srv = spawn_tiny(ServeOptions::default());
+        let addr = srv.addr().to_string();
+        let row: Vec<f32> = (0..6).map(|i| (i as f32) * 0.25 - 0.5).collect();
+        let body = predict_body(&row);
+        let (status, solo) =
+            http_request(&addr, "POST", "/predict", &body, Duration::from_secs(5)).unwrap();
+        assert_eq!(status, 200, "{solo}");
+        // same row again, alongside a burst of different rows: the
+        // response text must be byte-identical (per-row quantization
+        // scope — batch composition cannot leak into a reply)
+        let mut others = Vec::new();
+        for j in 0..5 {
+            let addr = addr.clone();
+            others.push(std::thread::spawn(move || {
+                let noise: Vec<f32> = (0..6).map(|i| ((i + j) as f32).sin()).collect();
+                http_request(
+                    &addr,
+                    "POST",
+                    "/predict",
+                    &predict_body(&noise),
+                    Duration::from_secs(5),
+                )
+                .unwrap()
+            }));
+        }
+        let (status, batched) =
+            http_request(&addr, "POST", "/predict", &body, Duration::from_secs(5)).unwrap();
+        for o in others {
+            let (s, _) = o.join().unwrap();
+            assert_eq!(s, 200);
+        }
+        assert_eq!(status, 200);
+        assert_eq!(solo, batched, "batch composition leaked into a response");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn paused_queue_sheds_past_cap_and_expires_deadlines() {
+        let opts = ServeOptions {
+            max_batch: 2,
+            queue_cap: 2,
+            max_conns: 32,
+            deadline: Some(Duration::from_millis(250)),
+        };
+        let srv = spawn_tiny(opts);
+        srv.set_paused(true);
+        let addr = srv.addr().to_string();
+        let row = vec![0.5f32; 6];
+        let mut workers = Vec::new();
+        for _ in 0..6 {
+            let addr = addr.clone();
+            let body = predict_body(&row);
+            workers.push(std::thread::spawn(move || {
+                http_request(&addr, "POST", "/predict", &body, Duration::from_secs(5))
+                    .unwrap()
+                    .0
+            }));
+        }
+        let statuses: Vec<u16> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+        let shed = statuses.iter().filter(|&&s| s == 429).count();
+        let expired = statuses.iter().filter(|&&s| s == 504).count();
+        assert_eq!(shed + expired, 6, "{statuses:?}");
+        assert!(shed >= 4, "queue cap 2 must shed at least 4 of 6: {statuses:?}");
+        assert!(expired >= 1, "paused past the deadline must expire: {statuses:?}");
+        srv.set_paused(false);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn serve_tiles_cover_exactly_in_pot_groups() {
+        let tiles = ShardPlan::serve_tiles(13, 8);
+        assert_eq!(tiles, vec![0..8, 8..12, 12..13]);
+        assert!(ShardPlan::serve_tiles(0, 4).is_empty());
+        assert_eq!(ShardPlan::serve_tiles(4, 8), vec![0..4]);
+    }
+}

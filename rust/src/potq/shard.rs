@@ -125,12 +125,33 @@ impl ShardPlan {
     pub fn effective_workers(&self) -> usize {
         self.workers.clamp(1, self.n_tiles)
     }
+
+    /// PoT micro-batch grouping for the serving tick: split `n` pending
+    /// request rows into power-of-two groups no larger than `cap`
+    /// (itself a power of two), greedily largest-first — the same
+    /// PoT-tiles law [`ShardPlan::new`] enforces for training
+    /// microbatches, applied to a ragged admission queue.
+    /// `serve_tiles(13, 8)` = `[0..8, 8..12, 12..13]`.
+    pub fn serve_tiles(n: usize, cap: usize) -> Vec<Range<usize>> {
+        assert!(cap.is_power_of_two(), "serve micro-batch cap must be a power of two");
+        let mut out = Vec::new();
+        let mut at = 0;
+        while at < n {
+            let mut g = cap;
+            while g > n - at {
+                g /= 2;
+            }
+            out.push(at..at + g);
+            at += g;
+        }
+        out
+    }
 }
 
 /// Build one worker's engine: the named [`MacEngine`], wrapped for
 /// tensor-parallel k-sharding when the plan asks for it. Built **once**
 /// per worker at pool construction — not per step, not per tile.
-fn build_engine(name: &str, threads: usize, kshard: usize) -> Box<dyn MacEngine + Send> {
+pub(crate) fn build_engine(name: &str, threads: usize, kshard: usize) -> Box<dyn MacEngine + Send> {
     let inner = engine_by_name(name, threads).expect("engine validated at construction");
     if kshard > 1 {
         Box::new(KShardEngine::new(inner, kshard))

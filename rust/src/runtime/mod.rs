@@ -18,7 +18,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 pub use artifact::{Index, Manifest};
-pub use native::NativeSession;
+pub use native::{nn_config_for, NativeSession};
 pub use session::{Session, SessionBackend, SessionInfo};
 
 pub struct Runtime {

@@ -49,30 +49,40 @@ pub struct NativeSession {
     last_census: Option<StepCensus>,
 }
 
+/// Resolve a [`TrainConfig`] to its native spec and the [`NnConfig`]
+/// the model builds from. Shared by the training session and `mft
+/// serve`'s checkpoint load: the quantization knobs must match training
+/// (the state vector does not carry them), so both go through the one
+/// resolution.
+pub fn nn_config_for(cfg: &TrainConfig) -> Result<(NativeSpec, NnConfig)> {
+    let spec = models::native_spec(&cfg.variant).with_context(|| {
+        format!(
+            "variant '{}' has no native spec (available: {})",
+            cfg.variant,
+            models::NATIVE_VARIANTS.join(", ")
+        )
+    })?;
+    let scheme = Scheme::parse(spec.scheme).context("bad scheme in native spec")?;
+    let nn_cfg = NnConfig {
+        dims: spec.dims.clone(),
+        bits: cfg.bits,
+        scheme,
+        gamma_init: cfg.gamma,
+        grad_gamma: cfg.grad_gamma,
+        momentum: cfg.momentum,
+        weight_decay: cfg.weight_decay,
+    };
+    Ok((spec, nn_cfg))
+}
+
 impl NativeSession {
     /// Build the session a [`TrainConfig`] describes: variant resolved
     /// through the native-spec registry, engine through the MacEngine
     /// registry, shard plan from `--workers` / `--shard-tile`.
     pub fn from_config(cfg: &TrainConfig) -> Result<NativeSession> {
-        let spec = models::native_spec(&cfg.variant).with_context(|| {
-            format!(
-                "variant '{}' has no native spec (available: {})",
-                cfg.variant,
-                models::NATIVE_VARIANTS.join(", ")
-            )
-        })?;
+        let (spec, nn_cfg) = nn_config_for(cfg)?;
         crate::potq::engine_by_name(&cfg.engine, cfg.threads)
             .with_context(|| format!("unknown engine '{}'", cfg.engine))?;
-        let scheme = Scheme::parse(spec.scheme).context("bad scheme in native spec")?;
-        let nn_cfg = NnConfig {
-            dims: spec.dims.clone(),
-            bits: cfg.bits,
-            scheme,
-            gamma_init: cfg.gamma,
-            grad_gamma: cfg.grad_gamma,
-            momentum: cfg.momentum,
-            weight_decay: cfg.weight_decay,
-        };
         let tile = if cfg.shard_tile > 0 {
             cfg.shard_tile
         } else {

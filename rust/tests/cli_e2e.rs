@@ -632,6 +632,148 @@ fn resume_auto_restores_and_explicit_missing_path_is_an_error() {
     assert!(e.contains("checkpoint not found"), "{e}");
 }
 
+/// An `mft serve` subprocess on an ephemeral port; the address comes
+/// from its startup banner. Killed on drop so a failed assertion never
+/// leaks a listener.
+struct ServeProc {
+    child: std::process::Child,
+    addr: String,
+    stdout: std::io::BufReader<std::process::ChildStdout>,
+}
+
+impl ServeProc {
+    fn spawn(ckpt: &std::path::Path) -> ServeProc {
+        use std::io::BufRead;
+        let mut child = mft()
+            .args(["serve", "--listen", "127.0.0.1:0", "--max-batch", "4", "--checkpoint"])
+            .arg(ckpt)
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn mft serve");
+        let mut stdout = std::io::BufReader::new(child.stdout.take().expect("serve stdout"));
+        let mut line = String::new();
+        stdout.read_line(&mut line).expect("serve banner read");
+        let addr = line
+            .split("listening on ")
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unparseable serve banner: {line}"))
+            .to_string();
+        ServeProc { child, addr, stdout }
+    }
+
+    /// SIGTERM, then collect (exit status, remaining stdout).
+    fn terminate(mut self) -> (std::process::ExitStatus, String) {
+        use std::io::Read;
+        let ok = std::process::Command::new("kill")
+            .args(["-TERM", &self.child.id().to_string()])
+            .status()
+            .expect("run kill")
+            .success();
+        assert!(ok, "kill -TERM failed");
+        let mut rest = String::new();
+        self.stdout.read_to_string(&mut rest).expect("serve stdout drain");
+        let status = self.child.wait().expect("serve wait");
+        (status, rest)
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn serve_smoke_is_deterministic_and_drains_on_sigterm() {
+    use mftrain::potq::serve::{http_request, predict_body};
+    use std::time::Duration;
+
+    // train the checkpoint the server will load (tiny_mlp_mf: d_in 48)
+    let ckpt = std::env::temp_dir().join("mft_cli_serve_smoke.ckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let out = mft()
+        .args([
+            "train", "--backend", "native", "--variant", "tiny_mlp_mf", "--engine",
+            "blocked", "--steps", "6", "--lr", "0.05", "--seed", "13", "--checkpoint",
+        ])
+        .arg(&ckpt)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // the same concurrent request sweep against two fresh server
+    // processes must produce byte-identical response sets: per-row
+    // quantization means neither batch composition nor scheduling can
+    // leak into a reply
+    let rows: Vec<Vec<f32>> = (0..6)
+        .map(|i| (0..48).map(|j| ((i * 48 + j) as f32).sin()).collect())
+        .collect();
+    let sweep = |addr: &str| -> Vec<String> {
+        let handles: Vec<_> = rows
+            .iter()
+            .map(|row| {
+                let addr = addr.to_string();
+                let body = predict_body(row);
+                std::thread::spawn(move || {
+                    http_request(&addr, "POST", "/predict", &body, Duration::from_secs(10))
+                        .expect("predict request")
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                let (status, body) = h.join().unwrap();
+                assert_eq!(status, 200, "{body}");
+                body
+            })
+            .collect()
+    };
+
+    let srv = ServeProc::spawn(&ckpt);
+    let (status, health) =
+        http_request(&srv.addr, "GET", "/healthz", "", Duration::from_secs(10)).unwrap();
+    assert_eq!(status, 200, "{health}");
+    assert!(health.contains("tiny_mlp_mf"), "{health}");
+    let first = sweep(&srv.addr);
+    let (status, _) = srv.terminate();
+    assert!(status.success(), "SIGTERM drain must exit 0, got {status:?}");
+
+    let srv = ServeProc::spawn(&ckpt);
+    let second = sweep(&srv.addr);
+    assert_eq!(first, second, "serve responses diverged across two runs");
+    let (status, rest) = srv.terminate();
+    assert!(status.success(), "SIGTERM drain must exit 0, got {status:?}");
+    assert!(rest.contains("draining"), "{rest}");
+    assert!(rest.contains("drained"), "drain summary missing: {rest}");
+    assert!(rest.contains("6 request(s)"), "request counter missing: {rest}");
+}
+
+#[test]
+fn chaos_serve_soak_passes() {
+    // the serving survival envelope at the binary level: seeded client
+    // faults + an overload burst; the subcommand exits nonzero unless
+    // >= 1 fault injected, >= 1 shed, >= 1 deadline hit, and every
+    // surviving response is bit-identical to the fault-free run
+    let out = mft()
+        .args(["chaos", "--serve", "--seed", "7", "--requests", "24"])
+        .args(["--faults", "seed=7,rate=0.35", "--deadline-ms", "300"])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "stdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let s = String::from_utf8_lossy(&out.stdout);
+    assert!(s.contains("PASS"), "{s}");
+    assert!(s.contains("bit-identical to clean"), "{s}");
+}
+
 #[test]
 fn resume_auto_skips_a_torn_checkpoint() {
     // a kill mid-write can only ever leave a stale `.tmp` beside a good

@@ -1,0 +1,226 @@
+//! Hostile-HTTP fuzz suite for the serving front-end (`potq::serve`):
+//! truncated request lines, oversized headers/bodies (the named length
+//! caps, mirroring `dist`'s MAX_FRAME_BODY discipline), garbage bytes,
+//! malformed JSON. Every case must draw a *named* error response —
+//! never a panic — and the server must still answer a well-formed
+//! request afterwards.
+//!
+//! Payloads are sized so the server consumes every byte before it
+//! responds: unread residue in the kernel receive queue would turn the
+//! server's close into a RST, which can discard the client's buffered
+//! response and make the assertion flaky rather than meaningful.
+
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use mftrain::potq::nn::{MfMlp, NnConfig};
+use mftrain::potq::serve::{
+    http_request, predict_body, read_http_response, ServeModel, ServeOptions, Server,
+    MAX_BODY_BYTES, MAX_HEADER_BYTES, MAX_REQUEST_LINE,
+};
+use mftrain::potq::PackMode;
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(5);
+
+fn spawn_server(opts: ServeOptions) -> Server {
+    let mlp = MfMlp::init(NnConfig::mf(&[6, 8, 3]), 3);
+    let model = ServeModel::new(mlp, "scalar", 1, 1, PackMode::Auto, 42, "serve_http").unwrap();
+    Server::spawn(model, opts, "127.0.0.1:0").unwrap()
+}
+
+fn test_opts() -> ServeOptions {
+    ServeOptions {
+        max_batch: 8,
+        queue_cap: 16,
+        max_conns: 32,
+        deadline: Some(Duration::from_secs(2)),
+    }
+}
+
+/// Send raw bytes, half-close, read whatever response comes back.
+fn raw_exchange(addr: &str, bytes: &[u8]) -> (u16, String) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+    (&stream).write_all(bytes).unwrap();
+    stream.shutdown(Shutdown::Write).unwrap();
+    read_http_response(&stream).unwrap()
+}
+
+/// A well-formed prediction must succeed — the proof the server
+/// survived whatever came before.
+fn assert_still_serving(addr: &str, context: &str) {
+    let row = vec![0.25f32; 6];
+    let (status, body) =
+        http_request(addr, "POST", "/predict", &predict_body(&row), CLIENT_TIMEOUT).unwrap();
+    assert_eq!(status, 200, "server unusable after {context}: {body}");
+    assert!(body.contains("\"argmax\""), "after {context}: {body}");
+}
+
+#[test]
+fn hostile_http_draws_named_errors_and_never_kills_the_server() {
+    let srv = spawn_server(test_opts());
+    let addr = srv.addr().to_string();
+
+    // Exactly cap + 1 bytes with no terminator: the server's capped
+    // reader consumes all of them, then names the 431.
+    let oversized_line = {
+        let mut v = b"GET /".to_vec();
+        v.extend_from_slice(&vec![b'a'; MAX_REQUEST_LINE + 1 - v.len()]);
+        v
+    };
+    // Uniform 1 KiB header lines, one line past the block cap: the 431
+    // triggers on the final line, with every sent byte consumed.
+    let oversized_headers = {
+        let mut v = b"GET /healthz HTTP/1.1\r\n".to_vec();
+        let pad = vec![b'b'; 1024 - b"X-Pad: \r\n".len() - 2];
+        for _ in 0..(MAX_HEADER_BYTES / 1024 + 1) {
+            v.extend_from_slice(b"X-Pad: ");
+            v.extend_from_slice(&pad);
+            v.extend_from_slice(b"\r\n");
+        }
+        v
+    };
+    let oversized_body = format!(
+        "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+        MAX_BODY_BYTES + 1
+    )
+    .into_bytes();
+
+    let cases: Vec<(&str, Vec<u8>, u16)> = vec![
+        ("garbage bytes", b"\x00\x01\x7fgarbage\r\n".to_vec(), 400),
+        ("truncated request line", b"POST /predict HTTP/1.1".to_vec(), 400),
+        ("lone method", b"POST\r\n".to_vec(), 400),
+        ("wrong protocol", b"POST /predict GOPHER/9\r\n".to_vec(), 400),
+        ("oversized request line", oversized_line, 431),
+        ("oversized header block", oversized_headers, 431),
+        (
+            "truncated header block",
+            b"GET /healthz HTTP/1.1\r\nX-Half: yes\r\n".to_vec(),
+            400,
+        ),
+        ("oversized declared body", oversized_body, 413),
+        (
+            "unparseable content-length",
+            b"POST /predict HTTP/1.1\r\nContent-Length: banana\r\n".to_vec(),
+            400,
+        ),
+        (
+            "truncated body",
+            b"POST /predict HTTP/1.1\r\nContent-Length: 100\r\n\r\n{\"x\":".to_vec(),
+            400,
+        ),
+        (
+            "invalid JSON body",
+            b"POST /predict HTTP/1.1\r\nContent-Length: 9\r\n\r\n{not json".to_vec(),
+            400,
+        ),
+        (
+            "non-array x",
+            b"POST /predict HTTP/1.1\r\nContent-Length: 11\r\n\r\n{\"x\":\"abc\"}".to_vec(),
+            400,
+        ),
+        (
+            "missing x",
+            b"POST /predict HTTP/1.1\r\nContent-Length: 11\r\n\r\n{\"y\":[1,2]}".to_vec(),
+            400,
+        ),
+    ];
+
+    for (name, bytes, want) in &cases {
+        let (status, body) = raw_exchange(&addr, bytes);
+        assert_eq!(status, *want, "case {name:?}: {body}");
+        assert!(body.contains("\"error\""), "case {name:?} must name its error: {body}");
+        assert_still_serving(&addr, name);
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn wrong_row_length_and_unknown_paths_are_named() {
+    let srv = spawn_server(test_opts());
+    let addr = srv.addr().to_string();
+
+    let short_row = vec![1.0f32; 3]; // model d_in is 6
+    let (status, body) =
+        http_request(&addr, "POST", "/predict", &predict_body(&short_row), CLIENT_TIMEOUT)
+            .unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("d_in"), "{body}");
+
+    let (status, body) = http_request(&addr, "GET", "/nope", "", CLIENT_TIMEOUT).unwrap();
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("no such endpoint"), "{body}");
+
+    let (status, body) = http_request(&addr, "POST", "/healthz", "", CLIENT_TIMEOUT).unwrap();
+    assert_eq!(status, 404, "wrong method must 404: {body}");
+
+    assert_still_serving(&addr, "routing errors");
+    srv.shutdown();
+}
+
+#[test]
+fn health_endpoints_answer() {
+    let srv = spawn_server(test_opts());
+    let addr = srv.addr().to_string();
+
+    let (status, body) = http_request(&addr, "GET", "/healthz", "", CLIENT_TIMEOUT).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"ok\":true"), "{body}");
+    assert!(body.contains("serve_http"), "healthz must echo the variant: {body}");
+    assert!(body.contains("\"step\":42"), "{body}");
+
+    let (status, body) = http_request(&addr, "GET", "/readyz", "", CLIENT_TIMEOUT).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"ready\":true"), "{body}");
+    srv.shutdown();
+}
+
+#[test]
+fn stalled_client_gets_a_request_timeout() {
+    let opts = ServeOptions { deadline: Some(Duration::from_millis(200)), ..test_opts() };
+    let srv = spawn_server(opts);
+    let addr = srv.addr().to_string();
+
+    // Send half a request line and stall: the server's socket deadline
+    // must fire and answer 408 rather than hold the connection forever.
+    let stream = TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+    (&stream).write_all(b"POST /predict HT").unwrap();
+    let (status, body) = read_http_response(&stream).unwrap();
+    assert_eq!(status, 408, "{body}");
+    assert!(body.contains("deadline"), "{body}");
+
+    assert_still_serving(&addr, "a stalled client");
+    srv.shutdown();
+}
+
+#[test]
+fn drain_flushes_queued_requests_before_exit() {
+    let srv = spawn_server(test_opts());
+    let addr = srv.addr().to_string();
+
+    // Freeze the tick so the requests are provably *queued*, not served.
+    srv.set_paused(true);
+    let mut queued = Vec::new();
+    for _ in 0..4 {
+        let addr = addr.clone();
+        queued.push(std::thread::spawn(move || {
+            let row = vec![0.5f32; 6];
+            http_request(&addr, "POST", "/predict", &predict_body(&row), CLIENT_TIMEOUT).unwrap()
+        }));
+    }
+    while srv.queue_depth() < 4 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Drain overrides the pause: every queued request must be answered
+    // (status 200 — flushed through the batcher, not dropped).
+    srv.shutdown();
+    for q in queued {
+        let (status, body) = q.join().unwrap();
+        assert_eq!(status, 200, "drain must flush, not drop: {body}");
+    }
+}
